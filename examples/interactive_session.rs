@@ -1,0 +1,71 @@
+//! Headless replay of the paper's *interactive* workflow: a user changes
+//! hyperparameters mid-optimisation — including HD-side ones — and the
+//! engine keeps iterating without any recomputation phase.
+//!
+//! Demonstrates: instant α changes, perplexity changes (incremental σ
+//! recalibration with warm restarts), attraction/repulsion tuning at
+//! heavy tails, and the "implosion button".
+//!
+//! ```sh
+//! cargo run --release --example interactive_session
+//! ```
+
+use funcsne::coordinator::driver::dataset_by_name;
+use funcsne::engine::FuncSne;
+use funcsne::figures::common::figure_config;
+use funcsne::ld::NativeBackend;
+use funcsne::util::{plot, Stopwatch};
+
+fn snapshot(engine: &FuncSne, labels: &[usize], title: &str) {
+    println!(
+        "{}",
+        plot::scatter_2d(title, engine.embedding().data(), labels, engine.n(), 70, 14)
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let ds = dataset_by_name("mnist", 1500, 7)?;
+    let labels = ds.coarse_labels.clone().unwrap();
+    let mut cfg = figure_config(ds.n(), 2, 1.0);
+    cfg.n_iters = 0;
+    let mut engine = FuncSne::new(ds.x.clone(), cfg)?;
+    let mut backend = NativeBackend::new();
+    let sw = Stopwatch::new();
+
+    println!("» optimisation starts immediately (no precompute phase)");
+    engine.run(250, &mut backend)?;
+    println!("  [{:.2}s] 250 iterations", sw.elapsed_s());
+    snapshot(&engine, &labels, "t-SNE regime (α = 1)");
+
+    println!("» user drags α down to 0.5 — instant, mid-run");
+    engine.set_alpha(0.5);
+    engine.set_repulsion(1.5);
+    engine.run(250, &mut backend)?;
+    snapshot(&engine, &labels, "heavy tails (α = 0.5): clusters fragment");
+
+    println!("» user doubles the perplexity — an HD-side change that would");
+    println!("  force a full re-preprocessing in two-phase methods");
+    let recal_before = engine.stats.recalibrated_points;
+    engine.set_perplexity(engine.cfg.perplexity * 2.0);
+    engine.run(150, &mut backend)?;
+    println!(
+        "  incremental σ recalibrations since change: {}",
+        engine.stats.recalibrated_points - recal_before
+    );
+
+    println!("» user hits the implosion button (embedding rescale)");
+    engine.implode();
+    engine.run(150, &mut backend)?;
+    snapshot(&engine, &labels, "after implosion + 150 iterations");
+
+    println!(
+        "session total: {:.2}s for 800 iterations with 4 live hyperparameter events",
+        sw.elapsed_s()
+    );
+    anyhow::ensure!(
+        engine.embedding().data().iter().all(|v| v.is_finite()),
+        "embedding diverged during the session"
+    );
+    println!("interactive_session OK");
+    Ok(())
+}

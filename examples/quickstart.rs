@@ -1,0 +1,90 @@
+//! Quickstart — the end-to-end driver proving all layers compose.
+//!
+//! Runs the full three-layer pipeline on a real small workload:
+//! 2 000 points of the COIL-20 twin, embedded to 2-D through the **PJRT
+//! backend** (AOT-compiled Pallas/XLA tiles; falls back to native with a
+//! notice if `make artifacts` hasn't been run), and reports the paper's
+//! headline metric — the R_NX(K) AUC — against a UMAP-like baseline,
+//! plus throughput. The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use funcsne::baselines::umap_like::{umap_like, UmapConfig};
+use funcsne::config::{Backend, EmbedConfig};
+use funcsne::coordinator::driver::{dataset_by_name, default_artifact_dir, run_embedding};
+use funcsne::metrics::rnx::rnx_curve;
+use funcsne::util::{plot, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. data ---------------------------------------------------------
+    let ds = dataset_by_name("coil", 2000, 42)?;
+    println!("dataset: {} (n={}, d={})", ds.name, ds.n(), ds.d());
+
+    // --- 2. config -------------------------------------------------------
+    let have_artifacts = default_artifact_dir().join("manifest.txt").exists();
+    let backend = if have_artifacts {
+        Backend::Pjrt
+    } else {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; using native backend");
+        Backend::Native
+    };
+    let cfg = EmbedConfig {
+        ld_dim: 2,
+        alpha: 1.0,
+        perplexity: 10.0,
+        n_iters: 700,
+        backend,
+        jumpstart_iters: 80,
+        early_exag_iters: 150,
+        ..EmbedConfig::default()
+    };
+
+    // --- 3. run ------------------------------------------------------------
+    let report = run_embedding(ds.x.clone(), &cfg, &default_artifact_dir())?;
+    let y = report.engine.embedding();
+    println!(
+        "FUnc-SNE [{:?}]: {} iters in {:.2}s ({:.0} iters/s, {:.2e} point-updates/s)",
+        cfg.backend,
+        cfg.n_iters,
+        report.seconds,
+        report.iters_per_sec,
+        report.iters_per_sec * ds.n() as f64,
+    );
+
+    // --- 4. headline metric vs baseline ------------------------------------
+    let ours = rnx_curve(&ds.x, y, 100);
+    let sw = Stopwatch::new();
+    let y_umap = umap_like(&ds.x, &UmapConfig::default());
+    let t_umap = sw.elapsed_s();
+    let umap = rnx_curve(&ds.x, &y_umap, 100);
+    println!("\nR_NX AUC:   FUnc-SNE {:.3}  |  UMAP-like {:.3} ({t_umap:.2}s)", ours.auc, umap.auc);
+    println!(
+        "{}",
+        plot::scatter_2d(
+            "FUnc-SNE embedding of the COIL-20 twin (labels = objects)",
+            y.data(),
+            &ds.labels,
+            ds.n(),
+            78,
+            22,
+        )
+    );
+    println!(
+        "{}",
+        plot::line_chart(
+            "R_NX(K) — FUnc-SNE (*) vs UMAP-like (o)",
+            &[
+                plot::Series::new("FUnc-SNE", ours.ks.iter().map(|&k| k as f64).collect(), ours.rnx.clone()),
+                plot::Series::new("UMAP-like", umap.ks.iter().map(|&k| k as f64).collect(), umap.rnx.clone()),
+            ],
+            72,
+            16,
+            true,
+        )
+    );
+    anyhow::ensure!(ours.auc > 0.3, "embedding quality regressed (AUC {})", ours.auc);
+    println!("quickstart OK");
+    Ok(())
+}

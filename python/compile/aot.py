@@ -1,0 +1,93 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts + manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the ``xla`` crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the Rust binary then never touches
+Python. Usage:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The artifact menu. Tile shapes are chosen so that:
+#  * B=512 amortises PJRT dispatch overhead while staying cache-friendly;
+#  * K covers the default neighbour-set sizes (k_hd=32, k_ld=16, n_neg=8);
+#  * D covers visualisation (2, 3, 4) and the paper's "intermediate
+#    dimensionalities" experiments (8, 16, 32);
+#  * M covers post-PCA HD dimensionalities (the recommended 16..192).
+FORCES_B = 512
+FORCES_K = (8, 16, 32)
+FORCES_D = (2, 3, 4, 8, 16, 32)
+SQDIST_T = 4096
+SQDIST_M = (8, 16, 32, 64, 128, 192)
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forces(b, k, d):
+    args = model.example_args_forces(b, k, d)
+    return to_hlo_text(jax.jit(model.forces_graph).lower(*args))
+
+
+def lower_sqdist(t, m):
+    args = model.example_args_sqdist(t, m)
+    return to_hlo_text(jax.jit(model.sqdist_graph).lower(*args))
+
+
+def build_all(out_dir, verbose=True):
+    """Lower the whole menu; returns the manifest lines."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for k in FORCES_K:
+        for d in FORCES_D:
+            name = f"forces_b{FORCES_B}_k{k}_d{d}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            text = lower_forces(FORCES_B, k, d)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"forces {name} B={FORCES_B} K={k} D={d}")
+            if verbose:
+                print(f"  {name}: {len(text)} chars")
+    for m in SQDIST_M:
+        name = f"sqdist_t{SQDIST_T}_m{m}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_sqdist(SQDIST_T, m)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"sqdist {name} T={SQDIST_T} M={m}")
+        if verbose:
+            print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    ns = ap.parse_args()
+    manifest = build_all(ns.out_dir, verbose=not ns.quiet)
+    print(f"wrote {len(manifest)} artifacts + manifest.txt to {ns.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: the heavy-tailed force tile.
+
+This is the compute hot-spot of FUnc-SNE: for a tile of B points with K
+gathered neighbour slots each, evaluate the Eq. 4/5 kernel terms and
+reduce them to per-point attraction / repulsion vectors and the
+Z-estimate statistic. The Rust coordinator calls the AOT-compiled HLO of
+this kernel three times per batch (HD slots / LD slots / negative
+samples — see DESIGN.md §2).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+implementation assigns one GPU thread per point over global-memory
+neighbour tables. Here the tile itself is the parallel unit: the Pallas
+grid walks B-blocks (the HBM→VMEM schedule a CUDA threadblock would
+express), and all K×D math inside a block is vectorised. Block sizing
+keeps a block's operands (BLOCK_B·K·D + 2·BLOCK_B·K + 2·BLOCK_B·D f32)
+well under VMEM budgets (≤ ~0.6 MiB at B=128, K=32, D=32).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO which both the python
+tests and the Rust runtime execute. Real-TPU numbers are estimated in
+DESIGN.md instead.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 128 divides every tile size in the AOT menu.
+BLOCK_B = 128
+
+
+def _forces_kernel(alpha_ref, yi_ref, yj_ref, p_ref, mask_ref,
+                   attr_ref, rep_ref, wsum_ref):
+    """One B-block: yi [b, D], yj [b, K, D], p/mask [b, K]."""
+    alpha = alpha_ref[0]
+    yi = yi_ref[...]                       # [b, D]
+    yj = yj_ref[...]                       # [b, K, D]
+    p = p_ref[...]                         # [b, K]
+    mask = mask_ref[...]                   # [b, K]
+    diff = yj - yi[:, None, :]             # [b, K, D]
+    d2 = jnp.sum(diff * diff, axis=-1)     # [b, K]
+    g = 1.0 / (1.0 + d2 / alpha)
+    w = g**alpha
+    ag = p * g * mask                      # [b, K]
+    rg = w * g * mask
+    attr_ref[...] = jnp.sum(ag[:, :, None] * diff, axis=1)
+    rep_ref[...] = jnp.sum(rg[:, :, None] * (-diff), axis=1)
+    wsum_ref[...] = jnp.sum(w * mask, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def forces_tile(alpha, yi, yj, p, mask):
+    """Force tile: see ``ref.forces_ref`` for exact semantics.
+
+    alpha: [1] f32 (array so it stays a runtime input of the AOT module).
+    yi:    [B, D];  yj: [B, K, D];  p, mask: [B, K].
+    Returns (attr [B, D], rep [B, D], wsum [B]).
+    """
+    b_total, d = yi.shape
+    _, k, _ = yj.shape
+    assert b_total % BLOCK_B == 0, f"B={b_total} must be a multiple of {BLOCK_B}"
+    grid = (b_total // BLOCK_B,)
+    return pl.pallas_call(
+        _forces_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                   # alpha
+            pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),         # yi
+            pl.BlockSpec((BLOCK_B, k, d), lambda i: (i, 0, 0)),   # yj
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),         # p
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),         # mask
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),         # attr
+            pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),         # rep
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),             # wsum
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_total, d), jnp.float32),
+            jax.ShapeDtypeStruct((b_total, d), jnp.float32),
+            jax.ShapeDtypeStruct((b_total,), jnp.float32),
+        ],
+        interpret=True,
+    )(alpha, yi, yj, p, mask)

@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernel: flat-pair squared distances.
+
+Scores a batch of KNN candidate pairs in the HD space: the Rust
+coordinator gathers owner / candidate coordinate rows into two [T, M]
+buffers and gets back the T squared distances in one call, replacing T·M
+scalar work on the Rust side with one vectorised tile.
+
+On a real TPU this is the MXU-friendly kernel: per grid step a
+[BLOCK_T, M] block reduces over M; the paper notes its GPU build did
+*not* parallelise the distance loop — this kernel is the adaptation that
+does (DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 512
+
+
+def _sqdist_kernel(a_ref, b_ref, out_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    diff = a - b
+    out_ref[...] = jnp.sum(diff * diff, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sqdist_tile(a, b):
+    """Squared distances of T pairs: a, b are [T, M] → [T]."""
+    t_total, m = a.shape
+    assert t_total % BLOCK_T == 0, f"T={t_total} must be a multiple of {BLOCK_T}"
+    grid = (t_total // BLOCK_T,)
+    return pl.pallas_call(
+        _sqdist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_T, m), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_T, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_T,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t_total,), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,53 @@
+"""Layer-2: the JAX compute graphs the Rust coordinator executes.
+
+FUnc-SNE's "model" is the embedding update itself; its fwd/bwd is the
+analytic Eq. 5 gradient, which the ``forces`` kernel evaluates directly
+(the closed form — validated against ``jax.grad`` of the Eq. 4 objective
+in ``python/tests/test_gradient.py``). The L2 graphs below wrap the L1
+Pallas kernels so that ``aot.py`` lowers kernel + surrounding graph into
+a single HLO module per tile shape.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.forces import forces_tile
+from .kernels.sqdist import sqdist_tile
+
+__all__ = ["forces_graph", "sqdist_graph", "example_args_forces",
+           "example_args_sqdist"]
+
+
+def forces_graph(alpha, yi, yj, p, mask):
+    """The per-batch force computation (one slot group).
+
+    Returns a tuple (attr, rep, wsum) — tuple-returning so the HLO root
+    is a tuple and the Rust side unwraps with ``to_tuple``.
+    """
+    attr, rep, wsum = forces_tile(alpha, yi, yj, p, mask)
+    return (attr, rep, wsum)
+
+
+def sqdist_graph(a, b):
+    """Candidate-scoring graph: squared distances of T flat pairs."""
+    return (sqdist_tile(a, b),)
+
+
+def example_args_forces(b, k, d):
+    """ShapeDtypeStructs for lowering a (B, K, D) forces variant."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((1,), f32),        # alpha
+        jax.ShapeDtypeStruct((b, d), f32),      # yi
+        jax.ShapeDtypeStruct((b, k, d), f32),   # yj
+        jax.ShapeDtypeStruct((b, k), f32),      # p
+        jax.ShapeDtypeStruct((b, k), f32),      # mask
+    )
+
+
+def example_args_sqdist(t, m):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((t, m), f32),
+        jax.ShapeDtypeStruct((t, m), f32),
+    )

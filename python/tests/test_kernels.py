@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.forces import forces_tile, BLOCK_B
+from compile.kernels.sqdist import sqdist_tile, BLOCK_T
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("alpha", [0.3, 0.5, 1.0, 2.0])
+@pytest.mark.parametrize("b,k,d", [(128, 8, 2), (256, 16, 4), (128, 32, 8)])
+def test_forces_matches_ref(alpha, b, k, d):
+    rng = np.random.default_rng(hash((b, k, d)) % 2**31)
+    yi = rand(rng, b, d) * 3.0
+    yj = rand(rng, b, k, d) * 3.0
+    p = jnp.abs(rand(rng, b, k))
+    mask = (rand(rng, b, k) > 0).astype(jnp.float32)
+    a = jnp.asarray([alpha], dtype=jnp.float32)
+    attr, rep, wsum = forces_tile(a, yi, yj, p, mask)
+    eattr, erep, ewsum = ref.forces_ref(yi, yj, p, mask, alpha)
+    np.testing.assert_allclose(attr, eattr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(rep, erep, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(wsum, ewsum, rtol=1e-5, atol=1e-5)
+
+
+def test_forces_fully_masked_is_zero():
+    b, k, d = BLOCK_B, 8, 2
+    rng = np.random.default_rng(0)
+    yi, yj = rand(rng, b, d), rand(rng, b, k, d)
+    p = jnp.abs(rand(rng, b, k))
+    mask = jnp.zeros((b, k), dtype=jnp.float32)
+    a = jnp.asarray([1.0], dtype=jnp.float32)
+    attr, rep, wsum = forces_tile(a, yi, yj, p, mask)
+    assert float(jnp.abs(attr).max()) == 0.0
+    assert float(jnp.abs(rep).max()) == 0.0
+    assert float(jnp.abs(wsum).max()) == 0.0
+
+
+def test_forces_attraction_direction():
+    """A single neighbour to the right: attraction +x, repulsion -x."""
+    b, k, d = BLOCK_B, 8, 2
+    yi = jnp.zeros((b, d), dtype=jnp.float32)
+    yj = jnp.zeros((b, k, d), dtype=jnp.float32).at[:, 0, 0].set(2.0)
+    p = jnp.zeros((b, k), dtype=jnp.float32).at[:, 0].set(1.0)
+    mask = jnp.zeros((b, k), dtype=jnp.float32).at[:, 0].set(1.0)
+    a = jnp.asarray([1.0], dtype=jnp.float32)
+    attr, rep, _ = forces_tile(a, yi, yj, p, mask)
+    assert float(attr[0, 0]) > 0.0
+    assert float(rep[0, 0]) < 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([4, 8, 16, 32]),
+    d=st.sampled_from([1, 2, 3, 5, 8, 16]),
+    alpha=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_forces_hypothesis_shapes(k, d, alpha, seed):
+    rng = np.random.default_rng(seed)
+    b = BLOCK_B
+    yi = rand(rng, b, d)
+    yj = rand(rng, b, k, d)
+    p = jnp.abs(rand(rng, b, k)) * 0.1
+    mask = (rand(rng, b, k) > -0.5).astype(jnp.float32)
+    a = jnp.asarray([alpha], dtype=jnp.float32)
+    attr, rep, wsum = forces_tile(a, yi, yj, p, mask)
+    eattr, erep, ewsum = ref.forces_ref(yi, yj, p, mask, alpha)
+    np.testing.assert_allclose(attr, eattr, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(rep, erep, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(wsum, ewsum, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("m", [8, 16, 64, 192])
+def test_sqdist_matches_ref(m):
+    rng = np.random.default_rng(m)
+    a = rand(rng, BLOCK_T, m) * 2.0
+    b = rand(rng, BLOCK_T, m) * 2.0
+    got = sqdist_tile(a, b)
+    expect = ref.sqdist_pairs_ref(a, b)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_sqdist_zero_for_identical():
+    rng = np.random.default_rng(1)
+    a = rand(rng, BLOCK_T, 16)
+    got = sqdist_tile(a, a)
+    np.testing.assert_allclose(got, jnp.zeros(BLOCK_T), atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([4, 8, 32, 128]),
+    mult=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sqdist_hypothesis(m, mult, seed):
+    rng = np.random.default_rng(seed)
+    t = BLOCK_T * mult
+    a = rand(rng, t, m)
+    b = rand(rng, t, m)
+    got = sqdist_tile(a, b)
+    np.testing.assert_allclose(got, ref.sqdist_pairs_ref(a, b), rtol=1e-4, atol=1e-5)
+
+
+def test_kernel_identities():
+    """w = g^alpha, w(0)=1, heavier tails for smaller alpha (mirrors the
+    Rust ld::kernel tests so the two layers agree on the math)."""
+    d2 = jnp.asarray([0.0, 0.5, 4.0, 25.0], dtype=jnp.float32)
+    for alpha in [0.3, 1.0, 3.0]:
+        g = ref.grad_factor(d2, alpha)
+        w = ref.kernel_w(d2, alpha)
+        np.testing.assert_allclose(w, g**alpha, rtol=1e-6)
+        assert float(w[0]) == pytest.approx(1.0)
+    assert float(ref.kernel_w(jnp.asarray(25.0), 0.3)) > float(
+        ref.kernel_w(jnp.asarray(25.0), 1.0)
+    )

@@ -1,0 +1,98 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. the LD-neighbour close-range repulsion term (Eq. 6 term 2) —
+//!     the paper's key approximation: sweep k_ld and measure embedding
+//!     quality (k_ld = 1 ≈ negative-sampling-only);
+//!  B. the cross-space candidate routes of the iterative KNN — full mix
+//!     vs same-space-only (≈ NN-descent) vs random-only, measured as
+//!     HD-KNN quality at a fixed iteration budget;
+//!  C. the probabilistic HD-refinement policy — base probability 0.05
+//!     (paper default) vs always-refine vs never-refine-after-warmup,
+//!     measured as wall-clock *and* final quality.
+
+use funcsne::config::EmbedConfig;
+use funcsne::data::datasets;
+use funcsne::engine::FuncSne;
+use funcsne::knn::brute::brute_knn;
+use funcsne::knn::iterative::CandidateRoutes;
+use funcsne::ld::NativeBackend;
+use funcsne::metrics::rnx::{rnx_auc, rnx_curve_vs_table};
+use funcsne::util::Stopwatch;
+
+fn base_cfg(n: usize) -> EmbedConfig {
+    EmbedConfig {
+        k_hd: 24.min(n - 1),
+        k_ld: 12,
+        perplexity: 8.0,
+        n_iters: 0,
+        jumpstart_iters: 50,
+        early_exag_iters: 100,
+        ..EmbedConfig::default()
+    }
+}
+
+fn main() {
+    let full = std::env::var("FUNCSNE_FULL").map(|v| v == "1").unwrap_or(false);
+    let n = if full { 3000 } else { 800 };
+    let iters = if full { 1200 } else { 400 };
+    println!("=== ablations (n={n}, {iters} iters each) ===");
+
+    // ---- A: LD close-range repulsion term --------------------------------
+    println!("\n[A] k_ld sweep (k_ld=1 ≈ negative sampling only):");
+    let ds = datasets::rat_brain_like(n, 50, 7);
+    for k_ld in [1usize, 4, 8, 16] {
+        let mut cfg = base_cfg(n);
+        cfg.k_ld = k_ld;
+        let mut engine = FuncSne::new(ds.x.clone(), cfg).unwrap();
+        let mut backend = NativeBackend::new();
+        engine.run(iters, &mut backend).unwrap();
+        let auc = rnx_auc(&ds.x, engine.embedding(), 50);
+        println!("  k_ld = {k_ld:>2}: R_NX AUC {auc:.3}");
+    }
+
+    // ---- B: candidate routes ---------------------------------------------
+    println!("\n[B] candidate routes (HD-KNN AUC after {iters} iters, always refine):");
+    let ds = datasets::blobs_disjointed(if full { 400 } else { 60 }, 30, 32, 2);
+    let truth = brute_knn(&ds.x, 16);
+    let routes = [
+        ("full mix (paper)", CandidateRoutes::default()),
+        (
+            "same-space only (≈NN-descent)",
+            CandidateRoutes { same_space: true, cross_space: false, random: false },
+        ),
+        (
+            "random only",
+            CandidateRoutes { same_space: false, cross_space: false, random: true },
+        ),
+    ];
+    for (name, r) in routes {
+        let mut cfg = base_cfg(ds.n());
+        cfg.k_hd = 16;
+        cfg.refine_base_prob = 1.0;
+        let mut engine = FuncSne::new(ds.x.clone(), cfg).unwrap();
+        engine.set_candidate_routes(r);
+        let mut backend = NativeBackend::new();
+        engine.run(iters, &mut backend).unwrap();
+        let c = rnx_curve_vs_table(&truth, &engine.knn.hd, 16);
+        println!("  {name:<32}: HD-KNN AUC {:.3}", c.auc);
+    }
+
+    // ---- C: refinement policy ---------------------------------------------
+    println!("\n[C] HD-refinement policy (time and quality):");
+    let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 9);
+    for (name, prob) in [("default p=0.05+0.95E", 0.05), ("always refine", 1.0)] {
+        let mut cfg = base_cfg(n);
+        cfg.refine_base_prob = prob;
+        let mut engine = FuncSne::new(ds.x.clone(), cfg).unwrap();
+        let mut backend = NativeBackend::new();
+        let sw = Stopwatch::new();
+        engine.run(iters, &mut backend).unwrap();
+        let secs = sw.elapsed_s();
+        let auc = rnx_auc(&ds.x, engine.embedding(), 50);
+        println!(
+            "  {name:<22}: {secs:>6.2}s, AUC {auc:.3}, {} HD sweeps",
+            engine.stats.hd_refines
+        );
+    }
+    println!("\nablations done");
+}

@@ -1,0 +1,9 @@
+//! Bench target regenerating the paper's fig5 output.
+//! Quick scale by default; FUNCSNE_FULL=1 for paper-sized runs.
+use funcsne::figures::common::Scale;
+
+fn main() {
+    let scale = Scale::from_env();
+    let summary = funcsne::figures::fig5::run(scale).expect("fig5 driver failed");
+    let _ = summary;
+}

@@ -1,0 +1,141 @@
+//! §Perf micro/meso benchmarks of the hot paths, across backends.
+//!
+//! Reports (median of repeated runs):
+//!   * force pass per iteration — native vs PJRT, at several (N, d);
+//!   * sqdist candidate scoring — native vs PJRT, at several (T, M);
+//!   * full engine iteration breakdown (refine LD / refine HD / forces /
+//!     update) on the native path;
+//!   * point-updates per second (the headline interactivity number).
+//!
+//! The EXPERIMENTS.md §Perf table is filled from this output.
+
+use funcsne::config::EmbedConfig;
+use funcsne::coordinator::driver::default_artifact_dir;
+use funcsne::coordinator::PjrtBackend;
+use funcsne::data::{datasets, Matrix};
+use funcsne::engine::{ComputeBackend, FuncSne, NegSamples};
+use funcsne::hd::Affinities;
+use funcsne::knn::brute::brute_knn;
+use funcsne::knn::iterative::IterativeKnn;
+use funcsne::ld::NativeBackend;
+use funcsne::util::timer::bench_fn;
+use funcsne::util::{Rng, Stopwatch};
+
+fn state(n: usize, d_ld: usize, k_hd: usize, k_ld: usize, seed: u64) -> (Matrix, Matrix, IterativeKnn, Affinities) {
+    let ds = datasets::blobs(n, 16, 8, 1.0, 16.0, seed);
+    let mut rng = Rng::new(seed);
+    let mut y = Matrix::zeros(n, d_ld);
+    for v in y.data_mut() {
+        *v = rng.gauss_ms(0.0, 1.0) as f32;
+    }
+    let mut knn = IterativeKnn::new(n, k_hd, k_ld);
+    knn.seed_random(&ds.x, &y, &mut rng);
+    let mut aff = Affinities::new(n, k_hd);
+    aff.recalibrate_all(&mut knn, 10.0);
+    (ds.x, y, knn, aff)
+}
+
+fn main() {
+    let full = std::env::var("FUNCSNE_FULL").map(|v| v == "1").unwrap_or(false);
+    let sizes: &[usize] = if full { &[5000, 20000, 50000] } else { &[2000, 8000] };
+    let have_pjrt = default_artifact_dir().join("manifest.txt").exists();
+    println!("=== perf_hotpath (backends: native{}) ===", if have_pjrt { " + pjrt" } else { "" });
+
+    // ---- force pass ----------------------------------------------------
+    for &n in sizes {
+        for &d in &[2usize, 8] {
+            let (x, y, knn, aff) = state(n, d, 32, 16, 1);
+            let _ = x;
+            let mut rng = Rng::new(2);
+            let neg = NegSamples::draw(n, 8, &mut rng);
+            let far_scale = ((n - 1 - 48) as f32) / 8.0;
+            let mut attr = Matrix::zeros(n, d);
+            let mut rep = Matrix::zeros(n, d);
+            let mut native = NativeBackend::new();
+            let stats = bench_fn(1, if full { 7 } else { 5 }, || {
+                native
+                    .forces(&y, &knn, &aff, &neg, 1.0, far_scale, &mut attr, &mut rep)
+                    .unwrap()
+            });
+            let pts_per_s = n as f64 / stats.median_s;
+            println!(
+                "forces native  n={n:>6} d={d}: {:>9.3} ms/pass  ({:.2e} point-updates/s)",
+                stats.median_s * 1e3,
+                pts_per_s
+            );
+            if have_pjrt {
+                let mut pjrt = PjrtBackend::new(&default_artifact_dir()).unwrap();
+                pjrt.warmup(32, 16, 8, d, 16).unwrap();
+                let stats = bench_fn(1, if full { 7 } else { 5 }, || {
+                    pjrt.forces(&y, &knn, &aff, &neg, 1.0, far_scale, &mut attr, &mut rep)
+                        .unwrap()
+                });
+                println!(
+                    "forces pjrt    n={n:>6} d={d}: {:>9.3} ms/pass  ({:.2e} point-updates/s)",
+                    stats.median_s * 1e3,
+                    n as f64 / stats.median_s
+                );
+            }
+        }
+    }
+
+    // ---- sqdist scoring --------------------------------------------------
+    for &(pairs, m) in &[(8192usize, 32usize), (8192, 128)] {
+        let ds = datasets::blobs(4096, m, 8, 1.0, 16.0, 3);
+        let mut rng = Rng::new(4);
+        let owners: Vec<u32> = (0..pairs).map(|_| rng.below(4096) as u32).collect();
+        let cands: Vec<u32> = (0..pairs).map(|_| rng.below(4096) as u32).collect();
+        let mut out = Vec::new();
+        let mut native = NativeBackend::new();
+        let s = bench_fn(1, 7, || {
+            native.sqdist_batch(&ds.x, &owners, &cands, &mut out).unwrap()
+        });
+        println!(
+            "sqdist native  T={pairs} M={m:>4}: {:>9.3} ms  ({:.2e} pairs/s)",
+            s.median_s * 1e3,
+            pairs as f64 / s.median_s
+        );
+        if have_pjrt {
+            let mut pjrt = PjrtBackend::new(&default_artifact_dir()).unwrap();
+            let s = bench_fn(1, 7, || {
+                pjrt.sqdist_batch(&ds.x, &owners, &cands, &mut out).unwrap()
+            });
+            println!(
+                "sqdist pjrt    T={pairs} M={m:>4}: {:>9.3} ms  ({:.2e} pairs/s)",
+                s.median_s * 1e3,
+                pairs as f64 / s.median_s
+            );
+        }
+    }
+
+    // ---- full iteration + phase breakdown (native) ----------------------
+    for &n in sizes {
+        let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 5);
+        let cfg = EmbedConfig {
+            n_iters: 0,
+            jumpstart_iters: 0,
+            early_exag_iters: 0,
+            ..EmbedConfig::default()
+        };
+        let mut engine = FuncSne::new(ds.x, cfg).unwrap();
+        let mut backend = NativeBackend::new();
+        // warm up the KNN state a bit
+        engine.run(20, &mut backend).unwrap();
+        let iters = if full { 100 } else { 40 };
+        let sw = Stopwatch::new();
+        engine.run(iters, &mut backend).unwrap();
+        let per_iter = sw.elapsed_s() / iters as f64;
+        println!(
+            "engine native n={n:>6}: {:>9.3} ms/iter  ({:.2e} point-updates/s; hd_refines {}/{})",
+            per_iter * 1e3,
+            n as f64 / per_iter,
+            engine.stats.hd_refines,
+            engine.stats.iters,
+        );
+    }
+    // ---- exact-KNN ground truth is the benchmark's own cost; note it ---
+    let ds = datasets::blobs(2000, 32, 10, 1.0, 20.0, 6);
+    let sw = Stopwatch::new();
+    let _t = brute_knn(&ds.x, 32);
+    println!("(reference: brute_knn n=2000 d=32 k=32: {:.1} ms)", sw.elapsed_ms());
+}

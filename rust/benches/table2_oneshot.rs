@@ -1,0 +1,9 @@
+//! Bench target regenerating the paper's table2 output.
+//! Quick scale by default; FUNCSNE_FULL=1 for paper-sized runs.
+use funcsne::figures::common::Scale;
+
+fn main() {
+    let scale = Scale::from_env();
+    let summary = funcsne::figures::table2::run(scale).expect("table2 driver failed");
+    let _ = summary;
+}

@@ -1,0 +1,398 @@
+//! Barnes-Hut t-SNE (van der Maaten [17]) — the "model the whole LD
+//! space occupancy" baseline family.
+//!
+//! Substitution note (DESIGN.md §3): the paper benchmarks FIt-SNE; its
+//! interpolation grid is a different O(N) realisation of the *same*
+//! modelling strategy (precise repulsion at all ranges, target dim
+//! restricted to 2–3). Barnes-Hut at θ=0.5 reproduces the behavioural
+//! properties Table 1 / Fig. 6 rely on, with O(N log N) iterations and a
+//! hard 2-D restriction — which is exactly the restriction the paper's
+//! "unconstrained" contribution removes.
+
+use crate::data::Matrix;
+use crate::hd::perplexity::{calibrate, conditionals};
+use crate::knn::brute::brute_knn;
+use crate::knn::nn_descent::nn_descent;
+use crate::config::KnnConfig;
+use crate::ld::kernel::kernel_pair;
+use crate::util::Rng;
+
+/// A quadtree over 2-D points, storing centres of mass.
+pub struct QuadTree {
+    nodes: Vec<Node>,
+}
+
+struct Node {
+    // Bounding square.
+    cx: f32,
+    cy: f32,
+    half: f32,
+    // Aggregates.
+    mass: f32,
+    com_x: f32,
+    com_y: f32,
+    // Children (0 = none); leaf point index + count.
+    children: [u32; 4],
+    point: u32,
+    count: u32,
+}
+
+const NO_CHILD: u32 = 0;
+const NO_POINT: u32 = u32::MAX;
+
+impl QuadTree {
+    /// Build over a (n, 2) embedding.
+    pub fn build(y: &Matrix) -> QuadTree {
+        assert_eq!(y.d(), 2, "Barnes-Hut is 2-D only (the paper's point)");
+        let n = y.n();
+        let (mut xmin, mut xmax, mut ymin, mut ymax) =
+            (f32::INFINITY, f32::NEG_INFINITY, f32::INFINITY, f32::NEG_INFINITY);
+        for i in 0..n {
+            xmin = xmin.min(y.row(i)[0]);
+            xmax = xmax.max(y.row(i)[0]);
+            ymin = ymin.min(y.row(i)[1]);
+            ymax = ymax.max(y.row(i)[1]);
+        }
+        let half = ((xmax - xmin).max(ymax - ymin) / 2.0).max(1e-6) * 1.001;
+        let root = Node {
+            cx: (xmin + xmax) / 2.0,
+            cy: (ymin + ymax) / 2.0,
+            half,
+            mass: 0.0,
+            com_x: 0.0,
+            com_y: 0.0,
+            children: [NO_CHILD; 4],
+            point: NO_POINT,
+            count: 0,
+        };
+        let mut tree = QuadTree { nodes: vec![root] };
+        for i in 0..n {
+            tree.insert(0, y.row(i)[0], y.row(i)[1], i as u32, 0);
+        }
+        tree
+    }
+
+    fn quadrant(node: &Node, x: f32, y: f32) -> usize {
+        (usize::from(x >= node.cx)) | (usize::from(y >= node.cy) << 1)
+    }
+
+    fn insert(&mut self, idx: usize, x: f32, y: f32, point: u32, depth: usize) {
+        // Update aggregates on the way down.
+        {
+            let node = &mut self.nodes[idx];
+            node.com_x = (node.com_x * node.mass + x) / (node.mass + 1.0);
+            node.com_y = (node.com_y * node.mass + y) / (node.mass + 1.0);
+            node.mass += 1.0;
+            node.count += 1;
+        }
+        // Depth cap: coincident points pile up in one leaf.
+        if depth > 48 {
+            return;
+        }
+        let (is_leaf, existing, cx, cy, half) = {
+            let node = &self.nodes[idx];
+            (node.children == [NO_CHILD; 4], node.point, node.cx, node.cy, node.half)
+        };
+        if is_leaf && existing == NO_POINT && self.nodes[idx].count == 1 {
+            self.nodes[idx].point = point;
+            return;
+        }
+        if is_leaf && existing != NO_POINT {
+            // Split: push the existing point down.
+            let (ex, ey) = {
+                // We don't store coordinates in the node; re-derive from
+                // the aggregates: before this insert the leaf held exactly
+                // one point, so its old COM was that point's position.
+                let node = &self.nodes[idx];
+                let m = node.mass; // includes the new point already
+                (
+                    node.com_x * m - x, // (com·m − new) = old point coords
+                    node.com_y * m - y,
+                )
+            };
+            self.nodes[idx].point = NO_POINT;
+            let q = {
+                let node = &self.nodes[idx];
+                Self::quadrant(node, ex, ey)
+            };
+            let child = self.child_for(idx, q, cx, cy, half);
+            self.insert_leafward(child, ex, ey, existing, depth + 1);
+        }
+        let q = Self::quadrant(&self.nodes[idx], x, y);
+        let child = self.child_for(idx, q, cx, cy, half);
+        self.insert(child, x, y, point, depth + 1);
+    }
+
+    /// Insert without re-adding mass along this node (already counted).
+    fn insert_leafward(&mut self, idx: usize, x: f32, y: f32, point: u32, depth: usize) {
+        self.insert(idx, x, y, point, depth);
+    }
+
+    fn child_for(&mut self, idx: usize, q: usize, cx: f32, cy: f32, half: f32) -> usize {
+        if self.nodes[idx].children[q] != NO_CHILD {
+            return self.nodes[idx].children[q] as usize;
+        }
+        let h = half / 2.0;
+        let ncx = cx + if q & 1 != 0 { h } else { -h };
+        let ncy = cy + if q & 2 != 0 { h } else { -h };
+        let new_idx = self.nodes.len();
+        self.nodes.push(Node {
+            cx: ncx,
+            cy: ncy,
+            half: h,
+            mass: 0.0,
+            com_x: 0.0,
+            com_y: 0.0,
+            children: [NO_CHILD; 4],
+            point: NO_POINT,
+            count: 0,
+        });
+        self.nodes[idx].children[q] = new_idx as u32;
+        new_idx
+    }
+
+    /// Barnes-Hut repulsion estimate at (x, y): Σ over cells of
+    /// mass·w·g·(p − com), plus the Z contribution Σ mass·w.
+    /// Returns (fx, fy, z_part).
+    pub fn repulsion(&self, x: f32, y: f32, theta: f32, alpha: f32) -> (f32, f32, f32) {
+        let mut fx = 0.0f32;
+        let mut fy = 0.0f32;
+        let mut z = 0.0f32;
+        let mut stack = vec![0usize];
+        while let Some(idx) = stack.pop() {
+            let node = &self.nodes[idx];
+            if node.count == 0 {
+                continue;
+            }
+            let dx = x - node.com_x;
+            let dy = y - node.com_y;
+            let d2 = dx * dx + dy * dy;
+            let cell_size = node.half * 2.0;
+            let is_far = cell_size * cell_size < theta * theta * d2;
+            let is_leaf = node.children == [NO_CHILD; 4];
+            if is_far || is_leaf {
+                if d2 < 1e-12 && node.count <= 1 {
+                    continue; // the query point itself
+                }
+                let (w, g) = kernel_pair(d2, alpha);
+                let m = node.mass;
+                // The query point may be inside this aggregate; its own
+                // self-term has d2≈0 only in its own leaf, skipped above.
+                z += m * w;
+                let f = m * w * g;
+                fx += f * dx;
+                fy += f * dy;
+            } else {
+                for &c in &node.children {
+                    if c != NO_CHILD {
+                        stack.push(c as usize);
+                    }
+                }
+            }
+        }
+        (fx, fy, z)
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// BH t-SNE configuration.
+#[derive(Clone, Debug)]
+pub struct BhConfig {
+    pub alpha: f64,
+    pub perplexity: f64,
+    pub k: usize,
+    pub theta: f64,
+    pub n_iters: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub early_exag: f64,
+    pub early_exag_iters: usize,
+    pub seed: u64,
+    /// Use exact KNN below this N, NN-descent above.
+    pub exact_knn_below: usize,
+}
+
+impl Default for BhConfig {
+    fn default() -> Self {
+        BhConfig {
+            alpha: 1.0,
+            perplexity: 30.0,
+            k: 90,
+            theta: 0.5,
+            n_iters: 500,
+            lr: 60.0,
+            momentum: 0.7,
+            early_exag: 4.0,
+            early_exag_iters: 100,
+            seed: 42,
+            exact_knn_below: 2500,
+        }
+    }
+}
+
+/// Sparse symmetrised affinities on a KNN graph: (row offsets aligned to
+/// k·i, neighbour ids, p values). Directed edges carry p_{j|i}/(2N) and
+/// forces are applied to the owner — consistent with the engine.
+fn sparse_p(x: &Matrix, k: usize, perplexity: f64, seed: u64, exact_below: usize) -> (Vec<u32>, Vec<f32>) {
+    let n = x.n();
+    let k = k.min(n - 1);
+    let table = if n <= exact_below {
+        brute_knn(x, k)
+    } else {
+        nn_descent(x, &KnnConfig { k, seed, ..KnnConfig::default() }).table
+    };
+    let mut ids = vec![0u32; n * k];
+    let mut p = vec![0.0f32; n * k];
+    let mut sq = vec![0.0f32; k];
+    let mut cond = vec![0.0f32; k];
+    for i in 0..n {
+        let len = table.len(i);
+        for (s, (j, d)) in table.entries(i).enumerate() {
+            ids[i * k + s] = j;
+            sq[s] = d;
+        }
+        let cal = calibrate(&sq[..len], perplexity, None);
+        conditionals(&sq[..len], cal.beta, &mut cond[..len]);
+        let scale = 1.0 / (2.0 * n as f32);
+        for s in 0..len {
+            p[i * k + s] = cond[s] * scale;
+        }
+        for s in len..k {
+            ids[i * k + s] = u32::MAX;
+        }
+    }
+    (ids, p)
+}
+
+/// Run Barnes-Hut heavy-tailed t-SNE (2-D only).
+pub fn bh_tsne(x: &Matrix, cfg: &BhConfig) -> Matrix {
+    let n = x.n();
+    let (ids, p) = sparse_p(x, cfg.k, cfg.perplexity, cfg.seed, cfg.exact_knn_below);
+    let k = ids.len() / n;
+    let mut rng = Rng::new(cfg.seed);
+    let mut y = Matrix::zeros(n, 2);
+    for v in y.data_mut() {
+        *v = rng.gauss_ms(0.0, 1e-2) as f32;
+    }
+    let mut vel = Matrix::zeros(n, 2);
+    let alpha = cfg.alpha as f32;
+    let theta = cfg.theta as f32;
+    for iter in 0..cfg.n_iters {
+        let exag = if iter < cfg.early_exag_iters { cfg.early_exag as f32 } else { 1.0 };
+        let tree = QuadTree::build(&y);
+        // Pass 1: per-point BH repulsion numerators + Z.
+        let mut rep = vec![0.0f32; n * 2];
+        let mut z_total = 0.0f64;
+        for i in 0..n {
+            let (fx, fy, z) = tree.repulsion(y.row(i)[0], y.row(i)[1], theta, alpha);
+            rep[i * 2] = fx;
+            rep[i * 2 + 1] = fy;
+            z_total += z as f64;
+        }
+        let zinv = (1.0 / z_total.max(1e-300)) as f32;
+        // Pass 2: attraction over the sparse graph + update.
+        let lr = cfg.lr as f32;
+        let mom = cfg.momentum as f32;
+        for i in 0..n {
+            let (mut ax, mut ay) = (0.0f32, 0.0f32);
+            for s in 0..k {
+                let j = ids[i * k + s];
+                if j == u32::MAX {
+                    continue;
+                }
+                let d2 = y.sqdist(i, j as usize);
+                let (_w, g) = kernel_pair(d2, alpha);
+                let pij = p[i * k + s] * exag * 2.0; // both edge directions act on owner
+                ax += pij * g * (y.row(j as usize)[0] - y.row(i)[0]);
+                ay += pij * g * (y.row(j as usize)[1] - y.row(i)[1]);
+            }
+            let gx = ax * (n as f32) + rep[i * 2] * zinv * n as f32;
+            let gy = ay * (n as f32) + rep[i * 2 + 1] * zinv * n as f32;
+            let vx = mom * vel.row(i)[0] + lr * gx / n as f32;
+            let vy = mom * vel.row(i)[1] + lr * gy / n as f32;
+            vel.row_mut(i)[0] = vx;
+            vel.row_mut(i)[1] = vy;
+            y.row_mut(i)[0] += vx;
+            y.row_mut(i)[1] += vy;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::metrics::rnx_auc;
+    use crate::util::proptest as pt;
+
+    #[test]
+    fn quadtree_mass_equals_point_count() {
+        let mut rng = crate::util::Rng::new(1);
+        let y = Matrix::from_vec(pt::gauss_mat(&mut rng, 200, 2, 3.0), 200, 2).unwrap();
+        let tree = QuadTree::build(&y);
+        assert_eq!(tree.nodes[0].count, 200);
+        assert!((tree.nodes[0].mass - 200.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bh_repulsion_matches_exact_at_theta_zero() {
+        // θ=0 forces full traversal to leaves → exact within fp error.
+        let mut rng = crate::util::Rng::new(2);
+        let n = 120;
+        let y = Matrix::from_vec(pt::gauss_mat(&mut rng, n, 2, 2.0), n, 2).unwrap();
+        let tree = QuadTree::build(&y);
+        for &alpha in &[0.5f32, 1.0] {
+            for i in (0..n).step_by(17) {
+                let (fx, fy, z) = tree.repulsion(y.row(i)[0], y.row(i)[1], 0.0, alpha);
+                let (mut ex, mut ey, mut ez) = (0.0f32, 0.0f32, 0.0f32);
+                for j in 0..n {
+                    if j == i {
+                        continue;
+                    }
+                    let d2 = y.sqdist(i, j);
+                    let (w, g) = kernel_pair(d2, alpha);
+                    ez += w;
+                    ex += w * g * (y.row(i)[0] - y.row(j)[0]);
+                    ey += w * g * (y.row(i)[1] - y.row(j)[1]);
+                }
+                assert!((fx - ex).abs() < 2e-3 * (1.0 + ex.abs()), "fx {fx} vs {ex}");
+                assert!((fy - ey).abs() < 2e-3 * (1.0 + ey.abs()), "fy {fy} vs {ey}");
+                assert!((z - ez).abs() < 2e-2 * (1.0 + ez.abs()), "z {z} vs {ez}");
+            }
+        }
+    }
+
+    #[test]
+    fn bh_repulsion_approximates_at_theta_half() {
+        let mut rng = crate::util::Rng::new(3);
+        let n = 300;
+        let y = Matrix::from_vec(pt::gauss_mat(&mut rng, n, 2, 5.0), n, 2).unwrap();
+        let tree = QuadTree::build(&y);
+        let mut rel_err = 0.0f64;
+        let mut count = 0;
+        for i in (0..n).step_by(13) {
+            let (fx, fy, _) = tree.repulsion(y.row(i)[0], y.row(i)[1], 0.5, 1.0);
+            let (ex, ey, _) = tree.repulsion(y.row(i)[0], y.row(i)[1], 0.0, 1.0);
+            let num = ((fx - ex).powi(2) + (fy - ey).powi(2)).sqrt() as f64;
+            let den = (ex.powi(2) + ey.powi(2)).sqrt().max(1e-6) as f64;
+            rel_err += num / den;
+            count += 1;
+        }
+        rel_err /= count as f64;
+        assert!(rel_err < 0.15, "BH θ=0.5 relative error too large: {rel_err}");
+    }
+
+    #[test]
+    fn bh_tsne_separates_blobs() {
+        let ds = datasets::blobs(200, 8, 3, 0.4, 12.0, 4);
+        let cfg = BhConfig { n_iters: 200, perplexity: 12.0, k: 36, ..BhConfig::default() };
+        let y = bh_tsne(&ds.x, &cfg);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        let auc = rnx_auc(&ds.x, &y, 40);
+        assert!(auc > 0.3, "BH t-SNE quality too low: AUC {auc}");
+    }
+}

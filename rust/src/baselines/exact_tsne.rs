@@ -1,0 +1,222 @@
+//! Exact O(N²) heavy-tailed t-SNE — the reference optimiser.
+//!
+//! Serves three roles: (i) the "t-SNE" panels of Figs 1/2, (ii) the
+//! exact-gradient oracle for Table 1's repulsive-field error analysis,
+//! (iii) a correctness anchor for the accelerated engine (both optimise
+//! the same Eq. 4 objective; at small N their quality must agree).
+//!
+//! α = 1 reproduces classic t-SNE; other α give the Kobak et al. [10]
+//! heavy-tailed variant.
+
+use crate::data::Matrix;
+use crate::hd::perplexity::{calibrate, conditionals};
+use crate::ld::kernel::kernel_pair;
+use crate::util::Rng;
+
+/// Configuration (subset of the engine's, for apples-to-apples panels).
+#[derive(Clone, Debug)]
+pub struct TsneConfig {
+    pub ld_dim: usize,
+    pub alpha: f64,
+    pub perplexity: f64,
+    pub n_iters: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub early_exag: f64,
+    pub early_exag_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            ld_dim: 2,
+            alpha: 1.0,
+            perplexity: 30.0,
+            n_iters: 500,
+            lr: 100.0,
+            momentum: 0.7,
+            early_exag: 4.0,
+            early_exag_iters: 100,
+            seed: 42,
+        }
+    }
+}
+
+/// Symmetrised dense P matrix (row-major n×n, Σ = 1).
+pub fn dense_p(x: &Matrix, perplexity: f64) -> Vec<f32> {
+    let n = x.n();
+    let mut p = vec![0.0f32; n * n];
+    let mut sq = vec![0.0f32; n - 1];
+    let mut cond = vec![0.0f32; n - 1];
+    for i in 0..n {
+        let mut t = 0;
+        for j in 0..n {
+            if j != i {
+                sq[t] = x.sqdist(i, j);
+                t += 1;
+            }
+        }
+        let cal = calibrate(&sq, perplexity, None);
+        conditionals(&sq, cal.beta, &mut cond);
+        let mut t = 0;
+        for j in 0..n {
+            if j != i {
+                p[i * n + j] = cond[t];
+                t += 1;
+            }
+        }
+    }
+    // Symmetrise: p_ij = (p_{j|i} + p_{i|j}) / (2n)  (Σ over ordered pairs = 1)
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = (p[i * n + j] + p[j * n + i]) / (2.0 * n as f32);
+            p[i * n + j] = v;
+            p[j * n + i] = v;
+        }
+    }
+    for i in 0..n {
+        p[i * n + i] = 0.0;
+    }
+    p
+}
+
+/// Exact per-point *movement* directions (negative gradient / 4) at the
+/// current embedding, split into attraction and repulsion components
+/// (Table 1 needs the split).
+pub fn exact_gradient_split(y: &Matrix, p: &[f32], alpha: f32) -> (Matrix, Matrix) {
+    let n = y.n();
+    let d = y.d();
+    // Z = Σ_{k≠l} w_kl
+    let mut z = 0.0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (w, _) = kernel_pair(y.sqdist(i, j), alpha);
+            z += 2.0 * w as f64;
+        }
+    }
+    let zinv = (1.0 / z.max(1e-300)) as f32;
+    let mut attr = Matrix::zeros(n, d);
+    let mut rep = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let (w, g) = kernel_pair(y.sqdist(i, j), alpha);
+            let pij = p[i * n + j];
+            let q = w * zinv;
+            for c in 0..d {
+                let delta = y.row(i)[c] - y.row(j)[c];
+                attr.data_mut()[i * d + c] += pij * g * (-delta);
+                rep.data_mut()[i * d + c] += q * g * delta;
+            }
+        }
+    }
+    (attr, rep)
+}
+
+/// Run exact heavy-tailed t-SNE; returns the embedding.
+pub fn exact_tsne(x: &Matrix, cfg: &TsneConfig) -> Matrix {
+    let n = x.n();
+    let d = cfg.ld_dim;
+    let p = dense_p(x, cfg.perplexity);
+    let mut rng = Rng::new(cfg.seed);
+    let mut y = Matrix::zeros(n, d);
+    for v in y.data_mut() {
+        *v = rng.gauss_ms(0.0, 1e-2) as f32;
+    }
+    let mut vel = Matrix::zeros(n, d);
+    let alpha = cfg.alpha as f32;
+    let mut p_work = p.clone();
+    for iter in 0..cfg.n_iters {
+        let exag = if iter < cfg.early_exag_iters { cfg.early_exag as f32 } else { 1.0 };
+        if exag != 1.0 || iter == cfg.early_exag_iters {
+            for (w, orig) in p_work.iter_mut().zip(&p) {
+                *w = orig * exag;
+            }
+        }
+        let (attr, rep) = exact_gradient_split(&y, &p_work, alpha);
+        let lr = cfg.lr as f32;
+        let mom = cfg.momentum as f32;
+        for t in 0..y.data().len() {
+            let grad = attr.data()[t] + rep.data()[t];
+            vel.data_mut()[t] = mom * vel.data_mut()[t] + lr * grad;
+            y.data_mut()[t] += vel.data()[t];
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::metrics::rnx_auc;
+
+    #[test]
+    fn dense_p_is_symmetric_normalised() {
+        let ds = datasets::blobs(60, 5, 3, 0.5, 6.0, 1);
+        let p = dense_p(&ds.x, 10.0);
+        let n = 60;
+        let total: f64 = p.iter().map(|&v| v as f64).sum();
+        assert!((total - 1.0).abs() < 1e-4, "ΣP = {total}");
+        for i in 0..n {
+            assert_eq!(p[i * n + i], 0.0);
+            for j in 0..n {
+                assert!((p[i * n + j] - p[j * n + i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_tsne_separates_blobs() {
+        let ds = datasets::blobs(150, 8, 3, 0.4, 12.0, 2);
+        let cfg = TsneConfig { n_iters: 250, perplexity: 15.0, ..TsneConfig::default() };
+        let y = exact_tsne(&ds.x, &cfg);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        let auc = rnx_auc(&ds.x, &y, 40);
+        assert!(auc > 0.35, "exact t-SNE quality too low: AUC {auc}");
+    }
+
+    #[test]
+    fn gradient_split_signs() {
+        // Two neighbouring points in HD placed far apart in LD:
+        // attraction points toward the HD neighbour.
+        let x = Matrix::from_vec(vec![0.0, 0.0, 0.1, 0.0, 5.0, 5.0, 5.1, 5.0], 4, 2).unwrap();
+        let p = dense_p(&x, 2.0);
+        let y = Matrix::from_vec(vec![0.0, 0.0, 3.0, 0.0, 0.0, 3.0, 3.0, 3.0], 4, 2).unwrap();
+        let (attr, rep) = exact_gradient_split(&y, &p, 1.0);
+        assert!(attr.row(0)[0] > 0.0, "attraction should pull toward HD neighbour");
+        assert!(rep.row(0)[0] < 0.0 || rep.row(0)[1] < 0.0);
+    }
+
+    #[test]
+    fn heavy_tails_compact_clusters() {
+        // The qualitative Fig. 3 effect, measured crudely: with heavier
+        // tails the same-cluster/all-pairs distance ratio shrinks.
+        let ds = datasets::blobs(120, 8, 4, 0.5, 10.0, 3);
+        let run = |alpha: f64| {
+            let cfg =
+                TsneConfig { alpha, n_iters: 200, perplexity: 10.0, ..TsneConfig::default() };
+            let y = exact_tsne(&ds.x, &cfg);
+            let (mut same, mut all) = (Vec::new(), Vec::new());
+            for i in 0..120 {
+                for j in (i + 1)..120 {
+                    let d = (y.sqdist(i, j) as f64).sqrt();
+                    all.push(d);
+                    if ds.labels[i] == ds.labels[j] {
+                        same.push(d);
+                    }
+                }
+            }
+            crate::util::stats::mean(&same) / crate::util::stats::mean(&all).max(1e-12)
+        };
+        let t_ratio = run(1.0);
+        let heavy_ratio = run(0.4);
+        assert!(
+            heavy_ratio < t_ratio + 0.05,
+            "heavy tails should compact clusters: α=0.4 ratio {heavy_ratio} vs α=1 {t_ratio}"
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Baseline NE methods the paper compares against (see DESIGN.md §3 for
+//! the FIt-SNE→BH substitution note).
+
+pub mod exact_tsne;
+pub mod bhtsne;
+pub mod umap_like;

@@ -1,0 +1,206 @@
+//! UMAP-like negative-sampling neighbour embedding (McInnes et al. [8]).
+//!
+//! The "fast but coarse" baseline of Figs 6/8 and Table 1: repulsion is
+//! estimated *only* from a handful of uniform negative samples per edge,
+//! using UMAP's cross-entropy force expressions with the standard
+//! (a, b) curve for min_dist ≈ 0.1. Per-epoch edge sampling follows
+//! UMAP's epochs_per_sample scheme in simplified form (edges sampled
+//! proportionally to their fuzzy weight).
+
+use crate::config::KnnConfig;
+use crate::data::Matrix;
+use crate::knn::brute::brute_knn;
+use crate::knn::nn_descent::nn_descent;
+use crate::util::Rng;
+
+/// UMAP-like configuration.
+#[derive(Clone, Debug)]
+pub struct UmapConfig {
+    pub ld_dim: usize,
+    pub k: usize,
+    pub n_epochs: usize,
+    pub neg_per_edge: usize,
+    pub lr: f64,
+    /// Curve parameters (defaults fit min_dist=0.1, spread=1.0).
+    pub a: f64,
+    pub b: f64,
+    pub seed: u64,
+    pub exact_knn_below: usize,
+}
+
+impl Default for UmapConfig {
+    fn default() -> Self {
+        UmapConfig {
+            ld_dim: 2,
+            k: 15,
+            n_epochs: 300,
+            neg_per_edge: 5,
+            lr: 1.0,
+            a: 1.577,
+            b: 0.895,
+            seed: 42,
+            exact_knn_below: 2500,
+        }
+    }
+}
+
+/// Fuzzy simplicial edge list: (i, j, weight) with UMAP's smooth-knn
+/// calibration and probabilistic t-conorm symmetrisation.
+pub fn fuzzy_graph(x: &Matrix, k: usize, seed: u64, exact_below: usize) -> Vec<(u32, u32, f32)> {
+    let n = x.n();
+    let k = k.min(n - 1);
+    let table = if n <= exact_below {
+        brute_knn(x, k)
+    } else {
+        nn_descent(x, &KnnConfig { k, seed, ..KnnConfig::default() }).table
+    };
+    // Per point: rho_i = nearest distance; sigma_i by binary search s.t.
+    // sum_j exp(-(d_ij - rho)/sigma) = log2(k).
+    let target = (k as f64).log2();
+    let mut directed = vec![0.0f32; n * k];
+    let mut ids = vec![u32::MAX; n * k];
+    for i in 0..n {
+        let mut dists: Vec<(u32, f32)> = table.entries(i).map(|(j, d)| (j, d.sqrt())).collect();
+        dists.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        if dists.is_empty() {
+            continue;
+        }
+        let rho = dists[0].1;
+        let (mut lo, mut hi) = (1e-4f64, 1e4f64);
+        let mut sigma = 1.0f64;
+        for _ in 0..48 {
+            sigma = (lo + hi) / 2.0;
+            let s: f64 = dists
+                .iter()
+                .map(|&(_, d)| (-(((d - rho).max(0.0)) as f64) / sigma).exp())
+                .sum();
+            if s > target {
+                hi = sigma;
+            } else {
+                lo = sigma;
+            }
+        }
+        for (s, &(j, d)) in dists.iter().enumerate() {
+            ids[i * k + s] = j;
+            directed[i * k + s] = (-(((d - rho).max(0.0)) as f64) / sigma).exp() as f32;
+        }
+    }
+    // Symmetrise with the probabilistic t-conorm: w = a + b − a·b.
+    let mut map = std::collections::HashMap::<(u32, u32), (f32, f32)>::new();
+    for i in 0..n {
+        for s in 0..k {
+            let j = ids[i * k + s];
+            if j == u32::MAX {
+                continue;
+            }
+            let (lo, hi) = if (i as u32) < j { (i as u32, j) } else { (j, i as u32) };
+            let e = map.entry((lo, hi)).or_insert((0.0, 0.0));
+            if (i as u32) < j {
+                e.0 = directed[i * k + s];
+            } else {
+                e.1 = directed[i * k + s];
+            }
+        }
+    }
+    map.into_iter()
+        .map(|((i, j), (wa, wb))| (i, j, wa + wb - wa * wb))
+        .filter(|&(_, _, w)| w > 0.0)
+        .collect()
+}
+
+/// Run the UMAP-like optimiser.
+pub fn umap_like(x: &Matrix, cfg: &UmapConfig) -> Matrix {
+    let n = x.n();
+    let edges = fuzzy_graph(x, cfg.k, cfg.seed, cfg.exact_knn_below);
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+    let mut y = Matrix::zeros(n, cfg.ld_dim);
+    for v in y.data_mut() {
+        *v = rng.gauss_ms(0.0, 1.0) as f32 * 10.0;
+    }
+    let a = cfg.a as f32;
+    let b = cfg.b as f32;
+    let d = cfg.ld_dim;
+    let wmax = edges.iter().map(|e| e.2).fold(0.0f32, f32::max).max(1e-9);
+    for epoch in 0..cfg.n_epochs {
+        let lr = (cfg.lr * (1.0 - epoch as f64 / cfg.n_epochs as f64)) as f32;
+        for &(i, j, w) in &edges {
+            // Sample the edge proportionally to its weight.
+            if !rng.chance((w / wmax) as f64) {
+                continue;
+            }
+            let (i, j) = (i as usize, j as usize);
+            let d2 = y.sqdist(i, j);
+            // Attractive grad coefficient (UMAP): -2ab d^{2(b-1)} / (1 + a d^{2b})
+            let grad_a = if d2 > 0.0 {
+                (-2.0 * a * b * d2.powf(b - 1.0)) / (1.0 + a * d2.powf(b))
+            } else {
+                0.0
+            };
+            for c in 0..d {
+                let delta = y.row(i)[c] - y.row(j)[c];
+                let gc = (grad_a * delta).clamp(-4.0, 4.0) * lr;
+                y.row_mut(i)[c] += gc;
+                y.row_mut(j)[c] -= gc;
+            }
+            // Negative samples: repulsive CE term on i.
+            for _ in 0..cfg.neg_per_edge {
+                let t = rng.below(n);
+                if t == i {
+                    continue;
+                }
+                let d2 = y.sqdist(i, t);
+                let grad_r = (2.0 * b) / ((0.001 + d2) * (1.0 + a * d2.powf(b)));
+                for c in 0..d {
+                    let delta = y.row(i)[c] - y.row(t)[c];
+                    let gc = (grad_r * delta).clamp(-4.0, 4.0) * lr;
+                    y.row_mut(i)[c] += gc;
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::metrics::rnx_auc;
+
+    #[test]
+    fn fuzzy_graph_weights_in_unit_interval() {
+        let ds = datasets::blobs(120, 6, 3, 0.5, 8.0, 1);
+        let edges = fuzzy_graph(&ds.x, 10, 1, 10_000);
+        assert!(!edges.is_empty());
+        for &(i, j, w) in &edges {
+            assert!(i < j, "edges must be canonical (i < j)");
+            assert!((0.0..=1.0 + 1e-6).contains(&w), "weight {w}");
+        }
+        // Each point appears in at least one edge.
+        let mut seen = vec![false; 120];
+        for &(i, j, _) in &edges {
+            seen[i as usize] = true;
+            seen[j as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn umap_like_separates_blobs() {
+        let ds = datasets::blobs(200, 8, 3, 0.4, 12.0, 2);
+        let cfg = UmapConfig { n_epochs: 150, ..UmapConfig::default() };
+        let y = umap_like(&ds.x, &cfg);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        let auc = rnx_auc(&ds.x, &y, 40);
+        assert!(auc > 0.25, "UMAP-like quality too low: AUC {auc}");
+    }
+
+    #[test]
+    fn supports_higher_ld_dims() {
+        let ds = datasets::blobs(120, 6, 2, 0.5, 8.0, 3);
+        let cfg = UmapConfig { ld_dim: 8, n_epochs: 50, ..UmapConfig::default() };
+        let y = umap_like(&ds.x, &cfg);
+        assert_eq!(y.d(), 8);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,150 @@
+//! Miniature CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `funcsne <subcommand> [--key value]... [--flag]...`.
+//! Keys use kebab-case on the command line and are normalised to
+//! snake_case, so `--ld-dim 8` sets `ld_dim`.
+
+use crate::config::toml_lite::{parse_value, Value};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, bare positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub options: BTreeMap<String, Value>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let mut out = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                let key = key.replace('-', "_");
+                // A following token that is not itself an option is the value;
+                // otherwise this is a boolean flag.
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let raw = it.next().unwrap();
+                        let val = parse_value(&raw)
+                            .unwrap_or(Value::Str(raw.clone()));
+                        out.options.insert(key, val);
+                    }
+                    _ => {
+                        out.options.insert(key, Value::Bool(true));
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        match self.options.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(Value::Int(i)) => i.to_string(),
+            Some(Value::Float(f)) => f.to_string(),
+            Some(Value::Bool(b)) => b.to_string(),
+            None => default.to_string(),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            Some(v) => v.as_f64().ok_or_else(|| anyhow::anyhow!("--{key} expects a number")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            Some(v) => {
+                let i = v.as_i64().ok_or_else(|| anyhow::anyhow!("--{key} expects an integer"))?;
+                if i < 0 {
+                    bail!("--{key} expects a non-negative integer");
+                }
+                Ok(i as usize)
+            }
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key), Some(Value::Bool(true)))
+    }
+
+    /// Re-express options as a `section.key` map so config `apply` works.
+    pub fn as_section_map(&self, section: &str) -> BTreeMap<String, Value> {
+        self.options
+            .iter()
+            .map(|(k, v)| (format!("{section}.{k}"), v.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // NOTE: a bare token right after `--flag` is taken as its value,
+        // so boolean flags go last (or use explicit `--flag true`).
+        let a = parse(&["embed", "--alpha", "0.5", "--ld-dim", "8", "dataset.npy", "--verbose"]);
+        assert_eq!(a.subcommand, "embed");
+        assert_eq!(a.options["alpha"], Value::Float(0.5));
+        assert_eq!(a.options["ld_dim"], Value::Int(8));
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["dataset.npy"]);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.get_flag("fast"));
+    }
+
+    #[test]
+    fn getters_with_defaults() {
+        let a = parse(&["x", "--n", "100"]);
+        assert_eq!(a.get_usize("n", 5).unwrap(), 100);
+        assert_eq!(a.get_usize("m", 5).unwrap(), 5);
+        assert_eq!(a.get_f64("lr", 0.1).unwrap(), 0.1);
+        assert_eq!(a.get_str("name", "d"), "d");
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // "--shift -3" : -3 does not start with --, so it's a value.
+        let a = parse(&["x", "--shift", "-3"]);
+        assert_eq!(a.options["shift"], Value::Int(-3));
+    }
+
+    #[test]
+    fn section_map_round_trips_into_config() {
+        let a = parse(&["embed", "--alpha", "0.4"]);
+        let map = a.as_section_map("embed");
+        let mut cfg = crate::config::EmbedConfig::default();
+        cfg.apply(&map, "embed").unwrap();
+        assert_eq!(cfg.alpha, 0.4);
+    }
+}

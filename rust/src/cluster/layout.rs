@@ -1,0 +1,157 @@
+//! Force-directed layout (Fruchterman–Reingold flavoured) for rendering
+//! hierarchy graphs (Figs 9/10) as ASCII / CSV output.
+
+use super::hierarchy::HierarchyGraph;
+use crate::util::Rng;
+
+/// 2-D node positions for a hierarchy graph.
+pub fn layout(graph: &HierarchyGraph, iters: usize, seed: u64) -> Vec<(f32, f32)> {
+    let n = graph.nodes.len();
+    let mut rng = Rng::new(seed);
+    let mut pos: Vec<(f32, f32)> = (0..n)
+        .map(|_| (rng.gauss() as f32, rng.gauss() as f32))
+        .collect();
+    if n <= 1 {
+        return pos;
+    }
+    let area_k = (1.0 / n as f32).sqrt() * 4.0;
+    let mut disp = vec![(0.0f32, 0.0f32); n];
+    for it in 0..iters {
+        let temp = 0.5 * (1.0 - it as f32 / iters as f32) + 0.01;
+        for d in disp.iter_mut() {
+            *d = (0.0, 0.0);
+        }
+        // Repulsion between all node pairs.
+        for a in 0..n {
+            for b in (a + 1)..n {
+                let dx = pos[a].0 - pos[b].0;
+                let dy = pos[a].1 - pos[b].1;
+                let d2 = (dx * dx + dy * dy).max(1e-6);
+                let f = area_k * area_k / d2;
+                disp[a].0 += dx * f;
+                disp[a].1 += dy * f;
+                disp[b].0 -= dx * f;
+                disp[b].1 -= dy * f;
+            }
+        }
+        // Attraction along weighted edges.
+        for e in &graph.edges {
+            let (a, b) = (e.from, e.to);
+            let dx = pos[a].0 - pos[b].0;
+            let dy = pos[a].1 - pos[b].1;
+            let d = (dx * dx + dy * dy).sqrt().max(1e-6);
+            let f = d / area_k * e.weight as f32;
+            disp[a].0 -= dx / d * f;
+            disp[a].1 -= dy / d * f;
+            disp[b].0 += dx / d * f;
+            disp[b].1 += dy / d * f;
+        }
+        for i in 0..n {
+            let (dx, dy) = disp[i];
+            let d = (dx * dx + dy * dy).sqrt().max(1e-9);
+            let step = d.min(temp);
+            pos[i].0 += dx / d * step;
+            pos[i].1 += dy / d * step;
+        }
+    }
+    pos
+}
+
+/// Render the graph + layout as ASCII (nodes labelled `Lℓ.c`, larger
+/// clusters shown with `#`-intensity marks), with an edge list appendix.
+pub fn render_ascii(graph: &HierarchyGraph, pos: &[(f32, f32)], width: usize, height: usize) -> String {
+    let mut out = String::new();
+    if graph.nodes.is_empty() {
+        return "(empty hierarchy graph)\n".to_string();
+    }
+    let (mut xmin, mut xmax, mut ymin, mut ymax) =
+        (f32::INFINITY, f32::NEG_INFINITY, f32::INFINITY, f32::NEG_INFINITY);
+    for &(x, y) in pos {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    let dx = (xmax - xmin).max(1e-6);
+    let dy = (ymax - ymin).max(1e-6);
+    let mut grid = vec![vec![' '; width]; height];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let gx = (((pos[i].0 - xmin) / dx) * (width - 1) as f32).round() as usize;
+        let gy = (((pos[i].1 - ymin) / dy) * (height - 1) as f32).round() as usize;
+        let c = char::from_digit(node.level as u32 % 10, 10).unwrap_or('?');
+        grid[height - 1 - gy.min(height - 1)][gx.min(width - 1)] = c;
+    }
+    out.push_str("hierarchy graph (digit = level):\n");
+    for row in grid {
+        out.push_str("  ");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("edges (from -> to, weight, sizes):\n");
+    for e in &graph.edges {
+        let f = &graph.nodes[e.from];
+        let t = &graph.nodes[e.to];
+        out.push_str(&format!(
+            "  L{}.{} ({} pts) -> L{}.{} ({} pts)  w={:.2}\n",
+            f.level,
+            f.cluster,
+            f.members.len(),
+            t.level,
+            t.cluster,
+            t.members.len(),
+            e.weight
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::hierarchy::{build_graph, HierNode};
+
+    fn toy_graph() -> HierarchyGraph {
+        let l0 = vec![HierNode { level: 0, cluster: 0, members: (0..10).collect() }];
+        let l1 = vec![
+            HierNode { level: 0, cluster: 0, members: (0..5).collect() },
+            HierNode { level: 0, cluster: 1, members: (5..10).collect() },
+        ];
+        build_graph(vec![l0, l1])
+    }
+
+    #[test]
+    fn layout_produces_finite_distinct_positions() {
+        let g = toy_graph();
+        let pos = layout(&g, 100, 1);
+        assert_eq!(pos.len(), 3);
+        for &(x, y) in &pos {
+            assert!(x.is_finite() && y.is_finite());
+        }
+        // Siblings should not collapse onto each other.
+        let d = ((pos[1].0 - pos[2].0).powi(2) + (pos[1].1 - pos[2].1).powi(2)).sqrt();
+        assert!(d > 1e-3, "siblings collapsed: {d}");
+    }
+
+    #[test]
+    fn connected_nodes_closer_than_average() {
+        let g = toy_graph();
+        let pos = layout(&g, 200, 2);
+        let dist = |a: usize, b: usize| {
+            ((pos[a].0 - pos[b].0).powi(2) + (pos[a].1 - pos[b].1).powi(2)).sqrt()
+        };
+        // parent-child distances vs sibling distance
+        let pc = (dist(0, 1) + dist(0, 2)) / 2.0;
+        let sib = dist(1, 2);
+        assert!(pc <= sib * 1.5, "layout ignores edges: pc={pc} sib={sib}");
+    }
+
+    #[test]
+    fn render_contains_levels_and_edges() {
+        let g = toy_graph();
+        let pos = layout(&g, 50, 3);
+        let s = render_ascii(&g, &pos, 40, 12);
+        assert!(s.contains('0'));
+        assert!(s.contains('1'));
+        assert!(s.contains("w=1.00"));
+    }
+}

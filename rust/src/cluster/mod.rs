@@ -1,0 +1,6 @@
+//! Clustering substrate: DBSCAN, the α-sweep hierarchy graph (Figs 9/10)
+//! and a force-directed layout for rendering the graph.
+
+pub mod dbscan;
+pub mod hierarchy;
+pub mod layout;

@@ -1,0 +1,7 @@
+//! Configuration system: typed configs for the engine / KNN / run,
+//! loadable from a TOML-subset file and overridable from the CLI.
+
+pub mod toml_lite;
+pub mod types;
+
+pub use types::{Backend, EmbedConfig, KnnConfig, RunConfig};

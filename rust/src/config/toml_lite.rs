@@ -1,0 +1,171 @@
+//! A TOML-subset parser (no external crates available offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string ("..."),
+//! bool, integer, float values, `#` comments, blank lines. Keys are
+//! namespaced as `section.key` in the flat map (`key` alone before any
+//! section header).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse TOML-subset text into a flat `section.key -> Value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full, val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a single scalar value.
+pub fn parse_value(s: &str) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare strings are accepted (CLI convenience): dataset names etc.
+    if !s.is_empty() && s.chars().all(|c| c.is_alphanumeric() || "_-./".contains(c)) {
+        return Ok(Value::Str(s.to_string()));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let text = r#"
+# top comment
+seed = 42
+[embed]
+alpha = 0.5      # heavy tails
+n_iters = 3000
+backend = "native"
+verbose = true
+name = bare_string-ok
+"#;
+        let m = parse(text).unwrap();
+        assert_eq!(m["seed"], Value::Int(42));
+        assert_eq!(m["embed.alpha"], Value::Float(0.5));
+        assert_eq!(m["embed.n_iters"], Value::Int(3000));
+        assert_eq!(m["embed.backend"], Value::Str("native".into()));
+        assert_eq!(m["embed.verbose"], Value::Bool(true));
+        assert_eq!(m["embed.name"], Value::Str("bare_string-ok".into()));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let m = parse("k = \"a#b\"").unwrap();
+        assert_eq!(m["k"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(parse_value("1").unwrap().as_f64(), Some(1.0));
+        assert_eq!(parse_value("1.5").unwrap().as_f64(), Some(1.5));
+        assert_eq!(parse_value("true").unwrap().as_bool(), Some(true));
+        assert_eq!(parse_value("\"x\"").unwrap().as_str(), Some("x"));
+        assert_eq!(parse_value("7").unwrap().as_i64(), Some(7));
+    }
+}

@@ -1,0 +1,341 @@
+//! Typed configuration for the engine, KNN subsystem, and run driver.
+//!
+//! Defaults follow the paper's recommended settings (§3, §4): α = 1
+//! (t-SNE-equivalent), perplexity 30, probabilistic HD refinement with
+//! base probability 0.05, separated attraction/repulsion with ratio 1,
+//! optional early exaggeration and linear-projection jump-start.
+
+use super::toml_lite::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which force-computation backend the coordinator dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust forces (reference + performance baseline).
+    Native,
+    /// AOT-compiled XLA executables via PJRT (the three-layer hot path).
+    Pjrt,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => bail!("unknown backend {other:?} (native|pjrt)"),
+        }
+    }
+}
+
+/// Embedding initialisation strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    /// Small random Gaussian.
+    Random,
+    /// First `ld_dim` principal components (scaled down).
+    Pca,
+}
+
+/// Hyperparameters of the FUnc-SNE engine.
+#[derive(Clone, Debug)]
+pub struct EmbedConfig {
+    /// Target dimensionality — unconstrained (the paper's headline).
+    pub ld_dim: usize,
+    /// LD kernel tail-heaviness α (Eq. 4). 1.0 ≡ t-SNE; < 1 heavier.
+    pub alpha: f64,
+    /// HD Gaussian perplexity (Eq. 1).
+    pub perplexity: f64,
+    /// Estimated HD neighbour set size.
+    pub k_hd: usize,
+    /// Estimated LD neighbour set size.
+    pub k_ld: usize,
+    /// Negative samples per point per iteration (far-field term).
+    pub n_neg: usize,
+    /// Gradient-descent step size.
+    pub lr: f64,
+    /// Momentum coefficient.
+    pub momentum: f64,
+    /// Attraction multiplier (the paper's separated aggregation).
+    pub attraction: f64,
+    /// Repulsion multiplier.
+    pub repulsion: f64,
+    /// Early-exaggeration factor applied to attraction.
+    pub early_exag: f64,
+    /// Iterations during which early exaggeration is active.
+    pub early_exag_iters: usize,
+    /// Total gradient iterations.
+    pub n_iters: usize,
+    /// Base probability of running an HD refinement pass
+    /// (p = base + (1-base)·E[N_new/N], paper uses 0.05).
+    pub refine_base_prob: f64,
+    /// EWMA retention for the E[N_new/N] tracker.
+    pub refine_ewma_beta: f64,
+    /// Candidates proposed per point per refinement, per route
+    /// (HD→HD, LD→HD cross, random).
+    pub n_candidates: usize,
+    /// Iterations of linear-projection jump-start before NE gradients.
+    pub jumpstart_iters: usize,
+    /// Embedding RMS radius that triggers an automatic "implosion".
+    pub implosion_radius: f64,
+    /// Scale-down factor applied on implosion.
+    pub implosion_factor: f64,
+    /// Initialisation strategy.
+    pub init: Init,
+    /// Force backend.
+    pub backend: Backend,
+    /// RNG seed.
+    pub seed: u64,
+    /// σ_i recalibration cadence (iterations between flag sweeps).
+    pub recalibrate_every: usize,
+}
+
+impl Default for EmbedConfig {
+    fn default() -> Self {
+        EmbedConfig {
+            ld_dim: 2,
+            alpha: 1.0,
+            perplexity: 30.0,
+            k_hd: 32,
+            k_ld: 16,
+            n_neg: 8,
+            lr: 0.1,
+            momentum: 0.8,
+            attraction: 1.0,
+            repulsion: 1.0,
+            early_exag: 4.0,
+            early_exag_iters: 250,
+            n_iters: 1500,
+            refine_base_prob: 0.05,
+            refine_ewma_beta: 0.9,
+            n_candidates: 8,
+            jumpstart_iters: 100,
+            implosion_radius: 50.0,
+            implosion_factor: 0.25,
+            init: Init::Random,
+            backend: Backend::Native,
+            seed: 42,
+            recalibrate_every: 10,
+        }
+    }
+}
+
+impl EmbedConfig {
+    /// Validate invariants; call after construction / overrides.
+    pub fn validate(&self) -> Result<()> {
+        if self.ld_dim == 0 {
+            bail!("ld_dim must be >= 1");
+        }
+        if self.ld_dim > 64 {
+            bail!("ld_dim must be <= 64 (native fast-path stack buffers)");
+        }
+        if !(self.alpha > 0.0) {
+            bail!("alpha must be > 0 (got {})", self.alpha);
+        }
+        if !(self.perplexity >= 2.0) {
+            bail!("perplexity must be >= 2 (got {})", self.perplexity);
+        }
+        if self.k_hd < 2 || self.k_ld < 1 {
+            bail!("neighbour set sizes too small (k_hd={}, k_ld={})", self.k_hd, self.k_ld);
+        }
+        if (self.k_hd as f64) < self.perplexity {
+            bail!(
+                "k_hd ({}) must be >= perplexity ({}) for calibration to succeed",
+                self.k_hd,
+                self.perplexity
+            );
+        }
+        if !(0.0..=1.0).contains(&self.refine_base_prob) {
+            bail!("refine_base_prob must be in [0,1]");
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            bail!("momentum must be in [0,1)");
+        }
+        if self.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        if self.implosion_factor <= 0.0 || self.implosion_factor >= 1.0 {
+            bail!("implosion_factor must be in (0,1)");
+        }
+        Ok(())
+    }
+
+    /// Apply `section.key` overrides from a parsed TOML-subset map.
+    pub fn apply(&mut self, map: &BTreeMap<String, Value>, section: &str) -> Result<()> {
+        for (key, val) in map {
+            let Some(name) = key.strip_prefix(&format!("{section}.")) else {
+                continue;
+            };
+            self.set(name, val).with_context(|| format!("config key {key}"))?;
+        }
+        Ok(())
+    }
+
+    /// Set a single field by name.
+    pub fn set(&mut self, name: &str, val: &Value) -> Result<()> {
+        macro_rules! f64_field {
+            ($field:ident) => {{
+                self.$field = val.as_f64().context("expected number")?;
+            }};
+        }
+        macro_rules! usize_field {
+            ($field:ident) => {{
+                let v = val.as_i64().context("expected integer")?;
+                if v < 0 {
+                    bail!("expected non-negative integer");
+                }
+                self.$field = v as usize;
+            }};
+        }
+        match name {
+            "ld_dim" => usize_field!(ld_dim),
+            "alpha" => f64_field!(alpha),
+            "perplexity" => f64_field!(perplexity),
+            "k_hd" => usize_field!(k_hd),
+            "k_ld" => usize_field!(k_ld),
+            "n_neg" => usize_field!(n_neg),
+            "lr" => f64_field!(lr),
+            "momentum" => f64_field!(momentum),
+            "attraction" => f64_field!(attraction),
+            "repulsion" => f64_field!(repulsion),
+            "early_exag" => f64_field!(early_exag),
+            "early_exag_iters" => usize_field!(early_exag_iters),
+            "n_iters" => usize_field!(n_iters),
+            "refine_base_prob" => f64_field!(refine_base_prob),
+            "refine_ewma_beta" => f64_field!(refine_ewma_beta),
+            "n_candidates" => usize_field!(n_candidates),
+            "jumpstart_iters" => usize_field!(jumpstart_iters),
+            "implosion_radius" => f64_field!(implosion_radius),
+            "implosion_factor" => f64_field!(implosion_factor),
+            "recalibrate_every" => usize_field!(recalibrate_every),
+            "seed" => {
+                self.seed = val.as_i64().context("expected integer")? as u64;
+            }
+            "init" => {
+                self.init = match val.as_str().context("expected string")? {
+                    "random" => Init::Random,
+                    "pca" => Init::Pca,
+                    other => bail!("unknown init {other:?} (random|pca)"),
+                };
+            }
+            "backend" => {
+                self.backend = val.as_str().context("expected string")?.parse()?;
+            }
+            other => bail!("unknown embed config key {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+/// Configuration of the standalone KNN subsystems (NN-descent and the
+/// paper's iterative finder when run outside the engine).
+#[derive(Clone, Debug)]
+pub struct KnnConfig {
+    /// Neighbours per point.
+    pub k: usize,
+    /// NN-descent sample rate ρ.
+    pub rho: f64,
+    /// Max NN-descent rounds.
+    pub max_rounds: usize,
+    /// Convergence threshold: stop when updates < delta·N·K.
+    pub delta: f64,
+    pub seed: u64,
+}
+
+impl Default for KnnConfig {
+    fn default() -> Self {
+        KnnConfig { k: 32, rho: 0.5, max_rounds: 30, delta: 0.001, seed: 42 }
+    }
+}
+
+impl KnnConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 {
+            bail!("k must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.rho) {
+            bail!("rho must be in [0,1]");
+        }
+        Ok(())
+    }
+}
+
+/// Top-level run configuration (dataset + output locations).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub n: usize,
+    pub out_dir: String,
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig { dataset: "blobs".into(), n: 2000, out_dir: "results".into(), verbose: false }
+    }
+}
+
+/// Load an [`EmbedConfig`] from a TOML-subset file's `[embed]` section.
+pub fn load_embed_config(path: &Path) -> Result<EmbedConfig> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let map = toml_lite::parse(&text)?;
+    let mut cfg = EmbedConfig::default();
+    cfg.apply(&map, "embed")?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        EmbedConfig::default().validate().unwrap();
+        KnnConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_apply_from_map() {
+        let map = toml_lite::parse(
+            "[embed]\nalpha = 0.5\nld_dim = 8\nbackend = \"pjrt\"\ninit = \"pca\"\n",
+        )
+        .unwrap();
+        let mut cfg = EmbedConfig::default();
+        cfg.apply(&map, "embed").unwrap();
+        assert_eq!(cfg.alpha, 0.5);
+        assert_eq!(cfg.ld_dim, 8);
+        assert_eq!(cfg.backend, Backend::Pjrt);
+        assert_eq!(cfg.init, Init::Pca);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let mut cfg = EmbedConfig::default();
+        cfg.alpha = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg = EmbedConfig::default();
+        cfg.k_hd = 4; // < perplexity
+        assert!(cfg.validate().is_err());
+        cfg = EmbedConfig::default();
+        cfg.momentum = 1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let mut cfg = EmbedConfig::default();
+        let v = Value::Int(1);
+        assert!(cfg.set("does_not_exist", &v).is_err());
+    }
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("pjrt".parse::<Backend>().unwrap(), Backend::Pjrt);
+        assert!("cuda".parse::<Backend>().is_err());
+    }
+}

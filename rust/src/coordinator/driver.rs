@@ -1,0 +1,145 @@
+//! High-level run driver shared by the CLI, the examples and the bench
+//! harnesses: dataset registry, backend factory, and an end-to-end
+//! "embed + report" runner.
+
+use crate::config::{Backend, EmbedConfig};
+use crate::data::datasets::{self, Dataset};
+use crate::data::Matrix;
+use crate::engine::{ComputeBackend, FuncSne};
+use crate::ld::NativeBackend;
+use crate::linalg::Pca;
+use crate::util::Stopwatch;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory: `<crate root>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Instantiate a dataset by name (the registry the CLI / benches use).
+///
+/// Names: `scurve`, `scurve_unbalanced`, `blobs`, `blobs_overlap`,
+/// `blobs_disjoint`, `coil`, `mnist`, `rat_brain`, `tabula`,
+/// `deep_features`, `nested`.
+pub fn dataset_by_name(name: &str, n: usize, seed: u64) -> Result<Dataset> {
+    Ok(match name {
+        "scurve" => datasets::scurve(n, 0.02, false, seed),
+        "scurve_unbalanced" => datasets::scurve(n, 0.02, true, seed),
+        "blobs" => datasets::blobs(n, 32, 10, 1.0, 20.0, seed),
+        "blobs_overlap" => datasets::blobs_overlapping(n, 32, seed),
+        "blobs_disjoint" => {
+            let per = 30;
+            datasets::blobs_disjointed((n / per).max(2), per, 32, seed)
+        }
+        "coil" => datasets::coil_like(20, (n / 20).max(8), 48, seed),
+        "mnist" => datasets::mnist_like(n, 64, seed),
+        "rat_brain" => datasets::rat_brain_like(n, 50, seed),
+        "tabula" => datasets::tabula_like(n, 50, seed),
+        "deep_features" => datasets::deep_features(n, 100, 256, seed),
+        "nested" => datasets::nested_blobs(n, 16, 4, 3, seed),
+        other => bail!(
+            "unknown dataset {other:?} (scurve|scurve_unbalanced|blobs|blobs_overlap|\
+             blobs_disjoint|coil|mnist|rat_brain|tabula|deep_features|nested)"
+        ),
+    })
+}
+
+/// Build the configured compute backend. For PJRT the executables the
+/// run needs are compiled up front (`warmup`).
+pub fn make_backend(
+    cfg: &EmbedConfig,
+    data_dim: usize,
+    artifact_dir: &Path,
+) -> Result<Box<dyn ComputeBackend>> {
+    match cfg.backend {
+        Backend::Native => Ok(Box::new(NativeBackend::new())),
+        Backend::Pjrt => {
+            let mut b = super::PjrtBackend::new(artifact_dir)
+                .context("PJRT backend init (run `make artifacts`?)")?;
+            b.warmup(cfg.k_hd, cfg.k_ld, cfg.n_neg, cfg.ld_dim, data_dim)?;
+            Ok(Box::new(b))
+        }
+    }
+}
+
+/// Reduce wide data with PCA first (the paper's recommended
+/// preprocessing, §3: "reduce the HD dimensionality of the data linearly
+/// to a manageable number of dimensions").
+pub fn maybe_pca_reduce(x: Matrix, max_dim: usize, seed: u64) -> Matrix {
+    if x.d() > max_dim {
+        Pca::fit_transform(&x, max_dim, seed)
+    } else {
+        x
+    }
+}
+
+/// Result of an end-to-end run.
+pub struct RunReport {
+    pub engine: FuncSne,
+    pub seconds: f64,
+    pub iters_per_sec: f64,
+}
+
+/// End-to-end: build engine + backend, run `n_iters`, time it.
+pub fn run_embedding(x: Matrix, cfg: &EmbedConfig, artifact_dir: &Path) -> Result<RunReport> {
+    let mut backend = make_backend(cfg, x.d(), artifact_dir)?;
+    let mut engine = FuncSne::new(x, cfg.clone())?;
+    let sw = Stopwatch::new();
+    engine.run(cfg.n_iters, backend.as_mut())?;
+    let seconds = sw.elapsed_s();
+    Ok(RunReport { engine, seconds, iters_per_sec: cfg.n_iters as f64 / seconds.max(1e-9) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_registry_resolves_all_names() {
+        for name in [
+            "scurve",
+            "scurve_unbalanced",
+            "blobs",
+            "blobs_overlap",
+            "blobs_disjoint",
+            "coil",
+            "mnist",
+            "rat_brain",
+            "tabula",
+            "deep_features",
+            "nested",
+        ] {
+            let ds = dataset_by_name(name, 300, 1).unwrap();
+            assert!(ds.n() >= 200, "{name} produced too few points: {}", ds.n());
+            assert_eq!(ds.labels.len(), ds.n());
+        }
+        assert!(dataset_by_name("nope", 10, 1).is_err());
+    }
+
+    #[test]
+    fn pca_reduction_only_when_wide() {
+        let ds = dataset_by_name("mnist", 200, 2).unwrap();
+        let reduced = maybe_pca_reduce(ds.x.clone(), 16, 0);
+        assert_eq!(reduced.d(), 16);
+        let narrow = dataset_by_name("scurve", 100, 2).unwrap();
+        let kept = maybe_pca_reduce(narrow.x.clone(), 16, 0);
+        assert_eq!(kept.d(), 3);
+    }
+
+    #[test]
+    fn run_embedding_native_end_to_end() {
+        let ds = dataset_by_name("blobs", 200, 3).unwrap();
+        let cfg = EmbedConfig {
+            n_iters: 40,
+            k_hd: 10,
+            k_ld: 6,
+            perplexity: 6.0,
+            jumpstart_iters: 5,
+            ..EmbedConfig::default()
+        };
+        let report = run_embedding(ds.x, &cfg, &default_artifact_dir()).unwrap();
+        assert_eq!(report.engine.iter, 40);
+        assert!(report.iters_per_sec > 0.0);
+    }
+}

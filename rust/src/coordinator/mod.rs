@@ -1,0 +1,8 @@
+//! The coordinator: tiles engine work into fixed-shape batches and
+//! dispatches them to the PJRT executables ([`PjrtBackend`]), plus the
+//! high-level run driver shared by the CLI and the examples.
+
+pub mod pjrt_backend;
+pub mod driver;
+
+pub use pjrt_backend::PjrtBackend;

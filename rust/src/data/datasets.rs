@@ -1,0 +1,606 @@
+//! Synthetic dataset generators — structural twins of the paper's data.
+//!
+//! Each generator documents which paper dataset it substitutes and which
+//! structural property the corresponding experiment depends on. All
+//! generators return a [`Dataset`] with ground-truth labels (and, where
+//! applicable, a ground-truth hierarchy), which the metrics and figure
+//! drivers consume.
+
+use super::matrix::Matrix;
+use crate::util::Rng;
+
+/// A labelled point cloud plus optional hierarchy ground truth.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    /// Primary (leaf-level) integer label per point.
+    pub labels: Vec<usize>,
+    /// Optional coarser label per point (e.g. root cell type / digit
+    /// class when `labels` is the sub-cluster id).
+    pub coarse_labels: Option<Vec<usize>>,
+    /// Optional ground-truth parent map over leaf label ids
+    /// (`hierarchy[leaf] = parent group id`) for the Fig. 10 comparison.
+    pub hierarchy: Option<Vec<usize>>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.d()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.labels.iter().copied().max().map_or(0, |m| m + 1)
+    }
+}
+
+/// Apply a random (Haar-ish via Gram-Schmidt on Gaussian) rotation lifting
+/// a (n, d_in) cloud into `d_out >= d_in` ambient dimensions, then add
+/// isotropic Gaussian noise. This is how all generators "hide" their
+/// low-dimensional structure inside a higher-dimensional ambient space.
+fn lift(x: &Matrix, d_out: usize, noise: f64, rng: &mut Rng) -> Matrix {
+    let d_in = x.d();
+    assert!(d_out >= d_in);
+    // Random orthonormal basis: d_in rows of length d_out.
+    let mut basis: Vec<Vec<f32>> = Vec::with_capacity(d_in);
+    for _ in 0..d_in {
+        let mut v: Vec<f32> = (0..d_out).map(|_| rng.gauss() as f32).collect();
+        for b in &basis {
+            let proj = crate::data::matrix::dot(&v, b);
+            for k in 0..d_out {
+                v[k] -= proj * b[k];
+            }
+        }
+        let norm = crate::data::matrix::dot(&v, &v).sqrt().max(1e-12);
+        for vk in v.iter_mut() {
+            *vk /= norm;
+        }
+        basis.push(v);
+    }
+    let mut out = Matrix::zeros(x.n(), d_out);
+    for i in 0..x.n() {
+        let src = x.row(i);
+        let dst = out.row_mut(i);
+        for (j, b) in basis.iter().enumerate() {
+            let c = src[j];
+            for k in 0..d_out {
+                dst[k] += c * b[k];
+            }
+        }
+        if noise > 0.0 {
+            for dk in dst.iter_mut() {
+                *dk += rng.gauss_ms(0.0, noise) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// The classic S-curve: a 2-D sheet bent into an 'S' in 3-D (Fig. 1).
+///
+/// `unbalanced`: if set, the bottom half of the sheet is sampled 10×
+/// less frequently, reproducing the bottom panel of Fig. 1.
+pub fn scurve(n: usize, noise: f64, unbalanced: bool, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::zeros(n, 3);
+    let mut labels = Vec::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        // t in [-3π/2, 3π/2]; label = top/bottom half.
+        let t = rng.range_f64(-1.5 * std::f64::consts::PI, 1.5 * std::f64::consts::PI);
+        let bottom = t < 0.0;
+        if unbalanced && bottom && !rng.chance(0.1) {
+            continue;
+        }
+        let u = rng.range_f64(0.0, 2.0);
+        let row = x.row_mut(i);
+        row[0] = (t.sin() + rng.gauss_ms(0.0, noise)) as f32;
+        row[1] = (u + rng.gauss_ms(0.0, noise)) as f32;
+        row[2] = ((t.cos().abs() * t.signum() - t.signum()) + rng.gauss_ms(0.0, noise)) as f32;
+        labels.push(if bottom { 1 } else { 0 });
+        i += 1;
+    }
+    Dataset {
+        name: format!("scurve_n{n}{}", if unbalanced { "_unbalanced" } else { "" }),
+        x,
+        labels,
+        coarse_labels: None,
+        hierarchy: None,
+    }
+}
+
+/// Isotropic Gaussian blobs (Figs 4, 6 middle, 7, 8, Table 1).
+///
+/// `centers` cluster centres drawn uniformly in a cube of side
+/// `box_side`, each blob with std `std`. `d` ambient dimensions.
+pub fn blobs(n: usize, d: usize, centers: usize, std: f64, box_side: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let c: Vec<Vec<f32>> = (0..centers)
+        .map(|_| (0..d).map(|_| rng.range_f64(-box_side / 2.0, box_side / 2.0) as f32).collect())
+        .collect();
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let k = i % centers; // balanced assignment
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = c[k][j] + rng.gauss_ms(0.0, std) as f32;
+        }
+        labels.push(k);
+    }
+    Dataset {
+        name: format!("blobs_n{n}_d{d}_k{centers}"),
+        x,
+        labels,
+        coarse_labels: None,
+        hierarchy: None,
+    }
+}
+
+/// Fig. 7 "Overlapping" preset: 5 wide Gaussians with heavy overlap.
+pub fn blobs_overlapping(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut ds = blobs(n, d, 5, 2.0, 4.0, seed);
+    ds.name = format!("blobs_overlap_n{n}_d{d}");
+    ds
+}
+
+/// Fig. 7 "Disjointed" preset: 1000 tight, well-separated centres of 30
+/// points each (the local-minimum trap for NN-descent).
+pub fn blobs_disjointed(centers: usize, per_center: usize, d: usize, seed: u64) -> Dataset {
+    let n = centers * per_center;
+    let mut ds = blobs(n, d, centers, 0.05, 40.0, seed);
+    ds.name = format!("blobs_disjoint_c{centers}_p{per_center}_d{d}");
+    ds
+}
+
+/// COIL-20 twin (Fig. 6 bottom): `objects` closed 1-D ring manifolds
+/// (image sequences of rotating objects) lifted into `d_out` dims.
+///
+/// Each object is a circle with object-specific radius/phase in its own
+/// random 2-D plane of the ambient space, plus small noise — preserving
+/// what the experiment needs: per-object ring topology, inter-object
+/// separation, local neighbourhoods that follow the rotation angle.
+pub fn coil_like(objects: usize, per_object: usize, d_out: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let n = objects * per_object;
+    let mut intrinsic = Matrix::zeros(n, 3);
+    let mut labels = Vec::with_capacity(n);
+    for o in 0..objects {
+        let radius = rng.range_f64(2.0, 4.0);
+        let phase = rng.range_f64(0.0, std::f64::consts::TAU);
+        let zc = rng.range_f64(-20.0, 20.0); // object separation axis
+        for p in 0..per_object {
+            let i = o * per_object + p;
+            let a = phase + std::f64::consts::TAU * p as f64 / per_object as f64;
+            let row = intrinsic.row_mut(i);
+            row[0] = (radius * a.cos()) as f32;
+            row[1] = (radius * a.sin()) as f32;
+            row[2] = zc as f32;
+            labels.push(o);
+        }
+    }
+    // Rotate each object's ring into its own plane by lifting the whole
+    // cloud and adding per-object offsets in the ambient space.
+    let mut x = lift(&intrinsic, d_out, 0.05, &mut rng);
+    for o in 0..objects {
+        let offset: Vec<f32> = (0..d_out).map(|_| rng.gauss_ms(0.0, 3.0) as f32).collect();
+        for p in 0..per_object {
+            let row = x.row_mut(o * per_object + p);
+            for k in 0..d_out {
+                row[k] += offset[k];
+            }
+        }
+    }
+    Dataset {
+        name: format!("coil_like_o{objects}_p{per_object}"),
+        x,
+        labels,
+        coarse_labels: None,
+        hierarchy: None,
+    }
+}
+
+/// MNIST twin (Figs 3, 9): 10 digit classes with *planted sub-structure*.
+///
+/// What Fig. 3 requires of the data:
+/// * class "1" lies on a 1-D manifold (tilt angle) with two density dips
+///   → fragments into 3 sub-clusters at heavy tails;
+/// * class "4" has 4 sub-modes separated by density dips → fragments into
+///   4 clusters between α=0.5 and α=0.4;
+/// * classes {3,5,8} and {4,9,7} are each mutually close (the Fig. 9
+///   late-speciation groups), "1" is far from everything except "2".
+///
+/// The generator plants exactly these: class centres on a fixed layout
+/// whose pairwise distances encode the affinity groups, per-class
+/// sub-mode mixtures with controlled dip depth, lifted to `d_out` dims.
+pub fn mnist_like(n: usize, d_out: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let intrinsic_d = 8;
+    // Class centres: groups {3,5,8}, {4,9,7}, {1,2} are near each other.
+    let group_of = [0usize, 1, 1, 2, 3, 2, 4, 3, 2, 3]; // digit -> group
+    let mut group_centres: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..5 {
+        group_centres.push((0..intrinsic_d).map(|_| rng.gauss_ms(0.0, 9.0) as f32).collect());
+    }
+    let mut class_centres: Vec<Vec<f32>> = Vec::new();
+    for digit in 0..10 {
+        let g = &group_centres[group_of[digit]];
+        class_centres
+            .push(g.iter().map(|&v| v + rng.gauss_ms(0.0, 2.4) as f32).collect());
+    }
+    // Sub-mode plan per class: (n_modes, dip_separation)
+    let sub_modes: [usize; 10] = [2, 3, 2, 2, 4, 2, 2, 2, 3, 2];
+    let mut intrinsic = Matrix::zeros(n, intrinsic_d);
+    let mut labels = Vec::with_capacity(n);
+    let mut sub_labels = Vec::with_capacity(n);
+    let mut sub_id_base = 0usize;
+    let mut class_sub_base = [0usize; 10];
+    for digit in 0..10 {
+        class_sub_base[digit] = sub_id_base;
+        sub_id_base += sub_modes[digit];
+    }
+    for i in 0..n {
+        let digit = i % 10;
+        let c = &class_centres[digit];
+        let m = sub_modes[digit];
+        let row = intrinsic.row_mut(i);
+        if digit == 1 {
+            // 1-D tilt-angle manifold with density dips at mode borders:
+            // sample t from a trimodal distribution on [-1, 1].
+            let mode = rng.below(m);
+            let centre = -0.8 + 1.6 * mode as f64 / (m - 1).max(1) as f64;
+            let t = centre + rng.gauss_ms(0.0, 0.14);
+            for (k, rk) in row.iter_mut().enumerate() {
+                *rk = c[k]
+                    + if k == 0 { (t * 3.0) as f32 } else { rng.gauss_ms(0.0, 0.25) as f32 };
+            }
+            sub_labels.push(class_sub_base[digit] + mode);
+        } else {
+            let mode = rng.below(m);
+            // Sub-mode displacement along a class-specific direction with
+            // a real density dip between modes (separation 2.8 σ).
+            let dir = (digit * 3 + 1) % intrinsic_d;
+            let sep = 1.15f32;
+            for (k, rk) in row.iter_mut().enumerate() {
+                let base = c[k] + rng.gauss_ms(0.0, 0.4) as f32;
+                *rk = if k == dir {
+                    base + sep * (mode as f32 - (m as f32 - 1.0) / 2.0)
+                } else {
+                    base
+                };
+            }
+            sub_labels.push(class_sub_base[digit] + mode);
+        }
+        labels.push(digit);
+    }
+    let x = lift(&intrinsic, d_out, 0.08, &mut rng);
+    Dataset {
+        name: format!("mnist_like_n{n}"),
+        x,
+        labels: sub_labels,
+        coarse_labels: Some(labels),
+        hierarchy: None,
+    }
+}
+
+/// Rat-brain scRNA-seq twin (Figs 2, 5, 6 top, 10).
+///
+/// Three root cell types (non-neuron / inhibitory / excitatory) splitting
+/// into subtypes and then leaf clusters — a 3-level taxonomy with
+/// log-normal-ish spread, mimicking Tasic et al. [2]. The ground-truth
+/// tree is returned in `hierarchy` (leaf → subtype id) and
+/// `coarse_labels` (point → root type) so Fig. 10 can compare the
+/// recovered cluster graph against the planted dendrogram.
+pub fn rat_brain_like(n: usize, d_out: usize, seed: u64) -> Dataset {
+    hierarchical_cells("rat_brain_like", n, d_out, &[5, 12, 16], seed)
+}
+
+/// Tabula-Muris twin (Fig. 5 right): more tissues, flatter hierarchy.
+pub fn tabula_like(n: usize, d_out: usize, seed: u64) -> Dataset {
+    hierarchical_cells("tabula_like", n, d_out, &[8, 20, 26], seed)
+}
+
+/// Shared 3-level hierarchical cell-population generator.
+///
+/// `shape = [roots, subtypes, leaves]` — total counts at each level;
+/// subtypes are assigned to roots, leaves to subtypes, both randomly but
+/// deterministically.
+fn hierarchical_cells(name: &str, n: usize, d_out: usize, shape: &[usize; 3], seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let intrinsic_d = 10;
+    let (n_root, n_sub, n_leaf) = (shape[0], shape[1], shape[2]);
+    let root_c: Vec<Vec<f32>> = (0..n_root)
+        .map(|_| (0..intrinsic_d).map(|_| rng.gauss_ms(0.0, 10.0) as f32).collect())
+        .collect();
+    let sub_parent: Vec<usize> = (0..n_sub)
+        .map(|s| if s < n_root { s } else { rng.below(n_root) })
+        .collect();
+    let sub_c: Vec<Vec<f32>> = (0..n_sub)
+        .map(|s| {
+            root_c[sub_parent[s]]
+                .iter()
+                .map(|&v| v + rng.gauss_ms(0.0, 3.0) as f32)
+                .collect()
+        })
+        .collect();
+    let leaf_parent: Vec<usize> = (0..n_leaf)
+        .map(|l| if l < n_sub { l } else { rng.below(n_sub) })
+        .collect();
+    let leaf_c: Vec<Vec<f32>> = (0..n_leaf)
+        .map(|l| {
+            sub_c[leaf_parent[l]]
+                .iter()
+                .map(|&v| v + rng.gauss_ms(0.0, 1.1) as f32)
+                .collect()
+        })
+        .collect();
+    // Leaf sizes: power-law-ish (single-cell cluster sizes are skewed).
+    let mut weights: Vec<f64> = (0..n_leaf).map(|_| rng.f64().powf(1.5) + 0.05).collect();
+    let wsum: f64 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w /= wsum;
+    }
+    let mut intrinsic = Matrix::zeros(n, intrinsic_d);
+    let mut labels = Vec::with_capacity(n);
+    let mut coarse = Vec::with_capacity(n);
+    for i in 0..n {
+        // Sample a leaf proportional to weight.
+        let mut u = rng.f64();
+        let mut leaf = n_leaf - 1;
+        for (l, &w) in weights.iter().enumerate() {
+            if u < w {
+                leaf = l;
+                break;
+            }
+            u -= w;
+        }
+        let c = &leaf_c[leaf];
+        let row = intrinsic.row_mut(i);
+        for (k, rk) in row.iter_mut().enumerate() {
+            *rk = c[k] + rng.gauss_ms(0.0, 0.55) as f32;
+        }
+        labels.push(leaf);
+        coarse.push(sub_parent[leaf_parent[leaf]]);
+    }
+    let x = lift(&intrinsic, d_out, 0.12, &mut rng);
+    Dataset {
+        name: format!("{name}_n{n}"),
+        x,
+        labels,
+        coarse_labels: Some(coarse),
+        hierarchy: Some(leaf_parent),
+    }
+}
+
+/// Deep-feature twin of EVA(ImageNet) (Table 2, Fig. 11).
+///
+/// What Table 2 requires of the data: raw ambient features where 1-NN
+/// one-shot classification is *mediocre* (class manifolds are elongated /
+/// heteroscedastic so a single labelled sample is often closer to another
+/// class's fringe), while the classes are nonetheless separable given the
+/// full neighbourhood structure — so that concentrating each class with a
+/// 32-d NE dramatically improves one-shot accuracy.
+///
+/// Construction: each class is an anisotropic Gaussian whose top few
+/// principal directions are *shared across classes* (a "style" subspace,
+/// large variance, class-uninformative) plus a small class-specific
+/// offset in a "content" subspace (small variance, class-informative).
+/// 1-NN with one shot is dominated by the style variance; neighbourhood
+/// graphs (many samples per class) still connect within-class points.
+pub fn deep_features(
+    n: usize,
+    classes: usize,
+    d_out: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let style_d = 12; // shared high-variance nuisance subspace
+    let content_d = 16; // class-identity subspace
+    let intrinsic_d = style_d + content_d;
+    let class_c: Vec<Vec<f32>> = (0..classes)
+        .map(|_| (0..content_d).map(|_| rng.gauss_ms(0.0, 1.0) as f32).collect())
+        .collect();
+    let mut intrinsic = Matrix::zeros(n, intrinsic_d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let k = i % classes;
+        let row = intrinsic.row_mut(i);
+        for (s, rs) in row.iter_mut().take(style_d).enumerate() {
+            // Heavy shared style variance, heteroscedastic per dimension.
+            let sd = 2.5 / (1.0 + s as f64 * 0.35);
+            *rs = rng.gauss_ms(0.0, sd) as f32;
+        }
+        for c in 0..content_d {
+            row[style_d + c] = class_c[k][c] + rng.gauss_ms(0.0, 0.42) as f32;
+        }
+        labels.push(k);
+    }
+    let x = lift(&intrinsic, d_out, 0.25, &mut rng);
+    Dataset {
+        name: format!("deep_features_n{n}_c{classes}"),
+        x,
+        labels,
+        coarse_labels: None,
+        hierarchy: None,
+    }
+}
+
+/// Nested blobs with a known 2-level tree, used by the hierarchy
+/// integration tests: `super_k` super-clusters each containing `sub_k`
+/// sub-clusters.
+pub fn nested_blobs(
+    n: usize,
+    d: usize,
+    super_k: usize,
+    sub_k: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let supers: Vec<Vec<f32>> = (0..super_k)
+        .map(|_| (0..d).map(|_| rng.gauss_ms(0.0, 25.0) as f32).collect())
+        .collect();
+    let mut leaf_c = Vec::new();
+    let mut leaf_parent = Vec::new();
+    for (s, sc) in supers.iter().enumerate() {
+        for _ in 0..sub_k {
+            leaf_c.push(sc.iter().map(|&v| v + rng.gauss_ms(0.0, 3.0) as f32).collect::<Vec<f32>>());
+            leaf_parent.push(s);
+        }
+    }
+    let leaves = leaf_c.len();
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    let mut coarse = Vec::with_capacity(n);
+    for i in 0..n {
+        let l = i % leaves;
+        let row = x.row_mut(i);
+        for k in 0..d {
+            row[k] = leaf_c[l][k] + rng.gauss_ms(0.0, 0.4) as f32;
+        }
+        labels.push(l);
+        coarse.push(leaf_parent[l]);
+    }
+    Dataset {
+        name: format!("nested_blobs_{super_k}x{sub_k}"),
+        x,
+        labels,
+        coarse_labels: Some(coarse),
+        hierarchy: Some(leaf_parent),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::dist;
+
+    #[test]
+    fn scurve_shapes_and_labels() {
+        let ds = scurve(500, 0.01, false, 1);
+        assert_eq!(ds.n(), 500);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.labels.len(), 500);
+        let top = ds.labels.iter().filter(|&&l| l == 0).count();
+        assert!(top > 150 && top < 350, "balanced halves, got top={top}");
+    }
+
+    #[test]
+    fn scurve_unbalanced_has_sparse_bottom() {
+        let ds = scurve(2000, 0.01, true, 2);
+        let bottom = ds.labels.iter().filter(|&&l| l == 1).count();
+        // bottom sampled 10x less: expect ~ 1/11 of points
+        assert!(
+            bottom < 2000 / 5,
+            "unbalanced bottom fraction too large: {bottom}/2000"
+        );
+    }
+
+    #[test]
+    fn blobs_separated_when_std_small() {
+        let ds = blobs(300, 8, 3, 0.01, 20.0, 3);
+        // Points sharing a label should be much closer than across labels.
+        let mut same = 0.0f64;
+        let mut diff = 0.0f64;
+        let (mut ns, mut nd) = (0, 0);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let dd = dist(ds.x.row(i), ds.x.row(j)) as f64;
+                if ds.labels[i] == ds.labels[j] {
+                    same += dd;
+                    ns += 1;
+                } else {
+                    diff += dd;
+                    nd += 1;
+                }
+            }
+        }
+        assert!(same / ns as f64 * 5.0 < diff / nd as f64);
+    }
+
+    #[test]
+    fn disjointed_preset_is_tight() {
+        let ds = blobs_disjointed(50, 10, 16, 4);
+        assert_eq!(ds.n(), 500);
+        assert_eq!(ds.n_classes(), 50);
+    }
+
+    #[test]
+    fn coil_rings_are_closed() {
+        let per = 36;
+        let ds = coil_like(4, per, 24, 5);
+        // Consecutive frames of an object are close; frame 0 and frame
+        // per-1 are also close (ring closure).
+        for o in 0..4 {
+            let base = o * per;
+            let step = dist(ds.x.row(base), ds.x.row(base + 1));
+            let closure = dist(ds.x.row(base), ds.x.row(base + per - 1));
+            let opposite = dist(ds.x.row(base), ds.x.row(base + per / 2));
+            assert!(closure < opposite, "ring not closed for object {o}");
+            assert!(step < opposite, "ring not locally continuous for {o}");
+        }
+    }
+
+    #[test]
+    fn mnist_like_has_subclusters_and_classes() {
+        let ds = mnist_like(1000, 32, 6);
+        assert_eq!(ds.n(), 1000);
+        assert_eq!(ds.d(), 32);
+        let coarse = ds.coarse_labels.as_ref().unwrap();
+        assert_eq!(coarse.iter().copied().max().unwrap(), 9);
+        // sub-cluster labels outnumber classes
+        assert!(ds.n_classes() > 10);
+    }
+
+    #[test]
+    fn rat_brain_hierarchy_is_consistent() {
+        let ds = rat_brain_like(800, 50, 7);
+        let h = ds.hierarchy.as_ref().unwrap();
+        assert_eq!(h.len(), 16); // leaves
+        assert!(h.iter().all(|&p| p < 12)); // parents are subtype ids
+        let coarse = ds.coarse_labels.as_ref().unwrap();
+        assert!(coarse.iter().all(|&c| c < 5));
+    }
+
+    #[test]
+    fn deep_features_style_dominates_pairwise_distance() {
+        let ds = deep_features(400, 20, 64, 8);
+        // With one sample per class, nearest neighbour should often be a
+        // different class (the Table-2 premise): check that within-class
+        // distances are NOT much smaller than between-class distances.
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let dd = dist(ds.x.row(i), ds.x.row(j)) as f64;
+                if ds.labels[i] == ds.labels[j] {
+                    same.push(dd);
+                } else {
+                    diff.push(dd);
+                }
+            }
+        }
+        let ms = crate::util::stats::mean(&same);
+        let md = crate::util::stats::mean(&diff);
+        assert!(ms / md > 0.6, "style noise should blur 1-NN margins: {ms} vs {md}");
+        assert!(ms < md, "classes must still be statistically separable");
+    }
+
+    #[test]
+    fn nested_blobs_tree_shape() {
+        let ds = nested_blobs(600, 10, 3, 4, 9);
+        assert_eq!(ds.hierarchy.as_ref().unwrap().len(), 12);
+        assert_eq!(ds.n_classes(), 12);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = mnist_like(200, 16, 42);
+        let b = mnist_like(200, 16, 42);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.labels, b.labels);
+    }
+}

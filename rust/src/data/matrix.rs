@@ -1,0 +1,253 @@
+//! A minimal row-major f32 matrix.
+//!
+//! All point clouds (HD data, LD embeddings) are stored as `Matrix`:
+//! contiguous row-major storage so that a point's coordinates are one
+//! cache line run, which the KNN and force hot loops rely on.
+
+use anyhow::{bail, Result};
+
+/// Row-major (n, d) matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+impl Matrix {
+    /// Zero-filled (n, d).
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Matrix { data: vec![0.0; n * d], n, d }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(data: Vec<f32>, n: usize, d: usize) -> Result<Self> {
+        if data.len() != n * d {
+            bail!("matrix buffer length {} != {}x{}", data.len(), n, d);
+        }
+        Ok(Matrix { data, n, d })
+    }
+
+    #[inline(always)]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline(always)]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Row `i` as a slice of length `d`.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline(always)]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Squared Euclidean distance between rows i and j.
+    #[inline(always)]
+    pub fn sqdist(&self, i: usize, j: usize) -> f32 {
+        sqdist(self.row(i), self.row(j))
+    }
+
+    /// Column means.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut m = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for (k, &v) in self.row(i).iter().enumerate() {
+                m[k] += v as f64;
+            }
+        }
+        m.iter().map(|&v| (v / self.n.max(1) as f64) as f32).collect()
+    }
+
+    /// Subtract column means in place; returns the means.
+    pub fn center(&mut self) -> Vec<f32> {
+        let means = self.col_means();
+        for i in 0..self.n {
+            let row = self.row_mut(i);
+            for (k, v) in row.iter_mut().enumerate() {
+                *v -= means[k];
+            }
+        }
+        means
+    }
+
+    /// Append a row, growing n by one.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d);
+        self.data.extend_from_slice(row);
+        self.n += 1;
+    }
+
+    /// Remove row `i` by swapping in the last row (O(d)); returns the
+    /// index that moved into `i` (the old last row), if any.
+    pub fn swap_remove_row(&mut self, i: usize) -> Option<usize> {
+        assert!(i < self.n);
+        let last = self.n - 1;
+        if i != last {
+            // swap rows i and last
+            for k in 0..self.d {
+                self.data.swap(i * self.d + k, last * self.d + k);
+            }
+        }
+        self.data.truncate(last * self.d);
+        self.n = last;
+        if i != last {
+            Some(last)
+        } else {
+            None
+        }
+    }
+
+    /// Gather a subset of rows into a new matrix.
+    pub fn take_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.d);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Squared Euclidean distance of two equal-length slices.
+///
+/// This is the single hottest scalar routine in the whole system (KNN
+/// candidate scoring); it is written as a 4-way unrolled accumulator so
+/// LLVM auto-vectorises it.
+#[inline(always)]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc0 += d0 * d0;
+        acc1 += d1 * d1;
+        acc2 += d2 * d2;
+        acc3 += d3 * d3;
+    }
+    let mut acc = (acc0 + acc1) + (acc2 + acc3);
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Euclidean distance.
+#[inline(always)]
+pub fn dist(a: &[f32], b: &[f32]) -> f32 {
+    sqdist(a, b).sqrt()
+}
+
+/// Dot product (used by PCA power iteration).
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+    use crate::util::Rng;
+
+    #[test]
+    fn zeros_shape() {
+        let m = Matrix::zeros(3, 4);
+        assert_eq!(m.n(), 3);
+        assert_eq!(m.d(), 4);
+        assert!(m.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Matrix::from_vec(vec![0.0; 5], 2, 3).is_err());
+        assert!(Matrix::from_vec(vec![0.0; 6], 2, 3).is_ok());
+    }
+
+    #[test]
+    fn sqdist_matches_naive() {
+        pt::check("sqdist-naive", 64, |rng, _| {
+            let d = rng.range_usize(1, 40);
+            let a = pt::vec_f32(rng, d, 3.0);
+            let b = pt::vec_f32(rng, d, 3.0);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let fast = sqdist(&a, &b);
+            crate::prop_assert!(
+                (naive - fast).abs() <= 1e-4 * (1.0 + naive.abs()),
+                "naive={naive} fast={fast} d={d}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn center_zeroes_means() {
+        let mut rng = Rng::new(2);
+        let mut m = Matrix::from_vec(pt::gauss_mat(&mut rng, 50, 7, 2.0), 50, 7).unwrap();
+        m.center();
+        for mean in m.col_means() {
+            assert!(mean.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn push_and_swap_remove() {
+        let mut m = Matrix::zeros(0, 2);
+        m.push_row(&[1.0, 2.0]);
+        m.push_row(&[3.0, 4.0]);
+        m.push_row(&[5.0, 6.0]);
+        assert_eq!(m.n(), 3);
+        // Remove middle: last row moves into slot 1.
+        let moved = m.swap_remove_row(1);
+        assert_eq!(moved, Some(2));
+        assert_eq!(m.n(), 2);
+        assert_eq!(m.row(1), &[5.0, 6.0]);
+        // Remove last: nothing moves.
+        assert_eq!(m.swap_remove_row(1), None);
+        assert_eq!(m.n(), 1);
+    }
+
+    #[test]
+    fn take_rows_gathers() {
+        let m = Matrix::from_vec(vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0], 3, 2).unwrap();
+        let s = m.take_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[2.0, 2.0]);
+        assert_eq!(s.row(1), &[0.0, 0.0]);
+    }
+}

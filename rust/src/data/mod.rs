@@ -1,0 +1,15 @@
+//! Data substrate: matrices, synthetic dataset generators, normalisation.
+//!
+//! The paper evaluates on MNIST, rat-brain / Tabula-Muris scRNA-seq,
+//! COIL-20, Gaussian blobs, an S-curve, and EVA features of ImageNet.
+//! None of those are downloadable in this offline environment, so each is
+//! replaced by a structural twin generated here (see DESIGN.md §3 for the
+//! substitution rationale). Every generator takes an explicit seed and is
+//! fully deterministic.
+
+pub mod matrix;
+pub mod normalize;
+pub mod datasets;
+
+pub use datasets::Dataset;
+pub use matrix::Matrix;

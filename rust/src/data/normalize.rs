@@ -1,0 +1,98 @@
+//! Column-wise normalisation / standardisation.
+//!
+//! NE pipelines conventionally standardise (or at least centre) the HD
+//! data before computing distances; the figure drivers use these helpers
+//! so every method baseline sees the same preprocessing.
+
+use super::matrix::Matrix;
+
+/// Centre columns and scale each to unit variance (σ floor 1e-6).
+pub fn standardize(x: &mut Matrix) {
+    let n = x.n();
+    let d = x.d();
+    if n == 0 {
+        return;
+    }
+    let means = x.center();
+    let _ = means;
+    let mut var = vec![0.0f64; d];
+    for i in 0..n {
+        for (k, &v) in x.row(i).iter().enumerate() {
+            var[k] += (v as f64) * (v as f64);
+        }
+    }
+    let inv_std: Vec<f32> =
+        var.iter().map(|&v| (1.0 / (v / n as f64).sqrt().max(1e-6)) as f32).collect();
+    for i in 0..n {
+        for (k, v) in x.row_mut(i).iter_mut().enumerate() {
+            *v *= inv_std[k];
+        }
+    }
+}
+
+/// Rescale the whole cloud so its mean pairwise scale is O(1):
+/// divide by the RMS of coordinates. Keeps relative geometry intact.
+pub fn rms_scale(x: &mut Matrix) {
+    let n = x.n() * x.d();
+    if n == 0 {
+        return;
+    }
+    let rms =
+        (x.data().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n as f64).sqrt();
+    if rms > 1e-12 {
+        let inv = (1.0 / rms) as f32;
+        for v in x.data_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+    use crate::util::Rng;
+
+    #[test]
+    fn standardize_gives_unit_columns() {
+        let mut rng = Rng::new(3);
+        let mut x = Matrix::from_vec(pt::gauss_mat(&mut rng, 200, 5, 7.0), 200, 5).unwrap();
+        standardize(&mut x);
+        for k in 0..5 {
+            let mut m = 0.0f64;
+            let mut v = 0.0f64;
+            for i in 0..200 {
+                m += x.row(i)[k] as f64;
+            }
+            m /= 200.0;
+            for i in 0..200 {
+                let c = x.row(i)[k] as f64 - m;
+                v += c * c;
+            }
+            v /= 200.0;
+            assert!(m.abs() < 1e-4);
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rms_scale_sets_rms_to_one() {
+        let mut rng = Rng::new(4);
+        let mut x = Matrix::from_vec(pt::gauss_mat(&mut rng, 64, 3, 12.0), 64, 3).unwrap();
+        rms_scale(&mut x);
+        let rms = (x.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / x.data().len() as f64)
+            .sqrt();
+        assert!((rms - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        let mut empty = Matrix::zeros(0, 3);
+        standardize(&mut empty);
+        rms_scale(&mut empty);
+        let mut constant = Matrix::from_vec(vec![5.0; 12], 4, 3).unwrap();
+        standardize(&mut constant);
+        assert!(constant.data().iter().all(|v| v.is_finite()));
+    }
+}

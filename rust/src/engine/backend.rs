@@ -1,0 +1,150 @@
+//! The compute-backend boundary between the L3 coordinator logic and the
+//! numeric hot spots.
+//!
+//! Two implementations exist:
+//!
+//! * [`crate::ld::NativeBackend`] — pure Rust, the reference semantics
+//!   and the PJRT ablation baseline;
+//! * [`crate::coordinator::PjrtBackend`] — dispatches fixed-shape tiles
+//!   to AOT-compiled XLA executables (the Pallas kernels lowered by
+//!   `python/compile/aot.py`), the paper's "GPU kernel" analogue.
+//!
+//! Both receive *identical* inputs (the engine draws negative samples
+//! itself, so backends are deterministic given their arguments), which
+//! is what the parity integration test exploits.
+
+use crate::data::Matrix;
+use crate::hd::Affinities;
+use crate::knn::iterative::IterativeKnn;
+use anyhow::Result;
+
+/// Statistics from the negative-sampling slots, used by the engine to
+/// maintain its running estimate of the global normaliser
+/// Z = Σ_{k≠l} w_kl ≈ N(N−1)·E[w].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NegStats {
+    /// Σ w over all (point, negative-sample) pairs this iteration.
+    pub wsum: f64,
+    /// Number of such pairs.
+    pub count: usize,
+}
+
+/// Pre-drawn negative samples: `m` uniform non-self indices per point,
+/// flattened row-major (n × m).
+#[derive(Clone, Debug)]
+pub struct NegSamples {
+    pub m: usize,
+    pub idx: Vec<u32>,
+}
+
+impl NegSamples {
+    /// Draw fresh samples for `n` points.
+    pub fn draw(n: usize, m: usize, rng: &mut crate::util::Rng) -> NegSamples {
+        let mut s = NegSamples { m, idx: Vec::new() };
+        s.redraw(n, rng);
+        s
+    }
+
+    /// Refill in place (§Perf: the engine reuses one buffer per run
+    /// instead of allocating n·m ids every iteration).
+    pub fn redraw(&mut self, n: usize, rng: &mut crate::util::Rng) {
+        let m = self.m;
+        self.idx.clear();
+        self.idx.reserve(n * m);
+        for i in 0..n {
+            for _ in 0..m {
+                // Uniform over the n-1 others: draw in [0, n-1) and skip i.
+                let mut j = rng.below(n.max(2) - 1);
+                if j >= i {
+                    j += 1;
+                }
+                self.idx.push(j as u32);
+            }
+        }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.idx[i * self.m..(i + 1) * self.m]
+    }
+}
+
+/// The two numeric services the engine needs per iteration.
+pub trait ComputeBackend {
+    /// Squared HD distances for candidate pairs: `out[t] = ||x[owners[t]]
+    /// - x[cands[t]]||²`. Batches may be any length; implementations tile
+    /// and pad as needed.
+    fn sqdist_batch(
+        &mut self,
+        x: &Matrix,
+        owners: &[u32],
+        cands: &[u32],
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// Full force pass. Writes the attraction movement direction
+    /// Σ p·g·(y_j − y_i) into `attr` and the *unnormalised* repulsion
+    /// Σ w·g·(y_i − y_j) into `rep` (the engine applies the Z
+    /// normalisation). Returns the negative-slot kernel statistics.
+    ///
+    /// Slot semantics (identical in both backends; see DESIGN.md §2):
+    /// * HD slots — attraction with p_{j|i}, plus repulsion (Eq. 6 term 1);
+    /// * LD slots with the twin not in the HD set — repulsion (term 2);
+    /// * negative samples — repulsion multiplied by `far_scale` (the
+    ///   uncovered-pair count over the sample count, supplied by the
+    ///   engine — term 3), and counted *unscaled* into [`NegStats`].
+    #[allow(clippy::too_many_arguments)]
+    fn forces(
+        &mut self,
+        y: &Matrix,
+        knn: &IterativeKnn,
+        aff: &Affinities,
+        neg: &NegSamples,
+        alpha: f32,
+        far_scale: f32,
+        attr: &mut Matrix,
+        rep: &mut Matrix,
+    ) -> Result<NegStats>;
+
+    /// Human-readable name for logs / EXPERIMENTS.md.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn neg_samples_never_self_and_in_range() {
+        let mut rng = Rng::new(3);
+        for &(n, m) in &[(2usize, 4usize), (10, 8), (100, 3)] {
+            let neg = NegSamples::draw(n, m, &mut rng);
+            assert_eq!(neg.idx.len(), n * m);
+            for i in 0..n {
+                for &j in neg.row(i) {
+                    assert_ne!(j as usize, i, "self-sample at {i}");
+                    assert!((j as usize) < n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn neg_samples_roughly_uniform() {
+        let mut rng = Rng::new(4);
+        let n = 20;
+        let neg = NegSamples::draw(n, 500, &mut rng);
+        let mut counts = vec![0usize; n];
+        for &j in &neg.idx {
+            counts[j as usize] += 1;
+        }
+        let expect = (n * 500) as f64 / n as f64;
+        for (j, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > expect * 0.8 && (c as f64) < expect * 1.2,
+                "count[{j}] = {c}, expect ~{expect}"
+            );
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! The FUnc-SNE engine: single-phase, interleaved KNN refinement and
+//! gradient descent, with dynamic-dataset support and on-the-fly
+//! hyperparameter changes.
+
+pub mod backend;
+pub mod funcsne;
+
+pub use backend::{ComputeBackend, NegSamples, NegStats};
+pub use funcsne::FuncSne;

@@ -1,0 +1,145 @@
+//! Shared plumbing for the figure drivers.
+
+use crate::config::EmbedConfig;
+use crate::coordinator::driver::default_artifact_dir;
+use crate::data::Matrix;
+use crate::engine::FuncSne;
+use crate::ld::NativeBackend;
+use crate::util::io;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Run scale: quick (CI / default `cargo bench`) vs full (paper-sized).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    /// From the FUNCSNE_FULL environment variable.
+    pub fn from_env() -> Scale {
+        if std::env::var("FUNCSNE_FULL").map(|v| v == "1").unwrap_or(false) {
+            Scale::Full
+        } else {
+            Scale::Quick
+        }
+    }
+
+    /// Pick a size by scale.
+    pub fn pick(self, quick: usize, full: usize) -> usize {
+        match self {
+            Scale::Quick => quick,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// Where figure outputs land.
+pub fn results_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}
+
+/// Write an ASCII figure + echo it to stdout.
+pub fn record(name: &str, text: &str) -> Result<()> {
+    println!("{text}");
+    io::write_text(&results_dir().join(format!("{name}.txt")), text)?;
+    Ok(())
+}
+
+/// Write a CSV for external re-plotting.
+pub fn record_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    io::write_csv(&results_dir().join(format!("{name}.csv")), header, rows)
+}
+
+/// Run FUnc-SNE natively with the given config; returns the embedding.
+pub fn run_funcsne(x: Matrix, cfg: &EmbedConfig) -> Result<FuncSne> {
+    let mut backend = NativeBackend::new();
+    let mut engine = FuncSne::new(x, cfg.clone())?;
+    engine.run(cfg.n_iters, &mut backend)?;
+    Ok(engine)
+}
+
+/// A sensibly-tuned engine config for figure-sized runs.
+pub fn figure_config(n: usize, ld_dim: usize, alpha: f64) -> EmbedConfig {
+    let k_hd = 32.min(n.saturating_sub(1)).max(4);
+    EmbedConfig {
+        ld_dim,
+        alpha,
+        perplexity: (k_hd as f64 / 3.0).max(5.0),
+        k_hd,
+        k_ld: 16.min(n.saturating_sub(1)).max(2),
+        n_neg: 8,
+        n_iters: 800,
+        early_exag_iters: 150,
+        jumpstart_iters: 80,
+        ..EmbedConfig::default()
+    }
+}
+
+/// Default artifact dir re-export for benches.
+pub fn artifacts() -> PathBuf {
+    default_artifact_dir()
+}
+
+/// Format a table with aligned columns.
+pub fn format_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (c, cell) in row.iter().enumerate().take(cols) {
+            widths[c] = widths[c].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("| ");
+        for (c, cell) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$} | ", cell, w = widths[c]));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(
+        &header.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&format!(
+        "|{}|\n",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    ));
+    for row in rows {
+        out.push_str(&line(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_pick() {
+        assert_eq!(Scale::Quick.pick(1, 2), 1);
+        assert_eq!(Scale::Full.pick(1, 2), 2);
+    }
+
+    #[test]
+    fn format_table_aligns() {
+        let t = format_table(
+            &["name", "auc"],
+            &[
+                vec!["funcsne".into(), "0.71".into()],
+                vec!["umap".into(), "0.55".into()],
+            ],
+        );
+        assert!(t.contains("funcsne"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn figure_config_valid_for_small_n() {
+        figure_config(10, 2, 1.0).validate().unwrap();
+        figure_config(5000, 8, 0.5).validate().unwrap();
+    }
+}

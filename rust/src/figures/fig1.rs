@@ -1,0 +1,90 @@
+//! Figure 1 — the S-curve study: how method (PCA vs t-SNE-family),
+//! perplexity, sample size, and unbalanced sampling change the 2-D
+//! embedding; quality shown as pointwise distance correlation (global)
+//! and ⌈0.05N⌉-neighbourhood preservation (local).
+//!
+//! Paper claims to reproduce: PCA preserves global shape but intrudes
+//! locally; NE preserves local structure at the cost of global; changing
+//! perplexity / sample size / sampling balance visibly changes NE output.
+
+use super::common::{self, Scale};
+use crate::data::datasets;
+use crate::linalg::Pca;
+use crate::metrics::pointwise::{pointwise_distance_correlation, pointwise_knn_preservation};
+use crate::util::plot;
+use crate::util::stats::mean;
+use anyhow::Result;
+
+pub fn run(scale: Scale) -> Result<String> {
+    let n = scale.pick(600, 2000);
+    let mut summary = String::from("=== Fig. 1: S-curve, method × hyperparameter × sampling ===\n");
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+
+    // Panels: (label, dataset variant, method)
+    let variants: Vec<(String, datasets::Dataset, Panel)> = vec![
+        ("PCA".into(), datasets::scurve(n, 0.02, false, 1), Panel::Pca),
+        ("tSNE perp=10".into(), datasets::scurve(n, 0.02, false, 1), Panel::Ne { perplexity: 10.0 }),
+        ("tSNE perp=40".into(), datasets::scurve(n, 0.02, false, 1), Panel::Ne { perplexity: 40.0 }),
+        (format!("tSNE n={}", n / 3), datasets::scurve(n / 3, 0.02, false, 1), Panel::Ne { perplexity: 30.0 }),
+        ("tSNE unbalanced".into(), datasets::scurve(n, 0.02, true, 2), Panel::Ne { perplexity: 30.0 }),
+    ];
+
+    for (label, ds, panel) in variants {
+        let y = match panel {
+            Panel::Pca => Pca::fit_transform(&ds.x, 2, 0),
+            Panel::Ne { perplexity } => {
+                let mut cfg = common::figure_config(ds.n(), 2, 1.0);
+                cfg.perplexity = perplexity.min(ds.n() as f64 / 4.0);
+                cfg.k_hd = cfg.k_hd.max((cfg.perplexity as usize) + 2).min(ds.n() - 1);
+                cfg.n_iters = 600;
+                common::run_funcsne(ds.x.clone(), &cfg)?.y
+            }
+        };
+        let corr = pointwise_distance_correlation(&ds.x, &y);
+        let pres = pointwise_knn_preservation(&ds.x, &y, 0.05);
+        let scatter = plot::scatter_2d(
+            &format!("Fig1 [{label}] (labels = S-curve halves)"),
+            y.data(),
+            &ds.labels,
+            ds.n(),
+            72,
+            20,
+        );
+        summary.push_str(&scatter);
+        rows.push(vec![
+            label.clone(),
+            format!("{:.3}", mean(&corr)),
+            format!("{:.3}", mean(&pres)),
+        ]);
+        csv.push(vec![label, format!("{}", ds.n()), format!("{:.5}", mean(&corr)), format!("{:.5}", mean(&pres))]);
+    }
+    let table = common::format_table(
+        &["panel", "mean dist-corr (global)", "mean 5%NN preservation (local)"],
+        &rows,
+    );
+    summary.push_str(&table);
+    summary.push_str(
+        "\npaper-shape check: PCA should lead the global column; NE panels should lead the local column.\n",
+    );
+    common::record_csv("fig1_scurve", &["panel", "n", "dist_corr", "knn_preservation"], &csv)?;
+    common::record("fig1_scurve", &summary)?;
+    Ok(summary)
+}
+
+enum Panel {
+    Pca,
+    Ne { perplexity: f64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape_holds_at_tiny_scale() {
+        let out = run(Scale::Quick).unwrap();
+        assert!(out.contains("PCA"));
+        assert!(out.contains("unbalanced"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Figure 11 — 2-D PCA views of the deep-feature twin: raw features vs
+//! the 32-dimensional NE of them.
+//!
+//! Paper claims to reproduce: after the 32-D NE, a *linear* PCA view
+//! shows tighter, less diffuse class groups than the raw representation
+//! (plus the spectral-like spike artefact). We quantify "tighter" as the
+//! within-class / total variance ratio in the 2-D PCA view.
+
+use super::common::{self, Scale};
+use crate::coordinator::driver::maybe_pca_reduce;
+use crate::data::datasets;
+use crate::data::Matrix;
+use crate::linalg::Pca;
+use crate::util::plot;
+use anyhow::Result;
+
+/// Within-class variance fraction of a 2-D view (lower = tighter).
+fn within_class_fraction(y: &Matrix, labels: &[usize]) -> f64 {
+    let n = y.n();
+    let classes = labels.iter().copied().max().unwrap_or(0) + 1;
+    let d = y.d();
+    let mut means = vec![vec![0.0f64; d]; classes];
+    let mut counts = vec![0usize; classes];
+    for i in 0..n {
+        counts[labels[i]] += 1;
+        for c in 0..d {
+            means[labels[i]][c] += y.row(i)[c] as f64;
+        }
+    }
+    for k in 0..classes {
+        for c in 0..d {
+            means[k][c] /= counts[k].max(1) as f64;
+        }
+    }
+    let mut grand = vec![0.0f64; d];
+    for i in 0..n {
+        for c in 0..d {
+            grand[c] += y.row(i)[c] as f64;
+        }
+    }
+    for g in grand.iter_mut() {
+        *g /= n as f64;
+    }
+    let (mut within, mut total) = (0.0f64, 0.0f64);
+    for i in 0..n {
+        for c in 0..d {
+            let v = y.row(i)[c] as f64;
+            within += (v - means[labels[i]][c]).powi(2);
+            total += (v - grand[c]).powi(2);
+        }
+    }
+    within / total.max(1e-12)
+}
+
+pub fn run(scale: Scale) -> Result<String> {
+    let n = scale.pick(800, 4000);
+    let classes = scale.pick(20, 100);
+    let ds = datasets::deep_features(n, classes, 256, 8);
+    let mut summary = String::from("=== Fig. 11: PCA views, raw vs 32-D NE ===\n");
+
+    // Raw pipeline: 256 → 2 (PCA view).
+    let view_raw = Pca::fit_transform(&ds.x, 2, 0);
+    // NE pipeline: 256 → 48 PCs → 32-D NE → 2 (PCA view), mirroring the
+    // paper's 1280 → 192 PCs → 32 NE → 2.
+    let reduced = maybe_pca_reduce(ds.x.clone(), 48, 0);
+    let mut cfg = common::figure_config(n, 32, 1.0);
+    cfg.n_iters = scale.pick(400, 1200);
+    let y32 = common::run_funcsne(reduced, &cfg)?.y;
+    let view_ne = Pca::fit_transform(&y32, 2, 0);
+
+    summary.push_str(&plot::scatter_2d(
+        "Fig11-left: raw features → PCA (labels = class % 62)",
+        view_raw.data(),
+        &ds.labels,
+        n,
+        72,
+        18,
+    ));
+    summary.push_str(&plot::scatter_2d(
+        "Fig11-right: 48 PCs → 32-D NE → PCA",
+        view_ne.data(),
+        &ds.labels,
+        n,
+        72,
+        18,
+    ));
+    let f_raw = within_class_fraction(&view_raw, &ds.labels);
+    let f_ne = within_class_fraction(&view_ne, &ds.labels);
+    summary.push_str(&format!(
+        "within-class variance fraction (lower = tighter): raw {f_raw:.3} vs NE {f_ne:.3}\n"
+    ));
+    summary.push_str("paper-shape check: the NE view is tighter (NE fraction < raw fraction).\n");
+    common::record_csv(
+        "fig11_pca_view",
+        &["pipeline", "within_class_fraction"],
+        &[
+            vec!["raw_pca".into(), format!("{f_raw:.5}")],
+            vec!["ne32_pca".into(), format!("{f_ne:.5}")],
+        ],
+    )?;
+    common::record("fig11_pca_view", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+    use crate::util::Rng;
+
+    #[test]
+    fn within_class_fraction_bounds() {
+        let mut rng = Rng::new(1);
+        let y = Matrix::from_vec(pt::gauss_mat(&mut rng, 60, 2, 1.0), 60, 2).unwrap();
+        let labels: Vec<usize> = (0..60).map(|i| i % 3).collect();
+        let f = within_class_fraction(&y, &labels);
+        assert!((0.0..=1.0 + 1e-9).contains(&f));
+        // Perfectly separated classes → near 0.
+        let mut ysep = Matrix::zeros(60, 2);
+        for i in 0..60 {
+            ysep.row_mut(i)[0] = (i % 3) as f32 * 100.0 + rng.f32() * 0.01;
+        }
+        assert!(within_class_fraction(&ysep, &labels) < 0.01);
+    }
+}

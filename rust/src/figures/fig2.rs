@@ -1,0 +1,77 @@
+//! Figure 2 — method panorama on the rat-brain twin: PCA, MDS, t-SNE
+//! (our engine, α=1), UMAP-like, side by side.
+//!
+//! Paper claims to reproduce: PCA/MDS keep the global cell-type split
+//! (non-neurons far from neurons), NE methods discard the largest scale
+//! but reveal the finer cluster hierarchy.
+
+use super::common::{self, Scale};
+use crate::baselines::umap_like::{umap_like, UmapConfig};
+use crate::data::datasets;
+use crate::linalg::{mds, Pca};
+use crate::metrics::pointwise::pointwise_distance_correlation;
+use crate::metrics::rnx_auc;
+use crate::util::plot;
+use crate::util::stats::mean;
+use anyhow::Result;
+
+pub fn run(scale: Scale) -> Result<String> {
+    let n = scale.pick(500, 2000);
+    let ds = datasets::rat_brain_like(n, 50, 7);
+    let coarse = ds.coarse_labels.clone().unwrap();
+    let mut summary = String::from("=== Fig. 2: rat-brain twin, four methods ===\n");
+    let mut rows = Vec::new();
+
+    let mds_n = n.min(400); // MDS is O(N²); subsample like the paper's qualitative use
+    let methods: Vec<(&str, crate::data::Matrix, usize)> = vec![
+        ("PCA", Pca::fit_transform(&ds.x, 2, 0), n),
+        ("MDS", mds::smacof(&ds.x.take_rows(&(0..mds_n).collect::<Vec<_>>()), 2, 60, 1), mds_n),
+        ("FUnc-SNE (α=1)", {
+            let cfg = common::figure_config(n, 2, 1.0);
+            common::run_funcsne(ds.x.clone(), &cfg)?.y
+        }, n),
+        ("UMAP-like", umap_like(&ds.x, &UmapConfig { n_epochs: scale.pick(120, 300), ..UmapConfig::default() }), n),
+    ];
+
+    for (name, y, used) in methods {
+        let x_used = if used == n {
+            ds.x.clone()
+        } else {
+            ds.x.take_rows(&(0..used).collect::<Vec<_>>())
+        };
+        let labels: Vec<usize> = coarse[..used].to_vec();
+        let global = mean(&pointwise_distance_correlation(&x_used, &y));
+        let auc = rnx_auc(&x_used, &y, 50.min(used - 2));
+        summary.push_str(&plot::scatter_2d(
+            &format!("Fig2 [{name}] (labels = root cell type)"),
+            y.data(),
+            &labels,
+            used,
+            72,
+            18,
+        ));
+        rows.push(vec![name.to_string(), format!("{global:.3}"), format!("{auc:.3}")]);
+    }
+    let table = common::format_table(&["method", "global (dist-corr)", "local (RNX AUC)"], &rows);
+    summary.push_str(&table);
+    summary.push_str(
+        "\npaper-shape check: PCA/MDS lead the global column, NE methods lead the local column.\n",
+    );
+    common::record_csv(
+        "fig2_methods",
+        &["method", "global", "local_auc"],
+        &rows.iter().map(|r| r.clone()).collect::<Vec<_>>(),
+    )?;
+    common::record("fig2_methods", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig2_runs_quick() {
+        let out = super::run(super::Scale::Quick).unwrap();
+        assert!(out.contains("PCA"));
+        assert!(out.contains("UMAP-like"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Figure 8 — wall-clock vs dataset size: the proposed method (default
+//! refinement policy vs always-refine), NN-descent, UMAP-like, on
+//! blobs(N, 32).
+//!
+//! Paper claims to reproduce: the proposed method scales *linearly* in
+//! N; the default probabilistic-refinement policy is faster than
+//! refining HD neighbours at every iteration. (Absolute times differ —
+//! the paper's method ran on a laptop GPU; ours is single-core CPU.)
+
+use super::common::{self, Scale};
+use crate::baselines::umap_like::{umap_like, UmapConfig};
+use crate::config::KnnConfig;
+use crate::data::datasets;
+use crate::engine::FuncSne;
+use crate::knn::nn_descent::nn_descent;
+use crate::ld::NativeBackend;
+use crate::util::plot::{line_chart, Series};
+use crate::util::Stopwatch;
+use anyhow::Result;
+
+pub fn run(scale: Scale) -> Result<String> {
+    let sizes: Vec<usize> = match scale {
+        Scale::Quick => vec![1000, 2000, 4000, 8000],
+        Scale::Full => vec![20_000, 60_000, 100_000, 180_000, 260_000, 340_000],
+    };
+    let iters = scale.pick(300, 3000);
+    let mut summary = String::from("=== Fig. 8: wall-clock vs N on blobs(N, 32) ===\n");
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut s_default = Vec::new();
+    let mut s_always = Vec::new();
+    let mut s_nnd = Vec::new();
+    let mut s_umap = Vec::new();
+    for &n in &sizes {
+        let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 9);
+        // proposed, default policy
+        let t_default = {
+            let mut cfg = common::figure_config(n, 2, 1.0);
+            cfg.n_iters = iters;
+            let mut engine = FuncSne::new(ds.x.clone(), cfg)?;
+            let mut backend = NativeBackend::new();
+            let sw = Stopwatch::new();
+            engine.run(iters, &mut backend)?;
+            sw.elapsed_s()
+        };
+        // proposed, always refine
+        let t_always = {
+            let mut cfg = common::figure_config(n, 2, 1.0);
+            cfg.n_iters = iters;
+            cfg.refine_base_prob = 1.0;
+            let mut engine = FuncSne::new(ds.x.clone(), cfg)?;
+            let mut backend = NativeBackend::new();
+            let sw = Stopwatch::new();
+            engine.run(iters, &mut backend)?;
+            sw.elapsed_s()
+        };
+        // NN-descent alone (the KNN-phase baseline)
+        let t_nnd = {
+            let sw = Stopwatch::new();
+            let _ = nn_descent(&ds.x, &KnnConfig { k: 32, ..KnnConfig::default() });
+            sw.elapsed_s()
+        };
+        // UMAP-like, scaled iteration count like the paper (1000 epochs full)
+        let t_umap = {
+            let sw = Stopwatch::new();
+            let _ = umap_like(
+                &ds.x,
+                &UmapConfig {
+                    n_epochs: scale.pick(100, 1000),
+                    exact_knn_below: 0, // always NN-descent, like real UMAP
+                    ..UmapConfig::default()
+                },
+            );
+            sw.elapsed_s()
+        };
+        s_default.push((n as f64, t_default));
+        s_always.push((n as f64, t_always));
+        s_nnd.push((n as f64, t_nnd));
+        s_umap.push((n as f64, t_umap));
+        rows.push(vec![
+            n.to_string(),
+            format!("{t_default:.2}"),
+            format!("{t_always:.2}"),
+            format!("{t_nnd:.2}"),
+            format!("{t_umap:.2}"),
+        ]);
+        csv.push(vec![
+            n.to_string(),
+            format!("{t_default:.4}"),
+            format!("{t_always:.4}"),
+            format!("{t_nnd:.4}"),
+            format!("{t_umap:.4}"),
+        ]);
+    }
+    let mk = |name: &str, pts: &[(f64, f64)]| {
+        Series::new(
+            name,
+            pts.iter().map(|p| p.0).collect(),
+            pts.iter().map(|p| p.1).collect(),
+        )
+    };
+    summary.push_str(&line_chart(
+        &format!("Fig8: seconds for {iters} iterations vs N"),
+        &[
+            mk("proposed (default)", &s_default),
+            mk("proposed (always refine)", &s_always),
+            mk("NN-descent", &s_nnd),
+            mk("UMAP-like", &s_umap),
+        ],
+        72,
+        18,
+        false,
+    ));
+    summary.push_str(&common::format_table(
+        &["N", "proposed default (s)", "proposed always (s)", "NN-descent (s)", "UMAP-like (s)"],
+        &rows,
+    ));
+    // Linearity check: time per point should be ~constant.
+    let tpp_first = s_default[0].1 / s_default[0].0;
+    let tpp_last = s_default.last().unwrap().1 / s_default.last().unwrap().0;
+    summary.push_str(&format!(
+        "\nlinearity: default policy time/point {:.2} µs at N={} vs {:.2} µs at N={} (ratio {:.2}; ≈1 ⇒ O(N))\n",
+        tpp_first * 1e6,
+        sizes[0],
+        tpp_last * 1e6,
+        sizes.last().unwrap(),
+        tpp_last / tpp_first
+    ));
+    summary.push_str("paper-shape check: proposed scales linearly; default ≤ always-refine.\n");
+    common::record_csv(
+        "fig8_speed",
+        &["n", "proposed_default_s", "proposed_always_s", "nn_descent_s", "umap_like_s"],
+        &csv,
+    )?;
+    common::record("fig8_speed", &summary)?;
+    Ok(summary)
+}

@@ -1,0 +1,21 @@
+//! One driver per paper table / figure. Each driver regenerates the
+//! figure's data (CSV + ASCII rendering in `results/`) and prints the
+//! paper-style rows; the `rust/benches/*` targets are thin wrappers.
+//!
+//! Every driver takes a [`common::Scale`] so the same code serves quick
+//! CI-sized runs (`cargo bench` defaults) and the full paper-sized runs
+//! (`FUNCSNE_FULL=1 cargo bench`).
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9_10;
+pub mod fig11;
+pub mod table1;
+pub mod table2;

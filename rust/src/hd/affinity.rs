@@ -1,0 +1,221 @@
+//! Sparse HD affinities p_{j|i} aligned with the estimated neighbour
+//! table.
+//!
+//! FUnc-SNE never materialises the full symmetric P matrix. Instead each
+//! *directed* edge (i → slot s holding j) carries the conditional
+//! p_{j|i}; the force pass applies each directed edge's attraction to
+//! both endpoints, which reproduces the symmetrised
+//! p_ij = (p_{j|i}+p_{i|j})/2N sum exactly (each unordered pair is
+//! visited once per direction).
+//!
+//! Calibration is *incremental*: only points flagged dirty (they
+//! received a new HD neighbour, or the user changed perplexity / metric
+//! on the fly) are recalibrated, with warm-started β, matching §3 of the
+//! paper.
+
+use super::perplexity::{calibrate, conditionals};
+use crate::knn::iterative::IterativeKnn;
+use crate::knn::NeighborTable;
+
+/// Per-edge conditionals + per-point calibration state.
+#[derive(Clone, Debug)]
+pub struct Affinities {
+    k: usize,
+    /// p_{j|i}, aligned with the HD table's slot layout (n·k).
+    p: Vec<f32>,
+    /// Calibrated precision β_i = 1/(2σ_i²) per point.
+    pub beta: Vec<f32>,
+    /// Achieved perplexity per point (telemetry).
+    pub achieved: Vec<f32>,
+}
+
+impl Affinities {
+    pub fn new(n: usize, k: usize) -> Self {
+        Affinities {
+            k,
+            p: vec![0.0; n * k],
+            beta: vec![1.0; n],
+            achieved: vec![0.0; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.beta.len()
+    }
+
+    /// p_{j|i} for the HD table's slot `s` of point `i`.
+    #[inline(always)]
+    pub fn p_slot(&self, i: usize, s: usize) -> f32 {
+        self.p[i * self.k + s]
+    }
+
+    /// Slice of all slot conditionals for point `i`.
+    #[inline(always)]
+    pub fn p_row(&self, i: usize) -> &[f32] {
+        &self.p[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Recalibrate a single point from its current HD neighbour slots.
+    pub fn recalibrate_point(&mut self, i: usize, hd: &NeighborTable, perplexity: f64) {
+        let len = hd.len(i);
+        if len == 0 {
+            for s in 0..self.k {
+                self.p[i * self.k + s] = 0.0;
+            }
+            return;
+        }
+        let mut sq = [0.0f32; 256];
+        debug_assert!(len <= 256);
+        for (s, (_, d)) in hd.entries(i).enumerate() {
+            sq[s] = d;
+        }
+        let cal = calibrate(&sq[..len], perplexity, Some(self.beta[i]));
+        self.beta[i] = cal.beta;
+        self.achieved[i] = cal.perplexity;
+        let row = &mut self.p[i * self.k..i * self.k + len];
+        conditionals(&sq[..len], cal.beta, row);
+        for s in len..self.k {
+            self.p[i * self.k + s] = 0.0;
+        }
+    }
+
+    /// Recalibrate every dirty point, clearing flags. Returns how many
+    /// points were recalibrated.
+    pub fn recalibrate_dirty(&mut self, knn: &mut IterativeKnn, perplexity: f64) -> usize {
+        let mut count = 0;
+        for i in 0..knn.n() {
+            if knn.hd_dirty[i] {
+                self.recalibrate_point(i, &knn.hd, perplexity);
+                knn.hd_dirty[i] = false;
+                count += 1;
+            }
+        }
+        count
+    }
+
+    /// Recalibrate all points unconditionally (perplexity / metric change).
+    pub fn recalibrate_all(&mut self, knn: &mut IterativeKnn, perplexity: f64) {
+        for i in 0..knn.n() {
+            self.recalibrate_point(i, &knn.hd, perplexity);
+            knn.hd_dirty[i] = false;
+        }
+    }
+
+    /// Dynamic insertion bookkeeping.
+    pub fn push_point(&mut self) {
+        self.p.extend(std::iter::repeat(0.0).take(self.k));
+        self.beta.push(1.0);
+        self.achieved.push(0.0);
+    }
+
+    /// swap-remove bookkeeping mirroring the neighbour tables.
+    pub fn swap_remove_point(&mut self, gone: usize) {
+        let last = self.n() - 1;
+        if gone != last {
+            for s in 0..self.k {
+                self.p.swap(gone * self.k + s, last * self.k + s);
+            }
+            self.beta.swap(gone, last);
+            self.achieved.swap(gone, last);
+        }
+        self.p.truncate(last * self.k);
+        self.beta.pop();
+        self.achieved.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::knn::brute::brute_knn;
+    use crate::util::Rng;
+
+    fn setup(n: usize, k: usize, seed: u64) -> (crate::data::Matrix, IterativeKnn) {
+        let ds = datasets::blobs(n, 6, 3, 0.8, 8.0, seed);
+        let exact = brute_knn(&ds.x, k);
+        let mut knn = IterativeKnn::new(n, k, k);
+        // Install exact sets so calibration quality is isolated from KNN.
+        for i in 0..n {
+            for (j, d) in exact.entries(i) {
+                knn.hd.insert(i, j, d);
+            }
+        }
+        (ds.x, knn)
+    }
+
+    #[test]
+    fn conditionals_normalised_after_recalibration() {
+        let (_, mut knn) = setup(200, 16, 1);
+        let mut aff = Affinities::new(200, 16);
+        aff.recalibrate_all(&mut knn, 10.0);
+        for i in 0..200 {
+            let sum: f32 = aff.p_row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {i} sums to {sum}");
+            assert!((aff.achieved[i] - 10.0).abs() < 0.5, "perp {}", aff.achieved[i]);
+        }
+    }
+
+    #[test]
+    fn dirty_flags_drive_incremental_recalibration() {
+        let (x, mut knn) = setup(100, 12, 2);
+        let mut aff = Affinities::new(100, 12);
+        aff.recalibrate_all(&mut knn, 8.0);
+        assert_eq!(aff.recalibrate_dirty(&mut knn, 8.0), 0);
+        // Dirty two points; only they should be recalibrated.
+        knn.hd_dirty[3] = true;
+        knn.hd_dirty[7] = true;
+        let _ = x;
+        assert_eq!(aff.recalibrate_dirty(&mut knn, 8.0), 2);
+        assert!(!knn.hd_dirty[3] && !knn.hd_dirty[7]);
+    }
+
+    #[test]
+    fn closer_neighbours_get_more_mass() {
+        let (_, mut knn) = setup(80, 10, 3);
+        let mut aff = Affinities::new(80, 10);
+        aff.recalibrate_all(&mut knn, 5.0);
+        for i in 0..80 {
+            // max-p slot should be the min-distance slot
+            let dists: Vec<f32> = knn.hd.entries(i).map(|(_, d)| d).collect();
+            let ps = aff.p_row(i);
+            let amin = dists
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let amax = ps[..dists.len()]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(amin, amax, "point {i}");
+        }
+    }
+
+    #[test]
+    fn dynamic_bookkeeping() {
+        let (_, mut knn) = setup(50, 8, 4);
+        let mut aff = Affinities::new(50, 8);
+        aff.recalibrate_all(&mut knn, 5.0);
+        aff.push_point();
+        assert_eq!(aff.n(), 51);
+        let beta_last = aff.beta[49];
+        aff.swap_remove_point(10);
+        assert_eq!(aff.n(), 50);
+        // old last-but-one (index 49 pre-push was data; after push last=50
+        // empty). After removing 10, old index 50's beta moved to 10.
+        assert_eq!(aff.beta[10], 1.0);
+        let _ = beta_last;
+    }
+
+    #[test]
+    fn empty_point_zeroes_row() {
+        let knn = IterativeKnn::new(3, 4, 4);
+        let mut aff = Affinities::new(3, 4);
+        aff.recalibrate_point(0, &knn.hd, 5.0);
+        assert!(aff.p_row(0).iter().all(|&p| p == 0.0));
+    }
+}

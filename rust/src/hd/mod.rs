@@ -1,0 +1,6 @@
+//! High-dimensional side: perplexity calibration and sparse affinities.
+
+pub mod perplexity;
+pub mod affinity;
+
+pub use affinity::Affinities;

@@ -1,0 +1,161 @@
+//! Per-point Gaussian bandwidth (σ_i) calibration to a target perplexity.
+//!
+//! t-SNE (Eq. 1) requires the conditional distribution
+//! `p_{j|i} ∝ exp(-δ_ij² / 2σ_i²)` over point i's neighbours to have a
+//! user-set perplexity `2^{H(P_i)}`. σ_i is found by bisection on
+//! β_i = 1/(2σ_i²). FUnc-SNE recalibrates continuously as neighbour sets
+//! improve, so the solver supports **warm restarts** from the previous β
+//! (the paper's "warm restart from their previous value, for efficiency").
+
+/// Result of one calibration.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Precision β = 1/(2σ²).
+    pub beta: f32,
+    /// Achieved perplexity.
+    pub perplexity: f32,
+    /// Bisection iterations used (telemetry for the warm-start tests).
+    pub iters: u32,
+}
+
+/// Entropy (nats) and normaliser of p ∝ exp(-β d²) over `sq_dists`.
+///
+/// Returns (H, sum_p) where H is the Shannon entropy in nats of the
+/// normalised distribution. Distances are *squared*.
+fn entropy(sq_dists: &[f32], beta: f32) -> (f64, f64) {
+    // Subtract the min for numerical stability (shifts cancel in p).
+    let dmin = sq_dists.iter().copied().fold(f32::INFINITY, f32::min);
+    let mut sum_p = 0.0f64;
+    let mut sum_dp = 0.0f64;
+    for &d in sq_dists {
+        let e = (-(beta as f64) * ((d - dmin) as f64)).exp();
+        sum_p += e;
+        sum_dp += (d - dmin) as f64 * e;
+    }
+    if sum_p <= 0.0 {
+        return (0.0, 0.0);
+    }
+    // H = log Z + β <d²>
+    let h = sum_p.ln() + (beta as f64) * sum_dp / sum_p;
+    (h, sum_p)
+}
+
+/// Calibrate β for one point.
+///
+/// `sq_dists` — squared distances to the point's current neighbour set;
+/// `target_perplexity` — clamped to at most `len(sq_dists)` implicitly
+/// (entropy of a k-point distribution is ≤ ln k);
+/// `warm_beta` — previous β to restart from (None → 1.0).
+pub fn calibrate(sq_dists: &[f32], target_perplexity: f64, warm_beta: Option<f32>) -> Calibration {
+    debug_assert!(!sq_dists.is_empty());
+    let target_h = target_perplexity.max(1.0001).ln().min((sq_dists.len() as f64).ln());
+    let mut beta = warm_beta.unwrap_or(1.0).max(1e-12);
+    let (mut lo, mut hi) = (0.0f64, f64::INFINITY);
+    let mut iters = 0u32;
+    let mut h = entropy(sq_dists, beta).0;
+    // Bracket: entropy decreases with β.
+    while iters < 64 && (h - target_h).abs() > 1e-5 {
+        if h > target_h {
+            lo = beta as f64;
+            beta = if hi.is_finite() { ((lo + hi) / 2.0) as f32 } else { beta * 2.0 };
+        } else {
+            hi = beta as f64;
+            beta = ((lo + hi) / 2.0) as f32;
+        }
+        h = entropy(sq_dists, beta).0;
+        iters += 1;
+    }
+    Calibration { beta, perplexity: h.exp() as f32, iters }
+}
+
+/// Normalised conditionals p_{j|i} for the point's neighbour distances
+/// at precision β (written into `out`, aligned with `sq_dists`).
+pub fn conditionals(sq_dists: &[f32], beta: f32, out: &mut [f32]) {
+    debug_assert_eq!(sq_dists.len(), out.len());
+    let dmin = sq_dists.iter().copied().fold(f32::INFINITY, f32::min);
+    let mut sum = 0.0f64;
+    for (o, &d) in out.iter_mut().zip(sq_dists) {
+        let e = (-(beta as f64) * ((d - dmin) as f64)).exp();
+        *o = e as f32;
+        sum += e;
+    }
+    let inv = if sum > 0.0 { (1.0 / sum) as f32 } else { 0.0 };
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+
+    #[test]
+    fn achieves_target_perplexity() {
+        pt::check("perplexity-hit", 48, |rng, _| {
+            let k = rng.range_usize(8, 64);
+            let target = rng.range_f64(2.0, (k as f64 * 0.8).max(2.1));
+            let dists: Vec<f32> = (0..k).map(|_| rng.f32() * 10.0 + 0.01).collect();
+            let cal = calibrate(&dists, target, None);
+            crate::prop_assert!(
+                (cal.perplexity as f64 - target).abs() < 0.05 * target,
+                "target {target} achieved {}",
+                cal.perplexity
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn warm_restart_is_cheaper() {
+        // Scale distances so the correct β is far from the cold-start 1.0
+        // (the realistic regime: σ_i reflects the data scale).
+        let mut rng = crate::util::Rng::new(1);
+        let dists: Vec<f32> = (0..32).map(|_| (rng.f32() * 5.0 + 0.1) * 60.0).collect();
+        let cold = calibrate(&dists, 20.0, None);
+        // Perturb distances slightly — the refinement scenario.
+        let dists2: Vec<f32> = dists.iter().map(|&d| d * 1.02).collect();
+        let warm = calibrate(&dists2, 20.0, Some(cold.beta));
+        let cold2 = calibrate(&dists2, 20.0, None);
+        assert!(
+            warm.iters < cold2.iters,
+            "warm {} vs cold {} iterations",
+            warm.iters,
+            cold2.iters
+        );
+        assert!((warm.perplexity - cold2.perplexity).abs() < 0.5);
+    }
+
+    #[test]
+    fn conditionals_sum_to_one_and_order() {
+        let dists = vec![0.5f32, 1.0, 4.0, 9.0];
+        let cal = calibrate(&dists, 3.0, None);
+        let mut p = vec![0.0f32; 4];
+        conditionals(&dists, cal.beta, &mut p);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        // Closer neighbours get more mass.
+        assert!(p[0] >= p[1] && p[1] >= p[2] && p[2] >= p[3]);
+    }
+
+    #[test]
+    fn degenerate_equal_distances() {
+        let dists = vec![2.0f32; 16];
+        let cal = calibrate(&dists, 8.0, None);
+        let mut p = vec![0.0f32; 16];
+        conditionals(&dists, cal.beta, &mut p);
+        for &pi in &p {
+            assert!((pi - 1.0 / 16.0).abs() < 1e-5);
+        }
+        assert!(cal.perplexity > 15.0); // uniform => perplexity = k
+    }
+
+    #[test]
+    fn perplexity_clamped_by_k() {
+        // target 50 with only 8 neighbours: best achievable is 8.
+        let dists = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let cal = calibrate(&dists, 50.0, None);
+        assert!(cal.perplexity <= 8.1);
+        assert!(cal.perplexity > 6.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Exact K-nearest neighbours by full scan — O(N²·d).
+//!
+//! Used as ground truth for the R_NX / recall metrics and for small-N
+//! reference runs (the paper computes exact sets "for the purpose of
+//! this validation experiment", Fig. 4).
+
+use super::neighbor_set::NeighborTable;
+use crate::data::matrix::{sqdist, Matrix};
+
+/// Exact KNN table of `x` under squared-Euclidean distance.
+pub fn brute_knn(x: &Matrix, k: usize) -> NeighborTable {
+    let n = x.n();
+    let mut t = NeighborTable::new(n, k);
+    for i in 0..n {
+        let xi = x.row(i);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let d = sqdist(xi, x.row(j));
+            // worst_dist check is inside insert; a cheap pre-check saves
+            // the membership scan for clearly-too-far candidates.
+            if d < t.worst_dist(i) {
+                t.insert(i, j as u32, d);
+            }
+        }
+    }
+    t
+}
+
+/// Exact neighbours of a single query row against the whole matrix,
+/// returned sorted ascending (used by dynamic-insertion seeding and the
+/// 1-NN classifier).
+pub fn knn_of_query(x: &Matrix, query: &[f32], k: usize, skip: Option<usize>) -> Vec<(u32, f32)> {
+    let mut t = NeighborTable::new(1, k);
+    for j in 0..x.n() {
+        if Some(j) == skip {
+            continue;
+        }
+        let d = sqdist(query, x.row(j));
+        if d < t.worst_dist(0) {
+            // Shift ids by 1: the table owner has row index 0 and would
+            // otherwise reject data row 0 as a self-link.
+            t.insert(0, (j + 1) as u32, d);
+        }
+    }
+    let mut out: Vec<(u32, f32)> = t.entries(0).map(|(j, d)| (j - 1, d)).collect();
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+
+    #[test]
+    fn brute_matches_naive_sort() {
+        pt::check("brute-vs-sort", 24, |rng, _| {
+            let n = rng.range_usize(5, 40);
+            let d = rng.range_usize(1, 6);
+            let k = rng.range_usize(1, n.min(8));
+            let x = Matrix::from_vec(pt::gauss_mat(rng, n, d, 2.0), n, d).unwrap();
+            let t = brute_knn(&x, k);
+            for i in 0..n {
+                let mut all: Vec<(f32, usize)> = (0..n)
+                    .filter(|&j| j != i)
+                    .map(|j| (x.sqdist(i, j), j))
+                    .collect();
+                all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let mut expect_d: Vec<f32> = all.iter().take(k).map(|e| e.0).collect();
+                let mut got_d: Vec<f32> = t.entries(i).map(|(_, dd)| dd).collect();
+                expect_d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                got_d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                crate::prop_assert!(expect_d.len() == got_d.len(), "len mismatch at {i}");
+                for (e, g) in expect_d.iter().zip(&got_d) {
+                    crate::prop_assert!((e - g).abs() < 1e-6, "dist mismatch at {i}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn query_knn_sorted_and_skips() {
+        let x = Matrix::from_vec(vec![0.0, 1.0, 2.0, 3.0], 4, 1).unwrap();
+        let res = knn_of_query(&x, &[1.1], 2, Some(1));
+        assert_eq!(res.len(), 2);
+        // |1.1-2| = 0.9 < |1.1-0| = 1.1 once row 1 is skipped.
+        assert_eq!(res[0].0, 2);
+        assert_eq!(res[1].0, 0);
+        assert!(res[0].1 <= res[1].1);
+    }
+
+    #[test]
+    fn query_knn_can_return_row_zero() {
+        // Regression: row 0 must be retrievable (the table's internal
+        // owner index used to shadow it).
+        let x = Matrix::from_vec(vec![5.0, 100.0, 200.0], 3, 1).unwrap();
+        let res = knn_of_query(&x, &[5.1], 1, None);
+        assert_eq!(res[0].0, 0);
+    }
+}

@@ -1,0 +1,389 @@
+//! The paper's iterative *cross-space* KNN refinement.
+//!
+//! Twin estimated neighbour tables — `hd` (under the data metric) and
+//! `ld` (under the embedding metric) — are refined a little at every
+//! engine iteration. Candidate generation is the novelty: a candidate
+//! destined for the HD set of point *i* can come from
+//!
+//! 1. HD neighbours of *i*'s HD neighbours (NN-descent style),
+//! 2. *i*'s **LD** neighbours (cross-space route),
+//! 3. LD neighbours of *i*'s LD neighbours (cross-space NN route),
+//! 4. uniform random points (the escape hatch that makes the scheme
+//!    "less prone to local minima than nearest-neighbour descent").
+//!
+//! and symmetrically for the LD set. Because the embedding improves as
+//! the HD sets improve and vice versa, the two refinements form the
+//! positive feedback loop of Fig. 4.
+//!
+//! Candidate *generation* (index juggling) is separated from candidate
+//! *scoring* (distance computation) so the coordinator can score a whole
+//! tile of candidates in one AOT-compiled XLA call (the `sqdist_*`
+//! artifact) instead of point by point.
+
+use super::neighbor_set::NeighborTable;
+use crate::data::matrix::{sqdist, Matrix};
+use crate::util::Rng;
+
+/// The twin tables plus refresh bookkeeping.
+#[derive(Clone, Debug)]
+pub struct IterativeKnn {
+    /// Estimated HD neighbour sets (size k_hd).
+    pub hd: NeighborTable,
+    /// Estimated LD neighbour sets (size k_ld).
+    pub ld: NeighborTable,
+    /// Per-point flag: discovered a new HD neighbour since last σ
+    /// recalibration sweep (paper §3).
+    pub hd_dirty: Vec<bool>,
+}
+
+/// Where candidates may come from (used by the ablation bench to switch
+/// the cross-space routes off and recover plain NN-descent behaviour).
+#[derive(Clone, Copy, Debug)]
+pub struct CandidateRoutes {
+    pub same_space: bool,
+    pub cross_space: bool,
+    pub random: bool,
+}
+
+impl Default for CandidateRoutes {
+    fn default() -> Self {
+        CandidateRoutes { same_space: true, cross_space: true, random: true }
+    }
+}
+
+impl IterativeKnn {
+    /// Fresh state with randomly-seeded tables.
+    pub fn new(n: usize, k_hd: usize, k_ld: usize) -> Self {
+        IterativeKnn {
+            hd: NeighborTable::new(n, k_hd),
+            ld: NeighborTable::new(n, k_ld),
+            hd_dirty: vec![true; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.hd.n()
+    }
+
+    /// Seed both tables with `seeds` random links per point, scored with
+    /// the true metrics (one-off O(N·seeds·d)).
+    pub fn seed_random(&mut self, x: &Matrix, y: &Matrix, rng: &mut Rng) {
+        let n = self.n();
+        if n < 2 {
+            return;
+        }
+        let seeds_hd = self.hd.k().min(n - 1);
+        let seeds_ld = self.ld.k().min(n - 1);
+        for i in 0..n {
+            for _ in 0..seeds_hd {
+                let j = rng.below(n);
+                if j != i {
+                    self.hd.insert(i, j as u32, sqdist(x.row(i), x.row(j)));
+                }
+            }
+            for _ in 0..seeds_ld {
+                let j = rng.below(n);
+                if j != i {
+                    self.ld.insert(i, j as u32, sqdist(y.row(i), y.row(j)));
+                }
+            }
+        }
+    }
+
+    /// One HD refinement sweep over all points (native scoring).
+    /// Returns the number of points that received ≥1 new neighbour —
+    /// the `N_new` of the paper's refresh-probability heuristic.
+    pub fn refine_hd_native(
+        &mut self,
+        x: &Matrix,
+        n_candidates: usize,
+        routes: CandidateRoutes,
+        rng: &mut Rng,
+        scratch: &mut Vec<u32>,
+    ) -> usize {
+        let n = self.n();
+        let mut n_new = 0usize;
+        for i in 0..n {
+            scratch.clear();
+            gen_candidates(i, &self.hd, &self.ld, n, n_candidates, routes, rng, scratch);
+            let mut improved = false;
+            let xi = x.row(i);
+            for &c in scratch.iter() {
+                let d = sqdist(xi, x.row(c as usize));
+                if self.hd.insert(i, c, d) {
+                    improved = true;
+                }
+                // Symmetric insertion: i may be a good neighbour for c.
+                // (Counted via the dirty flag, not n_new, to keep the
+                // paper's "points that received new neighbours" per-sweep
+                // semantics.)
+                if self.hd.insert(c as usize, i as u32, d) {
+                    self.hd_dirty[c as usize] = true;
+                }
+            }
+            if improved {
+                self.hd_dirty[i] = true;
+                n_new += 1;
+            }
+        }
+        n_new
+    }
+
+    /// One LD refinement sweep (native scoring). LD coordinates move at
+    /// every gradient step, so stored distances are first rescored
+    /// against the current embedding before candidates are tested.
+    pub fn refine_ld_native(
+        &mut self,
+        y: &Matrix,
+        n_candidates: usize,
+        routes: CandidateRoutes,
+        rng: &mut Rng,
+        scratch: &mut Vec<u32>,
+    ) -> usize {
+        let n = self.n();
+        let mut n_new = 0usize;
+        for i in 0..n {
+            self.ld.rescore(i, |j| sqdist(y.row(i), y.row(j as usize)));
+            scratch.clear();
+            // Note the swapped table roles: LD is primary, HD is cross.
+            gen_candidates(i, &self.ld, &self.hd, n, n_candidates, routes, rng, scratch);
+            let mut improved = false;
+            let yi = y.row(i);
+            for &c in scratch.iter() {
+                let d = sqdist(yi, y.row(c as usize));
+                if self.ld.insert(i, c, d) {
+                    improved = true;
+                }
+                if self.ld.insert(c as usize, i as u32, d) {
+                    // symmetric improvement
+                }
+            }
+            if improved {
+                n_new += 1;
+            }
+        }
+        n_new
+    }
+
+    /// Dynamic insertion: append a point (its sets start empty and fill
+    /// up over subsequent refinement sweeps — the "no overhead" claim).
+    pub fn push_point(&mut self) {
+        self.hd.push_point();
+        self.ld.push_point();
+        self.hd_dirty.push(true);
+    }
+
+    /// Dynamic removal bookkeeping for `swap_remove` semantics: point
+    /// `gone` disappears; the previously-last point (if different) now
+    /// has index `gone`.
+    pub fn swap_remove_point(&mut self, gone: usize) {
+        let last = self.n() - 1;
+        let moved = if gone != last { Some(last as u32) } else { None };
+        self.hd.swap_rows(gone, last);
+        self.ld.swap_rows(gone, last);
+        self.hd_dirty.swap(gone, last);
+        self.hd.pop_point();
+        self.ld.pop_point();
+        self.hd_dirty.pop();
+        self.hd.purge(gone as u32, moved);
+        self.ld.purge(gone as u32, moved);
+    }
+}
+
+/// Generate up to `budget` candidate neighbour ids for point `i`.
+///
+/// `primary` is the table being refined; `other` is the twin table in
+/// the opposite space (the cross-pollination source). Candidates are
+/// deduplicated against each other and against `i`; they may already be
+/// in the table (insert rejects those cheaply).
+#[allow(clippy::too_many_arguments)]
+pub fn gen_candidates(
+    i: usize,
+    primary: &NeighborTable,
+    other: &NeighborTable,
+    n: usize,
+    budget: usize,
+    routes: CandidateRoutes,
+    rng: &mut Rng,
+    out: &mut Vec<u32>,
+) {
+    debug_assert!(out.is_empty());
+    if n < 2 {
+        return;
+    }
+    let push = |c: u32, out: &mut Vec<u32>| {
+        if c as usize != i && !out.contains(&c) {
+            out.push(c);
+        }
+    };
+    // Route 1 — same-space neighbours of neighbours: pick a random
+    // neighbour j, then a random neighbour of j.
+    if routes.same_space {
+        let tries = budget.div_ceil(2);
+        for _ in 0..tries {
+            let nb = primary.neighbors(i);
+            if nb.is_empty() {
+                break;
+            }
+            let j = nb[rng.below(nb.len())] as usize;
+            let nb2 = primary.neighbors(j);
+            if !nb2.is_empty() {
+                push(nb2[rng.below(nb2.len())], out);
+            } else {
+                push(j as u32, out);
+            }
+        }
+    }
+    // Route 2+3 — cross-space: direct twin neighbours and twin
+    // neighbours-of-neighbours.
+    if routes.cross_space {
+        let nb = other.neighbors(i);
+        let tries = budget.div_ceil(2);
+        for t in 0..tries {
+            if nb.is_empty() {
+                break;
+            }
+            let j = nb[rng.below(nb.len())];
+            if t % 2 == 0 {
+                push(j, out);
+            } else {
+                let nb2 = other.neighbors(j as usize);
+                if !nb2.is_empty() {
+                    push(nb2[rng.below(nb2.len())], out);
+                } else {
+                    push(j, out);
+                }
+            }
+        }
+    }
+    // Route 4 — uniform random escape hatch.
+    if routes.random {
+        let tries = (budget / 4).max(1);
+        for _ in 0..tries {
+            push(rng.below(n) as u32, out);
+        }
+    }
+    out.truncate(budget.max(1));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::knn::brute::brute_knn;
+
+    fn recall(truth: &NeighborTable, approx: &NeighborTable) -> f64 {
+        let n = truth.n();
+        let (mut hit, mut tot) = (0usize, 0usize);
+        for i in 0..n {
+            for j in truth.neighbors(i) {
+                tot += 1;
+                if approx.contains(i, *j) {
+                    hit += 1;
+                }
+            }
+        }
+        hit as f64 / tot.max(1) as f64
+    }
+
+    /// With a *perfect* LD embedding (LD = HD), cross-space candidates
+    /// should drive HD recall high quickly — the feedback-loop premise.
+    #[test]
+    fn converges_with_identity_embedding() {
+        let ds = datasets::blobs(500, 8, 5, 0.8, 10.0, 1);
+        let mut rng = crate::util::Rng::new(7);
+        let mut knn = IterativeKnn::new(500, 10, 10);
+        // LD == HD here (the best possible embedding).
+        knn.seed_random(&ds.x, &ds.x, &mut rng);
+        let mut scratch = Vec::new();
+        for _ in 0..40 {
+            knn.refine_hd_native(&ds.x, 8, CandidateRoutes::default(), &mut rng, &mut scratch);
+            knn.refine_ld_native(&ds.x, 8, CandidateRoutes::default(), &mut rng, &mut scratch);
+        }
+        let truth = brute_knn(&ds.x, 10);
+        let r = recall(&truth, &knn.hd);
+        assert!(r > 0.85, "iterative KNN recall {r}");
+    }
+
+    /// Random-route-only ablation must converge more slowly than the
+    /// full candidate mix (the candidate routes matter).
+    #[test]
+    fn routes_beat_random_only() {
+        let ds = datasets::blobs(400, 8, 4, 0.8, 10.0, 2);
+        let truth = brute_knn(&ds.x, 8);
+        let run = |routes: CandidateRoutes, seed: u64| {
+            let mut rng = crate::util::Rng::new(seed);
+            let mut knn = IterativeKnn::new(400, 8, 8);
+            knn.seed_random(&ds.x, &ds.x, &mut rng);
+            let mut scratch = Vec::new();
+            for _ in 0..15 {
+                knn.refine_hd_native(&ds.x, 8, routes, &mut rng, &mut scratch);
+                knn.refine_ld_native(&ds.x, 8, routes, &mut rng, &mut scratch);
+            }
+            recall(&truth, &knn.hd)
+        };
+        let full = run(CandidateRoutes::default(), 3);
+        let rand_only =
+            run(CandidateRoutes { same_space: false, cross_space: false, random: true }, 3);
+        assert!(
+            full > rand_only + 0.05,
+            "full routes {full} should beat random-only {rand_only}"
+        );
+    }
+
+    #[test]
+    fn gen_candidates_dedups_and_excludes_self() {
+        let mut rng = crate::util::Rng::new(5);
+        let mut primary = NeighborTable::new(10, 4);
+        let mut other = NeighborTable::new(10, 4);
+        for j in 1..5u32 {
+            primary.insert(0, j, j as f32);
+            other.insert(0, j + 4, j as f32);
+        }
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            out.clear();
+            gen_candidates(0, &primary, &other, 10, 12, CandidateRoutes::default(), &mut rng, &mut out);
+            assert!(!out.contains(&0), "self in candidates");
+            let set: std::collections::HashSet<_> = out.iter().collect();
+            assert_eq!(set.len(), out.len(), "duplicates in candidates");
+            assert!(out.len() <= 12);
+        }
+    }
+
+    #[test]
+    fn dirty_flags_set_on_discovery() {
+        let ds = datasets::blobs(100, 4, 2, 0.5, 6.0, 4);
+        let mut rng = crate::util::Rng::new(9);
+        let mut knn = IterativeKnn::new(100, 6, 6);
+        knn.seed_random(&ds.x, &ds.x, &mut rng);
+        knn.hd_dirty.iter_mut().for_each(|f| *f = false);
+        let mut scratch = Vec::new();
+        let n_new =
+            knn.refine_hd_native(&ds.x, 8, CandidateRoutes::default(), &mut rng, &mut scratch);
+        let dirty = knn.hd_dirty.iter().filter(|&&f| f).count();
+        assert!(dirty >= n_new, "dirty {dirty} < n_new {n_new}");
+        assert!(n_new > 0, "refinement found nothing on a fresh random table");
+    }
+
+    #[test]
+    fn dynamic_push_and_remove_keep_tables_consistent() {
+        let ds = datasets::blobs(60, 4, 2, 0.5, 6.0, 6);
+        let mut rng = crate::util::Rng::new(11);
+        let mut knn = IterativeKnn::new(60, 5, 5);
+        knn.seed_random(&ds.x, &ds.x, &mut rng);
+        knn.push_point();
+        assert_eq!(knn.n(), 61);
+        knn.swap_remove_point(10);
+        assert_eq!(knn.n(), 60);
+        // No table may reference an out-of-range index.
+        for i in 0..knn.n() {
+            for &j in knn.hd.neighbors(i) {
+                assert!((j as usize) < knn.n(), "stale hd ref {j}");
+            }
+            for &j in knn.ld.neighbors(i) {
+                assert!((j as usize) < knn.n(), "stale ld ref {j}");
+            }
+        }
+    }
+}

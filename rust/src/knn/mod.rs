@@ -1,0 +1,17 @@
+//! K-nearest-neighbour machinery.
+//!
+//! Three finders share the [`NeighborTable`] representation:
+//!
+//! * [`brute`] — exact KNN by full scan (ground truth for all metrics);
+//! * [`nn_descent`] — Dong et al. [1] nearest-neighbour descent, the
+//!   baseline the paper compares against in Figs 7/8;
+//! * [`iterative`] — the paper's contribution: *cross-space* iterative
+//!   refinement where the HD and LD estimated neighbour sets exchange
+//!   candidates, run concurrently with the embedding's gradient descent.
+
+pub mod neighbor_set;
+pub mod brute;
+pub mod nn_descent;
+pub mod iterative;
+
+pub use neighbor_set::NeighborTable;

@@ -1,0 +1,424 @@
+//! Fixed-capacity per-point neighbour sets, stored as one contiguous
+//! table for all points.
+//!
+//! Each point owns a slice of `k` slots `(dist, idx)` organised as a
+//! binary max-heap on `dist` (worst neighbour at the root), giving O(1)
+//! "should I even consider this candidate?" checks and O(log k)
+//! replacement. Membership tests are linear scans — `k` ≤ 64 in
+//! practice, so a scan over one or two cache lines beats any hash
+//! structure.
+
+/// Sentinel index for an empty slot.
+pub const EMPTY: u32 = u32::MAX;
+
+/// A contiguous (n × k) neighbour table.
+#[derive(Clone, Debug)]
+pub struct NeighborTable {
+    k: usize,
+    n: usize,
+    /// Heap-ordered distances, n*k, f32::INFINITY for empty slots.
+    dists: Vec<f32>,
+    /// Neighbour indices aligned with `dists`, EMPTY for empty slots.
+    idxs: Vec<u32>,
+    /// Number of filled slots per point.
+    lens: Vec<u32>,
+}
+
+impl NeighborTable {
+    pub fn new(n: usize, k: usize) -> Self {
+        assert!(k >= 1);
+        NeighborTable {
+            k,
+            n,
+            dists: vec![f32::INFINITY; n * k],
+            idxs: vec![EMPTY; n * k],
+            lens: vec![0; n],
+        }
+    }
+
+    #[inline(always)]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline(always)]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline(always)]
+    pub fn len(&self, i: usize) -> usize {
+        self.lens[i] as usize
+    }
+
+    pub fn is_empty(&self, i: usize) -> bool {
+        self.lens[i] == 0
+    }
+
+    /// The current worst (largest) distance for point `i`, or +inf if the
+    /// set is not yet full — matching the "accept anything" semantics.
+    #[inline(always)]
+    pub fn worst_dist(&self, i: usize) -> f32 {
+        if self.len(i) < self.k {
+            f32::INFINITY
+        } else {
+            self.dists[i * self.k]
+        }
+    }
+
+    /// Neighbour indices of point `i` (filled slots only, heap order).
+    #[inline(always)]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.idxs[i * self.k..i * self.k + self.len(i)]
+    }
+
+    /// (idx, dist) pairs for point `i` in heap order.
+    pub fn entries(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let base = i * self.k;
+        let len = self.len(i);
+        (0..len).map(move |s| (self.idxs[base + s], self.dists[base + s]))
+    }
+
+    /// Neighbour indices of `i` sorted by ascending distance.
+    pub fn sorted_neighbors(&self, i: usize) -> Vec<u32> {
+        let mut v: Vec<(f32, u32)> = self.entries(i).map(|(j, d)| (d, j)).collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        v.into_iter().map(|(_, j)| j).collect()
+    }
+
+    /// Linear membership scan.
+    #[inline(always)]
+    pub fn contains(&self, i: usize, j: u32) -> bool {
+        let base = i * self.k;
+        let len = self.len(i);
+        self.idxs[base..base + len].contains(&j)
+    }
+
+    /// Try to insert neighbour `j` at distance `d` into point `i`'s set.
+    /// Returns true iff the set changed. Rejects self-links, duplicates,
+    /// and candidates no better than the current worst.
+    #[inline]
+    pub fn insert(&mut self, i: usize, j: u32, d: f32) -> bool {
+        debug_assert!(j != EMPTY);
+        if j as usize == i || !d.is_finite() {
+            return false;
+        }
+        let base = i * self.k;
+        let len = self.len(i);
+        if len == self.k && d >= self.dists[base] {
+            return false; // not better than the worst
+        }
+        if self.idxs[base..base + len].contains(&j) {
+            return false;
+        }
+        if len < self.k {
+            // Append then sift up.
+            let mut slot = len;
+            self.dists[base + slot] = d;
+            self.idxs[base + slot] = j;
+            self.lens[i] += 1;
+            // Sift up (max-heap).
+            while slot > 0 {
+                let parent = (slot - 1) / 2;
+                if self.dists[base + parent] < self.dists[base + slot] {
+                    self.dists.swap(base + parent, base + slot);
+                    self.idxs.swap(base + parent, base + slot);
+                    slot = parent;
+                } else {
+                    break;
+                }
+            }
+        } else {
+            // Replace root then sift down.
+            self.dists[base] = d;
+            self.idxs[base] = j;
+            let mut slot = 0;
+            loop {
+                let l = 2 * slot + 1;
+                let r = 2 * slot + 2;
+                let mut largest = slot;
+                if l < self.k && self.dists[base + l] > self.dists[base + largest] {
+                    largest = l;
+                }
+                if r < self.k && self.dists[base + r] > self.dists[base + largest] {
+                    largest = r;
+                }
+                if largest == slot {
+                    break;
+                }
+                self.dists.swap(base + slot, base + largest);
+                self.idxs.swap(base + slot, base + largest);
+                slot = largest;
+            }
+        }
+        true
+    }
+
+    /// Recompute all stored distances for point `i` with a new metric /
+    /// moved coordinates, re-heapifying. Used when LD points move or the
+    /// HD metric changes on the fly.
+    pub fn rescore(&mut self, i: usize, mut dist_of: impl FnMut(u32) -> f32) {
+        let base = i * self.k;
+        let len = self.len(i);
+        for s in 0..len {
+            self.dists[base + s] = dist_of(self.idxs[base + s]);
+        }
+        // Heapify the region.
+        for s in (0..len / 2).rev() {
+            let mut slot = s;
+            loop {
+                let l = 2 * slot + 1;
+                let r = 2 * slot + 2;
+                let mut largest = slot;
+                if l < len && self.dists[base + l] > self.dists[base + largest] {
+                    largest = l;
+                }
+                if r < len && self.dists[base + r] > self.dists[base + largest] {
+                    largest = r;
+                }
+                if largest == slot {
+                    break;
+                }
+                self.dists.swap(base + slot, base + largest);
+                self.idxs.swap(base + slot, base + largest);
+                slot = largest;
+            }
+        }
+    }
+
+    /// Drop every stored reference to point `gone`, and rewrite
+    /// references to `moved` (the old last index that swapped into
+    /// `gone`'s slot) if provided. Supports dynamic point removal.
+    pub fn purge(&mut self, gone: u32, moved: Option<u32>) {
+        for i in 0..self.n {
+            let base = i * self.k;
+            let mut len = self.len(i);
+            let mut s = 0;
+            while s < len {
+                let idx = self.idxs[base + s];
+                if idx == gone {
+                    // Remove slot s: move last slot in, shrink, re-heapify later.
+                    len -= 1;
+                    self.dists[base + s] = self.dists[base + len];
+                    self.idxs[base + s] = self.idxs[base + len];
+                    self.dists[base + len] = f32::INFINITY;
+                    self.idxs[base + len] = EMPTY;
+                    continue; // re-examine slot s
+                }
+                if Some(idx) == moved {
+                    self.idxs[base + s] = gone; // moved point now lives at `gone`
+                }
+                s += 1;
+            }
+            self.lens[i] = len as u32;
+            // Restore heap property after removals.
+            if len > 1 {
+                let d = &mut self.dists[base..base + len];
+                let x = &mut self.idxs[base..base + len];
+                heapify(d, x);
+            }
+        }
+    }
+
+    /// Add one empty row (dynamic insertion).
+    pub fn push_point(&mut self) {
+        self.n += 1;
+        self.dists.extend(std::iter::repeat(f32::INFINITY).take(self.k));
+        self.idxs.extend(std::iter::repeat(EMPTY).take(self.k));
+        self.lens.push(0);
+    }
+
+    /// Remove the last row (after swap-remove bookkeeping).
+    pub fn pop_point(&mut self) {
+        assert!(self.n > 0);
+        self.n -= 1;
+        self.dists.truncate(self.n * self.k);
+        self.idxs.truncate(self.n * self.k);
+        self.lens.pop();
+    }
+
+    /// Clear point `i`'s set (e.g. after it moved to new coordinates).
+    pub fn clear_point(&mut self, i: usize) {
+        let base = i * self.k;
+        for s in 0..self.k {
+            self.dists[base + s] = f32::INFINITY;
+            self.idxs[base + s] = EMPTY;
+        }
+        self.lens[i] = 0;
+    }
+
+    /// Swap the contents of two rows (dynamic removal bookkeeping).
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        for s in 0..self.k {
+            self.dists.swap(a * self.k + s, b * self.k + s);
+            self.idxs.swap(a * self.k + s, b * self.k + s);
+        }
+        self.lens.swap(a, b);
+    }
+}
+
+fn heapify(dists: &mut [f32], idxs: &mut [u32]) {
+    let len = dists.len();
+    for s in (0..len / 2).rev() {
+        let mut slot = s;
+        loop {
+            let l = 2 * slot + 1;
+            let r = 2 * slot + 2;
+            let mut largest = slot;
+            if l < len && dists[l] > dists[largest] {
+                largest = l;
+            }
+            if r < len && dists[r] > dists[largest] {
+                largest = r;
+            }
+            if largest == slot {
+                break;
+            }
+            dists.swap(slot, largest);
+            idxs.swap(slot, largest);
+            slot = largest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+
+    fn heap_ok(t: &NeighborTable, i: usize) -> bool {
+        let base = i * t.k;
+        let len = t.len(i);
+        for s in 0..len {
+            let l = 2 * s + 1;
+            let r = 2 * s + 2;
+            if l < len && t.dists[base + l] > t.dists[base + s] {
+                return false;
+            }
+            if r < len && t.dists[base + r] > t.dists[base + s] {
+                return false;
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn insert_keeps_best_k() {
+        let mut t = NeighborTable::new(1, 3);
+        assert!(t.insert(0, 10, 5.0));
+        assert!(t.insert(0, 11, 3.0));
+        assert!(t.insert(0, 12, 4.0));
+        // Set is full with worst 5.0; 6.0 must be rejected, 1.0 accepted.
+        assert!(!t.insert(0, 13, 6.0));
+        assert!(t.insert(0, 14, 1.0));
+        let mut sorted = t.sorted_neighbors(0);
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![11, 12, 14]);
+        assert!((t.worst_dist(0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_self_and_duplicates() {
+        let mut t = NeighborTable::new(2, 4);
+        assert!(!t.insert(1, 1, 0.0)); // self
+        assert!(t.insert(1, 0, 1.0));
+        assert!(!t.insert(1, 0, 0.5)); // duplicate (even if closer)
+        assert_eq!(t.len(1), 1);
+    }
+
+    #[test]
+    fn property_heap_and_topk_match_naive() {
+        pt::check("neighbor-table-topk", 48, |rng, _| {
+            let k = rng.range_usize(1, 9);
+            let m = rng.range_usize(1, 60);
+            let mut t = NeighborTable::new(1, k);
+            let mut naive: Vec<(f32, u32)> = Vec::new();
+            // Distinct candidate ids (duplicate-handling is covered by
+            // `rejects_self_and_duplicates`; here we verify top-k).
+            let mut ids: Vec<usize> = (1..=m).collect();
+            rng.shuffle(&mut ids);
+            for j in ids {
+                let d = rng.f32() * 10.0;
+                t.insert(0, j as u32, d);
+                naive.push((d, j as u32));
+            }
+            crate::prop_assert!(heap_ok(&t, 0), "heap violated");
+            naive.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // NOTE: duplicates in the naive list keep the FIRST distance seen,
+            // matching table semantics (duplicates rejected).
+            let expect: std::collections::HashSet<u32> =
+                naive.iter().take(k).map(|&(_, j)| j).collect();
+            let got: std::collections::HashSet<u32> =
+                t.neighbors(0).iter().copied().collect();
+            // Ties at the cut can differ; compare distances instead.
+            let worst_expect = naive.get(k.saturating_sub(1)).map(|e| e.0);
+            if let Some(we) = worst_expect {
+                let mut got_d: Vec<f32> = t.entries(0).map(|(_, d)| d).collect();
+                got_d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let naive_d: Vec<f32> =
+                    naive.iter().take(k).map(|&(d, _)| d).collect();
+                for (a, b) in got_d.iter().zip(&naive_d) {
+                    crate::prop_assert!((a - b).abs() < 1e-6, "top-k dists differ");
+                }
+                let _ = we;
+            } else {
+                crate::prop_assert!(expect == got, "sets differ under k");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rescore_reheapifies() {
+        let mut t = NeighborTable::new(1, 4);
+        for (j, d) in [(1u32, 1.0f32), (2, 2.0), (3, 3.0), (4, 4.0)] {
+            t.insert(0, j, d);
+        }
+        // Invert the metric: j -> 10 - old d
+        t.rescore(0, |j| 10.0 - j as f32);
+        assert!(heap_ok(&t, 0));
+        assert_eq!(t.worst_dist(0), 9.0); // j=1 now worst
+    }
+
+    #[test]
+    fn purge_removes_and_renames() {
+        let mut t = NeighborTable::new(3, 3);
+        t.insert(0, 2, 1.0);
+        t.insert(0, 5, 2.0);
+        t.insert(1, 5, 0.5);
+        t.insert(2, 1, 0.1);
+        // Point 2 removed; point 5 (old last) moved into slot 2.
+        t.purge(2, Some(5));
+        assert!(!t.contains(0, 5)); // renamed to 2
+        assert!(t.contains(0, 2)); // the renamed one
+        assert_eq!(t.len(0), 1);
+        assert!(t.contains(1, 2));
+        assert!(t.contains(2, 1)); // untouched entry survives
+        assert!(heap_ok(&t, 0) && heap_ok(&t, 1) && heap_ok(&t, 2));
+    }
+
+    #[test]
+    fn dynamic_rows() {
+        let mut t = NeighborTable::new(2, 2);
+        t.push_point();
+        assert_eq!(t.n(), 3);
+        t.insert(2, 0, 1.0);
+        assert_eq!(t.len(2), 1);
+        t.swap_rows(0, 2);
+        assert_eq!(t.len(0), 1);
+        t.pop_point();
+        assert_eq!(t.n(), 2);
+    }
+
+    #[test]
+    fn clear_point_resets() {
+        let mut t = NeighborTable::new(1, 2);
+        t.insert(0, 1, 1.0);
+        t.clear_point(0);
+        assert_eq!(t.len(0), 0);
+        assert_eq!(t.worst_dist(0), f32::INFINITY);
+    }
+}

@@ -1,0 +1,304 @@
+//! Native (pure Rust) force accumulation — the reference semantics for
+//! the Eq. 5/6 gradient and the performance baseline against which the
+//! PJRT tile path is parity-tested and benchmarked.
+//!
+//! Per point i (Eq. 6 decomposition):
+//!
+//! 1. **HD slots** (attraction + close repulsion): for each stored HD
+//!    neighbour j with conditional p_{j|i}:
+//!    `attr_i += p·g·(y_j − y_i)` and `rep_i += w·g·(y_i − y_j)`.
+//! 2. **LD slots** (the paper's novel close-range repulsion): for each
+//!    estimated LD neighbour j *not in the HD set*:
+//!    `rep_i += w·g·(y_i − y_j)`.
+//! 3. **Negative samples** (far field): same repulsion expression,
+//!    accumulated separately by the engine's scaling, and contributing
+//!    to the Z-estimate statistics.
+//!
+//! The repulsion accumulated here is *unnormalised* (no division by Z);
+//! the engine multiplies by its running `1/((N−1)·E[w])` estimate,
+//! reproducing q_ij = w_ij / Z up to the far-field scaling documented in
+//! DESIGN.md.
+
+use crate::data::matrix::{sqdist, Matrix};
+use crate::engine::backend::{ComputeBackend, NegSamples, NegStats};
+use crate::hd::Affinities;
+use crate::knn::iterative::IterativeKnn;
+use crate::ld::kernel::kernel_pair;
+use anyhow::Result;
+
+/// The pure-Rust backend (no per-call allocation).
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn sqdist_batch(
+        &mut self,
+        x: &Matrix,
+        owners: &[u32],
+        cands: &[u32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        debug_assert_eq!(owners.len(), cands.len());
+        out.clear();
+        out.reserve(owners.len());
+        for (&i, &j) in owners.iter().zip(cands) {
+            out.push(sqdist(x.row(i as usize), x.row(j as usize)));
+        }
+        Ok(())
+    }
+
+    fn forces(
+        &mut self,
+        y: &Matrix,
+        knn: &IterativeKnn,
+        aff: &Affinities,
+        neg: &NegSamples,
+        alpha: f32,
+        far_scale: f32,
+        attr: &mut Matrix,
+        rep: &mut Matrix,
+    ) -> Result<NegStats> {
+        let n = y.n();
+        let d = y.d();
+        debug_assert_eq!(attr.n(), n);
+        debug_assert_eq!(rep.n(), n);
+        attr.data_mut().iter_mut().for_each(|v| *v = 0.0);
+        rep.data_mut().iter_mut().for_each(|v| *v = 0.0);
+        let mut wsum = 0.0f64;
+        let mut count = 0usize;
+        // §Perf: accumulate each point's attraction/repulsion in small
+        // stack buffers and write back once — repeated slicing of the
+        // output matrices inside the slot loops cost ~35% of the pass
+        // (bounds checks + lost register allocation). d ≤ 64 covers
+        // every artifact dim; larger d falls back to a (rare) heap path.
+        debug_assert!(d <= 64, "LD dim {d} > 64 unsupported by the native fast path");
+        let mut yi_buf = [0.0f32; 64];
+        let mut acc_a = [0.0f32; 64];
+        let mut acc_r = [0.0f32; 64];
+        for i in 0..n {
+            let yi_start = i * d;
+            yi_buf[..d].copy_from_slice(&y.data()[yi_start..yi_start + d]);
+            let yi = &yi_buf[..d];
+            acc_a[..d].iter_mut().for_each(|v| *v = 0.0);
+            acc_r[..d].iter_mut().for_each(|v| *v = 0.0);
+            // --- 1. HD slots: attraction + close repulsion ------------
+            for (s, (j, _hd_dist)) in knn.hd.entries(i).enumerate() {
+                let p = aff.p_slot(i, s);
+                let yj = y.row(j as usize);
+                let d2 = sqdist(yi, yj);
+                let (w, g) = kernel_pair(d2, alpha);
+                let ag = p * g;
+                let rg = w * g;
+                for k in 0..d {
+                    let delta = yj[k] - yi[k];
+                    acc_a[k] += ag * delta;
+                    acc_r[k] -= rg * delta;
+                }
+            }
+            // --- 2. LD slots not in the HD set: close repulsion -------
+            for (j, _stale) in knn.ld.entries(i) {
+                if knn.hd.contains(i, j) {
+                    continue; // already covered by term 1
+                }
+                let yj = y.row(j as usize);
+                let d2 = sqdist(yi, yj);
+                let (w, g) = kernel_pair(d2, alpha);
+                let rg = w * g;
+                for k in 0..d {
+                    acc_r[k] += rg * (yi[k] - yj[k]);
+                }
+            }
+            // --- 3. Negative samples: far field ------------------------
+            for &j in neg.row(i) {
+                let yj = y.row(j as usize);
+                let d2 = sqdist(yi, yj);
+                let (w, g) = kernel_pair(d2, alpha);
+                wsum += w as f64;
+                count += 1;
+                let rg = w * g * far_scale;
+                for k in 0..d {
+                    acc_r[k] += rg * (yi[k] - yj[k]);
+                }
+            }
+            attr.data_mut()[yi_start..yi_start + d].copy_from_slice(&acc_a[..d]);
+            rep.data_mut()[yi_start..yi_start + d].copy_from_slice(&acc_r[..d]);
+        }
+        Ok(NegStats { wsum, count })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::knn::brute::brute_knn;
+    use crate::util::Rng;
+
+    fn setup(n: usize, d_ld: usize, seed: u64) -> (Matrix, Matrix, IterativeKnn, Affinities) {
+        let ds = datasets::blobs(n, 5, 3, 0.6, 8.0, seed);
+        let mut rng = Rng::new(seed ^ 1);
+        let mut yv = Vec::with_capacity(n * d_ld);
+        for _ in 0..n * d_ld {
+            yv.push(rng.gauss_ms(0.0, 1.0) as f32);
+        }
+        let y = Matrix::from_vec(yv, n, d_ld).unwrap();
+        let k = 8;
+        let exact = brute_knn(&ds.x, k);
+        let mut knn = IterativeKnn::new(n, k, k);
+        for i in 0..n {
+            for (j, dd) in exact.entries(i) {
+                knn.hd.insert(i, j, dd);
+            }
+            knn.ld.rescore(i, |_| 0.0);
+        }
+        // LD table: exact LD neighbours for determinism.
+        let exact_ld = brute_knn(&y, k);
+        for i in 0..n {
+            for (j, dd) in exact_ld.entries(i) {
+                knn.ld.insert(i, j, dd);
+            }
+        }
+        let mut aff = Affinities::new(n, k);
+        aff.recalibrate_all(&mut knn, 5.0);
+        (ds.x, y, knn, aff)
+    }
+
+    /// Exhaustive O(N²) oracle computing the same decomposition.
+    fn oracle(
+        y: &Matrix,
+        knn: &IterativeKnn,
+        aff: &Affinities,
+        neg: &NegSamples,
+        alpha: f32,
+        far_scale: f32,
+    ) -> (Matrix, Matrix, NegStats) {
+        let n = y.n();
+        let d = y.d();
+        let mut attr = Matrix::zeros(n, d);
+        let mut rep = Matrix::zeros(n, d);
+        let mut stats = NegStats::default();
+        for i in 0..n {
+            for (s, (j, _)) in knn.hd.entries(i).enumerate() {
+                let p = aff.p_slot(i, s);
+                let d2 = y.sqdist(i, j as usize);
+                let (w, g) = kernel_pair(d2, alpha);
+                for k in 0..d {
+                    let delta = y.row(j as usize)[k] - y.row(i)[k];
+                    attr.data_mut()[i * d + k] += p * g * delta;
+                    rep.data_mut()[i * d + k] += w * g * (-delta);
+                }
+            }
+            for (j, _) in knn.ld.entries(i) {
+                if knn.hd.contains(i, j) {
+                    continue;
+                }
+                let d2 = y.sqdist(i, j as usize);
+                let (w, g) = kernel_pair(d2, alpha);
+                for k in 0..d {
+                    let delta = y.row(i)[k] - y.row(j as usize)[k];
+                    rep.data_mut()[i * d + k] += w * g * delta;
+                }
+            }
+            for &j in neg.row(i) {
+                let d2 = y.sqdist(i, j as usize);
+                let (w, g) = kernel_pair(d2, alpha);
+                stats.wsum += w as f64;
+                stats.count += 1;
+                for k in 0..d {
+                    let delta = y.row(i)[k] - y.row(j as usize)[k];
+                    rep.data_mut()[i * d + k] += w * g * far_scale * delta;
+                }
+            }
+        }
+        (attr, rep, stats)
+    }
+
+    #[test]
+    fn native_matches_oracle() {
+        for &alpha in &[0.5f32, 1.0, 2.0] {
+            let (x, y, knn, aff) = setup(120, 2, 7);
+            let _ = x;
+            let mut rng = Rng::new(42);
+            let neg = NegSamples::draw(120, 6, &mut rng);
+            let mut backend = NativeBackend::new();
+            let mut attr = Matrix::zeros(120, 2);
+            let mut rep = Matrix::zeros(120, 2);
+            let far_scale = 13.5f32; // non-trivial to exercise the scaling
+            let stats = backend
+                .forces(&y, &knn, &aff, &neg, alpha, far_scale, &mut attr, &mut rep)
+                .unwrap();
+            let (eattr, erep, estats) = oracle(&y, &knn, &aff, &neg, alpha, far_scale);
+            for (a, b) in attr.data().iter().zip(eattr.data()) {
+                assert!((a - b).abs() < 1e-5, "attr mismatch {a} vs {b} (alpha={alpha})");
+            }
+            for (a, b) in rep.data().iter().zip(erep.data()) {
+                assert!((a - b).abs() < 1e-4, "rep mismatch {a} vs {b} (alpha={alpha})");
+            }
+            assert!((stats.wsum - estats.wsum).abs() < 1e-6);
+            assert_eq!(stats.count, estats.count);
+        }
+    }
+
+    #[test]
+    fn attraction_points_toward_neighbours() {
+        // Two points, neighbour of each other, far apart in LD:
+        // attraction on 0 must point toward 1.
+        let y = Matrix::from_vec(vec![0.0, 0.0, 10.0, 0.0], 2, 2).unwrap();
+        let mut knn = IterativeKnn::new(2, 1, 1);
+        knn.hd.insert(0, 1, 1.0);
+        knn.hd.insert(1, 0, 1.0);
+        let mut aff = Affinities::new(2, 1);
+        aff.recalibrate_all(&mut knn, 2.0);
+        let neg = NegSamples { m: 0, idx: vec![] };
+        let mut backend = NativeBackend::new();
+        let (mut attr, mut rep) = (Matrix::zeros(2, 2), Matrix::zeros(2, 2));
+        backend.forces(&y, &knn, &aff, &neg, 1.0, 1.0, &mut attr, &mut rep).unwrap();
+        assert!(attr.row(0)[0] > 0.0, "attraction should pull 0 toward +x");
+        assert!(attr.row(1)[0] < 0.0);
+        // Repulsion pushes apart.
+        assert!(rep.row(0)[0] < 0.0);
+        assert!(rep.row(1)[0] > 0.0);
+    }
+
+    #[test]
+    fn sqdist_batch_matches_direct() {
+        let ds = datasets::blobs(50, 7, 2, 1.0, 5.0, 9);
+        let mut backend = NativeBackend::new();
+        let owners: Vec<u32> = (0..30).collect();
+        let cands: Vec<u32> = (10..40).collect();
+        let mut out = Vec::new();
+        backend.sqdist_batch(&ds.x, &owners, &cands, &mut out).unwrap();
+        for t in 0..30 {
+            let expect = ds.x.sqdist(owners[t] as usize, cands[t] as usize);
+            assert!((out[t] - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ld_slots_excluded_when_in_hd() {
+        // Single pair present in both tables: rep must count it once.
+        let y = Matrix::from_vec(vec![0.0, 0.0, 1.0, 0.0], 2, 2).unwrap();
+        let mut knn = IterativeKnn::new(2, 1, 1);
+        knn.hd.insert(0, 1, 1.0);
+        knn.ld.insert(0, 1, 1.0);
+        let mut aff = Affinities::new(2, 1);
+        aff.recalibrate_all(&mut knn, 2.0);
+        let neg = NegSamples { m: 0, idx: vec![] };
+        let mut b = NativeBackend::new();
+        let (mut attr, mut rep) = (Matrix::zeros(2, 2), Matrix::zeros(2, 2));
+        b.forces(&y, &knn, &aff, &neg, 1.0, 1.0, &mut attr, &mut rep).unwrap();
+        let (w, g) = kernel_pair(1.0, 1.0);
+        let expect = w * g * (0.0 - 1.0);
+        assert!((rep.row(0)[0] - expect).abs() < 1e-6, "double-counted LD slot");
+    }
+}

@@ -1,0 +1,95 @@
+//! The heavy-tailed LD similarity kernel of Kobak et al. [10], Eq. 4:
+//!
+//! ```text
+//! w_ij = (1 + ||y_i - y_j||² / α)^(-α)
+//! ```
+//!
+//! α = 1 recovers t-SNE's Student-t kernel; α < 1 gives heavier tails
+//! (finer cluster fragmentation); α → ∞ approaches a Gaussian.
+//!
+//! A pleasant identity keeps the gradient cheap: the gradient factor of
+//! Eq. 5 is `w^{1/α} = (1 + d²/α)^{-1}` — *independent of the exponent*,
+//! so one reciprocal serves every α.
+
+/// Gradient factor g = w^{1/α} = 1 / (1 + d²/α).
+#[inline(always)]
+pub fn grad_factor(sq_dist: f32, alpha: f32) -> f32 {
+    1.0 / (1.0 + sq_dist / alpha)
+}
+
+/// Kernel value w = (1 + d²/α)^{-α} = g^α.
+#[inline(always)]
+pub fn kernel_w(sq_dist: f32, alpha: f32) -> f32 {
+    let g = grad_factor(sq_dist, alpha);
+    if alpha == 1.0 {
+        g // t-SNE fast path (the default)
+    } else {
+        g.powf(alpha)
+    }
+}
+
+/// Both values at once (the force loops need both).
+#[inline(always)]
+pub fn kernel_pair(sq_dist: f32, alpha: f32) -> (f32, f32) {
+    let g = grad_factor(sq_dist, alpha);
+    let w = if alpha == 1.0 { g } else { g.powf(alpha) };
+    (w, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+
+    #[test]
+    fn alpha_one_matches_student_t() {
+        for d2 in [0.0f32, 0.5, 1.0, 4.0, 100.0] {
+            let w = kernel_w(d2, 1.0);
+            assert!((w - 1.0 / (1.0 + d2)).abs() < 1e-7);
+            assert!((grad_factor(d2, 1.0) - w).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn heavier_tails_for_smaller_alpha() {
+        // At large distance, smaller α must give larger w (heavier tail).
+        let d2 = 25.0f32;
+        let w_heavy = kernel_w(d2, 0.3);
+        let w_t = kernel_w(d2, 1.0);
+        let w_light = kernel_w(d2, 4.0);
+        assert!(w_heavy > w_t && w_t > w_light, "{w_heavy} {w_t} {w_light}");
+    }
+
+    #[test]
+    fn kernel_properties() {
+        pt::check("kernel-props", 64, |rng, _| {
+            let alpha = (rng.f32() * 4.0 + 0.05).min(4.0);
+            let d2 = rng.f32() * 50.0;
+            let (w, g) = kernel_pair(d2, alpha);
+            crate::prop_assert!((0.0..=1.0).contains(&w), "w out of range: {w}");
+            crate::prop_assert!((0.0..=1.0).contains(&g), "g out of range: {g}");
+            crate::prop_assert!(
+                (kernel_w(0.0, alpha) - 1.0).abs() < 1e-6,
+                "w(0) != 1"
+            );
+            // w = g^α identity
+            crate::prop_assert!(
+                (w - g.powf(alpha)).abs() < 1e-5,
+                "identity broken: w={w} g^a={}",
+                g.powf(alpha)
+            );
+            // monotone decreasing in d²
+            let w2 = kernel_w(d2 + 1.0, alpha);
+            crate::prop_assert!(w2 <= w + 1e-7, "not monotone");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gaussian_limit_for_large_alpha() {
+        // (1 + d²/α)^(-α) → exp(-d²) as α → ∞.
+        let d2 = 1.5f32;
+        let w = kernel_w(d2, 512.0);
+        assert!((w - (-d2).exp()).abs() < 5e-3, "w={w} vs {}", (-d2).exp());
+    }
+}

@@ -1,0 +1,7 @@
+//! Low-dimensional side: the heavy-tailed similarity kernel and the
+//! native force accumulation backend.
+
+pub mod kernel;
+pub mod forces;
+
+pub use forces::NativeBackend;

@@ -1,0 +1,39 @@
+//! # FUnc-SNE
+//!
+//! A Rust + JAX/Pallas reproduction of *"FUnc-SNE: A flexible, Fast, and
+//! Unconstrained algorithm for neighbour embeddings"* (Lambert, Couplet,
+//! Verleysen, Lee — preprint submitted to Neurocomputing, 2024/2025).
+//!
+//! The crate is a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the interleaved
+//!   KNN-refinement + gradient-descent loop that is the paper's central
+//!   contribution, plus every substrate it needs (synthetic datasets,
+//!   exact/approximate KNN, perplexity calibration, quality metrics,
+//!   clustering, baselines, a CLI, and a bench harness regenerating every
+//!   table and figure of the paper).
+//! * **Layer 2 (python/compile/model.py)** — the force/distance compute
+//!   graphs written in JAX, lowered once (AOT) to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing
+//!   the hot inner loops (heavy-tailed force tiles, squared-distance
+//!   tiles), called from the L2 graphs, verified against a pure-jnp
+//!   oracle.
+//!
+//! At run time the Rust binary loads `artifacts/*.hlo.txt` through the
+//! PJRT C API (`xla` crate) and never touches Python.
+
+pub mod util;
+pub mod config;
+pub mod cli;
+pub mod data;
+pub mod linalg;
+pub mod knn;
+pub mod hd;
+pub mod ld;
+pub mod engine;
+pub mod baselines;
+pub mod metrics;
+pub mod cluster;
+pub mod runtime;
+pub mod coordinator;
+pub mod figures;

@@ -1,0 +1,218 @@
+//! Multidimensional scaling: classical (Torgerson) and SMACOF stress
+//! majorisation, used by the Fig. 2 method panel.
+//!
+//! For large N the figure drivers subsample (MDS is O(N²) by nature —
+//! the paper uses it only as a qualitative global-structure reference).
+
+use crate::data::matrix::{dist, Matrix};
+use crate::util::Rng;
+
+/// Classical MDS: double-centre the squared distance matrix and take the
+/// top `k` eigenvectors by power iteration.
+pub fn classical_mds(x: &Matrix, k: usize, seed: u64) -> Matrix {
+    let n = x.n();
+    // B = -0.5 J D² J, J = I - 11ᵀ/n.
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dd = x.sqdist(i, j) as f64;
+            d2[i * n + j] = dd;
+            d2[j * n + i] = dd;
+        }
+    }
+    let mut row_mean = vec![0.0f64; n];
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let s: f64 = d2[i * n..(i + 1) * n].iter().sum();
+        row_mean[i] = s / n as f64;
+        total += s;
+    }
+    total /= (n * n) as f64;
+    let mut b = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            b[i * n + j] = -0.5 * (d2[i * n + j] - row_mean[i] - row_mean[j] + total);
+        }
+    }
+    // Power iteration with deflation on B (n×n, f64).
+    let mut rng = Rng::new(seed ^ 0x4D44_53); // "MDS" salt
+    let mut out = Matrix::zeros(n, k);
+    let mut basis: Vec<Vec<f64>> = Vec::new();
+    for c in 0..k {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let mut lambda = 0.0f64;
+        for _ in 0..300 {
+            // Orthogonalise against found eigenvectors.
+            for bv in &basis {
+                let proj: f64 = v.iter().zip(bv).map(|(a, b)| a * b).sum();
+                for (vk, bk) in v.iter_mut().zip(bv) {
+                    *vk -= proj * bk;
+                }
+            }
+            let mut w = vec![0.0f64; n];
+            for i in 0..n {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += b[i * n + j] * v[j];
+                }
+                w[i] = s;
+            }
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-14 {
+                break;
+            }
+            for wk in w.iter_mut() {
+                *wk /= norm;
+            }
+            let delta: f64 = w.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+            v = w;
+            lambda = norm;
+            if delta < 1e-10 {
+                break;
+            }
+        }
+        let scale = lambda.max(0.0).sqrt();
+        for i in 0..n {
+            out.row_mut(i)[c] = (v[i] * scale) as f32;
+        }
+        basis.push(v);
+    }
+    out
+}
+
+/// SMACOF stress majorisation from a given (or random) init.
+///
+/// Minimises raw stress Σ (d_ij - δ_ij)² with uniform weights via the
+/// Guttman transform. O(N²·iters).
+pub fn smacof(x: &Matrix, k: usize, iters: usize, seed: u64) -> Matrix {
+    let n = x.n();
+    let mut rng = Rng::new(seed);
+    let mut y = Matrix::zeros(n, k);
+    for v in y.data_mut() {
+        *v = rng.gauss_ms(0.0, 1.0) as f32;
+    }
+    let mut delta = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dd = dist(x.row(i), x.row(j));
+            delta[i * n + j] = dd;
+            delta[j * n + i] = dd;
+        }
+    }
+    let mut ynew = Matrix::zeros(n, k);
+    for _ in 0..iters {
+        for v in ynew.data_mut() {
+            *v = 0.0;
+        }
+        for i in 0..n {
+            let mut diag = 0.0f32;
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let dij = dist(y.row(i), y.row(j)).max(1e-9);
+                let ratio = delta[i * n + j] / dij;
+                diag += ratio;
+                // B_ij = -ratio; accumulate (B Y)_i
+                let yj = y.row(j);
+                // Copy to avoid double borrow: accumulate into temp slice.
+                for c in 0..k {
+                    ynew.data_mut()[i * k + c] -= ratio * yj[c];
+                }
+            }
+            let yi = y.row(i);
+            for c in 0..k {
+                ynew.data_mut()[i * k + c] += diag * yi[c];
+            }
+        }
+        let inv_n = 1.0 / n as f32;
+        for v in ynew.data_mut() {
+            *v *= inv_n;
+        }
+        std::mem::swap(&mut y, &mut ynew);
+    }
+    y
+}
+
+/// Raw stress of an embedding vs HD distances (for tests).
+pub fn stress(x: &Matrix, y: &Matrix) -> f64 {
+    let n = x.n();
+    let mut s = 0.0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dh = dist(x.row(i), x.row(j)) as f64;
+            let dl = dist(y.row(i), y.row(j)) as f64;
+            s += (dh - dl) * (dh - dl);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+    use crate::util::Rng;
+
+    /// A planar cloud embedded in 5-D: MDS in 2-D must recover distances
+    /// nearly exactly.
+    fn planar(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 5);
+        for i in 0..n {
+            let (a, b) = (rng.gauss_ms(0.0, 3.0), rng.gauss_ms(0.0, 1.5));
+            let row = x.row_mut(i);
+            // plane spanned by two fixed directions
+            row[0] = a as f32;
+            row[1] = (0.5 * a + b) as f32;
+            row[2] = b as f32;
+            row[3] = (a - b) as f32 * 0.2;
+            row[4] = 0.0;
+        }
+        x
+    }
+
+    #[test]
+    fn classical_mds_recovers_planar_distances() {
+        let x = planar(80, 1);
+        let y = classical_mds(&x, 2, 0);
+        // Compare pairwise distances: Spearman should be ~1.
+        let mut dh = Vec::new();
+        let mut dl = Vec::new();
+        for i in 0..x.n() {
+            for j in (i + 1)..x.n() {
+                dh.push(dist(x.row(i), x.row(j)) as f64);
+                dl.push(dist(y.row(i), y.row(j)) as f64);
+            }
+        }
+        let rho = crate::util::stats::pearson(&dh, &dl);
+        assert!(rho > 0.95, "distance correlation {rho}");
+    }
+
+    #[test]
+    fn smacof_reduces_stress() {
+        let x = planar(50, 2);
+        let y0 = smacof(&x, 2, 1, 3);
+        let y = smacof(&x, 2, 60, 3);
+        assert!(
+            stress(&x, &y) < stress(&x, &y0) * 0.5,
+            "SMACOF failed to reduce stress: {} -> {}",
+            stress(&x, &y0),
+            stress(&x, &y)
+        );
+    }
+
+    #[test]
+    fn smacof_output_is_finite() {
+        pt::check("smacof-finite", 8, |rng, _| {
+            let n = rng.range_usize(10, 30);
+            let x = Matrix::from_vec(pt::gauss_mat(rng, n, 4, 2.0), n, 4).unwrap();
+            let y = smacof(&x, 2, 10, rng.next_u64());
+            crate::prop_assert!(
+                y.data().iter().all(|v| v.is_finite()),
+                "non-finite SMACOF output"
+            );
+            Ok(())
+        });
+    }
+}

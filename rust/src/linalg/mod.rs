@@ -1,0 +1,11 @@
+//! Small dense linear algebra: PCA and MDS.
+//!
+//! Both are substrates the paper depends on: PCA for preprocessing
+//! (ImageNet 1280→192, the recommended 50-100-component reduction before
+//! NE) and for Figs 1/2/11; classical MDS + SMACOF for the Fig. 2
+//! method comparison.
+
+pub mod pca;
+pub mod mds;
+
+pub use pca::Pca;

@@ -1,0 +1,215 @@
+//! Principal component analysis by power iteration with deflation.
+//!
+//! Works on the covariance implicitly (X^T X / n applied as two matvecs),
+//! so memory stays O(n·d + k·d) even for wide matrices. Accuracy is more
+//! than sufficient for preprocessing and linear views; components are
+//! refined until the Rayleigh quotient stabilises.
+
+use crate::data::matrix::{dot, Matrix};
+use crate::util::Rng;
+
+/// A fitted PCA basis.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    /// (k, d) row-major principal axes (orthonormal rows).
+    pub components: Matrix,
+    /// Column means of the training data.
+    pub means: Vec<f32>,
+    /// Explained variance per component (eigenvalues of cov).
+    pub explained: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit `k` components on `x` (not modified).
+    pub fn fit(x: &Matrix, k: usize, seed: u64) -> Pca {
+        let n = x.n();
+        let d = x.d();
+        let k = k.min(d).min(n.max(1));
+        let means = x.col_means();
+        let mut rng = Rng::new(seed ^ 0x9E37);
+        let mut comps = Matrix::zeros(k, d);
+        let mut explained = Vec::with_capacity(k);
+        // Centered row access without materialising a copy.
+        let centered_dot = |row: &[f32], v: &[f32], _means: &[f32], mv: f32| -> f32 {
+            // (row - means) . v  given mv = means . v precomputed
+            dot(row, v) - mv
+        };
+        for c in 0..k {
+            // Init random unit vector, orthogonal to found components.
+            let mut v: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+            orthonormalize(&mut v, &comps, c);
+            let mut lambda_prev = f64::INFINITY;
+            let mut lambda = 0.0f64;
+            for _iter in 0..200 {
+                // w = Cov v = X_c^T (X_c v) / n
+                let mv = dot(&means, &v);
+                let mut w = vec![0.0f32; d];
+                for i in 0..n {
+                    let row = x.row(i);
+                    let s = centered_dot(row, &v, &means, mv);
+                    if s != 0.0 {
+                        for j in 0..d {
+                            w[j] += s * (row[j] - means[j]);
+                        }
+                    }
+                }
+                let inv_n = 1.0 / n.max(1) as f32;
+                for wj in w.iter_mut() {
+                    *wj *= inv_n;
+                }
+                orthonormalize_raw(&mut w, &comps, c);
+                let norm = dot(&w, &w).sqrt();
+                if norm < 1e-12 {
+                    break; // exhausted variance
+                }
+                for wj in w.iter_mut() {
+                    *wj /= norm;
+                }
+                lambda = norm as f64;
+                v = w;
+                if (lambda - lambda_prev).abs() <= 1e-9 * lambda.max(1e-30) {
+                    break;
+                }
+                lambda_prev = lambda;
+            }
+            comps.row_mut(c).copy_from_slice(&v);
+            explained.push(lambda);
+        }
+        Pca { components: comps, means, explained }
+    }
+
+    /// Project `x` onto the fitted basis → (n, k).
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let n = x.n();
+        let k = self.components.n();
+        let mut out = Matrix::zeros(n, k);
+        let mk: Vec<f32> = (0..k).map(|c| dot(&self.means, self.components.row(c))).collect();
+        for i in 0..n {
+            let row = x.row(i);
+            let orow = out.row_mut(i);
+            for c in 0..k {
+                orow[c] = dot(row, self.components.row(c)) - mk[c];
+            }
+        }
+        out
+    }
+
+    /// Convenience: fit + transform.
+    pub fn fit_transform(x: &Matrix, k: usize, seed: u64) -> Matrix {
+        Pca::fit(x, k, seed).transform(x)
+    }
+
+    /// Fraction of total variance captured (needs total variance of x).
+    pub fn explained_ratio(&self, x: &Matrix) -> f64 {
+        let n = x.n();
+        let means = &self.means;
+        let mut total = 0.0f64;
+        for i in 0..n {
+            for (k, &v) in x.row(i).iter().enumerate() {
+                let c = (v - means[k]) as f64;
+                total += c * c;
+            }
+        }
+        total /= n.max(1) as f64;
+        if total <= 0.0 {
+            return 1.0;
+        }
+        self.explained.iter().sum::<f64>() / total
+    }
+}
+
+fn orthonormalize(v: &mut [f32], comps: &Matrix, upto: usize) {
+    orthonormalize_raw(v, comps, upto);
+    let norm = dot(v, v).sqrt().max(1e-12);
+    for x in v.iter_mut() {
+        *x /= norm;
+    }
+}
+
+fn orthonormalize_raw(v: &mut [f32], comps: &Matrix, upto: usize) {
+    for c in 0..upto {
+        let b = comps.row(c);
+        let proj = dot(v, b);
+        for (vk, bk) in v.iter_mut().zip(b) {
+            *vk -= proj * bk;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Build data with a known dominant axis.
+    fn anisotropic(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            let t = rng.gauss_ms(0.0, 5.0); // big variance along axis 0+1
+            let row = x.row_mut(i);
+            row[0] = t as f32;
+            row[1] = t as f32 * 0.5;
+            for k in 2..d {
+                row[k] = rng.gauss_ms(0.0, 0.3) as f32;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn first_component_finds_dominant_axis() {
+        let x = anisotropic(400, 6, 1);
+        let pca = Pca::fit(&x, 2, 0);
+        let c0 = pca.components.row(0);
+        // Dominant direction ∝ (1, 0.5, 0, ...) normalised.
+        let expect = {
+            let norm = (1.0f32 + 0.25).sqrt();
+            [1.0 / norm, 0.5 / norm]
+        };
+        let align = (c0[0] * expect[0] + c0[1] * expect[1]).abs();
+        assert!(align > 0.99, "alignment {align}, c0={c0:?}");
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let x = anisotropic(300, 8, 2);
+        let pca = Pca::fit(&x, 4, 0);
+        for a in 0..4 {
+            for b in 0..4 {
+                let d = dot(pca.components.row(a), pca.components.row(b));
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((d - expect).abs() < 1e-3, "({a},{b}) dot={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_decrease() {
+        let x = anisotropic(300, 8, 3);
+        let pca = Pca::fit(&x, 4, 0);
+        for w in pca.explained.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9, "eigenvalues not sorted: {:?}", pca.explained);
+        }
+    }
+
+    #[test]
+    fn transform_centers_projection() {
+        let x = anisotropic(200, 5, 4);
+        let pca = Pca::fit(&x, 3, 0);
+        let y = pca.transform(&x);
+        assert_eq!(y.n(), 200);
+        assert_eq!(y.d(), 3);
+        for m in y.col_means() {
+            assert!(m.abs() < 1e-3, "projected mean {m}");
+        }
+    }
+
+    #[test]
+    fn explained_ratio_close_to_one_with_full_rank() {
+        let x = anisotropic(150, 4, 5);
+        let pca = Pca::fit(&x, 4, 0);
+        let r = pca.explained_ratio(&x);
+        assert!(r > 0.98, "ratio {r}");
+    }
+}

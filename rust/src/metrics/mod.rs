@@ -1,0 +1,8 @@
+//! Embedding-quality metrics: R_NX(K) and its AUC (Lee et al. [23]),
+//! pointwise distance correlation and neighbourhood preservation
+//! (Fig. 1 colour maps), and KNN recall.
+
+pub mod rnx;
+pub mod pointwise;
+
+pub use rnx::{rnx_auc, rnx_curve, RnxCurve};

@@ -1,0 +1,86 @@
+//! Per-point quality measures used as the "colour maps" of Fig. 1:
+//!
+//! * row 1 — correlation, per point, between its distances to all other
+//!   points in HD and in LD (global-structure preservation);
+//! * row 2 — fraction of the first ⌈0.05·N⌉ HD neighbours preserved in
+//!   the LD neighbourhood of the same size (local soundness).
+
+use crate::data::matrix::dist;
+use crate::data::Matrix;
+use crate::knn::brute::brute_knn;
+use crate::util::stats::pearson;
+
+/// Per-point Pearson correlation between HD and LD distance profiles.
+pub fn pointwise_distance_correlation(x: &Matrix, y: &Matrix) -> Vec<f64> {
+    let n = x.n();
+    assert_eq!(n, y.n());
+    let mut out = Vec::with_capacity(n);
+    let mut dh = vec![0.0f64; n - 1];
+    let mut dl = vec![0.0f64; n - 1];
+    for i in 0..n {
+        let mut t = 0;
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            dh[t] = dist(x.row(i), x.row(j)) as f64;
+            dl[t] = dist(y.row(i), y.row(j)) as f64;
+            t += 1;
+        }
+        out.push(pearson(&dh, &dl));
+    }
+    out
+}
+
+/// Per-point preservation of the first K = ⌈frac·N⌉ neighbours
+/// (intersection over K), the paper's second Fig. 1 row with frac=0.05.
+pub fn pointwise_knn_preservation(x: &Matrix, y: &Matrix, frac: f64) -> Vec<f64> {
+    let n = x.n();
+    let k = ((frac * n as f64).ceil() as usize).clamp(1, n - 1);
+    let tx = brute_knn(x, k);
+    let ty = brute_knn(y, k);
+    (0..n)
+        .map(|i| {
+            let hits = tx.neighbors(i).iter().filter(|&&j| ty.contains(i, j)).count();
+            hits as f64 / k as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::util::proptest as pt;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_gets_perfect_scores() {
+        let ds = datasets::blobs(60, 4, 2, 0.5, 5.0, 1);
+        let corr = pointwise_distance_correlation(&ds.x, &ds.x);
+        assert!(corr.iter().all(|&c| c > 0.999));
+        let pres = pointwise_knn_preservation(&ds.x, &ds.x, 0.05);
+        assert!(pres.iter().all(|&p| p > 0.999));
+    }
+
+    #[test]
+    fn random_embedding_scores_poorly() {
+        let ds = datasets::blobs(100, 5, 3, 0.5, 8.0, 2);
+        let mut rng = Rng::new(3);
+        let y = crate::data::Matrix::from_vec(pt::gauss_mat(&mut rng, 100, 2, 1.0), 100, 2)
+            .unwrap();
+        let corr = pointwise_distance_correlation(&ds.x, &y);
+        let mean_c = crate::util::stats::mean(&corr);
+        assert!(mean_c.abs() < 0.3, "mean corr {mean_c}");
+        let pres = pointwise_knn_preservation(&ds.x, &y, 0.05);
+        let mean_p = crate::util::stats::mean(&pres);
+        assert!(mean_p < 0.4, "mean preservation {mean_p}");
+    }
+
+    #[test]
+    fn outputs_have_point_count_length() {
+        let ds = datasets::blobs(40, 4, 2, 0.5, 5.0, 4);
+        assert_eq!(pointwise_distance_correlation(&ds.x, &ds.x).len(), 40);
+        assert_eq!(pointwise_knn_preservation(&ds.x, &ds.x, 0.05).len(), 40);
+    }
+}

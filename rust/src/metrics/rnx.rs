@@ -1,0 +1,225 @@
+//! R_NX(K) — the multi-scale neighbourhood-preservation criterion of
+//! Lee, Peluffo-Ordóñez & Verleysen [23], the paper's main quantitative
+//! metric (Figs 4, 6, 7).
+//!
+//! Q_NX(K) is the average (over points) fraction of each point's K HD
+//! neighbours retrieved among its K LD neighbours. R_NX rescales it
+//! against the random baseline K/(N−1):
+//!
+//! ```text
+//! R_NX(K) = ((N−1)·Q_NX(K) − K) / (N−1−K)
+//! ```
+//!
+//! The scalar summary is the **log-weighted AUC**:
+//! `AUC = Σ_K R_NX(K)/K / Σ_K 1/K`, emphasising local scales.
+
+use crate::data::Matrix;
+use crate::knn::brute::brute_knn;
+use crate::knn::NeighborTable;
+
+/// An R_NX curve with its per-point spread (the Fig. 7 bands).
+#[derive(Clone, Debug)]
+pub struct RnxCurve {
+    /// Scales K = 1..=k_max.
+    pub ks: Vec<usize>,
+    /// R_NX at each scale.
+    pub rnx: Vec<f64>,
+    /// Std-dev across points of the per-point R_NX at each scale.
+    pub std: Vec<f64>,
+    /// Log-weighted AUC.
+    pub auc: f64,
+}
+
+/// Ranked neighbour lists (ascending distance), truncated at `k`.
+fn ranked(x: &Matrix, k: usize) -> Vec<Vec<u32>> {
+    let t = brute_knn(x, k);
+    (0..x.n()).map(|i| t.sorted_neighbors(i)).collect()
+}
+
+/// R_NX curve comparing neighbourhoods of `hd` (reference) and `ld`
+/// (embedding) up to scale `k_max`.
+pub fn rnx_curve(hd: &Matrix, ld: &Matrix, k_max: usize) -> RnxCurve {
+    let n = hd.n();
+    assert_eq!(n, ld.n());
+    assert!(n >= 3, "R_NX needs at least 3 points");
+    let k_max = k_max.min(n - 2);
+    let hd_rank = ranked(hd, k_max);
+    let ld_rank = ranked(ld, k_max);
+    rnx_from_ranked(&hd_rank, &ld_rank, n, k_max)
+}
+
+/// R_NX where the reference neighbourhoods come from a precomputed exact
+/// table (avoids recomputing ground truth in sweeps).
+pub fn rnx_curve_vs_table(truth: &NeighborTable, approx: &NeighborTable, k_max: usize) -> RnxCurve {
+    let n = truth.n();
+    let k_max = k_max.min(truth.k()).min(approx.k()).min(n.saturating_sub(2));
+    let t_rank: Vec<Vec<u32>> = (0..n).map(|i| truth.sorted_neighbors(i)).collect();
+    let a_rank: Vec<Vec<u32>> = (0..n).map(|i| approx.sorted_neighbors(i)).collect();
+    rnx_from_ranked(&t_rank, &a_rank, n, k_max)
+}
+
+fn rnx_from_ranked(hd_rank: &[Vec<u32>], ld_rank: &[Vec<u32>], n: usize, k_max: usize) -> RnxCurve {
+    // Per point, walk both ranked lists with an incremental intersection
+    // count — O(N·K) with a membership bitmap reused across points.
+    let mut ks = Vec::with_capacity(k_max);
+    let mut rnx = vec![0.0f64; k_max];
+    let mut std = vec![0.0f64; k_max];
+    let mut qnx_sum = vec![0.0f64; k_max];
+    let mut qnx_sq = vec![0.0f64; k_max];
+    let mut in_hd = vec![u32::MAX; n]; // stamp: in_hd[j] == i means member
+    for i in 0..n {
+        let hr = &hd_rank[i];
+        let lr = &ld_rank[i];
+        let kk = k_max.min(hr.len()).min(lr.len());
+        // Incremental: at scale K, intersection of first K of each list.
+        // Use stamped membership of HD prefix and count LD hits ≤ K.
+        let mut inter = 0usize;
+        let mut ld_seen = vec![false; kk]; // ld_seen[t]: lr[t] already matched
+        for kq in 0..kk {
+            // Add hr[kq] to the HD prefix.
+            in_hd[hr[kq] as usize] = i as u32;
+            // Does any unmatched LD prefix element equal hr[kq]?
+            // Check the new HD element against LD prefix (t <= kq):
+            for (t, seen) in ld_seen.iter_mut().enumerate().take(kq + 1) {
+                if !*seen && lr[t] == hr[kq] {
+                    *seen = true;
+                    inter += 1;
+                    break;
+                }
+            }
+            // And the newly-revealed LD element lr[kq] against HD prefix:
+            if !ld_seen[kq] && in_hd[lr[kq] as usize] == i as u32 {
+                // Guard against double count when lr[kq] == hr[kq] handled above.
+                ld_seen[kq] = true;
+                inter += 1;
+            }
+            let q = inter as f64 / (kq + 1) as f64;
+            qnx_sum[kq] += q;
+            qnx_sq[kq] += q * q;
+        }
+        // Pad short lists (shouldn't happen with brute tables).
+        for kq in kk..k_max {
+            qnx_sum[kq] += 0.0;
+        }
+    }
+    for kq in 0..k_max {
+        let k = kq + 1;
+        ks.push(k);
+        let q_mean = qnx_sum[kq] / n as f64;
+        let q_var = (qnx_sq[kq] / n as f64 - q_mean * q_mean).max(0.0);
+        let denom = (n - 1 - k) as f64;
+        if denom <= 0.0 {
+            rnx[kq] = 0.0;
+            std[kq] = 0.0;
+        } else {
+            rnx[kq] = ((n - 1) as f64 * q_mean - k as f64) / denom;
+            // Per-point R_NX std: linear transform of Q_NX std.
+            std[kq] = (n - 1) as f64 * q_var.sqrt() / denom;
+        }
+    }
+    let auc = log_weighted_auc(&ks, &rnx);
+    RnxCurve { ks, rnx, std, auc }
+}
+
+/// Log-weighted AUC of an R_NX curve.
+pub fn log_weighted_auc(ks: &[usize], rnx: &[f64]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&k, &r) in ks.iter().zip(rnx) {
+        let w = 1.0 / k as f64;
+        num += r * w;
+        den += w;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Convenience scalar: AUC of R_NX between HD data and an embedding.
+pub fn rnx_auc(hd: &Matrix, ld: &Matrix, k_max: usize) -> f64 {
+    rnx_curve(hd, ld, k_max).auc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::util::proptest as pt;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_embedding_scores_one() {
+        let ds = datasets::blobs(80, 5, 3, 0.5, 6.0, 1);
+        let c = rnx_curve(&ds.x, &ds.x, 20);
+        for (&k, &r) in c.ks.iter().zip(&c.rnx) {
+            assert!(r > 0.999, "R_NX({k}) = {r} for identity");
+        }
+        assert!(c.auc > 0.999);
+    }
+
+    #[test]
+    fn random_embedding_scores_near_zero() {
+        let ds = datasets::blobs(150, 6, 3, 0.5, 8.0, 2);
+        let mut rng = Rng::new(3);
+        let y = Matrix::from_vec(pt::gauss_mat(&mut rng, 150, 2, 1.0), 150, 2).unwrap();
+        let c = rnx_curve(&ds.x, &y, 40);
+        assert!(c.auc.abs() < 0.15, "random AUC should be ~0, got {}", c.auc);
+    }
+
+    #[test]
+    fn partial_preservation_in_between() {
+        // Keep 3 of 6 coordinates: neighbourhoods partially survive.
+        let ds = datasets::blobs(120, 6, 4, 1.0, 6.0, 4);
+        let mut y = Matrix::zeros(120, 3);
+        for i in 0..120 {
+            y.row_mut(i).copy_from_slice(&ds.x.row(i)[..3]);
+        }
+        let auc = rnx_auc(&ds.x, &y, 30);
+        assert!(auc > 0.1 && auc < 0.98, "partial AUC = {auc}");
+    }
+
+    #[test]
+    fn rnx_in_valid_range() {
+        pt::check("rnx-range", 10, |rng, _| {
+            let n = rng.range_usize(10, 50);
+            let x = Matrix::from_vec(pt::gauss_mat(rng, n, 4, 1.0), n, 4).unwrap();
+            let y = Matrix::from_vec(pt::gauss_mat(rng, n, 2, 1.0), n, 2).unwrap();
+            let c = rnx_curve(&x, &y, 12);
+            for &r in &c.rnx {
+                crate::prop_assert!(
+                    (-1.1..=1.0001).contains(&r),
+                    "R_NX out of range: {r}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn table_variant_matches_matrix_variant() {
+        let ds = datasets::blobs(60, 5, 2, 0.6, 6.0, 5);
+        let y = {
+            let mut rng = Rng::new(6);
+            Matrix::from_vec(pt::gauss_mat(&mut rng, 60, 2, 1.0), 60, 2).unwrap()
+        };
+        let k = 15;
+        let c1 = rnx_curve(&ds.x, &y, k);
+        let t_hd = crate::knn::brute::brute_knn(&ds.x, k);
+        let t_ld = crate::knn::brute::brute_knn(&y, k);
+        let c2 = rnx_curve_vs_table(&t_hd, &t_ld, k);
+        for (a, b) in c1.rnx.iter().zip(&c2.rnx) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn auc_weights_local_scales() {
+        let ks = vec![1, 2, 4, 8];
+        // High at K=1 only vs high at K=8 only: the former wins.
+        let local = log_weighted_auc(&ks, &[1.0, 0.0, 0.0, 0.0]);
+        let global = log_weighted_auc(&ks, &[0.0, 0.0, 0.0, 1.0]);
+        assert!(local > global);
+    }
+}

@@ -1,0 +1,207 @@
+//! Artifact manifest: the menu of AOT-compiled tile shapes emitted by
+//! `python/compile/aot.py` (`artifacts/manifest.txt`).
+//!
+//! The coordinator asks the manifest for the smallest artifact that
+//! *covers* a requested shape (K ≥ k_needed, M ≥ m_needed); the gap is
+//! closed with zero-padding + masking on the Rust side.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArtifactKind {
+    /// Force tile with (B, K, D).
+    Forces { b: usize, k: usize, d: usize },
+    /// Flat-pair squared-distance tile with (T, M).
+    Sqdist { t: usize, m: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+fn parse_kv(tok: &str, key: &str) -> Result<usize> {
+    let Some(v) = tok.strip_prefix(&format!("{key}=")) else {
+        bail!("expected {key}=<n>, got {tok:?}");
+    };
+    v.parse::<usize>().with_context(|| format!("bad {key} value {v:?}"))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (one `kind name K=V...` line per artifact).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let err = || format!("manifest line {}: {line:?}", lineno + 1);
+            if toks.len() < 2 {
+                bail!("{} — too few tokens", err());
+            }
+            let kind = match toks[0] {
+                "forces" => {
+                    if toks.len() != 5 {
+                        bail!("{} — want: forces name B= K= D=", err());
+                    }
+                    ArtifactKind::Forces {
+                        b: parse_kv(toks[2], "B")?,
+                        k: parse_kv(toks[3], "K")?,
+                        d: parse_kv(toks[4], "D")?,
+                    }
+                }
+                "sqdist" => {
+                    if toks.len() != 4 {
+                        bail!("{} — want: sqdist name T= M=", err());
+                    }
+                    ArtifactKind::Sqdist {
+                        t: parse_kv(toks[2], "T")?,
+                        m: parse_kv(toks[3], "M")?,
+                    }
+                }
+                other => bail!("{} — unknown kind {other:?}", err()),
+            };
+            specs.push(ArtifactSpec {
+                name: toks[1].to_string(),
+                kind,
+                path: dir.join(format!("{}.hlo.txt", toks[1])),
+            });
+        }
+        if specs.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), specs })
+    }
+
+    /// Smallest forces artifact with exact `d` and K ≥ `k_needed`.
+    pub fn find_forces(&self, k_needed: usize, d: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| match s.kind {
+                ArtifactKind::Forces { k, d: dd, .. } => dd == d && k >= k_needed,
+                _ => false,
+            })
+            .min_by_key(|s| match s.kind {
+                ArtifactKind::Forces { k, .. } => k,
+                _ => usize::MAX,
+            })
+    }
+
+    /// Smallest sqdist artifact with M ≥ `m_needed`.
+    pub fn find_sqdist(&self, m_needed: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| match s.kind {
+                ArtifactKind::Sqdist { m, .. } => m >= m_needed,
+                _ => false,
+            })
+            .min_by_key(|s| match s.kind {
+                ArtifactKind::Sqdist { m, .. } => m,
+                _ => usize::MAX,
+            })
+    }
+
+    /// All LD dims available for forces tiles (for error messages).
+    pub fn forces_dims(&self) -> Vec<usize> {
+        let mut dims: Vec<usize> = self
+            .specs
+            .iter()
+            .filter_map(|s| match s.kind {
+                ArtifactKind::Forces { d, .. } => Some(d),
+                _ => None,
+            })
+            .collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+forces forces_b512_k8_d2 B=512 K=8 D=2
+forces forces_b512_k32_d2 B=512 K=32 D=2
+forces forces_b512_k16_d8 B=512 K=16 D=8
+sqdist sqdist_t4096_m16 T=4096 M=16
+sqdist sqdist_t4096_m64 T=4096 M=64
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.specs.len(), 5);
+        assert_eq!(m.specs[0].kind, ArtifactKind::Forces { b: 512, k: 8, d: 2 });
+        assert!(m.specs[3].path.ends_with("sqdist_t4096_m16.hlo.txt"));
+    }
+
+    #[test]
+    fn find_forces_picks_smallest_covering_k() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let s = m.find_forces(8, 2).unwrap();
+        assert_eq!(s.kind, ArtifactKind::Forces { b: 512, k: 8, d: 2 });
+        let s = m.find_forces(9, 2).unwrap();
+        assert_eq!(s.kind, ArtifactKind::Forces { b: 512, k: 32, d: 2 });
+        assert!(m.find_forces(8, 5).is_none()); // no D=5 artifact
+        assert!(m.find_forces(64, 2).is_none()); // K too large
+    }
+
+    #[test]
+    fn find_sqdist_picks_smallest_covering_m() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.find_sqdist(10).unwrap().kind, ArtifactKind::Sqdist { t: 4096, m: 16 });
+        assert_eq!(m.find_sqdist(17).unwrap().kind, ArtifactKind::Sqdist { t: 4096, m: 64 });
+        assert!(m.find_sqdist(100).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse(Path::new("/t"), "forces x B=1").is_err());
+        assert!(Manifest::parse(Path::new("/t"), "weird x Y=1").is_err());
+        assert!(Manifest::parse(Path::new("/t"), "").is_err());
+        assert!(Manifest::parse(Path::new("/t"), "forces x B=a K=2 D=3").is_err());
+    }
+
+    #[test]
+    fn forces_dims_lists_unique_sorted() {
+        let m = Manifest::parse(Path::new("/t"), SAMPLE).unwrap();
+        assert_eq!(m.forces_dims(), vec![2, 8]);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Runs against the actual artifacts/ when built (skips otherwise).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find_forces(32, 2).is_some());
+            assert!(m.find_sqdist(64).is_some());
+            for s in &m.specs {
+                assert!(s.path.exists(), "missing artifact file {:?}", s.path);
+            }
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts and execute them
+//! from the Rust hot path (never touching Python at run time).
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::Manifest;

@@ -1,0 +1,270 @@
+//! PJRT execution of AOT artifacts (the `xla` crate / PJRT C API).
+//!
+//! One [`PjrtRuntime`] per process: a CPU PJRT client plus a cache of
+//! compiled executables keyed by artifact name. HLO *text* is the
+//! interchange format (see /opt/xla-example/README.md: jax ≥ 0.5 protos
+//! carry 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns them).
+
+use super::artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Runtime state: client + compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Telemetry: executions per artifact (perf accounting).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+fn f32s_as_bytes(xs: &[f32]) -> &[u8] {
+    // Safe: f32 has no padding / invalid bit patterns as bytes.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+/// Build an f32 literal of the given dims from a host slice.
+fn literal_f32(xs: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let expect: usize = dims.iter().product();
+    if expect != xs.len() {
+        bail!("literal shape {:?} != data len {}", dims, xs.len());
+    }
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        f32s_as_bytes(xs),
+    )
+    .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the manifest (artifacts are
+    /// compiled lazily on first use).
+    pub fn new(artifact_dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache the executable for an artifact.
+    fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(&spec.name) {
+            let path_str = spec
+                .path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", spec.path))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| anyhow!("parse HLO {:?}: {e:?}", spec.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+            self.exes.insert(spec.name.clone(), exe);
+        }
+        Ok(&self.exes[&spec.name])
+    }
+
+    /// Pre-compile the artifacts an embedding run will need (so the
+    /// first iteration isn't slowed by compilation).
+    pub fn warmup(&mut self, k_hd: usize, k_ld: usize, n_neg: usize, d: usize, m: usize) -> Result<()> {
+        let mut names = Vec::new();
+        for k in [k_hd, k_ld, n_neg] {
+            if k == 0 {
+                continue;
+            }
+            let spec = self.manifest.find_forces(k, d).cloned().with_context(|| {
+                format!(
+                    "no forces artifact for K>={k}, D={d}; available dims {:?} — \
+                     regenerate with python/compile/aot.py or use --backend native",
+                    self.manifest.forces_dims()
+                )
+            })?;
+            names.push(spec);
+        }
+        let sq = self
+            .manifest
+            .find_sqdist(m)
+            .cloned()
+            .with_context(|| format!("no sqdist artifact for M>={m}"))?;
+        names.push(sq);
+        for spec in names {
+            self.executable(&spec)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a forces tile: inputs already padded to the artifact's
+    /// (B, K, D). Returns (attr B·D, rep B·D, wsum B).
+    #[allow(clippy::too_many_arguments)]
+    pub fn exec_forces(
+        &mut self,
+        spec: &ArtifactSpec,
+        alpha: f32,
+        yi: &[f32],
+        yj: &[f32],
+        p: &[f32],
+        mask: &[f32],
+        attr_out: &mut [f32],
+        rep_out: &mut [f32],
+        wsum_out: &mut [f32],
+    ) -> Result<()> {
+        let ArtifactKind::Forces { b, k, d } = spec.kind else {
+            bail!("{} is not a forces artifact", spec.name);
+        };
+        let args = [
+            literal_f32(&[alpha], &[1])?,
+            literal_f32(yi, &[b, d])?,
+            literal_f32(yj, &[b, k, d])?,
+            literal_f32(p, &[b, k])?,
+            literal_f32(mask, &[b, k])?,
+        ];
+        let exe = self.executable(spec)?;
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (attr, rep, wsum) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("expected 3-tuple output: {e:?}"))?;
+        attr.copy_raw_to(attr_out).map_err(|e| anyhow!("attr copy: {e:?}"))?;
+        rep.copy_raw_to(rep_out).map_err(|e| anyhow!("rep copy: {e:?}"))?;
+        wsum.copy_raw_to(wsum_out).map_err(|e| anyhow!("wsum copy: {e:?}"))?;
+        *self.exec_counts.entry(spec.name.clone()).or_insert(0) += 1;
+        Ok(())
+    }
+
+    /// Execute a sqdist tile: `a`, `b` padded to (T, M); output T dists.
+    pub fn exec_sqdist(
+        &mut self,
+        spec: &ArtifactSpec,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ArtifactKind::Sqdist { t, m } = spec.kind else {
+            bail!("{} is not a sqdist artifact", spec.name);
+        };
+        let args = [literal_f32(a, &[t, m])?, literal_f32(b, &[t, m])?];
+        let exe = self.executable(spec)?;
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let d2 = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("expected 1-tuple output: {e:?}"))?;
+        d2.copy_raw_to(out).map_err(|e| anyhow!("dist copy: {e:?}"))?;
+        *self.exec_counts.entry(spec.name.clone()).or_insert(0) += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn sqdist_artifact_executes_correctly() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = PjrtRuntime::new(&artifact_dir()).unwrap();
+        let spec = rt.manifest.find_sqdist(8).unwrap().clone();
+        let ArtifactKind::Sqdist { t, m } = spec.kind else { unreachable!() };
+        let mut a = vec![0.0f32; t * m];
+        let mut b = vec![0.0f32; t * m];
+        // pair 0: distance² = 4 (2 along first axis); pair 1: 2.
+        a[0] = 2.0;
+        b[t.min(1) * m] = 1.0;
+        b[t.min(1) * m + 1] = 1.0;
+        let mut out = vec![0.0f32; t];
+        rt.exec_sqdist(&spec, &a, &b, &mut out).unwrap();
+        assert!((out[0] - 4.0).abs() < 1e-6, "{}", out[0]);
+        assert!((out[1] - 2.0).abs() < 1e-6, "{}", out[1]);
+        assert!(out[2..].iter().all(|&v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn forces_artifact_matches_native_math() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = PjrtRuntime::new(&artifact_dir()).unwrap();
+        let spec = rt.manifest.find_forces(8, 2).unwrap().clone();
+        let ArtifactKind::Forces { b, k, d } = spec.kind else { unreachable!() };
+        let mut rng = crate::util::Rng::new(5);
+        let yi: Vec<f32> = (0..b * d).map(|_| rng.gauss() as f32).collect();
+        let yj: Vec<f32> = (0..b * k * d).map(|_| rng.gauss() as f32).collect();
+        let p: Vec<f32> = (0..b * k).map(|_| rng.f32() * 0.1).collect();
+        let mask: Vec<f32> = (0..b * k).map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 }).collect();
+        let alpha = 0.7f32;
+        let (mut attr, mut rep, mut wsum) =
+            (vec![0.0f32; b * d], vec![0.0f32; b * d], vec![0.0f32; b]);
+        rt.exec_forces(&spec, alpha, &yi, &yj, &p, &mask, &mut attr, &mut rep, &mut wsum)
+            .unwrap();
+        // Scalar re-computation of the same math.
+        for i in 0..b.min(64) {
+            let (mut ea, mut er) = (vec![0.0f32; d], vec![0.0f32; d]);
+            let mut ew = 0.0f32;
+            for s in 0..k {
+                if mask[i * k + s] == 0.0 {
+                    continue;
+                }
+                let mut d2 = 0.0f32;
+                for c in 0..d {
+                    let diff = yj[(i * k + s) * d + c] - yi[i * d + c];
+                    d2 += diff * diff;
+                }
+                let g = 1.0 / (1.0 + d2 / alpha);
+                let w = g.powf(alpha);
+                ew += w;
+                for c in 0..d {
+                    let diff = yj[(i * k + s) * d + c] - yi[i * d + c];
+                    ea[c] += p[i * k + s] * g * diff;
+                    er[c] += w * g * (-diff);
+                }
+            }
+            for c in 0..d {
+                assert!(
+                    (attr[i * d + c] - ea[c]).abs() < 1e-4,
+                    "attr[{i},{c}]: {} vs {}",
+                    attr[i * d + c],
+                    ea[c]
+                );
+                assert!(
+                    (rep[i * d + c] - er[c]).abs() < 1e-4,
+                    "rep[{i},{c}]: {} vs {}",
+                    rep[i * d + c],
+                    er[c]
+                );
+            }
+            assert!((wsum[i] - ew).abs() < 1e-4);
+        }
+        assert_eq!(rt.exec_counts[&spec.name], 1);
+    }
+}

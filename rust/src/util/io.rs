@@ -1,0 +1,221 @@
+//! CSV and NPY persistence.
+//!
+//! * CSV — the bench drivers dump every figure/table's raw numbers to
+//!   `results/*.csv` so they can be re-plotted externally.
+//! * NPY v1.0 (little-endian f32/i64, C-order) — the interchange format
+//!   between the Rust side and optional Python analysis; a tiny reader /
+//!   writer pair is implemented here because `ndarray-npy` is not
+//!   available offline.
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write a CSV file: a header row then one row per record.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write plain text (used for ASCII figures).
+pub fn write_text(path: &Path, text: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, text).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+/// Write a C-order f32 matrix as NPY v1.0.
+pub fn write_npy_f32(path: &Path, data: &[f32], shape: &[usize]) -> Result<()> {
+    let expect: usize = shape.iter().product();
+    if expect != data.len() {
+        bail!("shape {:?} does not match data length {}", shape, data.len());
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = BufWriter::new(File::create(path)?);
+    write_npy_header(&mut f, "<f4", shape)?;
+    for &v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_npy_header<W: Write>(f: &mut W, dtype: &str, shape: &[usize]) -> Result<()> {
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header =
+        format!("{{'descr': '{dtype}', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // Pad with spaces so total (magic 6 + version 2 + len 2 + header) % 64 == 0,
+    // header ends with '\n'.
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    f.write_all(b"\x93NUMPY")?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    Ok(())
+}
+
+/// Read an NPY file containing little-endian f32 (or f64, converted) in
+/// C order. Returns (data, shape).
+pub fn read_npy_f32(path: &Path) -> Result<(Vec<f32>, Vec<usize>)> {
+    let mut bytes = Vec::new();
+    File::open(path)
+        .with_context(|| format!("open {path:?}"))?
+        .read_to_end(&mut bytes)?;
+    parse_npy_f32(&bytes)
+}
+
+/// Parse NPY bytes (v1.0/v2.0), f32 or f64 little-endian, C order.
+pub fn parse_npy_f32(bytes: &[u8]) -> Result<(Vec<f32>, Vec<usize>)> {
+    if bytes.len() < 10 || &bytes[0..6] != b"\x93NUMPY" {
+        bail!("not an NPY file");
+    }
+    let major = bytes[6];
+    let (hlen, hstart) = match major {
+        1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+        2 => (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12,
+        ),
+        v => bail!("unsupported NPY version {v}"),
+    };
+    let header = std::str::from_utf8(&bytes[hstart..hstart + hlen])?;
+    let descr = extract_quoted(header, "descr").context("descr missing")?;
+    if header.contains("'fortran_order': True") {
+        bail!("fortran order unsupported");
+    }
+    let shape = extract_shape(header)?;
+    let count: usize = shape.iter().product();
+    let body = &bytes[hstart + hlen..];
+    let data = match descr.as_str() {
+        "<f4" | "|f4" => {
+            if body.len() < count * 4 {
+                bail!("truncated f32 body");
+            }
+            body.chunks_exact(4)
+                .take(count)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<f8" => {
+            if body.len() < count * 8 {
+                bail!("truncated f64 body");
+            }
+            body.chunks_exact(8)
+                .take(count)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                })
+                .collect()
+        }
+        d => bail!("unsupported dtype {d}"),
+    };
+    Ok((data, shape))
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let kpos = header.find(&format!("'{key}'"))?;
+    let rest = &header[kpos..];
+    let colon = rest.find(':')?;
+    let rest = rest[colon + 1..].trim_start();
+    let rest = rest.strip_prefix('\'')?;
+    let end = rest.find('\'')?;
+    Some(rest[..end].to_string())
+}
+
+fn extract_shape(header: &str) -> Result<Vec<usize>> {
+    let kpos = header.find("'shape'").context("shape missing")?;
+    let rest = &header[kpos..];
+    let open = rest.find('(').context("shape tuple missing")?;
+    let close = rest[open..].find(')').context("shape tuple unclosed")? + open;
+    let inner = &rest[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        shape.push(p.parse::<usize>().with_context(|| format!("bad dim {p:?}"))?);
+    }
+    if shape.is_empty() {
+        shape.push(1);
+    }
+    Ok(shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("funcsne_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn npy_roundtrip_2d() {
+        let path = tmp("rt2d.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        write_npy_f32(&path, &data, &[3, 4]).unwrap();
+        let (back, shape) = read_npy_f32(&path).unwrap();
+        assert_eq!(shape, vec![3, 4]);
+        assert_eq!(back, data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn npy_roundtrip_1d() {
+        let path = tmp("rt1d.npy");
+        let data = vec![1.5f32, -2.0, 3.25];
+        write_npy_f32(&path, &data, &[3]).unwrap();
+        let (back, shape) = read_npy_f32(&path).unwrap();
+        assert_eq!(shape, vec![3]);
+        assert_eq!(back, data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn npy_rejects_bad_shape() {
+        let path = tmp("bad.npy");
+        assert!(write_npy_f32(&path, &[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn npy_rejects_garbage() {
+        assert!(parse_npy_f32(b"not an npy at all").is_err());
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let path = tmp("c.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! Zero-dependency substrate utilities.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency tree vendored, so everything that would normally come from
+//! `rand`, `serde`, `csv`, `criterion` or `proptest` is implemented here:
+//! a counter-based RNG, wall-clock timing helpers, CSV/NPY persistence,
+//! terminal (ASCII) plotting for the figure benches, and a miniature
+//! property-testing harness.
+
+pub mod rng;
+pub mod timer;
+pub mod plot;
+pub mod io;
+pub mod proptest;
+pub mod stats;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,227 @@
+//! ASCII plotting for terminal figure output.
+//!
+//! The paper's figures are curves (R_NX(K), AUC vs iteration, runtime vs
+//! N) and 2-D scatter embeddings. The bench drivers render both to the
+//! terminal and to `results/*.txt`, alongside machine-readable CSV, so
+//! the "figures" regenerate on any machine without a plotting stack.
+
+/// A single named series for a line chart.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, xs: Vec<f64>, ys: Vec<f64>) -> Self {
+        assert_eq!(xs.len(), ys.len(), "series x/y length mismatch");
+        Series { name: name.into(), xs, ys }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render multiple series on one ASCII canvas with axes and a legend.
+///
+/// `logx` plots x on a log10 scale (used by R_NX(K) figures, where K is
+/// logarithmic in the paper).
+pub fn line_chart(
+    title: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    logx: bool,
+) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if y.is_finite() && x.is_finite() {
+                pts.push((tx(x, logx), y));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return format!("{title}\n  (no finite data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if !(x.is_finite() && y.is_finite()) {
+                continue;
+            }
+            let gx = ((tx(x, logx) - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let gy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - gy.min(height - 1);
+            grid[row][gx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>9.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    let xlabel = if logx {
+        format!("x: log10 [{:.3} .. {:.3}]", 10f64.powf(xmin), 10f64.powf(xmax))
+    } else {
+        format!("x: [{xmin:.3} .. {xmax:.3}]")
+    };
+    out.push_str(&format!("{:>10} {xlabel}\n", ""));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+fn tx(x: f64, logx: bool) -> f64 {
+    if logx {
+        x.max(1e-12).log10()
+    } else {
+        x
+    }
+}
+
+/// Render a 2-D embedding as an ASCII scatter, marking each point with a
+/// per-label character (labels beyond 62 wrap).
+pub fn scatter_2d(
+    title: &str,
+    ys: &[f32],
+    labels: &[usize],
+    n: usize,
+    width: usize,
+    height: usize,
+) -> String {
+    assert_eq!(ys.len(), n * 2, "scatter_2d expects a (N,2) embedding");
+    const CHARS: &[u8] = b"0123456789abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ";
+    let (mut xmin, mut xmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..n {
+        xmin = xmin.min(ys[2 * i]);
+        xmax = xmax.max(ys[2 * i]);
+        ymin = ymin.min(ys[2 * i + 1]);
+        ymax = ymax.max(ys[2 * i + 1]);
+    }
+    if !(xmin.is_finite() && ymin.is_finite()) {
+        return format!("{title}\n  (non-finite embedding)\n");
+    }
+    let dx = (xmax - xmin).max(1e-9);
+    let dy = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    for i in 0..n {
+        let gx = (((ys[2 * i] - xmin) / dx) * (width - 1) as f32).round() as usize;
+        let gy = (((ys[2 * i + 1] - ymin) / dy) * (height - 1) as f32).round() as usize;
+        let c = CHARS[labels.get(i).copied().unwrap_or(0) % CHARS.len()] as char;
+        grid[height - 1 - gy.min(height - 1)][gx.min(width - 1)] = c;
+    }
+    let mut out = String::with_capacity(width * height + 64);
+    out.push_str(title);
+    out.push('\n');
+    for row in grid {
+        out.push_str("  ");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out
+}
+
+/// A text histogram (used for the Fig. 3 inter-cluster direction
+/// histograms).
+pub fn histogram(title: &str, values_a: &[f64], values_b: &[f64], bins: usize) -> String {
+    let all: Vec<f64> = values_a.iter().chain(values_b).copied().collect();
+    if all.is_empty() {
+        return format!("{title}\n  (empty)\n");
+    }
+    let lo = all.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let w = ((hi - lo).max(1e-12)) / bins as f64;
+    let count = |vals: &[f64], b: usize| {
+        vals.iter()
+            .filter(|&&v| {
+                let idx = (((v - lo) / w) as usize).min(bins - 1);
+                idx == b
+            })
+            .count()
+    };
+    let maxc = (0..bins)
+        .map(|b| count(values_a, b) + count(values_b, b))
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let mut out = format!("{title}  [{lo:.3} .. {hi:.3}], A=red(#) B=blue(=)\n");
+    for b in 0..bins {
+        let ca = count(values_a, b);
+        let cb = count(values_b, b);
+        let wa = ca * 60 / maxc;
+        let wb = cb * 60 / maxc;
+        out.push_str(&format!(
+            "  {:>8.3} | {}{}\n",
+            lo + (b as f64 + 0.5) * w,
+            "#".repeat(wa),
+            "=".repeat(wb)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_contains_series_markers_and_legend() {
+        let s1 = Series::new("one", vec![0.0, 1.0, 2.0], vec![0.0, 1.0, 4.0]);
+        let s2 = Series::new("two", vec![0.0, 1.0, 2.0], vec![4.0, 1.0, 0.0]);
+        let out = line_chart("test", &[s1, s2], 40, 10, false);
+        assert!(out.contains("one"));
+        assert!(out.contains("two"));
+        assert!(out.contains('*'));
+        assert!(out.contains('o'));
+    }
+
+    #[test]
+    fn line_chart_handles_empty_and_constant() {
+        let out = line_chart("t", &[Series::new("e", vec![], vec![])], 10, 5, false);
+        assert!(out.contains("no finite data"));
+        let s = Series::new("c", vec![1.0, 2.0], vec![3.0, 3.0]);
+        let out = line_chart("t", &[s], 10, 5, true);
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn scatter_renders_labels() {
+        let ys = vec![0.0, 0.0, 1.0, 1.0, -1.0, 0.5];
+        let out = scatter_2d("s", &ys, &[0, 1, 2], 3, 20, 10);
+        assert!(out.contains('0'));
+        assert!(out.contains('1'));
+        assert!(out.contains('2'));
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let a = vec![0.0, 0.1, 0.2];
+        let b = vec![0.9, 1.0];
+        let out = histogram("h", &a, &b, 4);
+        assert!(out.contains('#'));
+        assert!(out.contains('='));
+    }
+}

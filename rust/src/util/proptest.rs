@@ -1,0 +1,79 @@
+//! A miniature property-testing harness.
+//!
+//! `proptest` is unavailable offline; this module gives the tests the
+//! part that matters most for this codebase: run a property over many
+//! seeded random cases and, on failure, report the *seed and case index*
+//! so the failure replays deterministically (`Rng::new` is platform
+//! stable). No shrinking — cases are kept small instead.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` random cases. The property receives a fresh,
+/// per-case RNG and the case index; it returns `Err(msg)` to fail.
+///
+/// Panics with seed + case index on the first failing case.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng, usize) -> Result<(), String>) {
+    let base_seed: u64 = 0xF00D_0000_0000_0000
+        ^ name.bytes().fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Generate a random length-`n` f32 vector with entries in [-scale, scale].
+pub fn vec_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Generate a random row-major (n, d) matrix of Gaussians.
+pub fn gauss_mat(rng: &mut Rng, n: usize, d: usize, std: f64) -> Vec<f32> {
+    (0..n * d).map(|_| rng.gauss_ms(0.0, std) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("always-true", 16, |rng, _| {
+            let v = rng.f64();
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("out of range {v}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_context() {
+        check("always-false", 4, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_have_right_shapes() {
+        let mut rng = Rng::new(1);
+        assert_eq!(vec_f32(&mut rng, 7, 2.0).len(), 7);
+        assert_eq!(gauss_mat(&mut rng, 3, 5, 1.0).len(), 15);
+        assert!(vec_f32(&mut rng, 100, 0.5).iter().all(|v| v.abs() <= 0.5));
+    }
+}

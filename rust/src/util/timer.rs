@@ -1,0 +1,123 @@
+//! Wall-clock timing helpers for the bench harnesses.
+//!
+//! `criterion` is unavailable offline, so the figure/bench drivers use
+//! this small stopwatch plus `bench_fn` for repeated timed runs with
+//! basic robust statistics (median, min, mean).
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch accumulating named phases.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since construction or last `reset`.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Result of a repeated timing run.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchStats {
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: min {:.3} ms | median {:.3} ms | mean {:.3} ms ({} iters)",
+            self.min_s * 1e3,
+            self.median_s * 1e3,
+            self.mean_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then `iters` measured
+/// runs, returning robust statistics. Each run's return value is passed
+/// through `std::hint::black_box` to defeat dead-code elimination.
+pub fn bench_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min_s = times[0];
+    let median_s = times[times.len() / 2];
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    BenchStats { iters, min_s, median_s, mean_s }
+}
+
+/// Format a duration human-readably for progress logs.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn bench_fn_counts_iters() {
+        let stats = bench_fn(1, 5, || 1 + 1);
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min_s <= stats.median_s);
+        assert!(stats.min_s <= stats.mean_s);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).contains(" s"));
+        assert!(fmt_duration(Duration::from_secs(500)).contains("min"));
+    }
+}

@@ -1,0 +1,116 @@
+//! Integration: dynamic-dataset behaviour — the embedding must absorb
+//! inserts/removals/drifts and still represent the *current* data well.
+
+use funcsne::config::EmbedConfig;
+use funcsne::data::datasets;
+use funcsne::engine::FuncSne;
+use funcsne::ld::NativeBackend;
+use funcsne::metrics::rnx_auc;
+
+fn cfg(n: usize) -> EmbedConfig {
+    EmbedConfig {
+        k_hd: 16.min(n - 1),
+        k_ld: 8,
+        perplexity: 8.0,
+        jumpstart_iters: 40,
+        early_exag_iters: 80,
+        n_iters: 0,
+        ..EmbedConfig::default()
+    }
+}
+
+#[test]
+fn inserted_cluster_lands_near_itself() {
+    // Train on 3 clusters, then stream in a 4th; after absorption its
+    // points should be mutual LD neighbours (not scattered).
+    let all = datasets::blobs(1200, 12, 4, 0.4, 16.0, 1);
+    let keep: Vec<usize> = (0..all.n()).filter(|&i| all.labels[i] < 3).collect();
+    let new: Vec<usize> = (0..all.n()).filter(|&i| all.labels[i] == 3).take(60).collect();
+    let x0 = all.x.take_rows(&keep[..600]);
+    let mut engine = FuncSne::new(x0, cfg(600)).unwrap();
+    let mut backend = NativeBackend::new();
+    engine.run(350, &mut backend).unwrap();
+    let base_n = engine.n();
+    for &i in &new {
+        engine.insert_point(all.x.row(i));
+    }
+    engine.run(250, &mut backend).unwrap();
+    // Mean LD distance within the new cluster vs to the rest.
+    let y = engine.embedding();
+    let mut intra = Vec::new();
+    let mut inter = Vec::new();
+    for a in base_n..engine.n() {
+        for b in (a + 1)..engine.n() {
+            intra.push((y.sqdist(a, b) as f64).sqrt());
+        }
+        for b in (0..base_n).step_by(13) {
+            inter.push((y.sqdist(a, b) as f64).sqrt());
+        }
+    }
+    let mi = funcsne::util::stats::mean(&intra);
+    let mo = funcsne::util::stats::mean(&inter);
+    assert!(
+        mi < mo,
+        "streamed-in cluster did not coalesce: intra {mi:.3} vs inter {mo:.3}"
+    );
+}
+
+#[test]
+fn removal_keeps_quality() {
+    let ds = datasets::blobs(600, 12, 3, 0.4, 14.0, 2);
+    let mut engine = FuncSne::new(ds.x.clone(), cfg(600)).unwrap();
+    let mut backend = NativeBackend::new();
+    engine.run(300, &mut backend).unwrap();
+    // Remove 150 random points.
+    let mut rng = funcsne::util::Rng::new(3);
+    for _ in 0..150 {
+        let i = rng.below(engine.n());
+        engine.remove_point(i);
+    }
+    engine.run(150, &mut backend).unwrap();
+    assert_eq!(engine.n(), 450);
+    let auc = rnx_auc(&engine.x, engine.embedding(), 30);
+    assert!(auc > 0.2, "post-removal quality collapsed: AUC {auc}");
+    // No dangling references.
+    for i in 0..engine.n() {
+        for &j in engine.knn.hd.neighbors(i) {
+            assert!((j as usize) < engine.n());
+        }
+        for &j in engine.knn.ld.neighbors(i) {
+            assert!((j as usize) < engine.n());
+        }
+    }
+}
+
+#[test]
+fn drifting_point_follows_its_new_cluster() {
+    // The paper's claim is about *drifting* values: move a cluster-0
+    // point smoothly (10 interpolation steps) onto a cluster-1 point's
+    // coordinates while the optimisation keeps running; the embedding
+    // must carry it across.
+    let ds = datasets::blobs(400, 8, 2, 0.3, 20.0, 4);
+    let mut engine = FuncSne::new(ds.x.clone(), cfg(400)).unwrap();
+    let mut backend = NativeBackend::new();
+    engine.run(400, &mut backend).unwrap();
+    let a = (0..400).find(|&i| ds.labels[i] == 0).unwrap();
+    let b = (0..400).find(|&i| ds.labels[i] == 1).unwrap();
+    let start: Vec<f32> = ds.x.row(a).to_vec();
+    let target: Vec<f32> = ds.x.row(b).to_vec();
+    for step in 1..=10 {
+        let t = step as f32 / 10.0;
+        let row: Vec<f32> =
+            start.iter().zip(&target).map(|(s, e)| s + t * (e - s)).collect();
+        engine.move_point(a, &row);
+        engine.run(80, &mut backend).unwrap();
+    }
+    engine.run(200, &mut backend).unwrap();
+    let y = engine.embedding();
+    let d_new = (y.sqdist(a, b) as f64).sqrt();
+    // Distance to an arbitrary cluster-0 point it used to sit with:
+    let c = (0..400).find(|&i| ds.labels[i] == 0 && i != a).unwrap();
+    let d_old = (y.sqdist(a, c) as f64).sqrt();
+    assert!(
+        d_new < d_old,
+        "drifted point did not migrate: to new cluster {d_new:.3}, to old {d_old:.3}"
+    );
+}

@@ -1,0 +1,81 @@
+//! End-to-end integration: the full engine on each synthetic dataset
+//! must produce an embedding whose R_NX AUC clearly beats random and
+//! approaches the exact-t-SNE reference at small N.
+
+use funcsne::baselines::exact_tsne::{exact_tsne, TsneConfig};
+use funcsne::config::EmbedConfig;
+use funcsne::coordinator::driver::{dataset_by_name, maybe_pca_reduce};
+use funcsne::engine::FuncSne;
+use funcsne::ld::NativeBackend;
+use funcsne::metrics::rnx_auc;
+
+fn run_engine(x: funcsne::data::Matrix, ld_dim: usize, iters: usize) -> funcsne::data::Matrix {
+    let cfg = EmbedConfig {
+        ld_dim,
+        k_hd: 24.min(x.n() - 1),
+        k_ld: 12.min(x.n() - 1),
+        perplexity: 8.0,
+        n_iters: iters,
+        jumpstart_iters: 60,
+        early_exag_iters: 120,
+        ..EmbedConfig::default()
+    };
+    let mut engine = FuncSne::new(x, cfg).unwrap();
+    let mut backend = NativeBackend::new();
+    engine.run(iters, &mut backend).unwrap();
+    engine.y
+}
+
+#[test]
+fn quality_beats_random_on_every_dataset() {
+    for name in ["blobs", "coil", "mnist", "rat_brain", "scurve"] {
+        let ds = dataset_by_name(name, 500, 3).unwrap();
+        let x = maybe_pca_reduce(ds.x.clone(), 32, 0);
+        let y = run_engine(x, 2, 400);
+        let auc = rnx_auc(&ds.x, &y, 40);
+        assert!(
+            auc > 0.15,
+            "{name}: AUC {auc} barely better than random placement"
+        );
+    }
+}
+
+#[test]
+fn engine_approaches_exact_tsne_quality() {
+    let ds = dataset_by_name("blobs", 400, 4).unwrap();
+    let y_fast = run_engine(ds.x.clone(), 2, 600);
+    let auc_fast = rnx_auc(&ds.x, &y_fast, 40);
+    let y_exact = exact_tsne(
+        &ds.x,
+        &TsneConfig { n_iters: 300, perplexity: 10.0, ..TsneConfig::default() },
+    );
+    let auc_exact = rnx_auc(&ds.x, &y_exact, 40);
+    assert!(
+        auc_fast > auc_exact * 0.7,
+        "accelerated engine too far below exact t-SNE: {auc_fast} vs {auc_exact}"
+    );
+}
+
+#[test]
+fn higher_ld_dims_preserve_more_structure() {
+    // The "unconstrained dimensionality" claim: at equal budget, an 8-D
+    // embedding should preserve neighbourhoods at least as well as 2-D.
+    let ds = dataset_by_name("deep_features", 500, 5).unwrap();
+    let x = maybe_pca_reduce(ds.x.clone(), 32, 0);
+    let y2 = run_engine(x.clone(), 2, 400);
+    let y8 = run_engine(x.clone(), 8, 400);
+    let auc2 = rnx_auc(&ds.x, &y2, 40);
+    let auc8 = rnx_auc(&ds.x, &y8, 40);
+    assert!(
+        auc8 > auc2 - 0.05,
+        "8-D embedding should not lose to 2-D: {auc8} vs {auc2}"
+    );
+}
+
+#[test]
+fn seeds_are_reproducible() {
+    let ds = dataset_by_name("blobs", 300, 6).unwrap();
+    let y1 = run_engine(ds.x.clone(), 2, 100);
+    let y2 = run_engine(ds.x.clone(), 2, 100);
+    assert_eq!(y1.data(), y2.data(), "same seed must give identical embeddings");
+}

@@ -1,0 +1,36 @@
+//! Integration: the α-sweep hierarchy recovers a planted 2-level tree.
+
+use funcsne::cluster::hierarchy::{alpha_sweep, tree_agreement, SweepConfig};
+use funcsne::data::datasets;
+use funcsne::engine::FuncSne;
+use funcsne::figures::common::figure_config;
+use funcsne::ld::NativeBackend;
+
+#[test]
+fn recovers_planted_nested_structure() {
+    // 3 super-clusters × 3 sub-clusters, well separated.
+    let ds = datasets::nested_blobs(900, 12, 3, 3, 1);
+    let planted = ds.hierarchy.clone().unwrap();
+    let mut cfg = figure_config(ds.n(), 4, 1.0);
+    cfg.n_iters = 0;
+    let mut engine = FuncSne::new(ds.x.clone(), cfg).unwrap();
+    let mut backend = NativeBackend::new();
+    let sweep = SweepConfig {
+        alphas: vec![1.0, 0.5],
+        iters_per_level: 350,
+        ..SweepConfig::default()
+    };
+    let graph = alpha_sweep(&mut engine, &mut backend, &sweep).unwrap();
+    assert_eq!(graph.levels, 2);
+    let coarse = graph.nodes_at(0).count();
+    let fine = graph.nodes_at(1).count();
+    assert!(coarse >= 2, "no coarse structure found ({coarse})");
+    assert!(fine >= coarse, "deeper level should not be coarser: {fine} < {coarse}");
+    let score = tree_agreement(&graph, 1, &ds.labels, &planted);
+    assert!(score > 0.6, "tree agreement {score} too close to chance");
+    // Every edge must connect adjacent levels with a valid weight.
+    for e in &graph.edges {
+        assert_eq!(graph.nodes[e.to].level, graph.nodes[e.from].level + 1);
+        assert!(e.weight > 0.0 && e.weight <= 1.0 + 1e-9);
+    }
+}

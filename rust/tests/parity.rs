@@ -1,0 +1,170 @@
+//! Integration: the PJRT tile backend must agree with the native Rust
+//! backend on identical inputs — the strongest evidence that the L1
+//! Pallas kernel, the L2 graph, the AOT pipeline, the runtime and the
+//! coordinator's tiling/padding all implement the same math.
+//!
+//! Skipped (with a notice) if `artifacts/` has not been built.
+
+use funcsne::config::EmbedConfig;
+use funcsne::coordinator::driver::default_artifact_dir;
+use funcsne::coordinator::PjrtBackend;
+use funcsne::data::{datasets, Matrix};
+use funcsne::engine::{ComputeBackend, FuncSne, NegSamples};
+use funcsne::hd::Affinities;
+use funcsne::knn::brute::brute_knn;
+use funcsne::knn::iterative::IterativeKnn;
+use funcsne::ld::NativeBackend;
+use funcsne::util::Rng;
+
+fn have_artifacts() -> bool {
+    default_artifact_dir().join("manifest.txt").exists()
+}
+
+fn build_state(
+    n: usize,
+    d_ld: usize,
+    k_hd: usize,
+    k_ld: usize,
+    seed: u64,
+) -> (Matrix, Matrix, IterativeKnn, Affinities) {
+    let ds = datasets::blobs(n, 16, 4, 0.8, 10.0, seed);
+    let mut rng = Rng::new(seed ^ 7);
+    let mut y = Matrix::zeros(n, d_ld);
+    for v in y.data_mut() {
+        *v = rng.gauss_ms(0.0, 1.0) as f32;
+    }
+    let mut knn = IterativeKnn::new(n, k_hd, k_ld);
+    let hd_exact = brute_knn(&ds.x, k_hd);
+    let ld_exact = brute_knn(&y, k_ld);
+    for i in 0..n {
+        for (j, d) in hd_exact.entries(i) {
+            knn.hd.insert(i, j, d);
+        }
+        for (j, d) in ld_exact.entries(i) {
+            knn.ld.insert(i, j, d);
+        }
+    }
+    let mut aff = Affinities::new(n, k_hd);
+    aff.recalibrate_all(&mut knn, (k_hd as f64 / 3.0).max(2.0));
+    (ds.x, y, knn, aff)
+}
+
+#[test]
+fn forces_parity_native_vs_pjrt() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    // Sizes straddle the 512-point tile boundary to exercise padding.
+    for &(n, d_ld, alpha) in &[(300usize, 2usize, 1.0f32), (700, 2, 0.5), (513, 8, 2.0)] {
+        let (x, y, knn, aff) = build_state(n, d_ld, 16, 8, 42 + n as u64);
+        let mut rng = Rng::new(9);
+        let neg = NegSamples::draw(n, 8, &mut rng);
+        let far_scale = ((n - 1 - 24) as f32) / 8.0;
+
+        let mut native = NativeBackend::new();
+        let (mut a1, mut r1) = (Matrix::zeros(n, d_ld), Matrix::zeros(n, d_ld));
+        let s1 = native
+            .forces(&y, &knn, &aff, &neg, alpha, far_scale, &mut a1, &mut r1)
+            .unwrap();
+
+        let mut pjrt = PjrtBackend::new(&default_artifact_dir()).unwrap();
+        let (mut a2, mut r2) = (Matrix::zeros(n, d_ld), Matrix::zeros(n, d_ld));
+        let s2 = pjrt
+            .forces(&y, &knn, &aff, &neg, alpha, far_scale, &mut a2, &mut r2)
+            .unwrap();
+
+        let _ = x;
+        let tol = 1e-3f32;
+        for (t, (v1, v2)) in a1.data().iter().zip(a2.data()).enumerate() {
+            assert!(
+                (v1 - v2).abs() <= tol * (1.0 + v1.abs()),
+                "attr[{t}] native={v1} pjrt={v2} (n={n}, d={d_ld}, α={alpha})"
+            );
+        }
+        for (t, (v1, v2)) in r1.data().iter().zip(r2.data()).enumerate() {
+            assert!(
+                (v1 - v2).abs() <= tol * (1.0 + v1.abs()),
+                "rep[{t}] native={v1} pjrt={v2} (n={n}, d={d_ld}, α={alpha})"
+            );
+        }
+        assert!(
+            (s1.wsum - s2.wsum).abs() <= 1e-3 * (1.0 + s1.wsum.abs()),
+            "wsum native={} pjrt={}",
+            s1.wsum,
+            s2.wsum
+        );
+        assert_eq!(s1.count, s2.count);
+    }
+}
+
+#[test]
+fn sqdist_parity_native_vs_pjrt() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    // M = 16 hits an artifact exactly; M = 50 exercises column padding;
+    // 5000 pairs exercise the T tail.
+    for &(m_data, pairs) in &[(16usize, 1000usize), (50, 5000)] {
+        let ds = datasets::blobs(400, m_data, 4, 1.0, 8.0, 3);
+        let mut rng = Rng::new(4);
+        let owners: Vec<u32> = (0..pairs).map(|_| rng.below(400) as u32).collect();
+        let cands: Vec<u32> = (0..pairs).map(|_| rng.below(400) as u32).collect();
+        let mut native = NativeBackend::new();
+        let mut pjrt = PjrtBackend::new(&default_artifact_dir()).unwrap();
+        let (mut o1, mut o2) = (Vec::new(), Vec::new());
+        native.sqdist_batch(&ds.x, &owners, &cands, &mut o1).unwrap();
+        pjrt.sqdist_batch(&ds.x, &owners, &cands, &mut o2).unwrap();
+        assert_eq!(o1.len(), o2.len());
+        for t in 0..o1.len() {
+            assert!(
+                (o1[t] - o2[t]).abs() <= 1e-3 * (1.0 + o1[t].abs()),
+                "pair {t}: native={} pjrt={}",
+                o1[t],
+                o2[t]
+            );
+        }
+    }
+}
+
+#[test]
+fn full_engine_run_on_pjrt_backend() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let ds = datasets::blobs(400, 16, 4, 0.5, 12.0, 11);
+    let labels = ds.labels.clone();
+    let cfg = EmbedConfig {
+        k_hd: 16,
+        k_ld: 8,
+        n_neg: 8,
+        perplexity: 10.0,
+        jumpstart_iters: 10,
+        early_exag_iters: 30,
+        backend: funcsne::config::Backend::Pjrt,
+        ..EmbedConfig::default()
+    };
+    let mut backend = PjrtBackend::new(&default_artifact_dir()).unwrap();
+    backend.warmup(cfg.k_hd, cfg.k_ld, cfg.n_neg, cfg.ld_dim, ds.x.d()).unwrap();
+    let mut engine = FuncSne::new(ds.x, cfg).unwrap();
+    engine.run(150, &mut backend).unwrap();
+    let y = engine.embedding();
+    assert!(y.data().iter().all(|v| v.is_finite()), "PJRT run diverged");
+    // Same-label points should be closer on average than cross-label.
+    let (mut same, mut diff) = (Vec::new(), Vec::new());
+    for i in 0..y.n() {
+        for j in (i + 1)..y.n().min(i + 30) {
+            let d = y.sqdist(i, j) as f64;
+            if labels[i] == labels[j] {
+                same.push(d);
+            } else {
+                diff.push(d);
+            }
+        }
+    }
+    let ms = funcsne::util::stats::mean(&same);
+    let md = funcsne::util::stats::mean(&diff);
+    assert!(ms < md, "PJRT embedding did not separate clusters: {ms} vs {md}");
+}
