@@ -2,6 +2,12 @@
 //! hyperparameters mid-optimisation — including HD-side ones — and the
 //! engine keeps iterating without any recomputation phase.
 //!
+//! Every mid-run mutation goes through the session's **command queue**
+//! (`Session::enqueue(Command::…)`), the single public mutation path:
+//! commands drain FIFO between two iterations, exactly where a GUI or
+//! network frontend would inject them. Telemetry flows back out through
+//! an `EventSink`.
+//!
 //! Demonstrates: instant α changes, perplexity changes (incremental σ
 //! recalibration with warm restarts), attraction/repulsion tuning at
 //! heavy tails, and the "implosion button".
@@ -11,15 +17,16 @@
 //! ```
 
 use funcsne::coordinator::driver::dataset_by_name;
-use funcsne::engine::FuncSne;
 use funcsne::figures::common::figure_config;
-use funcsne::ld::NativeBackend;
+use funcsne::session::{Command, Event, Session};
 use funcsne::util::{plot, Stopwatch};
+use std::cell::RefCell;
+use std::rc::Rc;
 
-fn snapshot(engine: &FuncSne, labels: &[usize], title: &str) {
+fn snapshot(session: &Session, labels: &[usize], title: &str) {
     println!(
         "{}",
-        plot::scatter_2d(title, engine.embedding().data(), labels, engine.n(), 70, 14)
+        plot::scatter_2d(title, session.embedding().data(), labels, session.n(), 70, 14)
     );
 }
 
@@ -28,42 +35,69 @@ fn main() -> anyhow::Result<()> {
     let labels = ds.coarse_labels.clone().unwrap();
     let mut cfg = figure_config(ds.n(), 2, 1.0);
     cfg.n_iters = 0;
-    let mut engine = FuncSne::new(ds.x.clone(), cfg)?;
-    let mut backend = NativeBackend::new();
-    let sw = Stopwatch::new();
+    let mut session = Session::builder()
+        .dataset(ds.x.clone())
+        .config(cfg)
+        .snapshot_stride(100)
+        .snapshot_capacity(16)
+        .build()?;
 
+    // Watch the command stream like a frontend would.
+    let command_log: Rc<RefCell<Vec<String>>> = Rc::new(RefCell::new(Vec::new()));
+    let tap = Rc::clone(&command_log);
+    session.add_sink(Box::new(move |e: &Event| {
+        if let Event::CommandApplied { iter, description } = e {
+            tap.borrow_mut().push(format!("iter {iter}: {description}"));
+        }
+    }));
+
+    let sw = Stopwatch::new();
     println!("» optimisation starts immediately (no precompute phase)");
-    engine.run(250, &mut backend)?;
+    session.run(250)?;
     println!("  [{:.2}s] 250 iterations", sw.elapsed_s());
-    snapshot(&engine, &labels, "t-SNE regime (α = 1)");
+    snapshot(&session, &labels, "t-SNE regime (α = 1)");
 
     println!("» user drags α down to 0.5 — instant, mid-run");
-    engine.set_alpha(0.5);
-    engine.set_repulsion(1.5);
-    engine.run(250, &mut backend)?;
-    snapshot(&engine, &labels, "heavy tails (α = 0.5): clusters fragment");
+    session.enqueue(Command::SetAlpha(0.5));
+    session.enqueue(Command::SetRepulsion(1.5));
+    session.run(250)?;
+    snapshot(&session, &labels, "heavy tails (α = 0.5): clusters fragment");
 
     println!("» user doubles the perplexity — an HD-side change that would");
     println!("  force a full re-preprocessing in two-phase methods");
-    let recal_before = engine.stats.recalibrated_points;
-    engine.set_perplexity(engine.cfg.perplexity * 2.0);
-    engine.run(150, &mut backend)?;
+    let recal_before = session.stats().recalibrated_points;
+    session.enqueue(Command::SetPerplexity(session.config().perplexity * 2.0));
+    session.run(150)?;
     println!(
         "  incremental σ recalibrations since change: {}",
-        engine.stats.recalibrated_points - recal_before
+        session.stats().recalibrated_points - recal_before
     );
 
     println!("» user hits the implosion button (embedding rescale)");
-    engine.implode();
-    engine.run(150, &mut backend)?;
-    snapshot(&engine, &labels, "after implosion + 150 iterations");
+    session.enqueue(Command::Implode);
+    session.run(150)?;
+    snapshot(&session, &labels, "after implosion + 150 iterations");
 
     println!(
         "session total: {:.2}s for 800 iterations with 4 live hyperparameter events",
         sw.elapsed_s()
     );
+    println!("command stream seen by the event sink:");
+    for line in command_log.borrow().iter() {
+        println!("  {line}");
+    }
+    println!(
+        "snapshot ring: {} frames held (latest at iter {})",
+        session.snapshots().len(),
+        session.snapshots().latest().map(|s| s.iter).unwrap_or(0)
+    );
     anyhow::ensure!(
-        engine.embedding().data().iter().all(|v| v.is_finite()),
+        session.command_counts() == (4, 0),
+        "expected 4 applied commands, got {:?}",
+        session.command_counts()
+    );
+    anyhow::ensure!(
+        session.embedding().data().iter().all(|v| v.is_finite()),
         "embedding diverged during the session"
     );
     println!("interactive_session OK");

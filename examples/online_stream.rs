@@ -2,19 +2,20 @@
 //! embedding keeps optimising — the paper's "naturally adapts to
 //! dynamical datasets with no computational overhead" claim.
 //!
-//! A stream of points from 4 clusters is fed in batches; midway, one
-//! cluster is retired point by point and a brand-new cluster starts
-//! streaming in; some points drift between clusters. Per-event cost is
-//! reported to show there is no stop-the-world phase.
+//! All dataset mutations go through the session command queue
+//! (`InsertPoints` / `RemovePoint` / `MovePoint`), applied FIFO between
+//! iterations — exactly how a streaming frontend would feed a live
+//! session. A stream of points from 4 clusters is fed in batches;
+//! midway, one cluster is retired point by point and a brand-new
+//! cluster starts streaming in; some points drift between clusters.
+//! Per-event cost is reported to show there is no stop-the-world phase.
 //!
 //! ```sh
 //! cargo run --release --example online_stream
 //! ```
 
-use funcsne::config::EmbedConfig;
 use funcsne::data::datasets;
-use funcsne::engine::FuncSne;
-use funcsne::ld::NativeBackend;
+use funcsne::session::{Command, Session};
 use funcsne::util::{plot, Rng, Stopwatch};
 
 fn main() -> anyhow::Result<()> {
@@ -28,33 +29,31 @@ fn main() -> anyhow::Result<()> {
         .map(|&i| full.labels[i])
         .collect();
 
-    let cfg = EmbedConfig {
-        k_hd: 16,
-        k_ld: 8,
-        perplexity: 10.0,
-        jumpstart_iters: 40,
-        early_exag_iters: 80,
-        n_iters: 0,
-        ..EmbedConfig::default()
-    };
-    let mut engine = FuncSne::new(x0, cfg)?;
-    let mut backend = NativeBackend::new();
+    let mut session = Session::builder()
+        .dataset(x0)
+        .k_hd(16)
+        .k_ld(8)
+        .perplexity(10.0)
+        .jumpstart_iters(40)
+        .early_exag_iters(80)
+        .build()?;
     let mut rng = Rng::new(5);
 
-    println!("» warm-up on the initial 4-cluster stream ({} points)", engine.n());
-    engine.run(300, &mut backend)?;
+    println!("» warm-up on the initial 4-cluster stream ({} points)", session.n());
+    session.run(300)?;
 
-    // --- streaming inserts ------------------------------------------------
+    // --- streaming inserts (one InsertPoints command per batch) -----------
     let sw = Stopwatch::new();
     let batch = 40;
     let mut inserted = 0;
     for chunk in later.chunks(batch).take(6) {
+        let rows = full.x.take_rows(chunk);
+        inserted += rows.n();
+        session.enqueue(Command::InsertPoints(rows));
         for &i in chunk {
-            engine.insert_point(full.x.row(i));
             labels.push(full.labels[i]);
-            inserted += 1;
         }
-        engine.run(30, &mut backend)?; // embedding absorbs the batch
+        session.run(30)?; // queue drains before the first of these iterations
     }
     println!(
         "» inserted {} points of an unseen cluster in {:.2}s (incl. 180 iterations)",
@@ -62,60 +61,61 @@ fn main() -> anyhow::Result<()> {
         sw.elapsed_s()
     );
 
-    // --- retiring a cluster ------------------------------------------------
+    // --- retiring a cluster -------------------------------------------------
+    // RemovePoint is swap-remove (the last point takes the freed index),
+    // so enqueue removals in descending index order and mirror the same
+    // bookkeeping on our label vector.
     let sw = Stopwatch::new();
-    let mut removed = 0;
-    let mut i = 0;
-    while i < engine.n() {
-        if labels[i] == 0 && removed < 150 {
-            engine.remove_point(i);
-            labels.swap_remove(i);
-            removed += 1;
-        } else {
-            i += 1;
-        }
+    let mut to_remove: Vec<usize> =
+        (0..session.n()).filter(|&i| labels[i] == 0).take(150).collect();
+    to_remove.sort_unstable_by(|a, b| b.cmp(a));
+    let removed = to_remove.len();
+    for &i in &to_remove {
+        session.enqueue(Command::RemovePoint(i));
+        labels.swap_remove(i);
     }
-    engine.run(60, &mut backend)?;
+    session.run(60)?;
     println!("» removed {removed} points of cluster 0 in {:.2}s", sw.elapsed_s());
+    anyhow::ensure!(session.n() == labels.len(), "label bookkeeping diverged");
 
     // --- drifting points ----------------------------------------------------
     let sw = Stopwatch::new();
     let mut drifted = 0;
     for _ in 0..60 {
-        let i = rng.below(engine.n());
+        let i = rng.below(session.n());
         // drift toward the data centroid: new = 0.5*(x_i + x_j) of a random pair
-        let j = rng.below(engine.n());
-        let mix: Vec<f32> = engine
-            .x
-            .row(i)
-            .iter()
-            .zip(engine.x.row(j))
-            .map(|(a, b)| 0.5 * (a + b))
-            .collect();
-        engine.move_point(i, &mix);
+        let j = rng.below(session.n());
+        let x = &session.engine().x;
+        let mix: Vec<f32> = x.row(i).iter().zip(x.row(j)).map(|(a, b)| 0.5 * (a + b)).collect();
+        session.enqueue(Command::MovePoint(i, mix));
         drifted += 1;
+        session.run(2)?; // apply, then let the embedding react
     }
-    engine.run(120, &mut backend)?;
+    session.run(120)?;
     println!("» drifted {drifted} points in {:.2}s", sw.elapsed_s());
+
+    let (applied, rejected) = session.command_counts();
+    println!("» command queue: {applied} applied, {rejected} rejected");
 
     println!(
         "{}",
         plot::scatter_2d(
             "final embedding after insert/remove/drift (labels = clusters)",
-            engine.embedding().data(),
+            session.embedding().data(),
             &labels,
-            engine.n(),
+            session.n(),
             76,
             20,
         )
     );
-    anyhow::ensure!(engine.embedding().data().iter().all(|v| v.is_finite()));
+    anyhow::ensure!(session.embedding().data().iter().all(|v| v.is_finite()));
+    anyhow::ensure!(rejected == 0, "no command should have been rejected");
     // Table invariants after heavy dynamics.
-    for i in 0..engine.n() {
-        for &j in engine.knn.hd.neighbors(i) {
-            anyhow::ensure!((j as usize) < engine.n(), "stale neighbour reference");
+    for i in 0..session.n() {
+        for &j in session.engine().knn.hd.neighbors(i) {
+            anyhow::ensure!((j as usize) < session.n(), "stale neighbour reference");
         }
     }
-    println!("online_stream OK (n = {} at exit)", engine.n());
+    println!("online_stream OK (n = {} at exit)", session.n());
     Ok(())
 }

@@ -1,7 +1,15 @@
-//! Quickstart — the end-to-end driver proving all layers compose.
+//! Quickstart — build an embedding session with the fluent builder.
 //!
-//! Runs the full three-layer pipeline on a real small workload:
-//! 2 000 points of the COIL-20 twin, embedded to 2-D through the **PJRT
+//! The one call to learn is `Session::builder()`: give it a dataset,
+//! tweak a few fields, `.build()?`, then `.run(...)`. The builder owns
+//! backend selection (native vs AOT/PJRT artifacts), config validation
+//! and optional PCA pre-reduction; mid-run steering happens through
+//! `session.enqueue(Command::…)` (see `interactive_session.rs`). The
+//! old direct `FuncSne` setters are internal now — the session command
+//! queue is the public mutation path.
+//!
+//! Runs the full three-layer pipeline on a real small workload: 2 000
+//! points of the COIL-20 twin, embedded to 2-D through the **PJRT
 //! backend** (AOT-compiled Pallas/XLA tiles; falls back to native with a
 //! notice if `make artifacts` hasn't been run), and reports the paper's
 //! headline metric — the R_NX(K) AUC — against a UMAP-like baseline,
@@ -12,9 +20,10 @@
 //! ```
 
 use funcsne::baselines::umap_like::{umap_like, UmapConfig};
-use funcsne::config::{Backend, EmbedConfig};
-use funcsne::coordinator::driver::{dataset_by_name, default_artifact_dir, run_embedding};
+use funcsne::config::Backend;
+use funcsne::coordinator::driver::{dataset_by_name, default_artifact_dir};
 use funcsne::metrics::rnx::rnx_curve;
+use funcsne::session::Session;
 use funcsne::util::{plot, Stopwatch};
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let ds = dataset_by_name("coil", 2000, 42)?;
     println!("dataset: {} (n={}, d={})", ds.name, ds.n(), ds.d());
 
-    // --- 2. config -------------------------------------------------------
+    // --- 2. build the session --------------------------------------------
     let have_artifacts = default_artifact_dir().join("manifest.txt").exists();
     let backend = if have_artifacts {
         Backend::Pjrt
@@ -30,27 +39,31 @@ fn main() -> anyhow::Result<()> {
         eprintln!("NOTE: artifacts/ missing — run `make artifacts`; using native backend");
         Backend::Native
     };
-    let cfg = EmbedConfig {
-        ld_dim: 2,
-        alpha: 1.0,
-        perplexity: 10.0,
-        n_iters: 700,
-        backend,
-        jumpstart_iters: 80,
-        early_exag_iters: 150,
-        ..EmbedConfig::default()
-    };
+    let n_iters = 700usize;
+    let mut session = Session::builder()
+        .dataset(ds.x.clone())
+        .ld_dim(2)
+        .alpha(1.0)
+        .perplexity(10.0)
+        .n_iters(n_iters)
+        .backend(backend)
+        .jumpstart_iters(80)
+        .early_exag_iters(150)
+        .build()?;
 
     // --- 3. run ------------------------------------------------------------
-    let report = run_embedding(ds.x.clone(), &cfg, &default_artifact_dir())?;
-    let y = report.engine.embedding();
+    let sw = Stopwatch::new();
+    session.run_configured()?;
+    let seconds = sw.elapsed_s();
+    let iters_per_sec = n_iters as f64 / seconds.max(1e-9);
+    let y = session.embedding();
     println!(
-        "FUnc-SNE [{:?}]: {} iters in {:.2}s ({:.0} iters/s, {:.2e} point-updates/s)",
-        cfg.backend,
-        cfg.n_iters,
-        report.seconds,
-        report.iters_per_sec,
-        report.iters_per_sec * ds.n() as f64,
+        "FUnc-SNE [{}]: {} iters in {:.2}s ({:.0} iters/s, {:.2e} point-updates/s)",
+        session.backend_name(),
+        n_iters,
+        seconds,
+        iters_per_sec,
+        iters_per_sec * ds.n() as f64,
     );
 
     // --- 4. headline metric vs baseline ------------------------------------

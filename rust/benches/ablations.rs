@@ -12,11 +12,10 @@
 
 use funcsne::config::EmbedConfig;
 use funcsne::data::datasets;
-use funcsne::engine::FuncSne;
 use funcsne::knn::brute::brute_knn;
 use funcsne::knn::iterative::CandidateRoutes;
-use funcsne::ld::NativeBackend;
 use funcsne::metrics::rnx::{rnx_auc, rnx_curve_vs_table};
+use funcsne::session::{Command, Session};
 use funcsne::util::Stopwatch;
 
 fn base_cfg(n: usize) -> EmbedConfig {
@@ -43,10 +42,9 @@ fn main() {
     for k_ld in [1usize, 4, 8, 16] {
         let mut cfg = base_cfg(n);
         cfg.k_ld = k_ld;
-        let mut engine = FuncSne::new(ds.x.clone(), cfg).unwrap();
-        let mut backend = NativeBackend::new();
-        engine.run(iters, &mut backend).unwrap();
-        let auc = rnx_auc(&ds.x, engine.embedding(), 50);
+        let mut session = Session::builder().dataset(ds.x.clone()).config(cfg).build().unwrap();
+        session.run(iters).unwrap();
+        let auc = rnx_auc(&ds.x, session.embedding(), 50);
         println!("  k_ld = {k_ld:>2}: R_NX AUC {auc:.3}");
     }
 
@@ -69,11 +67,10 @@ fn main() {
         let mut cfg = base_cfg(ds.n());
         cfg.k_hd = 16;
         cfg.refine_base_prob = 1.0;
-        let mut engine = FuncSne::new(ds.x.clone(), cfg).unwrap();
-        engine.set_candidate_routes(r);
-        let mut backend = NativeBackend::new();
-        engine.run(iters, &mut backend).unwrap();
-        let c = rnx_curve_vs_table(&truth, &engine.knn.hd, 16);
+        let mut session = Session::builder().dataset(ds.x.clone()).config(cfg).build().unwrap();
+        session.enqueue(Command::SetRoutes(r));
+        session.run(iters).unwrap();
+        let c = rnx_curve_vs_table(&truth, &session.engine().knn.hd, 16);
         println!("  {name:<32}: HD-KNN AUC {:.3}", c.auc);
     }
 
@@ -83,15 +80,14 @@ fn main() {
     for (name, prob) in [("default p=0.05+0.95E", 0.05), ("always refine", 1.0)] {
         let mut cfg = base_cfg(n);
         cfg.refine_base_prob = prob;
-        let mut engine = FuncSne::new(ds.x.clone(), cfg).unwrap();
-        let mut backend = NativeBackend::new();
+        let mut session = Session::builder().dataset(ds.x.clone()).config(cfg).build().unwrap();
         let sw = Stopwatch::new();
-        engine.run(iters, &mut backend).unwrap();
+        session.run(iters).unwrap();
         let secs = sw.elapsed_s();
-        let auc = rnx_auc(&ds.x, engine.embedding(), 50);
+        let auc = rnx_auc(&ds.x, session.embedding(), 50);
         println!(
             "  {name:<22}: {secs:>6.2}s, AUC {auc:.3}, {} HD sweeps",
-            engine.stats.hd_refines
+            session.stats().hd_refines
         );
     }
     println!("\nablations done");

@@ -4,4 +4,4 @@
 pub mod toml_lite;
 pub mod types;
 
-pub use types::{Backend, EmbedConfig, KnnConfig, RunConfig};
+pub use types::{Backend, EmbedConfig, Init, KnnConfig, RunConfig};

@@ -5,9 +5,10 @@
 use crate::config::{Backend, EmbedConfig};
 use crate::data::datasets::{self, Dataset};
 use crate::data::Matrix;
-use crate::engine::{ComputeBackend, FuncSne};
+use crate::engine::ComputeBackend;
 use crate::ld::NativeBackend;
 use crate::linalg::Pca;
+use crate::session::Session;
 use crate::util::Stopwatch;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -74,21 +75,26 @@ pub fn maybe_pca_reduce(x: Matrix, max_dim: usize, seed: u64) -> Matrix {
     }
 }
 
-/// Result of an end-to-end run.
+/// Result of an end-to-end run. The finished [`Session`] is handed
+/// back so callers can read the embedding, stats, or keep steering it.
 pub struct RunReport {
-    pub engine: FuncSne,
+    pub session: Session,
     pub seconds: f64,
     pub iters_per_sec: f64,
 }
 
-/// End-to-end: build engine + backend, run `n_iters`, time it.
+/// End-to-end convenience: a thin wrapper over the session facade —
+/// build a [`Session`], run its configured `n_iters`, time it.
 pub fn run_embedding(x: Matrix, cfg: &EmbedConfig, artifact_dir: &Path) -> Result<RunReport> {
-    let mut backend = make_backend(cfg, x.d(), artifact_dir)?;
-    let mut engine = FuncSne::new(x, cfg.clone())?;
+    let mut session = Session::builder()
+        .dataset(x)
+        .config(cfg.clone())
+        .artifact_dir(artifact_dir)
+        .build()?;
     let sw = Stopwatch::new();
-    engine.run(cfg.n_iters, backend.as_mut())?;
+    session.run_configured()?;
     let seconds = sw.elapsed_s();
-    Ok(RunReport { engine, seconds, iters_per_sec: cfg.n_iters as f64 / seconds.max(1e-9) })
+    Ok(RunReport { session, seconds, iters_per_sec: cfg.n_iters as f64 / seconds.max(1e-9) })
 }
 
 #[cfg(test)]
@@ -139,7 +145,7 @@ mod tests {
             ..EmbedConfig::default()
         };
         let report = run_embedding(ds.x, &cfg, &default_artifact_dir()).unwrap();
-        assert_eq!(report.engine.iter, 40);
+        assert_eq!(report.session.iterations(), 40);
         assert!(report.iters_per_sec > 0.0);
     }
 }

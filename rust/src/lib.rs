@@ -4,6 +4,51 @@
 //! Unconstrained algorithm for neighbour embeddings"* (Lambert, Couplet,
 //! Verleysen, Lee — preprint submitted to Neurocomputing, 2024/2025).
 //!
+//! ## Session API
+//!
+//! The public entry point is the [`session`] facade, built for the
+//! paper's headline feature: *interactive* optimisation, where any
+//! hyperparameter — including HD-side ones — changes between two
+//! iterations with instantaneous feedback.
+//!
+//! ```no_run
+//! use funcsne::session::{Command, Session};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! # let x = funcsne::data::Matrix::zeros(1000, 50);
+//! // Fluent construction: validation, optional PCA pre-reduction and
+//! // backend selection all live in the builder.
+//! let mut session = Session::builder()
+//!     .dataset(x)
+//!     .ld_dim(2)
+//!     .perplexity(30.0)
+//!     .backend_name("native")
+//!     .snapshot_stride(50)
+//!     .build()?;
+//!
+//! session.run(250)?;
+//!
+//! // Mid-run steering: typed commands, drained FIFO between
+//! // iterations — never reaching into the step loop.
+//! session.enqueue(Command::SetAlpha(0.5));
+//! session.enqueue(Command::SetPerplexity(60.0));
+//! session.run(250)?;
+//!
+//! let y = session.embedding(); // N × 2
+//! # let _ = y; Ok(())
+//! # }
+//! ```
+//!
+//! Telemetry flows out through [`session::EventSink`]s and the
+//! ring-buffered [`session::SnapshotBuffer`]; many concurrent
+//! embeddings are owned and stepped round-robin by a
+//! [`session::SessionManager`]. The raw [`engine::FuncSne`] setters are
+//! crate-private — the command queue is the supported mutation path
+//! (engine state stays readable for metrics and figures; writing those
+//! fields directly bypasses the setters' bookkeeping).
+//!
+//! ## Architecture
+//!
 //! The crate is a three-layer system:
 //!
 //! * **Layer 3 (this crate)** — the coordinator: the interleaved
@@ -31,6 +76,7 @@ pub mod knn;
 pub mod hd;
 pub mod ld;
 pub mod engine;
+pub mod session;
 pub mod baselines;
 pub mod metrics;
 pub mod cluster;

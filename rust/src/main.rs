@@ -1,4 +1,4 @@
-//! FUnc-SNE command-line interface (the L3 leader entrypoint).
+//! FUnc-SNE command-line entrypoint (the L3 leader binary).
 //!
 //! ```text
 //! funcsne embed    --dataset blobs --n 5000 --alpha 0.5 --ld-dim 2 ...
@@ -7,205 +7,14 @@
 //! funcsne hierarchy --dataset mnist --n 2000
 //! funcsne info                            # backends, artifacts, dims
 //! ```
+//!
+//! All subcommand logic lives in [`funcsne::cli`], which runs on the
+//! session facade ([`funcsne::session`]).
 
-use anyhow::{bail, Result};
-use funcsne::cli::Args;
-use funcsne::config::{EmbedConfig, KnnConfig};
-use funcsne::coordinator::driver::{
-    dataset_by_name, default_artifact_dir, maybe_pca_reduce, run_embedding,
-};
-use funcsne::data::datasets::Dataset;
-use funcsne::figures::common::Scale;
-use funcsne::knn::brute::brute_knn;
-use funcsne::knn::nn_descent::nn_descent;
-use funcsne::metrics::rnx::{rnx_curve, rnx_curve_vs_table};
-use funcsne::util::{io, plot};
-
-const HELP: &str = "\
-funcsne — FUnc-SNE: flexible, fast, unconstrained neighbour embeddings
-
-USAGE: funcsne <subcommand> [--key value]...
-
-SUBCOMMANDS
-  embed      run an embedding           --dataset NAME --n N [--alpha A]
-             [--ld-dim D] [--n-iters I] [--perplexity P] [--backend native|pjrt]
-             [--attraction X] [--repulsion X] [--seed S] [--out results/embed]
-  knn        compare KNN finders        --dataset NAME --n N [--k K] [--iters I]
-  figure     regenerate paper figures   [--only fig1..fig11|table1|table2] [--full]
-  hierarchy  α-sweep hierarchy graph    --dataset NAME --n N [--ld-dim D]
-  info       show artifact menu / platform
-
-Datasets: scurve scurve_unbalanced blobs blobs_overlap blobs_disjoint coil
-          mnist rat_brain tabula deep_features nested
-";
+use anyhow::Result;
+use funcsne::cli::{self, Args};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    match args.subcommand.as_str() {
-        "embed" => cmd_embed(&args),
-        "knn" => cmd_knn(&args),
-        "figure" | "figures" => cmd_figure(&args),
-        "hierarchy" => cmd_hierarchy(&args),
-        "info" => cmd_info(),
-        "" | "help" => {
-            print!("{HELP}");
-            Ok(())
-        }
-        other => bail!("unknown subcommand {other:?}\n{HELP}"),
-    }
-}
-
-fn load_dataset(args: &Args) -> Result<Dataset> {
-    let name = args.get_str("dataset", "blobs");
-    let n = args.get_usize("n", 2000)?;
-    let seed = args.get_usize("seed", 42)? as u64;
-    dataset_by_name(&name, n, seed)
-}
-
-fn cmd_embed(args: &Args) -> Result<()> {
-    let ds = load_dataset(args)?;
-    let mut cfg = EmbedConfig {
-        alpha: args.get_f64("alpha", 1.0)?,
-        ld_dim: args.get_usize("ld_dim", 2)?,
-        n_iters: args.get_usize("n_iters", 1000)?,
-        seed: args.get_usize("seed", 42)? as u64,
-        backend: args.get_str("backend", "native").parse()?,
-        ..EmbedConfig::default()
-    };
-    cfg.perplexity = args.get_f64("perplexity", cfg.perplexity)?;
-    cfg.attraction = args.get_f64("attraction", cfg.attraction)?;
-    cfg.repulsion = args.get_f64("repulsion", cfg.repulsion)?;
-    cfg.lr = args.get_f64("lr", cfg.lr)?;
-    cfg.k_hd = args.get_usize("k_hd", cfg.k_hd)?.min(ds.n() - 1);
-    cfg.k_ld = args.get_usize("k_ld", cfg.k_ld)?.min(ds.n() - 1);
-    cfg.perplexity = cfg.perplexity.min(cfg.k_hd as f64);
-    cfg.validate()?;
-    let x = maybe_pca_reduce(ds.x.clone(), 64, cfg.seed);
-    println!(
-        "embedding {} (n={}, d={} → {}), α={}, backend {:?}",
-        ds.name,
-        ds.n(),
-        ds.d(),
-        cfg.ld_dim,
-        cfg.alpha,
-        cfg.backend
-    );
-    let report = run_embedding(x, &cfg, &default_artifact_dir())?;
-    let y = report.engine.embedding();
-    println!(
-        "done in {:.2}s ({:.1} iters/s, {} HD refreshes, {} σ recalibrations)",
-        report.seconds,
-        report.iters_per_sec,
-        report.engine.stats.hd_refines,
-        report.engine.stats.recalibrated_points
-    );
-    if ds.n() <= 4000 {
-        let c = rnx_curve(&ds.x, y, 50.min(ds.n() - 2));
-        println!("R_NX AUC = {:.3}", c.auc);
-    }
-    if cfg.ld_dim == 2 {
-        println!(
-            "{}",
-            plot::scatter_2d("embedding", y.data(), &ds.labels, ds.n(), 78, 22)
-        );
-    }
-    let out = args.get_str("out", "results/embed");
-    io::write_npy_f32(
-        std::path::Path::new(&format!("{out}.npy")),
-        y.data(),
-        &[y.n(), y.d()],
-    )?;
-    println!("wrote {out}.npy");
-    Ok(())
-}
-
-fn cmd_knn(args: &Args) -> Result<()> {
-    let ds = load_dataset(args)?;
-    let k = args.get_usize("k", 16)?;
-    let iters = args.get_usize("iters", 300)?;
-    println!("exact ground truth (n={}, k={k})...", ds.n());
-    let truth = brute_knn(&ds.x, k);
-    println!("NN-descent...");
-    let nnd = nn_descent(&ds.x, &KnnConfig { k, rho: 0.8, ..KnnConfig::default() });
-    let c1 = rnx_curve_vs_table(&truth, &nnd.table, k);
-    println!("proposed iterative finder ({iters} engine iterations)...");
-    let mut cfg = funcsne::figures::common::figure_config(ds.n(), 2, 1.0);
-    cfg.k_hd = k.max(8);
-    cfg.refine_base_prob = 1.0;
-    let mut engine = funcsne::engine::FuncSne::new(ds.x.clone(), cfg)?;
-    let mut backend = funcsne::ld::NativeBackend::new();
-    engine.run(iters, &mut backend)?;
-    let c2 = rnx_curve_vs_table(&truth, &engine.knn.hd, k);
-    println!(
-        "R_NX AUC: nn-descent {:.3} ({} dist evals) | proposed {:.3}",
-        c1.auc, nnd.dist_evals, c2.auc
-    );
-    Ok(())
-}
-
-fn cmd_figure(args: &Args) -> Result<()> {
-    let scale = if args.get_flag("full") { Scale::Full } else { Scale::from_env() };
-    let only = args.get_str("only", "all");
-    type Driver = fn(Scale) -> Result<String>;
-    let all: Vec<(&str, Driver)> = vec![
-        ("fig1", funcsne::figures::fig1::run),
-        ("fig2", funcsne::figures::fig2::run),
-        ("fig3", funcsne::figures::fig3::run),
-        ("fig4", funcsne::figures::fig4::run),
-        ("fig5", funcsne::figures::fig5::run),
-        ("fig6", funcsne::figures::fig6::run),
-        ("fig7", funcsne::figures::fig7::run),
-        ("fig8", funcsne::figures::fig8::run),
-        ("fig9_10", funcsne::figures::fig9_10::run),
-        ("fig11", funcsne::figures::fig11::run),
-        ("table1", funcsne::figures::table1::run),
-        ("table2", funcsne::figures::table2::run),
-    ];
-    let mut ran = 0;
-    for (name, f) in all {
-        if only == "all" || only == name {
-            println!(">>> {name}");
-            f(scale)?;
-            ran += 1;
-        }
-    }
-    if ran == 0 {
-        bail!("no figure matched {only:?}");
-    }
-    Ok(())
-}
-
-fn cmd_hierarchy(args: &Args) -> Result<()> {
-    let ds = load_dataset(args)?;
-    let ld_dim = args.get_usize("ld_dim", 4)?;
-    let mut cfg = funcsne::figures::common::figure_config(ds.n(), ld_dim, 1.0);
-    cfg.n_iters = 0;
-    let mut engine = funcsne::engine::FuncSne::new(ds.x.clone(), cfg)?;
-    let mut backend = funcsne::ld::NativeBackend::new();
-    let sweep = funcsne::cluster::hierarchy::SweepConfig {
-        iters_per_level: args.get_usize("iters_per_level", 300)?,
-        ..Default::default()
-    };
-    let graph = funcsne::cluster::hierarchy::alpha_sweep(&mut engine, &mut backend, &sweep)?;
-    let pos = funcsne::cluster::layout::layout(&graph, 250, 1);
-    println!(
-        "{}",
-        funcsne::cluster::layout::render_ascii(&graph, &pos, 70, 20)
-    );
-    Ok(())
-}
-
-fn cmd_info() -> Result<()> {
-    println!("artifact dir: {:?}", default_artifact_dir());
-    match funcsne::runtime::Manifest::load(&default_artifact_dir()) {
-        Ok(m) => {
-            println!("artifacts: {} (forces dims: {:?})", m.specs.len(), m.forces_dims());
-            match funcsne::coordinator::PjrtBackend::new(&default_artifact_dir()) {
-                Ok(_) => println!("PJRT CPU client: OK"),
-                Err(e) => println!("PJRT CPU client: FAILED ({e})"),
-            }
-        }
-        Err(e) => println!("no artifacts ({e}); only --backend native available"),
-    }
-    Ok(())
+    cli::run(&args)
 }

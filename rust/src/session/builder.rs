@@ -1,0 +1,259 @@
+//! Fluent session construction.
+//!
+//! The builder owns the whole setup dance that callers previously wired
+//! by hand: config assembly + validation, optional PCA pre-reduction of
+//! wide data (the paper's recommended preprocessing), backend selection
+//! (native vs PJRT artifacts), and engine construction.
+//!
+//! ```no_run
+//! use funcsne::session::Session;
+//! # let x = funcsne::data::Matrix::zeros(100, 8);
+//! let mut session = Session::builder()
+//!     .dataset(x)
+//!     .ld_dim(2)
+//!     .perplexity(30.0)
+//!     .backend_name("native")
+//!     .build()
+//!     .unwrap();
+//! session.run(500).unwrap();
+//! ```
+
+use super::Session;
+use crate::config::{Backend, EmbedConfig, Init};
+use crate::coordinator::driver::{default_artifact_dir, make_backend, maybe_pca_reduce};
+use crate::data::Matrix;
+use crate::engine::FuncSne;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Builds a [`Session`]; obtain one via [`Session::builder`].
+pub struct SessionBuilder {
+    x: Option<Matrix>,
+    cfg: EmbedConfig,
+    backend_name: Option<String>,
+    pca_max_dim: Option<usize>,
+    artifact_dir: Option<PathBuf>,
+    snapshot_stride: usize,
+    snapshot_capacity: usize,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> SessionBuilder {
+        SessionBuilder {
+            x: None,
+            cfg: EmbedConfig::default(),
+            backend_name: None,
+            pca_max_dim: None,
+            artifact_dir: None,
+            snapshot_stride: 0,
+            snapshot_capacity: 8,
+        }
+    }
+
+    /// The HD data to embed (required).
+    pub fn dataset(mut self, x: Matrix) -> Self {
+        self.x = Some(x);
+        self
+    }
+
+    /// Replace the whole configuration (field setters still apply on
+    /// top when called afterwards).
+    pub fn config(mut self, cfg: EmbedConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Target dimensionality (unconstrained — the paper's headline).
+    pub fn ld_dim(mut self, d: usize) -> Self {
+        self.cfg.ld_dim = d;
+        self
+    }
+
+    /// LD kernel tail heaviness α.
+    pub fn alpha(mut self, a: f64) -> Self {
+        self.cfg.alpha = a;
+        self
+    }
+
+    /// HD Gaussian perplexity.
+    pub fn perplexity(mut self, p: f64) -> Self {
+        self.cfg.perplexity = p;
+        self
+    }
+
+    pub fn k_hd(mut self, k: usize) -> Self {
+        self.cfg.k_hd = k;
+        self
+    }
+
+    pub fn k_ld(mut self, k: usize) -> Self {
+        self.cfg.k_ld = k;
+        self
+    }
+
+    pub fn n_neg(mut self, m: usize) -> Self {
+        self.cfg.n_neg = m;
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.cfg.lr = lr;
+        self
+    }
+
+    pub fn attraction(mut self, a: f64) -> Self {
+        self.cfg.attraction = a;
+        self
+    }
+
+    pub fn repulsion(mut self, r: f64) -> Self {
+        self.cfg.repulsion = r;
+        self
+    }
+
+    /// Default iteration budget used by [`Session::run_configured`].
+    pub fn n_iters(mut self, iters: usize) -> Self {
+        self.cfg.n_iters = iters;
+        self
+    }
+
+    pub fn jumpstart_iters(mut self, iters: usize) -> Self {
+        self.cfg.jumpstart_iters = iters;
+        self
+    }
+
+    pub fn early_exag_iters(mut self, iters: usize) -> Self {
+        self.cfg.early_exag_iters = iters;
+        self
+    }
+
+    pub fn init(mut self, init: Init) -> Self {
+        self.cfg.init = init;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Force backend (typed).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
+        self.backend_name = None;
+        self
+    }
+
+    /// Force backend by name (`"native"` / `"pjrt"`); unknown names
+    /// fail at [`SessionBuilder::build`].
+    pub fn backend_name(mut self, name: &str) -> Self {
+        self.backend_name = Some(name.to_string());
+        self
+    }
+
+    /// Linearly pre-reduce data wider than `max_dim` with PCA (the
+    /// paper's §3 preprocessing). Off by default.
+    pub fn pca_max_dim(mut self, max_dim: usize) -> Self {
+        self.pca_max_dim = Some(max_dim);
+        self
+    }
+
+    /// Where PJRT AOT artifacts live (defaults to the crate's
+    /// `artifacts/` directory).
+    pub fn artifact_dir(mut self, dir: &Path) -> Self {
+        self.artifact_dir = Some(dir.to_path_buf());
+        self
+    }
+
+    /// Record an embedding snapshot every `stride` iterations (0 = off).
+    pub fn snapshot_stride(mut self, stride: usize) -> Self {
+        self.snapshot_stride = stride;
+        self
+    }
+
+    /// Ring-buffer capacity for snapshots (default 8, min 1).
+    pub fn snapshot_capacity(mut self, capacity: usize) -> Self {
+        self.snapshot_capacity = capacity;
+        self
+    }
+
+    /// Validate, pre-reduce, select the backend, build the engine.
+    pub fn build(self) -> Result<Session> {
+        let mut cfg = self.cfg;
+        let mut x = self
+            .x
+            .context("SessionBuilder: no dataset provided (call .dataset(matrix))")?;
+        if let Some(name) = &self.backend_name {
+            cfg.backend = name.parse().context("SessionBuilder: bad backend name")?;
+        }
+        cfg.validate().context("SessionBuilder: invalid configuration")?;
+        if let Some(max_dim) = self.pca_max_dim {
+            x = maybe_pca_reduce(x, max_dim, cfg.seed);
+        }
+        let artifact_dir = self.artifact_dir.unwrap_or_else(default_artifact_dir);
+        let backend = make_backend(&cfg, x.d(), &artifact_dir)
+            .context("SessionBuilder: backend construction failed")?;
+        let engine = FuncSne::new(x, cfg)?;
+        Ok(Session::from_parts(
+            engine,
+            backend,
+            self.snapshot_stride,
+            self.snapshot_capacity,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    #[test]
+    fn builder_validates_ld_dim() {
+        let ds = datasets::blobs(100, 6, 2, 0.5, 8.0, 1);
+        let err = Session::builder().dataset(ds.x).ld_dim(0).build().unwrap_err();
+        assert!(format!("{err:?}").contains("ld_dim"), "{err:?}");
+    }
+
+    #[test]
+    fn builder_validates_perplexity() {
+        let ds = datasets::blobs(100, 6, 2, 0.5, 8.0, 1);
+        let err = Session::builder().dataset(ds.x).perplexity(1.0).build().unwrap_err();
+        assert!(format!("{err:?}").contains("perplexity"), "{err:?}");
+    }
+
+    #[test]
+    fn builder_rejects_unknown_backend() {
+        let ds = datasets::blobs(100, 6, 2, 0.5, 8.0, 1);
+        let err = Session::builder()
+            .dataset(ds.x)
+            .backend_name("cuda")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:?}").contains("backend"), "{err:?}");
+    }
+
+    #[test]
+    fn builder_requires_dataset() {
+        assert!(Session::builder().build().is_err());
+    }
+
+    #[test]
+    fn pca_pre_reduction_applies_when_asked() {
+        let ds = datasets::mnist_like(150, 64, 2);
+        let s = Session::builder()
+            .dataset(ds.x)
+            .pca_max_dim(16)
+            .k_hd(12)
+            .perplexity(8.0)
+            .build()
+            .unwrap();
+        assert_eq!(s.engine().x.d(), 16);
+    }
+}

@@ -1,0 +1,62 @@
+//! Typed mid-run commands — the single public mutation path into a
+//! running embedding.
+//!
+//! Frontends (CLI, GUI, network handlers) enqueue [`Command`]s from
+//! outside the step loop; [`crate::session::Session`] drains the queue
+//! FIFO between two iterations, so every mutation lands at a
+//! well-defined point of the optimisation with no locking inside the
+//! hot loop.
+
+use crate::data::Matrix;
+use crate::knn::iterative::CandidateRoutes;
+
+/// A mutation applied between two engine iterations.
+#[derive(Clone, Debug)]
+pub enum Command {
+    /// Change the LD kernel tail heaviness α (1.0 ≡ t-SNE; < 1 heavier).
+    SetAlpha(f64),
+    /// Change the HD perplexity; σ recalibration happens incrementally
+    /// with warm restarts (no stop-the-world phase).
+    SetPerplexity(f64),
+    /// Change the attraction multiplier.
+    SetAttraction(f64),
+    /// Change the repulsion multiplier.
+    SetRepulsion(f64),
+    /// Restrict / restore the KNN candidate-generation routes.
+    SetRoutes(CandidateRoutes),
+    /// Append a batch of HD points (rows must match the data dim).
+    InsertPoints(Matrix),
+    /// Remove point `i` (swap-remove: the last point takes index `i`).
+    RemovePoint(usize),
+    /// Move point `i` to new HD coordinates (drifting data).
+    MovePoint(usize, Vec<f32>),
+    /// The "implosion button": rescale the embedding so gradients
+    /// become significant again.
+    Implode,
+    /// Stop stepping the engine; commands still drain while paused.
+    Pause,
+    /// Resume stepping after [`Command::Pause`].
+    Resume,
+}
+
+impl Command {
+    /// Short human-readable description (used in event telemetry).
+    pub fn describe(&self) -> String {
+        match self {
+            Command::SetAlpha(a) => format!("set_alpha({a})"),
+            Command::SetPerplexity(p) => format!("set_perplexity({p})"),
+            Command::SetAttraction(a) => format!("set_attraction({a})"),
+            Command::SetRepulsion(r) => format!("set_repulsion({r})"),
+            Command::SetRoutes(r) => format!(
+                "set_routes(same={}, cross={}, random={})",
+                r.same_space, r.cross_space, r.random
+            ),
+            Command::InsertPoints(m) => format!("insert_points({}×{})", m.n(), m.d()),
+            Command::RemovePoint(i) => format!("remove_point({i})"),
+            Command::MovePoint(i, _) => format!("move_point({i})"),
+            Command::Implode => "implode".to_string(),
+            Command::Pause => "pause".to_string(),
+            Command::Resume => "resume".to_string(),
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! The session's outbound event stream and snapshot ring buffer.
+//!
+//! This replaces the old closure-based `FuncSne::run_with` observer:
+//! any number of [`EventSink`]s receive per-iteration telemetry and
+//! command outcomes, while embedding coordinates are captured into a
+//! bounded [`SnapshotBuffer`] at a configurable stride (so a slow
+//! consumer — a GUI, a websocket — can always fetch the latest frames
+//! without back-pressuring the optimisation).
+
+use crate::data::Matrix;
+use crate::engine::EngineStats;
+use std::collections::VecDeque;
+
+/// Something that happened inside a [`crate::session::Session`].
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// One engine iteration completed.
+    Iteration { iter: usize, stats: EngineStats },
+    /// An embedding snapshot was recorded into the [`SnapshotBuffer`].
+    Snapshot { iter: usize },
+    /// A queued command was applied between iterations.
+    CommandApplied { iter: usize, description: String },
+    /// A queued command failed validation and was dropped (the session
+    /// keeps running — frontends surface the reason to the user).
+    CommandRejected { iter: usize, description: String, reason: String },
+    /// The session entered the paused state.
+    Paused { iter: usize },
+    /// The session left the paused state.
+    Resumed { iter: usize },
+}
+
+impl Event {
+    /// The iteration count at which the event was emitted.
+    pub fn at_iter(&self) -> usize {
+        match self {
+            Event::Iteration { iter, .. }
+            | Event::Snapshot { iter }
+            | Event::CommandApplied { iter, .. }
+            | Event::CommandRejected { iter, .. }
+            | Event::Paused { iter }
+            | Event::Resumed { iter } => *iter,
+        }
+    }
+}
+
+/// Receives every [`Event`] a session emits. Implemented for closures,
+/// so `session.add_sink(Box::new(|e: &Event| ...))` works directly.
+pub trait EventSink {
+    fn on_event(&mut self, event: &Event);
+}
+
+impl<F: FnMut(&Event)> EventSink for F {
+    fn on_event(&mut self, event: &Event) {
+        self(event)
+    }
+}
+
+/// One recorded embedding frame.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Iteration at which the frame was taken.
+    pub iter: usize,
+    /// A copy of the embedding (N × ld_dim) at that iteration.
+    pub y: Matrix,
+}
+
+/// Bounded ring buffer of embedding snapshots: pushing beyond capacity
+/// drops the oldest frame.
+#[derive(Debug)]
+pub struct SnapshotBuffer {
+    cap: usize,
+    buf: VecDeque<Snapshot>,
+    recorded: u64,
+}
+
+impl SnapshotBuffer {
+    /// A buffer holding at most `capacity` frames (min 1).
+    pub fn new(capacity: usize) -> SnapshotBuffer {
+        let cap = capacity.max(1);
+        SnapshotBuffer { cap, buf: VecDeque::with_capacity(cap), recorded: 0 }
+    }
+
+    /// Record a frame, evicting the oldest if full.
+    pub fn push(&mut self, iter: usize, y: &Matrix) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(Snapshot { iter, y: y.clone() });
+        self.recorded += 1;
+    }
+
+    /// Most recent frame, if any.
+    pub fn latest(&self) -> Option<&Snapshot> {
+        self.buf.back()
+    }
+
+    /// Frames currently held, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &Snapshot> {
+        self.buf.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total frames ever recorded (including evicted ones).
+    pub fn total_recorded(&self) -> u64 {
+        self.recorded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_buffer_evicts_oldest() {
+        let mut b = SnapshotBuffer::new(3);
+        let y = Matrix::zeros(4, 2);
+        for it in 1..=5 {
+            b.push(it * 10, &y);
+        }
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.capacity(), 3);
+        assert_eq!(b.total_recorded(), 5);
+        let iters: Vec<usize> = b.iter().map(|s| s.iter).collect();
+        assert_eq!(iters, vec![30, 40, 50]);
+        assert_eq!(b.latest().unwrap().iter, 50);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut b = SnapshotBuffer::new(0);
+        let y = Matrix::zeros(2, 2);
+        b.push(1, &y);
+        b.push(2, &y);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.latest().unwrap().iter, 2);
+    }
+
+    #[test]
+    fn closures_are_sinks() {
+        let mut count = 0usize;
+        {
+            let mut sink = |_e: &Event| count += 1;
+            sink.on_event(&Event::Paused { iter: 0 });
+            sink.on_event(&Event::Resumed { iter: 1 });
+        }
+        assert_eq!(count, 2);
+    }
+}

@@ -1,0 +1,180 @@
+//! Multi-session ownership: many independent embeddings stepped
+//! round-robin — the first concrete move toward serving concurrent
+//! embedding sessions from one process.
+
+use super::{Command, Session, SessionBuilder};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Stable handle for a session owned by a [`SessionManager`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "session-{}", self.0)
+    }
+}
+
+/// Owns multiple independent [`Session`]s keyed by [`SessionId`] and
+/// steps them fairly ([`SessionManager::step_all`] runs one iteration
+/// per session per call, in id order).
+#[derive(Default)]
+pub struct SessionManager {
+    next_id: u64,
+    sessions: BTreeMap<u64, Session>,
+}
+
+impl SessionManager {
+    pub fn new() -> SessionManager {
+        SessionManager::default()
+    }
+
+    /// Take ownership of a session; returns its id.
+    pub fn add(&mut self, session: Session) -> SessionId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sessions.insert(id, session);
+        SessionId(id)
+    }
+
+    /// Build and register in one go.
+    pub fn create(&mut self, builder: SessionBuilder) -> Result<SessionId> {
+        Ok(self.add(builder.build()?))
+    }
+
+    pub fn get(&self, id: SessionId) -> Option<&Session> {
+        self.sessions.get(&id.0)
+    }
+
+    pub fn get_mut(&mut self, id: SessionId) -> Option<&mut Session> {
+        self.sessions.get_mut(&id.0)
+    }
+
+    /// Remove and return a session (e.g. when a client disconnects).
+    pub fn remove(&mut self, id: SessionId) -> Option<Session> {
+        self.sessions.remove(&id.0)
+    }
+
+    /// Ids of all live sessions, in step order.
+    pub fn ids(&self) -> Vec<SessionId> {
+        self.sessions.keys().copied().map(SessionId).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Queue a command on one session.
+    pub fn enqueue(&mut self, id: SessionId, command: Command) -> Result<()> {
+        match self.sessions.get_mut(&id.0) {
+            Some(s) => {
+                s.enqueue(command);
+                Ok(())
+            }
+            None => bail!("unknown session {id}"),
+        }
+    }
+
+    /// One round-robin sweep: each session drains its queue and runs
+    /// one iteration (paused sessions only drain). Returns how many
+    /// sessions actually stepped.
+    ///
+    /// Fault isolation: a session whose step errors is auto-paused (so
+    /// it stops erroring every sweep; resume it with
+    /// [`Command::Resume`] after fixing the cause) and the sweep
+    /// continues — one broken session never starves the others. The
+    /// error returned afterwards names every failed session.
+    pub fn step_all(&mut self) -> Result<usize> {
+        let mut stepped = 0usize;
+        let mut failures: Vec<String> = Vec::new();
+        for (id, session) in self.sessions.iter_mut() {
+            match session.step() {
+                Ok(true) => stepped += 1,
+                Ok(false) => {}
+                Err(e) => {
+                    session.enqueue(Command::Pause);
+                    session.drain_commands();
+                    failures.push(format!("{}: {e}", SessionId(*id)));
+                }
+            }
+        }
+        if !failures.is_empty() {
+            bail!(
+                "{} session(s) failed and were paused — {}",
+                failures.len(),
+                failures.join("; ")
+            );
+        }
+        Ok(stepped)
+    }
+
+    /// `rounds` interleaved sweeps of [`SessionManager::step_all`] —
+    /// sessions advance together, not one after the other.
+    pub fn run_all(&mut self, rounds: usize) -> Result<()> {
+        for _ in 0..rounds {
+            self.step_all()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::session::Session;
+
+    fn builder(seed: u64) -> SessionBuilder {
+        let ds = datasets::blobs(90, 5, 3, 0.5, 8.0, seed);
+        Session::builder()
+            .dataset(ds.x)
+            .k_hd(10)
+            .k_ld(6)
+            .perplexity(6.0)
+            .jumpstart_iters(3)
+            .seed(seed)
+    }
+
+    #[test]
+    fn ids_are_stable_and_removal_works() {
+        let mut mgr = SessionManager::new();
+        let a = mgr.create(builder(1)).unwrap();
+        let b = mgr.create(builder(2)).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(mgr.len(), 2);
+        assert!(mgr.remove(a).is_some());
+        assert!(mgr.get(a).is_none());
+        assert!(mgr.get(b).is_some());
+        let c = mgr.create(builder(3)).unwrap();
+        assert_ne!(c, b, "ids must not be recycled");
+        assert_eq!(mgr.ids(), vec![b, c]);
+    }
+
+    #[test]
+    fn step_all_advances_every_session_once() {
+        let mut mgr = SessionManager::new();
+        let a = mgr.create(builder(4)).unwrap();
+        let b = mgr.create(builder(5)).unwrap();
+        let stepped = mgr.step_all().unwrap();
+        assert_eq!(stepped, 2);
+        assert_eq!(mgr.get(a).unwrap().iterations(), 1);
+        assert_eq!(mgr.get(b).unwrap().iterations(), 1);
+        // Pause one: it stops counting as stepped.
+        mgr.enqueue(a, Command::Pause).unwrap();
+        let stepped = mgr.step_all().unwrap();
+        assert_eq!(stepped, 1);
+        assert_eq!(mgr.get(a).unwrap().iterations(), 1);
+        assert_eq!(mgr.get(b).unwrap().iterations(), 2);
+    }
+
+    #[test]
+    fn enqueue_unknown_session_errors() {
+        let mut mgr = SessionManager::new();
+        assert!(mgr.enqueue(SessionId(99), Command::Implode).is_err());
+    }
+}

@@ -1,0 +1,421 @@
+//! The session facade — the public API for running and *steering* an
+//! embedding.
+//!
+//! The paper's headline contribution is interactivity: any
+//! hyperparameter, including HD-side ones, can change between two
+//! iterations with instantaneous feedback. This module packages that
+//! capability behind one object:
+//!
+//! * [`SessionBuilder`] — fluent construction that owns backend
+//!   selection, optional PCA pre-reduction and config validation:
+//!   `Session::builder().dataset(x).ld_dim(2).perplexity(30.0).build()?`
+//! * [`Command`] — typed mid-run mutations, applied through a FIFO
+//!   queue drained **between** iterations ([`Session::enqueue`]), so
+//!   GUI/network frontends never reach into the step loop;
+//! * [`Event`] / [`EventSink`] / [`SnapshotBuffer`] — the outbound
+//!   stream: per-iteration telemetry from [`EngineStats`], command
+//!   outcomes, and ring-buffered embedding snapshots at a configurable
+//!   stride;
+//! * [`SessionManager`] — owns many independent sessions keyed by
+//!   [`SessionId`] and steps them round-robin ([`SessionManager::step_all`]),
+//!   the building block for serving concurrent embedding sessions.
+//!
+//! Threading model: [`Session`] is intentionally **not** `Send` —
+//! sinks and backends are plain trait objects (GUI callbacks hold
+//! `Rc`s; the PJRT client pins to a thread). A server shards sessions
+//! across one [`SessionManager`] per worker thread rather than
+//! migrating sessions between threads; cross-thread command routing
+//! belongs in a layer above this module.
+
+pub mod builder;
+pub mod command;
+pub mod event;
+pub mod manager;
+
+pub use builder::SessionBuilder;
+pub use command::Command;
+pub use event::{Event, EventSink, Snapshot, SnapshotBuffer};
+pub use manager::{SessionId, SessionManager};
+
+use crate::config::EmbedConfig;
+use crate::data::Matrix;
+use crate::engine::{ComputeBackend, EngineStats, FuncSne};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// A running embedding: engine + backend + command queue + event stream.
+pub struct Session {
+    engine: FuncSne,
+    backend: Box<dyn ComputeBackend>,
+    queue: VecDeque<Command>,
+    sinks: Vec<Box<dyn EventSink>>,
+    snapshots: SnapshotBuffer,
+    /// Record a snapshot every `snapshot_stride` iterations (0 = off).
+    snapshot_stride: usize,
+    paused: bool,
+    commands_applied: u64,
+    commands_rejected: u64,
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("n", &self.engine.n())
+            .field("iter", &self.engine.iter)
+            .field("backend", &self.backend.name())
+            .field("queued", &self.queue.len())
+            .field("paused", &self.paused)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Session {
+    /// Start building a session: `Session::builder().dataset(x)...`.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    pub(crate) fn from_parts(
+        engine: FuncSne,
+        backend: Box<dyn ComputeBackend>,
+        snapshot_stride: usize,
+        snapshot_capacity: usize,
+    ) -> Session {
+        Session {
+            engine,
+            backend,
+            queue: VecDeque::new(),
+            sinks: Vec::new(),
+            snapshots: SnapshotBuffer::new(snapshot_capacity),
+            snapshot_stride,
+            paused: false,
+            commands_applied: 0,
+            commands_rejected: 0,
+        }
+    }
+
+    // --- steering ------------------------------------------------------
+
+    /// Queue a command; it is applied (FIFO) before the next iteration.
+    pub fn enqueue(&mut self, command: Command) {
+        self.queue.push_back(command);
+    }
+
+    /// Commands waiting to be applied.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether the session is paused (commands still drain).
+    pub fn is_paused(&self) -> bool {
+        self.paused
+    }
+
+    /// Subscribe a sink to the event stream. Closures work directly:
+    /// `session.add_sink(Box::new(|e: &Event| println!("{e:?}")))`.
+    pub fn add_sink(&mut self, sink: Box<dyn EventSink>) {
+        self.sinks.push(sink);
+    }
+
+    // --- stepping ------------------------------------------------------
+
+    /// Drain the command queue, then run one engine iteration (unless
+    /// paused). Returns `true` if the engine actually stepped.
+    pub fn step(&mut self) -> Result<bool> {
+        self.drain_commands();
+        if self.paused {
+            return Ok(false);
+        }
+        self.engine.step(self.backend.as_mut())?;
+        let iter = self.engine.iter;
+        let stats = self.engine.stats.clone();
+        self.emit(Event::Iteration { iter, stats });
+        if self.snapshot_stride > 0 && iter % self.snapshot_stride == 0 {
+            self.snapshots.push(iter, &self.engine.y);
+            self.emit(Event::Snapshot { iter });
+        }
+        Ok(true)
+    }
+
+    /// Run `iters` steps (paused steps drain commands but don't iterate).
+    pub fn run(&mut self, iters: usize) -> Result<()> {
+        for _ in 0..iters {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Run the `n_iters` configured at build time.
+    pub fn run_configured(&mut self) -> Result<()> {
+        let iters = self.engine.cfg.n_iters;
+        self.run(iters)
+    }
+
+    /// Apply every queued command now, FIFO. Invalid commands are
+    /// dropped with a [`Event::CommandRejected`]; returns the number
+    /// applied.
+    pub fn drain_commands(&mut self) -> usize {
+        let mut applied = 0usize;
+        while let Some(cmd) = self.queue.pop_front() {
+            let description = cmd.describe();
+            let iter = self.engine.iter;
+            match self.apply(cmd) {
+                Ok(Some(event)) => {
+                    applied += 1;
+                    self.commands_applied += 1;
+                    self.emit(event);
+                }
+                Ok(None) => {
+                    applied += 1;
+                    self.commands_applied += 1;
+                    self.emit(Event::CommandApplied { iter, description });
+                }
+                Err(reason) => {
+                    self.commands_rejected += 1;
+                    self.emit(Event::CommandRejected { iter, description, reason });
+                }
+            }
+        }
+        applied
+    }
+
+    /// Apply one command. `Ok(Some(event))` overrides the default
+    /// [`Event::CommandApplied`] emission.
+    fn apply(&mut self, cmd: Command) -> std::result::Result<Option<Event>, String> {
+        let iter = self.engine.iter;
+        match cmd {
+            Command::SetAlpha(a) => {
+                if !a.is_finite() || a <= 0.0 {
+                    return Err(format!("alpha must be finite and > 0 (got {a})"));
+                }
+                self.engine.set_alpha(a);
+            }
+            Command::SetPerplexity(p) => {
+                if !p.is_finite() || p < 2.0 {
+                    return Err(format!("perplexity must be >= 2 (got {p})"));
+                }
+                self.engine.set_perplexity(p);
+            }
+            Command::SetAttraction(a) => {
+                if !a.is_finite() || a < 0.0 {
+                    return Err(format!("attraction must be >= 0 (got {a})"));
+                }
+                self.engine.set_attraction(a);
+            }
+            Command::SetRepulsion(r) => {
+                if !r.is_finite() || r < 0.0 {
+                    return Err(format!("repulsion must be >= 0 (got {r})"));
+                }
+                self.engine.set_repulsion(r);
+            }
+            Command::SetRoutes(routes) => {
+                if !routes.same_space && !routes.cross_space && !routes.random {
+                    return Err("at least one candidate route must stay enabled".to_string());
+                }
+                self.engine.set_candidate_routes(routes);
+            }
+            Command::InsertPoints(m) => {
+                if m.d() != self.engine.x.d() {
+                    return Err(format!(
+                        "insert dim {} != data dim {}",
+                        m.d(),
+                        self.engine.x.d()
+                    ));
+                }
+                for r in 0..m.n() {
+                    self.engine.insert_point(m.row(r));
+                }
+            }
+            Command::RemovePoint(i) => {
+                let n = self.engine.n();
+                if i >= n {
+                    return Err(format!("remove index {i} out of range (n = {n})"));
+                }
+                if n <= 4 {
+                    return Err(format!("cannot remove below 4 points (n = {n})"));
+                }
+                self.engine.remove_point(i);
+            }
+            Command::MovePoint(i, row) => {
+                if i >= self.engine.n() {
+                    return Err(format!(
+                        "move index {i} out of range (n = {})",
+                        self.engine.n()
+                    ));
+                }
+                if row.len() != self.engine.x.d() {
+                    return Err(format!(
+                        "move row dim {} != data dim {}",
+                        row.len(),
+                        self.engine.x.d()
+                    ));
+                }
+                self.engine.move_point(i, &row);
+            }
+            Command::Implode => self.engine.implode(),
+            Command::Pause => {
+                self.paused = true;
+                return Ok(Some(Event::Paused { iter }));
+            }
+            Command::Resume => {
+                self.paused = false;
+                return Ok(Some(Event::Resumed { iter }));
+            }
+        }
+        Ok(None)
+    }
+
+    fn emit(&mut self, event: Event) {
+        for sink in &mut self.sinks {
+            sink.on_event(&event);
+        }
+    }
+
+    // --- read access ---------------------------------------------------
+
+    /// The current embedding (N × ld_dim).
+    pub fn embedding(&self) -> &Matrix {
+        self.engine.embedding()
+    }
+
+    /// Engine telemetry counters.
+    pub fn stats(&self) -> &EngineStats {
+        &self.engine.stats
+    }
+
+    /// Iterations completed.
+    pub fn iterations(&self) -> usize {
+        self.engine.iter
+    }
+
+    /// Current number of points.
+    pub fn n(&self) -> usize {
+        self.engine.n()
+    }
+
+    /// The active configuration (reflects applied commands).
+    pub fn config(&self) -> &EmbedConfig {
+        &self.engine.cfg
+    }
+
+    /// Read-only engine access (metrics, KNN tables, figures).
+    pub fn engine(&self) -> &FuncSne {
+        &self.engine
+    }
+
+    /// The force backend's name (`"native"` / `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Recorded embedding snapshots.
+    pub fn snapshots(&self) -> &SnapshotBuffer {
+        &self.snapshots
+    }
+
+    /// Commands applied / rejected so far.
+    pub fn command_counts(&self) -> (u64, u64) {
+        (self.commands_applied, self.commands_rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    fn small_session(seed: u64) -> Session {
+        let ds = datasets::blobs(120, 6, 3, 0.5, 8.0, seed);
+        Session::builder()
+            .dataset(ds.x)
+            .k_hd(12)
+            .k_ld(8)
+            .perplexity(8.0)
+            .n_neg(6)
+            .jumpstart_iters(5)
+            .early_exag_iters(10)
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn commands_change_config_between_iterations() {
+        let mut s = small_session(1);
+        s.run(10).unwrap();
+        s.enqueue(Command::SetAlpha(0.5));
+        s.enqueue(Command::SetAttraction(2.0));
+        assert_eq!(s.config().alpha, 1.0, "commands must not apply before a step");
+        s.run(1).unwrap();
+        assert_eq!(s.config().alpha, 0.5);
+        assert_eq!(s.config().attraction, 2.0);
+        let (applied, rejected) = s.command_counts();
+        assert_eq!((applied, rejected), (2, 0));
+    }
+
+    #[test]
+    fn pause_and_resume_gate_stepping() {
+        let mut s = small_session(2);
+        s.run(5).unwrap();
+        s.enqueue(Command::Pause);
+        s.run(5).unwrap();
+        assert_eq!(s.iterations(), 5, "paused session must not iterate");
+        assert!(s.is_paused());
+        s.enqueue(Command::Resume);
+        s.run(3).unwrap();
+        assert_eq!(s.iterations(), 8);
+    }
+
+    #[test]
+    fn invalid_commands_are_rejected_not_fatal() {
+        let mut s = small_session(3);
+        s.run(2).unwrap();
+        s.enqueue(Command::SetPerplexity(0.5)); // < 2 → rejected
+        s.enqueue(Command::RemovePoint(10_000)); // out of range
+        s.enqueue(Command::SetAlpha(0.7)); // fine
+        s.run(1).unwrap();
+        let (applied, rejected) = s.command_counts();
+        assert_eq!((applied, rejected), (1, 2));
+        assert_eq!(s.config().alpha, 0.7);
+        assert_eq!(s.n(), 120);
+    }
+
+    #[test]
+    fn snapshots_record_at_stride() {
+        let ds = datasets::blobs(80, 5, 2, 0.5, 8.0, 4);
+        let mut s = Session::builder()
+            .dataset(ds.x)
+            .k_hd(10)
+            .k_ld(6)
+            .perplexity(6.0)
+            .jumpstart_iters(0)
+            .snapshot_stride(5)
+            .snapshot_capacity(3)
+            .build()
+            .unwrap();
+        s.run(22).unwrap();
+        assert_eq!(s.snapshots().total_recorded(), 4); // iters 5,10,15,20
+        assert_eq!(s.snapshots().len(), 3); // ring evicted iter-5
+        assert_eq!(s.snapshots().latest().unwrap().iter, 20);
+        assert_eq!(s.snapshots().latest().unwrap().y.n(), 80);
+    }
+
+    #[test]
+    fn sinks_observe_iterations_and_commands() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let events: Rc<RefCell<Vec<Event>>> = Rc::new(RefCell::new(Vec::new()));
+        let tap = Rc::clone(&events);
+        let mut s = small_session(5);
+        s.add_sink(Box::new(move |e: &Event| tap.borrow_mut().push(e.clone())));
+        s.enqueue(Command::SetRepulsion(1.5));
+        s.run(3).unwrap();
+        let ev = events.borrow();
+        let iters = ev.iter().filter(|e| matches!(e, Event::Iteration { .. })).count();
+        let applied = ev.iter().filter(|e| matches!(e, Event::CommandApplied { .. })).count();
+        assert_eq!(iters, 3);
+        assert_eq!(applied, 1);
+        // The command event precedes the iteration it lands before.
+        assert!(matches!(ev[0], Event::CommandApplied { .. }));
+    }
+}

@@ -1,11 +1,12 @@
 //! Integration: dynamic-dataset behaviour — the embedding must absorb
 //! inserts/removals/drifts and still represent the *current* data well.
+//! All mutations go through the session command queue (the public
+//! mutation path; the raw engine mutators are crate-private).
 
 use funcsne::config::EmbedConfig;
 use funcsne::data::datasets;
-use funcsne::engine::FuncSne;
-use funcsne::ld::NativeBackend;
 use funcsne::metrics::rnx_auc;
+use funcsne::session::{Command, Session};
 
 fn cfg(n: usize) -> EmbedConfig {
     EmbedConfig {
@@ -19,6 +20,11 @@ fn cfg(n: usize) -> EmbedConfig {
     }
 }
 
+fn session_over(x: funcsne::data::Matrix) -> Session {
+    let n = x.n();
+    Session::builder().dataset(x).config(cfg(n)).build().unwrap()
+}
+
 #[test]
 fn inserted_cluster_lands_near_itself() {
     // Train on 3 clusters, then stream in a 4th; after absorption its
@@ -27,20 +33,18 @@ fn inserted_cluster_lands_near_itself() {
     let keep: Vec<usize> = (0..all.n()).filter(|&i| all.labels[i] < 3).collect();
     let new: Vec<usize> = (0..all.n()).filter(|&i| all.labels[i] == 3).take(60).collect();
     let x0 = all.x.take_rows(&keep[..600]);
-    let mut engine = FuncSne::new(x0, cfg(600)).unwrap();
-    let mut backend = NativeBackend::new();
-    engine.run(350, &mut backend).unwrap();
-    let base_n = engine.n();
-    for &i in &new {
-        engine.insert_point(all.x.row(i));
-    }
-    engine.run(250, &mut backend).unwrap();
+    let mut session = session_over(x0);
+    session.run(350).unwrap();
+    let base_n = session.n();
+    session.enqueue(Command::InsertPoints(all.x.take_rows(&new)));
+    session.run(250).unwrap();
+    assert_eq!(session.n(), base_n + new.len());
     // Mean LD distance within the new cluster vs to the rest.
-    let y = engine.embedding();
+    let y = session.embedding();
     let mut intra = Vec::new();
     let mut inter = Vec::new();
-    for a in base_n..engine.n() {
-        for b in (a + 1)..engine.n() {
+    for a in base_n..session.n() {
+        for b in (a + 1)..session.n() {
             intra.push((y.sqdist(a, b) as f64).sqrt());
         }
         for b in (0..base_n).step_by(13) {
@@ -58,26 +62,30 @@ fn inserted_cluster_lands_near_itself() {
 #[test]
 fn removal_keeps_quality() {
     let ds = datasets::blobs(600, 12, 3, 0.4, 14.0, 2);
-    let mut engine = FuncSne::new(ds.x.clone(), cfg(600)).unwrap();
-    let mut backend = NativeBackend::new();
-    engine.run(300, &mut backend).unwrap();
-    // Remove 150 random points.
+    let mut session = session_over(ds.x.clone());
+    session.run(300).unwrap();
+    // Remove 150 random points (drain between iterations, one per step
+    // so the sampled index is always in range at apply time).
     let mut rng = funcsne::util::Rng::new(3);
-    for _ in 0..150 {
-        let i = rng.below(engine.n());
-        engine.remove_point(i);
+    for k in 0..150 {
+        let i = rng.below(600 - k);
+        session.enqueue(Command::RemovePoint(i));
+        session.run(1).unwrap();
     }
-    engine.run(150, &mut backend).unwrap();
-    assert_eq!(engine.n(), 450);
-    let auc = rnx_auc(&engine.x, engine.embedding(), 30);
+    session.run(149).unwrap();
+    assert_eq!(session.n(), 450);
+    let (_, rejected) = session.command_counts();
+    assert_eq!(rejected, 0, "all removals must be valid");
+    let engine = session.engine();
+    let auc = rnx_auc(&engine.x, session.embedding(), 30);
     assert!(auc > 0.2, "post-removal quality collapsed: AUC {auc}");
     // No dangling references.
-    for i in 0..engine.n() {
+    for i in 0..session.n() {
         for &j in engine.knn.hd.neighbors(i) {
-            assert!((j as usize) < engine.n());
+            assert!((j as usize) < session.n());
         }
         for &j in engine.knn.ld.neighbors(i) {
-            assert!((j as usize) < engine.n());
+            assert!((j as usize) < session.n());
         }
     }
 }
@@ -89,9 +97,8 @@ fn drifting_point_follows_its_new_cluster() {
     // coordinates while the optimisation keeps running; the embedding
     // must carry it across.
     let ds = datasets::blobs(400, 8, 2, 0.3, 20.0, 4);
-    let mut engine = FuncSne::new(ds.x.clone(), cfg(400)).unwrap();
-    let mut backend = NativeBackend::new();
-    engine.run(400, &mut backend).unwrap();
+    let mut session = session_over(ds.x.clone());
+    session.run(400).unwrap();
     let a = (0..400).find(|&i| ds.labels[i] == 0).unwrap();
     let b = (0..400).find(|&i| ds.labels[i] == 1).unwrap();
     let start: Vec<f32> = ds.x.row(a).to_vec();
@@ -100,11 +107,11 @@ fn drifting_point_follows_its_new_cluster() {
         let t = step as f32 / 10.0;
         let row: Vec<f32> =
             start.iter().zip(&target).map(|(s, e)| s + t * (e - s)).collect();
-        engine.move_point(a, &row);
-        engine.run(80, &mut backend).unwrap();
+        session.enqueue(Command::MovePoint(a, row));
+        session.run(80).unwrap();
     }
-    engine.run(200, &mut backend).unwrap();
-    let y = engine.embedding();
+    session.run(200).unwrap();
+    let y = session.embedding();
     let d_new = (y.sqdist(a, b) as f64).sqrt();
     // Distance to an arbitrary cluster-0 point it used to sit with:
     let c = (0..400).find(|&i| ds.labels[i] == 0 && i != a).unwrap();

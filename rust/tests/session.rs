@@ -1,0 +1,171 @@
+//! Integration: the session facade — command-queue ordering guarantees,
+//! builder validation, event stream, and multi-session management.
+
+use funcsne::data::datasets;
+use funcsne::session::{Command, Event, Session, SessionManager};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn builder_for(n: usize, seed: u64) -> funcsne::session::SessionBuilder {
+    let ds = datasets::blobs(n, 6, 3, 0.5, 10.0, seed);
+    Session::builder()
+        .dataset(ds.x)
+        .k_hd(12)
+        .k_ld(8)
+        .perplexity(8.0)
+        .n_neg(6)
+        .jumpstart_iters(5)
+        .early_exag_iters(10)
+        .seed(seed)
+}
+
+#[test]
+fn commands_drain_fifo_before_the_next_iteration() {
+    let events: Rc<RefCell<Vec<Event>>> = Rc::new(RefCell::new(Vec::new()));
+    let tap = Rc::clone(&events);
+    let mut s = builder_for(120, 1).build().unwrap();
+    s.add_sink(Box::new(move |e: &Event| tap.borrow_mut().push(e.clone())));
+    s.run(3).unwrap();
+    // Conflicting writes: FIFO means the *last* enqueued value wins.
+    s.enqueue(Command::SetAlpha(0.3));
+    s.enqueue(Command::SetAttraction(2.0));
+    s.enqueue(Command::SetAlpha(0.8));
+    s.run(1).unwrap();
+    assert_eq!(s.config().alpha, 0.8, "later command must overwrite earlier (FIFO)");
+    assert_eq!(s.config().attraction, 2.0);
+
+    let ev = events.borrow();
+    // The three CommandApplied events appear in enqueue order and all
+    // precede the Iteration event of the step that drained them.
+    let descriptions: Vec<(usize, String)> = ev
+        .iter()
+        .enumerate()
+        .filter_map(|(pos, e)| match e {
+            Event::CommandApplied { description, .. } => Some((pos, description.clone())),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(descriptions.len(), 3);
+    assert!(descriptions[0].1.contains("set_alpha(0.3)"));
+    assert!(descriptions[1].1.contains("set_attraction(2)"));
+    assert!(descriptions[2].1.contains("set_alpha(0.8)"));
+    let fourth_iteration_pos = ev
+        .iter()
+        .position(|e| matches!(e, Event::Iteration { iter, .. } if *iter == 4))
+        .expect("iteration 4 must be emitted");
+    for (pos, _) in &descriptions {
+        assert!(
+            *pos < fourth_iteration_pos,
+            "command events must precede the iteration that follows the drain"
+        );
+    }
+    // All command events carry the pre-step iteration count (3).
+    for e in ev.iter() {
+        if let Event::CommandApplied { iter, .. } = e {
+            assert_eq!(*iter, 3);
+        }
+    }
+}
+
+#[test]
+fn insert_then_remove_in_one_batch_sees_inserted_points() {
+    let extra = datasets::blobs(10, 6, 2, 0.5, 8.0, 99);
+    let mut s = builder_for(100, 2).build().unwrap();
+    s.run(20).unwrap();
+    assert_eq!(s.n(), 100);
+    // One batch: grow to 110, then remove an index that is only valid
+    // *after* the insert has been applied — FIFO makes it valid.
+    s.enqueue(Command::InsertPoints(extra.x.clone()));
+    s.enqueue(Command::RemovePoint(105));
+    s.run(1).unwrap();
+    assert_eq!(s.n(), 109);
+    let (applied, rejected) = s.command_counts();
+    assert_eq!((applied, rejected), (2, 0));
+    // Reversed order in a fresh batch: the removal of a not-yet-valid
+    // index must be rejected, the insert still applies.
+    s.enqueue(Command::RemovePoint(115));
+    s.enqueue(Command::InsertPoints(extra.x.clone()));
+    s.run(1).unwrap();
+    assert_eq!(s.n(), 119);
+    let (applied, rejected) = s.command_counts();
+    assert_eq!((applied, rejected), (3, 1));
+    // The embedding keeps optimising and stays finite after dynamics.
+    s.run(30).unwrap();
+    assert!(s.embedding().data().iter().all(|v| v.is_finite()));
+    for i in 0..s.n() {
+        for &j in s.engine().knn.hd.neighbors(i) {
+            assert!((j as usize) < s.n(), "stale neighbour {j}");
+        }
+    }
+}
+
+#[test]
+fn builder_validation_errors() {
+    let ds = datasets::blobs(100, 6, 2, 0.5, 8.0, 3);
+    // Bad ld_dim.
+    let err = Session::builder().dataset(ds.x.clone()).ld_dim(0).build().unwrap_err();
+    assert!(format!("{err:?}").contains("ld_dim"), "{err:?}");
+    // ld_dim beyond the native fast-path bound.
+    let err = Session::builder().dataset(ds.x.clone()).ld_dim(65).build().unwrap_err();
+    assert!(format!("{err:?}").contains("ld_dim"), "{err:?}");
+    // Perplexity below 2.
+    let err = Session::builder()
+        .dataset(ds.x.clone())
+        .perplexity(1.5)
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:?}").contains("perplexity"), "{err:?}");
+    // Unknown backend name.
+    let err = Session::builder()
+        .dataset(ds.x.clone())
+        .backend_name("tpu9000")
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:?}").contains("backend"), "{err:?}");
+    // Missing dataset.
+    let err = Session::builder().build().unwrap_err();
+    assert!(format!("{err:?}").contains("dataset"), "{err:?}");
+}
+
+#[test]
+fn manager_steps_three_concurrent_sessions_to_finite_embeddings() {
+    let mut mgr = SessionManager::new();
+    // Three independent sessions with different data, dims and tails.
+    let a = mgr.create(builder_for(150, 10).ld_dim(2).alpha(1.0)).unwrap();
+    let b = mgr.create(builder_for(120, 11).ld_dim(3).alpha(0.6)).unwrap();
+    let c = mgr
+        .create(builder_for(90, 12).ld_dim(4).alpha(1.4).perplexity(6.0))
+        .unwrap();
+    assert_eq!(mgr.len(), 3);
+
+    // Round-robin: every sweep advances each session exactly once.
+    mgr.run_all(120).unwrap();
+    for (id, ld_dim) in [(a, 2), (b, 3), (c, 4)] {
+        let s = mgr.get(id).unwrap();
+        assert_eq!(s.iterations(), 120, "{id} fell behind the round-robin");
+        assert_eq!(s.embedding().d(), ld_dim);
+        assert!(
+            s.embedding().data().iter().all(|v| v.is_finite()),
+            "{id} diverged"
+        );
+    }
+
+    // Steer one session mid-flight without touching the others.
+    mgr.enqueue(b, Command::SetAlpha(0.4)).unwrap();
+    mgr.enqueue(b, Command::Implode).unwrap();
+    mgr.run_all(80).unwrap();
+    assert_eq!(mgr.get(a).unwrap().config().alpha, 1.0);
+    assert_eq!(mgr.get(b).unwrap().config().alpha, 0.4);
+    assert!(mgr.get(b).unwrap().stats().implosions >= 1);
+    for id in [a, b, c] {
+        let s = mgr.get(id).unwrap();
+        assert_eq!(s.iterations(), 200);
+        assert!(s.embedding().data().iter().all(|v| v.is_finite()));
+    }
+
+    // Dropping one session leaves the rest running.
+    assert!(mgr.remove(b).is_some());
+    mgr.run_all(10).unwrap();
+    assert_eq!(mgr.get(a).unwrap().iterations(), 210);
+    assert_eq!(mgr.get(c).unwrap().iterations(), 210);
+}

@@ -1,0 +1,136 @@
+//! Offline **stub** of the `xla` PJRT binding.
+//!
+//! The real crate links the PJRT C API and executes AOT-compiled HLO.
+//! This stub presents the same API surface used by
+//! `rust/src/runtime/pjrt.rs` but [`PjRtClient::cpu`] always fails, so
+//! every PJRT code path degrades to the same graceful fallback as a
+//! missing `artifacts/` directory (the CLI and examples then use the
+//! native backend). Swap this path dependency for the real vendored
+//! binding to enable the hot path; no call-site changes are needed.
+//!
+//! Types that can only be produced *through* a client (executables,
+//! buffers, computations) are uninhabited enums: the methods on them
+//! typecheck but are statically unreachable in the stub.
+
+/// Error type mirroring the binding's debug-printable error.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "xla stub: PJRT is unavailable in this offline build — swap vendor/xla \
+         for the real binding (or use --backend native)"
+            .to_string(),
+    )
+}
+
+/// Element types accepted by [`Literal::create_from_shape_and_untyped_data`].
+#[derive(Clone, Copy, Debug)]
+pub enum ElementType {
+    F32,
+}
+
+/// Host literal. Uninhabited in the stub (creation always fails).
+pub enum Literal {}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        match self {}
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        match self {}
+    }
+
+    pub fn copy_raw_to(&self, _out: &mut [f32]) -> Result<()> {
+        match *self {}
+    }
+}
+
+/// Parsed HLO module. Uninhabited in the stub (parsing always fails).
+pub enum HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// A computation ready for compilation.
+pub enum XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match *proto {}
+    }
+}
+
+/// Device buffer returned by execution.
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match *self {}
+    }
+}
+
+/// Compiled executable.
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match *self {}
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// In the real binding this opens the CPU PJRT plugin; the stub
+    /// always reports unavailability.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match *computation {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_creation_fails_gracefully() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0; 16])
+            .is_err());
+    }
+}
