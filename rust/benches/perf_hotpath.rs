@@ -1,8 +1,9 @@
 //! §Perf micro/meso benchmarks of the hot paths, across backends.
 //!
 //! Reports (median of repeated runs):
-//!   * force pass per iteration — native vs PJRT, at several (N, d);
-//!   * sqdist candidate scoring — native vs PJRT, at several (T, M);
+//!   * force pass per iteration — native vs parallel (1/2/4/8 shards)
+//!     vs PJRT, at several (N, d), with speedup over sequential native;
+//!   * sqdist candidate scoring — native vs parallel vs PJRT;
 //!   * full engine iteration breakdown (refine LD / refine HD / forces /
 //!     update) on the native path;
 //!   * point-updates per second (the headline interactivity number).
@@ -17,7 +18,7 @@ use funcsne::engine::{ComputeBackend, FuncSne, NegSamples};
 use funcsne::hd::Affinities;
 use funcsne::knn::brute::brute_knn;
 use funcsne::knn::iterative::IterativeKnn;
-use funcsne::ld::NativeBackend;
+use funcsne::ld::{NativeBackend, ParallelBackend};
 use funcsne::util::timer::bench_fn;
 use funcsne::util::{Rng, Stopwatch};
 
@@ -63,6 +64,23 @@ fn main() {
                 stats.median_s * 1e3,
                 pts_per_s
             );
+            let native_median = stats.median_s;
+            // Sharded backend at 1/2/4/8 shards: same inputs, results
+            // bitwise-identical to native — only wall-clock may differ.
+            for &threads in &[1usize, 2, 4, 8] {
+                let mut par = ParallelBackend::new(threads);
+                let stats = bench_fn(1, if full { 7 } else { 5 }, || {
+                    par.forces(&y, &knn, &aff, &neg, 1.0, far_scale, &mut attr, &mut rep)
+                        .unwrap()
+                });
+                println!(
+                    "forces par x{threads}  n={n:>6} d={d}: {:>9.3} ms/pass  \
+                     ({:.2e} point-updates/s, {:.2}x vs native)",
+                    stats.median_s * 1e3,
+                    n as f64 / stats.median_s,
+                    native_median / stats.median_s
+                );
+            }
             if have_pjrt {
                 let mut pjrt = PjrtBackend::new(&default_artifact_dir()).unwrap();
                 pjrt.warmup(32, 16, 8, d, 16).unwrap();
@@ -80,7 +98,9 @@ fn main() {
     }
 
     // ---- sqdist scoring --------------------------------------------------
-    for &(pairs, m) in &[(8192usize, 32usize), (8192, 128)] {
+    // 8192 pairs sits at the parallel backend's min-pairs-per-shard
+    // floor (runs on one shard); 65536 fans out across all workers.
+    for &(pairs, m) in &[(8192usize, 32usize), (8192, 128), (65536, 32)] {
         let ds = datasets::blobs(4096, m, 8, 1.0, 16.0, 3);
         let mut rng = Rng::new(4);
         let owners: Vec<u32> = (0..pairs).map(|_| rng.below(4096) as u32).collect();
@@ -95,6 +115,20 @@ fn main() {
             s.median_s * 1e3,
             pairs as f64 / s.median_s
         );
+        let native_median = s.median_s;
+        for &threads in &[2usize, 4, 8] {
+            let mut par = ParallelBackend::new(threads);
+            let s = bench_fn(1, 7, || {
+                par.sqdist_batch(&ds.x, &owners, &cands, &mut out).unwrap()
+            });
+            println!(
+                "sqdist par x{threads}  T={pairs} M={m:>4}: {:>9.3} ms  \
+                 ({:.2e} pairs/s, {:.2}x vs native)",
+                s.median_s * 1e3,
+                pairs as f64 / s.median_s,
+                native_median / s.median_s
+            );
+        }
         if have_pjrt {
             let mut pjrt = PjrtBackend::new(&default_artifact_dir()).unwrap();
             let s = bench_fn(1, 7, || {
@@ -131,6 +165,29 @@ fn main() {
             n as f64 / per_iter,
             engine.stats.hd_refines,
             engine.stats.iters,
+        );
+    }
+    // ---- full iteration on the sharded backend (4 workers) --------------
+    for &n in sizes {
+        let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 5);
+        let cfg = EmbedConfig {
+            n_iters: 0,
+            jumpstart_iters: 0,
+            early_exag_iters: 0,
+            threads: 4,
+            ..EmbedConfig::default()
+        };
+        let mut engine = FuncSne::new(ds.x, cfg).unwrap();
+        let mut backend = ParallelBackend::new(4);
+        engine.run(20, &mut backend).unwrap();
+        let iters = if full { 100 } else { 40 };
+        let sw = Stopwatch::new();
+        engine.run(iters, &mut backend).unwrap();
+        let per_iter = sw.elapsed_s() / iters as f64;
+        println!(
+            "engine par x4 n={n:>6}: {:>9.3} ms/iter  ({:.2e} point-updates/s)",
+            per_iter * 1e3,
+            n as f64 / per_iter,
         );
     }
     // ---- exact-KNN ground truth is the benchmark's own cost; note it ---

@@ -8,9 +8,7 @@
 
 use crate::config::toml_lite::{parse_value, Value};
 use crate::config::{EmbedConfig, KnnConfig};
-use crate::coordinator::driver::{
-    dataset_by_name, default_artifact_dir, maybe_pca_reduce, run_embedding,
-};
+use crate::coordinator::driver::{dataset_by_name, default_artifact_dir, run_embedding};
 use crate::data::datasets::Dataset;
 use crate::figures::common::Scale;
 use crate::knn::brute::brute_knn;
@@ -120,6 +118,10 @@ USAGE: funcsne <subcommand> [--key value]...
 SUBCOMMANDS
   embed      run an embedding           --dataset NAME --n N [--alpha A]
              [--ld-dim D] [--n-iters I] [--perplexity P] [--backend native|pjrt]
+             [--threads T]  compute-backend worker threads (0 = auto-detect;
+                            T > 1 shards the native force/scoring passes with
+                            bitwise-identical results; default env
+                            FUNCSNE_THREADS or 1)
              [--attraction X] [--repulsion X] [--seed S] [--out results/embed]
   knn        compare KNN finders        --dataset NAME --n N [--k K] [--iters I]
   figure     regenerate paper figures   [--only fig1..fig11|table1|table2] [--full]
@@ -167,22 +169,25 @@ fn cmd_embed(args: &Args) -> Result<()> {
     cfg.attraction = args.get_f64("attraction", cfg.attraction)?;
     cfg.repulsion = args.get_f64("repulsion", cfg.repulsion)?;
     cfg.lr = args.get_f64("lr", cfg.lr)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.k_hd = args.get_usize("k_hd", cfg.k_hd)?.min(ds.n() - 1);
     cfg.k_ld = args.get_usize("k_ld", cfg.k_ld)?.min(ds.n() - 1);
     cfg.perplexity = cfg.perplexity.min(cfg.k_hd as f64);
-    let x = maybe_pca_reduce(ds.x.clone(), 64, cfg.seed);
     println!(
-        "embedding {} (n={}, d={} → {}), α={}, backend {:?}",
+        "embedding {} (n={}, d={} → {}), α={}, backend {:?}, threads {}",
         ds.name,
         ds.n(),
         ds.d(),
         cfg.ld_dim,
         cfg.alpha,
-        cfg.backend
+        cfg.backend,
+        cfg.resolved_threads()
     );
     // `run_embedding` is a thin wrapper over the session facade; the
-    // report hands the session back for inspection.
-    let report = run_embedding(x, &cfg, &default_artifact_dir())?;
+    // report hands the session back for inspection. PCA pre-reduction
+    // of wide data goes through the builder so the session retains the
+    // fitted basis (dynamic commands keep accepting original-dim rows).
+    let report = run_embedding(ds.x.clone(), &cfg, &default_artifact_dir(), Some(64))?;
     let y = report.session.embedding();
     println!(
         "done in {:.2}s ({:.1} iters/s, {} HD refreshes, {} σ recalibrations)",
@@ -287,6 +292,10 @@ fn cmd_hierarchy(args: &Args) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
+    println!(
+        "hardware threads: {} (use --threads 0 to auto-detect, --threads T to pin)",
+        crate::runtime::pool::available_threads()
+    );
     println!("artifact dir: {:?}", default_artifact_dir());
     match crate::runtime::Manifest::load(&default_artifact_dir()) {
         Ok(m) => {

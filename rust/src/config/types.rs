@@ -91,6 +91,20 @@ pub struct EmbedConfig {
     pub seed: u64,
     /// σ_i recalibration cadence (iterations between flag sweeps).
     pub recalibrate_every: usize,
+    /// Worker threads for the native compute path. `1` runs the
+    /// sequential [`crate::ld::NativeBackend`]; `> 1` selects the
+    /// sharded [`crate::ld::ParallelBackend`] (bitwise-identical
+    /// results); `0` auto-detects the machine's parallelism. The
+    /// default honours the `FUNCSNE_THREADS` environment variable
+    /// (falling back to 1), which is how the CI matrix runs the whole
+    /// test suite under both backends.
+    pub threads: usize,
+}
+
+/// Default worker-thread count: `FUNCSNE_THREADS` if set and parseable,
+/// else 1 (sequential).
+fn default_threads() -> usize {
+    std::env::var("FUNCSNE_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
 }
 
 impl Default for EmbedConfig {
@@ -119,6 +133,7 @@ impl Default for EmbedConfig {
             backend: Backend::Native,
             seed: 42,
             recalibrate_every: 10,
+            threads: default_threads(),
         }
     }
 }
@@ -160,7 +175,20 @@ impl EmbedConfig {
         if self.implosion_factor <= 0.0 || self.implosion_factor >= 1.0 {
             bail!("implosion_factor must be in (0,1)");
         }
+        if self.threads > 4096 {
+            bail!("threads must be <= 4096 (0 = auto-detect; got {})", self.threads);
+        }
         Ok(())
+    }
+
+    /// The worker-thread count with `0` (auto) resolved against the
+    /// machine's available parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::runtime::pool::available_threads()
+        } else {
+            self.threads
+        }
     }
 
     /// Apply `section.key` overrides from a parsed TOML-subset map.
@@ -211,6 +239,7 @@ impl EmbedConfig {
             "implosion_radius" => f64_field!(implosion_radius),
             "implosion_factor" => f64_field!(implosion_factor),
             "recalibrate_every" => usize_field!(recalibrate_every),
+            "threads" => usize_field!(threads),
             "seed" => {
                 self.seed = val.as_i64().context("expected integer")? as u64;
             }
@@ -330,6 +359,20 @@ mod tests {
         let mut cfg = EmbedConfig::default();
         let v = Value::Int(1);
         assert!(cfg.set("does_not_exist", &v).is_err());
+    }
+
+    #[test]
+    fn threads_knob_parses_and_resolves() {
+        let map = toml_lite::parse("[embed]\nthreads = 4\n").unwrap();
+        let mut cfg = EmbedConfig::default();
+        cfg.apply(&map, "embed").unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.resolved_threads(), 4);
+        cfg.threads = 0; // auto
+        cfg.validate().unwrap();
+        assert!(cfg.resolved_threads() >= 1);
+        cfg.threads = 5000;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@ use crate::config::{Backend, EmbedConfig};
 use crate::data::datasets::{self, Dataset};
 use crate::data::Matrix;
 use crate::engine::ComputeBackend;
-use crate::ld::NativeBackend;
+use crate::ld::{NativeBackend, ParallelBackend};
 use crate::linalg::Pca;
 use crate::session::Session;
 use crate::util::Stopwatch;
@@ -47,14 +47,24 @@ pub fn dataset_by_name(name: &str, n: usize, seed: u64) -> Result<Dataset> {
 }
 
 /// Build the configured compute backend. For PJRT the executables the
-/// run needs are compiled up front (`warmup`).
+/// run needs are compiled up front (`warmup`). On the native path the
+/// `threads` knob selects between the sequential reference backend and
+/// the sharded [`ParallelBackend`] (bitwise-identical results, so the
+/// choice never changes an embedding — only its wall-clock).
 pub fn make_backend(
     cfg: &EmbedConfig,
     data_dim: usize,
     artifact_dir: &Path,
 ) -> Result<Box<dyn ComputeBackend>> {
     match cfg.backend {
-        Backend::Native => Ok(Box::new(NativeBackend::new())),
+        Backend::Native => {
+            let threads = cfg.resolved_threads();
+            if threads > 1 {
+                Ok(Box::new(ParallelBackend::new(threads)))
+            } else {
+                Ok(Box::new(NativeBackend::new()))
+            }
+        }
         Backend::Pjrt => {
             let mut b = super::PjrtBackend::new(artifact_dir)
                 .context("PJRT backend init (run `make artifacts`?)")?;
@@ -85,12 +95,22 @@ pub struct RunReport {
 
 /// End-to-end convenience: a thin wrapper over the session facade —
 /// build a [`Session`], run its configured `n_iters`, time it.
-pub fn run_embedding(x: Matrix, cfg: &EmbedConfig, artifact_dir: &Path) -> Result<RunReport> {
-    let mut session = Session::builder()
-        .dataset(x)
-        .config(cfg.clone())
-        .artifact_dir(artifact_dir)
-        .build()?;
+///
+/// `pca_max_dim` routes through [`crate::session::SessionBuilder::pca_max_dim`],
+/// so the returned session retains the fitted basis and keeps accepting
+/// original-dimension rows for dynamic commands (pre-reducing `x` by
+/// hand before this call would silently lose that).
+pub fn run_embedding(
+    x: Matrix,
+    cfg: &EmbedConfig,
+    artifact_dir: &Path,
+    pca_max_dim: Option<usize>,
+) -> Result<RunReport> {
+    let mut builder = Session::builder().dataset(x).config(cfg.clone()).artifact_dir(artifact_dir);
+    if let Some(max_dim) = pca_max_dim {
+        builder = builder.pca_max_dim(max_dim);
+    }
+    let mut session = builder.build()?;
     let sw = Stopwatch::new();
     session.run_configured()?;
     let seconds = sw.elapsed_s();
@@ -134,6 +154,15 @@ mod tests {
     }
 
     #[test]
+    fn make_backend_honours_threads_knob() {
+        let dir = default_artifact_dir();
+        let cfg = EmbedConfig { threads: 1, ..EmbedConfig::default() };
+        assert_eq!(make_backend(&cfg, 8, &dir).unwrap().name(), "native");
+        let cfg = EmbedConfig { threads: 4, ..EmbedConfig::default() };
+        assert_eq!(make_backend(&cfg, 8, &dir).unwrap().name(), "parallel");
+    }
+
+    #[test]
     fn run_embedding_native_end_to_end() {
         let ds = dataset_by_name("blobs", 200, 3).unwrap();
         let cfg = EmbedConfig {
@@ -144,8 +173,25 @@ mod tests {
             jumpstart_iters: 5,
             ..EmbedConfig::default()
         };
-        let report = run_embedding(ds.x, &cfg, &default_artifact_dir()).unwrap();
+        let report = run_embedding(ds.x, &cfg, &default_artifact_dir(), None).unwrap();
         assert_eq!(report.session.iterations(), 40);
         assert!(report.iters_per_sec > 0.0);
+    }
+
+    #[test]
+    fn run_embedding_with_pca_retains_basis() {
+        let ds = dataset_by_name("mnist", 200, 4).unwrap();
+        let cfg = EmbedConfig {
+            n_iters: 10,
+            k_hd: 10,
+            k_ld: 6,
+            perplexity: 6.0,
+            jumpstart_iters: 0,
+            ..EmbedConfig::default()
+        };
+        let report = run_embedding(ds.x, &cfg, &default_artifact_dir(), Some(16)).unwrap();
+        assert_eq!(report.session.engine().x.d(), 16);
+        let pca = report.session.pca().expect("basis must be retained for dynamic rows");
+        assert_eq!((pca.input_dim(), pca.out_dim()), (64, 16));
     }
 }

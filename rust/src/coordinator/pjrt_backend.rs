@@ -69,7 +69,9 @@ impl PjrtBackend {
 
     /// One slot group over the whole point set, tiled at the artifact's
     /// B. Adds `scale`·rep into `rep_acc`, attraction into `attr_acc`
-    /// (HD group only), and returns Σ wsum over valid slots.
+    /// (HD group only), and returns (Σ wsum over valid slots, number of
+    /// valid slots) — the slot count feeds [`NegStats::covered`] for the
+    /// near-field groups.
     #[allow(clippy::too_many_arguments)]
     fn forces_group(
         &mut self,
@@ -83,7 +85,7 @@ impl PjrtBackend {
         scale: f32,
         attr_acc: &mut Matrix,
         rep_acc: &mut Matrix,
-    ) -> Result<f64> {
+    ) -> Result<(f64, usize)> {
         let ArtifactKind::Forces { b, k, d } = spec.kind else {
             anyhow::bail!("not a forces artifact");
         };
@@ -97,6 +99,7 @@ impl PjrtBackend {
         self.rep_out.resize(b * d, 0.0);
         self.wsum_out.resize(b, 0.0);
         let mut wsum_total = 0.0f64;
+        let mut valid_slots = 0usize;
         let mut base = 0usize;
         while base < n {
             let rows = (n - base).min(b);
@@ -115,6 +118,7 @@ impl PjrtBackend {
                             self.yj[off..off + d].copy_from_slice(y.row(j as usize));
                             self.p[r * k + s] = aff.p_slot(i, s);
                             self.mask[r * k + s] = 1.0;
+                            valid_slots += 1;
                         }
                     }
                     Group::Ld => {
@@ -125,6 +129,7 @@ impl PjrtBackend {
                             let off = (r * k + s) * d;
                             self.yj[off..off + d].copy_from_slice(y.row(j as usize));
                             self.mask[r * k + s] = 1.0;
+                            valid_slots += 1;
                         }
                     }
                     Group::Neg => {
@@ -181,7 +186,7 @@ impl PjrtBackend {
             }
             base += rows;
         }
-        Ok(wsum_total)
+        Ok((wsum_total, valid_slots))
     }
 }
 
@@ -264,7 +269,7 @@ impl ComputeBackend for PjrtBackend {
                     self.rt.manifest.forces_dims()
                 )
             })?;
-        let _ = self.forces_group(
+        let (_, hd_slots) = self.forces_group(
             &hd_spec, Group::Hd, y, knn, aff, neg, alpha, 1.0, attr, rep,
         )?;
         let ld_spec = self
@@ -275,10 +280,10 @@ impl ComputeBackend for PjrtBackend {
             .context("no forces artifact for the LD group")?;
         // attr is untouched by non-HD groups (their p is all-zero and the
         // scatter phase only writes attr for Group::Hd).
-        let _ = self.forces_group(
+        let (_, ld_slots) = self.forces_group(
             &ld_spec, Group::Ld, y, knn, aff, neg, alpha, 1.0, attr, rep,
         )?;
-        let mut stats = NegStats::default();
+        let mut stats = NegStats { covered: hd_slots + ld_slots, ..NegStats::default() };
         if neg.m > 0 {
             let neg_spec = self
                 .rt
@@ -286,7 +291,7 @@ impl ComputeBackend for PjrtBackend {
                 .find_forces(neg.m, d)
                 .cloned()
                 .context("no forces artifact for the negative-sample group")?;
-            let wsum = self.forces_group(
+            let (wsum, _) = self.forces_group(
                 &neg_spec, Group::Neg, y, knn, aff, neg, alpha, far_scale, attr, rep,
             )?;
             stats.wsum = wsum;

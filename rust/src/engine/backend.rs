@@ -18,15 +18,25 @@ use crate::hd::Affinities;
 use crate::knn::iterative::IterativeKnn;
 use anyhow::Result;
 
-/// Statistics from the negative-sampling slots, used by the engine to
-/// maintain its running estimate of the global normaliser
-/// Z = Σ_{k≠l} w_kl ≈ N(N−1)·E[w].
+/// Statistics from the force pass, used by the engine to maintain its
+/// running estimate of the global normaliser
+/// Z = Σ_{k≠l} w_kl ≈ N(N−1)·E[w], and to size the far-field scaling of
+/// the *next* iteration from what the near field actually covered.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NegStats {
     /// Σ w over all (point, negative-sample) pairs this iteration.
+    /// Accumulated as one f64 subtotal per point, then reduced over
+    /// points in index order — a summation structure both backends share
+    /// so the result is bitwise-identical regardless of sharding.
     pub wsum: f64,
     /// Number of such pairs.
     pub count: usize,
+    /// Near-field pairs actually processed this pass: HD slots (term 1)
+    /// plus LD slots whose twin is *not* in the HD set (term 2). LD
+    /// slots skipped for overlapping the HD set are **not** counted —
+    /// this is the real covered count the engine's `far_scale` needs,
+    /// not the `k_hd + k_ld` upper bound.
+    pub covered: usize,
 }
 
 /// Pre-drawn negative samples: `m` uniform non-self indices per point,
@@ -85,7 +95,8 @@ pub trait ComputeBackend {
     /// Full force pass. Writes the attraction movement direction
     /// Σ p·g·(y_j − y_i) into `attr` and the *unnormalised* repulsion
     /// Σ w·g·(y_i − y_j) into `rep` (the engine applies the Z
-    /// normalisation). Returns the negative-slot kernel statistics.
+    /// normalisation). Returns the negative-slot kernel statistics and
+    /// the near-field covered-pair count ([`NegStats::covered`]).
     ///
     /// Slot semantics (identical in both backends; see DESIGN.md §2):
     /// * HD slots — attraction with p_{j|i}, plus repulsion (Eq. 6 term 1);

@@ -401,6 +401,39 @@ mod tests {
     }
 
     #[test]
+    fn purge_row_with_both_gone_and_moved() {
+        // swap-remove of point 2 with old-last point 4 taking its index:
+        // a single row holding BOTH must drop the `gone` entry and
+        // rename the `moved` entry in the same sweep.
+        let mut t = NeighborTable::new(5, 4);
+        t.insert(0, 2, 1.0); // gone
+        t.insert(0, 4, 2.0); // moved → must become 2
+        t.insert(0, 1, 3.0); // untouched
+        t.purge(2, Some(4));
+        assert_eq!(t.len(0), 2);
+        assert!(!t.contains(0, 4), "moved index must be renamed");
+        assert!(t.contains(0, 2), "renamed entry must survive");
+        assert!(t.contains(0, 1), "unrelated entry must survive");
+        // Distances follow their ids through the rename.
+        let d2 = t.entries(0).find(|&(j, _)| j == 2).unwrap().1;
+        assert!((d2 - 2.0).abs() < 1e-9, "renamed entry kept the wrong dist: {d2}");
+        assert!(heap_ok(&t, 0));
+
+        // The removal's backfill slot itself holding `moved`: removing
+        // the heap root pulls the last slot forward, and the re-examined
+        // slot must still get renamed (regression for the `continue`
+        // path).
+        let mut t = NeighborTable::new(5, 4);
+        t.insert(0, 2, 5.0); // gone at the root (worst dist)
+        t.insert(0, 1, 1.0);
+        t.insert(0, 4, 2.0); // moved, sits in the backfill slot
+        t.purge(2, Some(4));
+        assert_eq!(t.len(0), 2);
+        assert!(t.contains(0, 2) && t.contains(0, 1) && !t.contains(0, 4));
+        assert!(heap_ok(&t, 0));
+    }
+
+    #[test]
     fn dynamic_rows() {
         let mut t = NeighborTable::new(2, 2);
         t.push_point();

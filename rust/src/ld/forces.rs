@@ -25,6 +25,7 @@ use crate::hd::Affinities;
 use crate::knn::iterative::IterativeKnn;
 use crate::ld::kernel::kernel_pair;
 use anyhow::Result;
+use std::ops::Range;
 
 /// The pure-Rust backend (no per-call allocation).
 #[derive(Debug, Default)]
@@ -34,6 +35,116 @@ impl NativeBackend {
     pub fn new() -> Self {
         NativeBackend
     }
+}
+
+/// The embedding-dimension ceiling of the stack-buffer fast path below.
+/// [`crate::config::EmbedConfig::validate`] enforces the same bound as
+/// `ld_dim <= 64`.
+pub(crate) fn ensure_supported_dim(d: usize) -> Result<()> {
+    anyhow::ensure!(
+        d <= 64,
+        "LD dim {d} > 64 unsupported by the native force path (EmbedConfig enforces ld_dim <= 64)"
+    );
+    Ok(())
+}
+
+/// Accumulate the Eq. 6 force decomposition for every point in `range`:
+/// row `i` is written (fully overwritten) at offset
+/// `(i - range.start) * d` of `attr_out` / `rep_out`, and each point's
+/// negative-slot f64 wsum subtotal is reported through
+/// `on_wsub(i, subtotal)` in point order. Returns `(count, covered)`.
+///
+/// This is the **single source of truth** for the per-point force math:
+/// [`NativeBackend`] runs it over `0..n` on the calling thread, and
+/// [`crate::ld::ParallelBackend`] runs it per shard over disjoint
+/// ranges — which is what makes the two backends bitwise-identical by
+/// construction rather than by parallel maintenance of two copies.
+///
+/// §Perf: each point's attraction/repulsion accumulates in small stack
+/// buffers and is written back once — repeated slicing of the output
+/// inside the slot loops cost ~35% of the pass (bounds checks + lost
+/// register allocation). The buffers are 64-wide; callers must check
+/// [`ensure_supported_dim`] first.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forces_range(
+    y: &Matrix,
+    knn: &IterativeKnn,
+    aff: &Affinities,
+    neg: &NegSamples,
+    alpha: f32,
+    far_scale: f32,
+    range: Range<usize>,
+    attr_out: &mut [f32],
+    rep_out: &mut [f32],
+    mut on_wsub: impl FnMut(usize, f64),
+) -> (usize, usize) {
+    let d = y.d();
+    debug_assert!(d <= 64, "call ensure_supported_dim first");
+    let start = range.start;
+    debug_assert!(attr_out.len() >= range.len() * d);
+    debug_assert!(rep_out.len() >= range.len() * d);
+    let mut count = 0usize;
+    let mut covered = 0usize;
+    let mut yi_buf = [0.0f32; 64];
+    let mut acc_a = [0.0f32; 64];
+    let mut acc_r = [0.0f32; 64];
+    for i in range {
+        let yi_start = i * d;
+        yi_buf[..d].copy_from_slice(&y.data()[yi_start..yi_start + d]);
+        let yi = &yi_buf[..d];
+        acc_a[..d].iter_mut().for_each(|v| *v = 0.0);
+        acc_r[..d].iter_mut().for_each(|v| *v = 0.0);
+        // --- 1. HD slots: attraction + close repulsion ------------
+        for (s, (j, _hd_dist)) in knn.hd.entries(i).enumerate() {
+            let p = aff.p_slot(i, s);
+            let yj = y.row(j as usize);
+            let d2 = sqdist(yi, yj);
+            let (w, g) = kernel_pair(d2, alpha);
+            let ag = p * g;
+            let rg = w * g;
+            for k in 0..d {
+                let delta = yj[k] - yi[k];
+                acc_a[k] += ag * delta;
+                acc_r[k] -= rg * delta;
+            }
+            covered += 1;
+        }
+        // --- 2. LD slots not in the HD set: close repulsion -------
+        for (j, _stale) in knn.ld.entries(i) {
+            if knn.hd.contains(i, j) {
+                continue; // already covered by term 1 (not re-counted)
+            }
+            let yj = y.row(j as usize);
+            let d2 = sqdist(yi, yj);
+            let (w, g) = kernel_pair(d2, alpha);
+            let rg = w * g;
+            for k in 0..d {
+                acc_r[k] += rg * (yi[k] - yj[k]);
+            }
+            covered += 1;
+        }
+        // --- 3. Negative samples: far field ------------------------
+        // One f64 subtotal per point, handed to the caller in point
+        // order — the summation structure that keeps wsum independent
+        // of how callers shard the range.
+        let mut wsub = 0.0f64;
+        for &j in neg.row(i) {
+            let yj = y.row(j as usize);
+            let d2 = sqdist(yi, yj);
+            let (w, g) = kernel_pair(d2, alpha);
+            wsub += w as f64;
+            count += 1;
+            let rg = w * g * far_scale;
+            for k in 0..d {
+                acc_r[k] += rg * (yi[k] - yj[k]);
+            }
+        }
+        on_wsub(i, wsub);
+        let off = (i - start) * d;
+        attr_out[off..off + d].copy_from_slice(&acc_a[..d]);
+        rep_out[off..off + d].copy_from_slice(&acc_r[..d]);
+    }
+    (count, covered)
 }
 
 impl ComputeBackend for NativeBackend {
@@ -65,71 +176,27 @@ impl ComputeBackend for NativeBackend {
         rep: &mut Matrix,
     ) -> Result<NegStats> {
         let n = y.n();
-        let d = y.d();
         debug_assert_eq!(attr.n(), n);
         debug_assert_eq!(rep.n(), n);
-        attr.data_mut().iter_mut().for_each(|v| *v = 0.0);
-        rep.data_mut().iter_mut().for_each(|v| *v = 0.0);
+        ensure_supported_dim(y.d())?;
+        // Every row in 0..n is fully overwritten by `forces_range`, and
+        // the per-point wsum subtotals fold in point order — the exact
+        // structure the sharded backend reproduces, so both are
+        // bitwise-identical.
         let mut wsum = 0.0f64;
-        let mut count = 0usize;
-        // §Perf: accumulate each point's attraction/repulsion in small
-        // stack buffers and write back once — repeated slicing of the
-        // output matrices inside the slot loops cost ~35% of the pass
-        // (bounds checks + lost register allocation). d ≤ 64 covers
-        // every artifact dim; larger d falls back to a (rare) heap path.
-        debug_assert!(d <= 64, "LD dim {d} > 64 unsupported by the native fast path");
-        let mut yi_buf = [0.0f32; 64];
-        let mut acc_a = [0.0f32; 64];
-        let mut acc_r = [0.0f32; 64];
-        for i in 0..n {
-            let yi_start = i * d;
-            yi_buf[..d].copy_from_slice(&y.data()[yi_start..yi_start + d]);
-            let yi = &yi_buf[..d];
-            acc_a[..d].iter_mut().for_each(|v| *v = 0.0);
-            acc_r[..d].iter_mut().for_each(|v| *v = 0.0);
-            // --- 1. HD slots: attraction + close repulsion ------------
-            for (s, (j, _hd_dist)) in knn.hd.entries(i).enumerate() {
-                let p = aff.p_slot(i, s);
-                let yj = y.row(j as usize);
-                let d2 = sqdist(yi, yj);
-                let (w, g) = kernel_pair(d2, alpha);
-                let ag = p * g;
-                let rg = w * g;
-                for k in 0..d {
-                    let delta = yj[k] - yi[k];
-                    acc_a[k] += ag * delta;
-                    acc_r[k] -= rg * delta;
-                }
-            }
-            // --- 2. LD slots not in the HD set: close repulsion -------
-            for (j, _stale) in knn.ld.entries(i) {
-                if knn.hd.contains(i, j) {
-                    continue; // already covered by term 1
-                }
-                let yj = y.row(j as usize);
-                let d2 = sqdist(yi, yj);
-                let (w, g) = kernel_pair(d2, alpha);
-                let rg = w * g;
-                for k in 0..d {
-                    acc_r[k] += rg * (yi[k] - yj[k]);
-                }
-            }
-            // --- 3. Negative samples: far field ------------------------
-            for &j in neg.row(i) {
-                let yj = y.row(j as usize);
-                let d2 = sqdist(yi, yj);
-                let (w, g) = kernel_pair(d2, alpha);
-                wsum += w as f64;
-                count += 1;
-                let rg = w * g * far_scale;
-                for k in 0..d {
-                    acc_r[k] += rg * (yi[k] - yj[k]);
-                }
-            }
-            attr.data_mut()[yi_start..yi_start + d].copy_from_slice(&acc_a[..d]);
-            rep.data_mut()[yi_start..yi_start + d].copy_from_slice(&acc_r[..d]);
-        }
-        Ok(NegStats { wsum, count })
+        let (count, covered) = forces_range(
+            y,
+            knn,
+            aff,
+            neg,
+            alpha,
+            far_scale,
+            0..n,
+            attr.data_mut(),
+            rep.data_mut(),
+            |_, wsub| wsum += wsub,
+        );
+        Ok(NegStats { wsum, count, covered })
     }
 
     fn name(&self) -> &'static str {
@@ -197,11 +264,13 @@ mod tests {
                     attr.data_mut()[i * d + k] += p * g * delta;
                     rep.data_mut()[i * d + k] += w * g * (-delta);
                 }
+                stats.covered += 1;
             }
             for (j, _) in knn.ld.entries(i) {
                 if knn.hd.contains(i, j) {
                     continue;
                 }
+                stats.covered += 1;
                 let d2 = y.sqdist(i, j as usize);
                 let (w, g) = kernel_pair(d2, alpha);
                 for k in 0..d {
@@ -246,6 +315,7 @@ mod tests {
             }
             assert!((stats.wsum - estats.wsum).abs() < 1e-6);
             assert_eq!(stats.count, estats.count);
+            assert_eq!(stats.covered, estats.covered, "covered-pair count mismatch");
         }
     }
 
@@ -300,5 +370,41 @@ mod tests {
         let (w, g) = kernel_pair(1.0, 1.0);
         let expect = w * g * (0.0 - 1.0);
         assert!((rep.row(0)[0] - expect).abs() < 1e-6, "double-counted LD slot");
+    }
+
+    #[test]
+    fn covered_counts_overlap_once() {
+        // Point 0: one HD slot (→1) plus one LD slot that duplicates it
+        // (skipped, →0); the naive k_hd + k_ld bound would say 2.
+        let y = Matrix::from_vec(vec![0.0, 0.0, 1.0, 0.0], 2, 2).unwrap();
+        let mut knn = IterativeKnn::new(2, 1, 1);
+        knn.hd.insert(0, 1, 1.0);
+        knn.ld.insert(0, 1, 1.0);
+        let mut aff = Affinities::new(2, 1);
+        aff.recalibrate_all(&mut knn, 2.0);
+        let neg = NegSamples { m: 0, idx: vec![] };
+        let mut b = NativeBackend::new();
+        let (mut attr, mut rep) = (Matrix::zeros(2, 2), Matrix::zeros(2, 2));
+        let stats = b.forces(&y, &knn, &aff, &neg, 1.0, 1.0, &mut attr, &mut rep).unwrap();
+        assert_eq!(stats.covered, 1, "overlapping slot must be covered exactly once");
+        // A distinct LD twin counts as term 2.
+        knn.ld.clear_point(0);
+        knn.ld.insert(1, 0, 1.0);
+        let stats = b.forces(&y, &knn, &aff, &neg, 1.0, 1.0, &mut attr, &mut rep).unwrap();
+        assert_eq!(stats.covered, 2, "HD slot of 0 plus non-overlapping LD slot of 1");
+    }
+
+    #[test]
+    fn too_wide_ld_dim_is_a_checked_error() {
+        // d = 65 exceeds the 64-wide stack buffers: must be a clean Err
+        // (release builds used to hit an out-of-bounds slice).
+        let y = Matrix::zeros(4, 65);
+        let knn = IterativeKnn::new(4, 2, 2);
+        let aff = Affinities::new(4, 2);
+        let neg = NegSamples { m: 0, idx: vec![] };
+        let mut b = NativeBackend::new();
+        let (mut attr, mut rep) = (Matrix::zeros(4, 65), Matrix::zeros(4, 65));
+        let err = b.forces(&y, &knn, &aff, &neg, 1.0, 1.0, &mut attr, &mut rep).unwrap_err();
+        assert!(format!("{err:?}").contains("64"), "{err:?}");
     }
 }

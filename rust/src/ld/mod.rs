@@ -1,7 +1,10 @@
 //! Low-dimensional side: the heavy-tailed similarity kernel and the
-//! native force accumulation backend.
+//! native force accumulation backends (sequential reference + the
+//! sharded multi-threaded variant, bitwise-identical to it).
 
 pub mod kernel;
 pub mod forces;
+pub mod parallel;
 
 pub use forces::NativeBackend;
+pub use parallel::ParallelBackend;

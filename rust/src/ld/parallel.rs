@@ -1,0 +1,317 @@
+//! Sharded multi-threaded force accumulation — [`NativeBackend`]'s
+//! exact semantics, fanned out over a [`WorkerPool`].
+//!
+//! The force decomposition makes this embarrassingly parallel: every
+//! point's `attr`/`rep` rows are written by exactly one shard (contiguous
+//! point ranges → disjoint output slices), negative samples are pre-drawn
+//! by the engine, and both backends run the *same* per-point kernel —
+//! [`crate::ld::forces::forces_range`] — so the result is
+//! **bitwise-identical** to [`NativeBackend`] at any thread count, by
+//! construction rather than by parallel maintenance of two code paths:
+//!
+//! * `attr` / `rep` — each row is produced by the shared sequential
+//!   per-point accumulation;
+//! * `sqdist_batch` — each output element is one independent `sqdist`;
+//! * [`NegStats::wsum`] — both backends fold one f64 subtotal per point
+//!   in point order (shards write their subtotals into a disjoint slice
+//!   of a shared scratch vector; the fold happens after the join), so
+//!   even the f64 reduction carries no sharding-dependent rounding;
+//! * [`NegStats::count`] / [`NegStats::covered`] — exact integers.
+//!
+//! `rust/tests/parity.rs` asserts all of this bit-for-bit across thread
+//! counts. The property matters beyond testing: an embedding run is
+//! reproducible from its seed regardless of `--threads`.
+//!
+//! Small inputs do not shard: below a minimum-work floor per extra
+//! shard the scoped-thread fork/join (~tens of µs) costs more than the
+//! compute it buys, so the call falls back to fewer shards — possibly
+//! inline on the caller's thread. The partition never changes output
+//! values, so the floors are pure wall-clock tuning.
+
+use crate::data::matrix::{sqdist, Matrix};
+use crate::engine::backend::{ComputeBackend, NegSamples, NegStats};
+use crate::hd::Affinities;
+use crate::knn::iterative::IterativeKnn;
+use crate::ld::forces::{ensure_supported_dim, forces_range};
+use crate::runtime::pool::{shard_ranges, WorkerPool};
+use anyhow::Result;
+
+/// Default minimum points per shard in `forces` (a point costs roughly
+/// a microsecond at typical k_hd + k_ld + n_neg slot counts).
+const MIN_POINTS_PER_SHARD: usize = 256;
+/// Default minimum candidate pairs per shard in `sqdist_batch` (a pair
+/// costs tens of nanoseconds).
+const MIN_PAIRS_PER_SHARD: usize = 8192;
+
+/// Multi-threaded [`ComputeBackend`] sharding the native hot paths.
+pub struct ParallelBackend {
+    pool: WorkerPool,
+    min_points_per_shard: usize,
+    min_pairs_per_shard: usize,
+    /// Per-point negative-slot wsum subtotals, reduced in point order
+    /// after the join (reused across calls; no per-call allocation once
+    /// warm).
+    wsub: Vec<f64>,
+}
+
+impl ParallelBackend {
+    /// A backend with `threads` workers (`0` = auto-detect from the
+    /// machine's available parallelism).
+    pub fn new(threads: usize) -> ParallelBackend {
+        ParallelBackend {
+            pool: WorkerPool::with_auto(threads),
+            min_points_per_shard: MIN_POINTS_PER_SHARD,
+            min_pairs_per_shard: MIN_PAIRS_PER_SHARD,
+            wsub: Vec::new(),
+        }
+    }
+
+    /// Override the minimum work per shard (`forces` points /
+    /// `sqdist_batch` pairs). Outputs are partition-independent, so
+    /// this only tunes wall-clock; the parity tests set `(1, 1)` to
+    /// force full sharding on small inputs.
+    pub fn with_shard_floors(mut self, min_points: usize, min_pairs: usize) -> ParallelBackend {
+        self.min_points_per_shard = min_points.max(1);
+        self.min_pairs_per_shard = min_pairs.max(1);
+        self
+    }
+
+    /// The resolved worker count.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Shards to actually use for `len` items under a per-shard floor.
+    fn effective_shards(&self, len: usize, min_per_shard: usize) -> usize {
+        self.pool.threads().min(len / min_per_shard).max(1)
+    }
+}
+
+impl ComputeBackend for ParallelBackend {
+    fn sqdist_batch(
+        &mut self,
+        x: &Matrix,
+        owners: &[u32],
+        cands: &[u32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        debug_assert_eq!(owners.len(), cands.len());
+        let len = owners.len();
+        out.clear();
+        out.resize(len, 0.0);
+        let shards = self.effective_shards(len, self.min_pairs_per_shard);
+        let mut tasks = Vec::new();
+        let mut rest: &mut [f32] = out.as_mut_slice();
+        for range in shard_ranges(len, shards) {
+            let (chunk, tail) = rest.split_at_mut(range.len());
+            rest = tail;
+            tasks.push(move || {
+                let start = range.start;
+                for t in range {
+                    chunk[t - start] =
+                        sqdist(x.row(owners[t] as usize), x.row(cands[t] as usize));
+                }
+            });
+        }
+        self.pool.run_tasks(tasks);
+        Ok(())
+    }
+
+    fn forces(
+        &mut self,
+        y: &Matrix,
+        knn: &IterativeKnn,
+        aff: &Affinities,
+        neg: &NegSamples,
+        alpha: f32,
+        far_scale: f32,
+        attr: &mut Matrix,
+        rep: &mut Matrix,
+    ) -> Result<NegStats> {
+        let n = y.n();
+        let d = y.d();
+        debug_assert_eq!(attr.n(), n);
+        debug_assert_eq!(rep.n(), n);
+        debug_assert_eq!(attr.d(), d);
+        debug_assert_eq!(rep.d(), d);
+        ensure_supported_dim(d)?;
+        self.wsub.clear();
+        self.wsub.resize(n, 0.0);
+        let shards = self.effective_shards(n, self.min_points_per_shard);
+        let mut tasks = Vec::new();
+        let mut attr_rest: &mut [f32] = attr.data_mut();
+        let mut rep_rest: &mut [f32] = rep.data_mut();
+        let mut wsub_rest: &mut [f64] = self.wsub.as_mut_slice();
+        for range in shard_ranges(n, shards) {
+            let rows = range.len();
+            let (attr_chunk, tail) = attr_rest.split_at_mut(rows * d);
+            attr_rest = tail;
+            let (rep_chunk, tail) = rep_rest.split_at_mut(rows * d);
+            rep_rest = tail;
+            let (wsub_chunk, tail) = wsub_rest.split_at_mut(rows);
+            wsub_rest = tail;
+            tasks.push(move || {
+                let start = range.start;
+                forces_range(
+                    y,
+                    knn,
+                    aff,
+                    neg,
+                    alpha,
+                    far_scale,
+                    range,
+                    attr_chunk,
+                    rep_chunk,
+                    |i, wsub| wsub_chunk[i - start] = wsub,
+                )
+            });
+        }
+        let mut stats = NegStats::default();
+        for (count, covered) in self.pool.run_tasks(tasks) {
+            stats.count += count;
+            stats.covered += covered;
+        }
+        // Point-order fold of the per-point subtotals: the same f64
+        // summation structure as the sequential backend, so `wsum` is
+        // independent of the shard partition.
+        for &w in &self.wsub {
+            stats.wsum += w;
+        }
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::knn::brute::brute_knn;
+    use crate::ld::forces::NativeBackend;
+    use crate::util::Rng;
+
+    fn setup(n: usize, d_ld: usize, seed: u64) -> (Matrix, IterativeKnn, Affinities) {
+        let ds = datasets::blobs(n, 5, 3, 0.6, 8.0, seed);
+        let mut rng = Rng::new(seed ^ 1);
+        let mut yv = Vec::with_capacity(n * d_ld);
+        for _ in 0..n * d_ld {
+            yv.push(rng.gauss_ms(0.0, 1.0) as f32);
+        }
+        let y = Matrix::from_vec(yv, n, d_ld).unwrap();
+        let k = 8.min(n - 1);
+        let exact = brute_knn(&ds.x, k);
+        let mut knn = IterativeKnn::new(n, k, k);
+        for i in 0..n {
+            for (j, dd) in exact.entries(i) {
+                knn.hd.insert(i, j, dd);
+            }
+        }
+        let exact_ld = brute_knn(&y, k);
+        for i in 0..n {
+            for (j, dd) in exact_ld.entries(i) {
+                knn.ld.insert(i, j, dd);
+            }
+        }
+        let mut aff = Affinities::new(n, k);
+        aff.recalibrate_all(&mut knn, 5.0);
+        (y, knn, aff)
+    }
+
+    #[test]
+    fn forces_bitwise_match_native_across_thread_counts() {
+        // Odd n so shards are uneven; threads > n exercises clamping.
+        // Floors are dropped to (1, 1) so these small inputs really do
+        // fan out across shards.
+        for &n in &[97usize, 130] {
+            let (y, knn, aff) = setup(n, 3, 11);
+            let mut rng = Rng::new(42);
+            let neg = NegSamples::draw(n, 6, &mut rng);
+            let mut native = NativeBackend::new();
+            let (mut a0, mut r0) = (Matrix::zeros(n, 3), Matrix::zeros(n, 3));
+            let s0 = native.forces(&y, &knn, &aff, &neg, 0.7, 9.5, &mut a0, &mut r0).unwrap();
+            for threads in [1usize, 2, 3, 8, 200] {
+                let mut par = ParallelBackend::new(threads).with_shard_floors(1, 1);
+                let (mut a1, mut r1) = (Matrix::zeros(n, 3), Matrix::zeros(n, 3));
+                let s1 = par.forces(&y, &knn, &aff, &neg, 0.7, 9.5, &mut a1, &mut r1).unwrap();
+                for (u, v) in a0.data().iter().zip(a1.data()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "attr differs at {threads} threads");
+                }
+                for (u, v) in r0.data().iter().zip(r1.data()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "rep differs at {threads} threads");
+                }
+                assert_eq!(s0.wsum.to_bits(), s1.wsum.to_bits(), "wsum at {threads} threads");
+                assert_eq!(s0.count, s1.count);
+                assert_eq!(s0.covered, s1.covered);
+            }
+        }
+    }
+
+    #[test]
+    fn default_floors_fall_back_to_fewer_shards_with_identical_results() {
+        // Under the production floors a 130-point pass runs on a single
+        // shard — and must still match native exactly.
+        let n = 130usize;
+        let (y, knn, aff) = setup(n, 2, 13);
+        let mut rng = Rng::new(7);
+        let neg = NegSamples::draw(n, 4, &mut rng);
+        let mut native = NativeBackend::new();
+        let (mut a0, mut r0) = (Matrix::zeros(n, 2), Matrix::zeros(n, 2));
+        let s0 = native.forces(&y, &knn, &aff, &neg, 1.0, 3.0, &mut a0, &mut r0).unwrap();
+        let mut par = ParallelBackend::new(4);
+        assert_eq!(par.effective_shards(n, 256), 1, "floor must collapse tiny inputs");
+        let (mut a1, mut r1) = (Matrix::zeros(n, 2), Matrix::zeros(n, 2));
+        let s1 = par.forces(&y, &knn, &aff, &neg, 1.0, 3.0, &mut a1, &mut r1).unwrap();
+        assert_eq!(a0.data(), a1.data());
+        assert_eq!(r0.data(), r1.data());
+        assert_eq!(s0.wsum.to_bits(), s1.wsum.to_bits());
+    }
+
+    #[test]
+    fn sqdist_bitwise_matches_native() {
+        let ds = datasets::blobs(50, 7, 2, 1.0, 5.0, 9);
+        let owners: Vec<u32> = (0..37).collect();
+        let cands: Vec<u32> = (10..47).collect();
+        let mut native = NativeBackend::new();
+        let mut o0 = Vec::new();
+        native.sqdist_batch(&ds.x, &owners, &cands, &mut o0).unwrap();
+        for threads in [1usize, 2, 4] {
+            let mut par = ParallelBackend::new(threads).with_shard_floors(1, 1);
+            let mut o1 = Vec::new();
+            par.sqdist_batch(&ds.x, &owners, &cands, &mut o1).unwrap();
+            assert_eq!(o0.len(), o1.len());
+            for (u, v) in o0.iter().zip(&o1) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batches_are_fine() {
+        let mut par = ParallelBackend::new(4).with_shard_floors(1, 1);
+        let x = Matrix::zeros(4, 3);
+        let mut out = vec![1.0f32];
+        par.sqdist_batch(&x, &[], &[], &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn too_wide_ld_dim_is_a_checked_error() {
+        let y = Matrix::zeros(4, 65);
+        let knn = IterativeKnn::new(4, 2, 2);
+        let aff = Affinities::new(4, 2);
+        let neg = NegSamples { m: 0, idx: vec![] };
+        let mut par = ParallelBackend::new(2);
+        let (mut attr, mut rep) = (Matrix::zeros(4, 65), Matrix::zeros(4, 65));
+        let err = par.forces(&y, &knn, &aff, &neg, 1.0, 1.0, &mut attr, &mut rep).unwrap_err();
+        assert!(format!("{err:?}").contains("64"), "{err:?}");
+    }
+
+    #[test]
+    fn zero_threads_auto_detects() {
+        assert!(ParallelBackend::new(0).threads() >= 1);
+        assert_eq!(ParallelBackend::new(3).threads(), 3);
+    }
+}

@@ -47,6 +47,30 @@
 //! (engine state stays readable for metrics and figures; writing those
 //! fields directly bypasses the setters' bookkeeping).
 //!
+//! ## Threading model
+//!
+//! Two orthogonal axes, deliberately kept apart:
+//!
+//! * **Across sessions** — [`session::Session`] is intentionally
+//!   **not** `Send` (event sinks may hold `Rc`s, the PJRT client pins
+//!   to a thread). A server scales out by owning one
+//!   [`session::SessionManager`] per worker thread and sharding
+//!   sessions across them; sessions never migrate between threads.
+//! * **Within a session** — parallelism lives entirely *inside* the
+//!   [`engine::ComputeBackend`] boundary. The `threads` knob
+//!   ([`config::EmbedConfig::threads`], [`session::SessionBuilder::threads`],
+//!   CLI `--threads`; `0` = auto-detect, default honours the
+//!   `FUNCSNE_THREADS` env var) selects [`ld::ParallelBackend`], which
+//!   shards the force pass by point ranges and candidate scoring by
+//!   pair ranges over scoped worker threads
+//!   ([`runtime::WorkerPool`]), forking and joining inside each call.
+//!   Because each point's output rows are written by exactly one shard
+//!   and the f64 normaliser statistics are reduced in a
+//!   partition-independent order, results are **bitwise-identical** to
+//!   the sequential [`ld::NativeBackend`] at any thread count — an
+//!   embedding is reproducible from its seed regardless of `--threads`
+//!   (enforced by `rust/tests/parity.rs`).
+//!
 //! ## Architecture
 //!
 //! The crate is a three-layer system:

@@ -20,6 +20,17 @@ pub struct Pca {
 }
 
 impl Pca {
+    /// Dimensionality of the space the basis was fitted on (rows given
+    /// to [`Pca::transform`] must have this many columns).
+    pub fn input_dim(&self) -> usize {
+        self.components.d()
+    }
+
+    /// Dimensionality of the projected space (number of components).
+    pub fn out_dim(&self) -> usize {
+        self.components.n()
+    }
+
     /// Fit `k` components on `x` (not modified).
     pub fn fit(x: &Matrix, k: usize, seed: u64) -> Pca {
         let n = x.n();

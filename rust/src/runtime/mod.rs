@@ -1,7 +1,10 @@
-//! PJRT runtime: load AOT-lowered HLO text artifacts and execute them
-//! from the Rust hot path (never touching Python at run time).
+//! Run-time substrates: the PJRT loader for AOT-lowered HLO artifacts
+//! (never touching Python at run time) and the zero-dependency worker
+//! pool the sharded native backend runs on.
 
 pub mod artifacts;
 pub mod pjrt;
+pub mod pool;
 
 pub use artifacts::Manifest;
+pub use pool::WorkerPool;

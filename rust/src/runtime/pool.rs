@@ -1,0 +1,182 @@
+//! A zero-dependency worker pool built on `std::thread::scope`.
+//!
+//! The force decomposition isolates per-point accumulation (backends are
+//! deterministic given their arguments), so the hot passes shard cleanly
+//! by contiguous index ranges: each shard owns a disjoint slice of the
+//! output and no synchronisation is needed beyond the fork/join itself.
+//! Scoped threads let shards borrow the engine's matrices and tables
+//! directly — no `Arc`, no channels, no `'static` bounds.
+//!
+//! Spawning is per call (a scoped thread costs tens of microseconds),
+//! which is negligible against a multi-millisecond force pass over tens
+//! of thousands of points; a persistent pool would save nothing
+//! measurable and would force `Send` bounds through the backend
+//! boundary.
+
+use std::ops::Range;
+
+/// Split `[0, len)` into at most `shards` contiguous ranges whose sizes
+/// differ by at most one. Returns fewer ranges when `len < shards`;
+/// always returns at least one (possibly empty) range.
+pub fn shard_ranges(len: usize, shards: usize) -> Vec<Range<usize>> {
+    let shards = shards.max(1).min(len.max(1));
+    let base = len / shards;
+    let rem = len % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let size = base + usize::from(s < rem);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// A fixed-width fork/join helper: runs closures on scoped threads.
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool that runs up to `threads` tasks concurrently (minimum 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// Resolve `threads = 0` to the machine's available parallelism.
+    pub fn with_auto(threads: usize) -> WorkerPool {
+        if threads == 0 {
+            WorkerPool::new(available_threads())
+        } else {
+            WorkerPool::new(threads)
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task to completion, one scoped thread per task, and
+    /// return their results in task order. A single task (the common
+    /// `threads = 1` configuration) runs inline on the caller's thread.
+    ///
+    /// The `'a` lifetime ties the tasks' borrows to the caller: scoped
+    /// threads join before this returns, so tasks may freely borrow
+    /// caller-owned data (including disjoint `&mut` output chunks).
+    ///
+    /// Panics propagate: a panicking worker aborts the join with the
+    /// worker's panic payload rather than deadlocking or silently
+    /// dropping a shard.
+    pub fn run_tasks<'a, R, T>(&self, tasks: Vec<T>) -> Vec<R>
+    where
+        R: Send + 'a,
+        T: FnOnce() -> R + Send + 'a,
+    {
+        if tasks.len() <= 1 {
+            return tasks.into_iter().map(|t| t()).collect();
+        }
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = tasks.into_iter().map(|t| scope.spawn(t)).collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(payload) => std::panic::resume_unwind(payload),
+                })
+                .collect()
+        })
+    }
+}
+
+/// The machine's available parallelism (1 if it cannot be queried).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        let cases = [(0usize, 4usize), (1, 4), (7, 3), (8, 3), (100, 7), (5, 1), (3, 8)];
+        for &(len, shards) in &cases {
+            let ranges = shard_ranges(len, shards);
+            assert!(!ranges.is_empty());
+            assert!(ranges.len() <= shards.max(1));
+            // Contiguous, disjoint, covering [0, len).
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, len, "len={len} shards={shards}");
+            // Balanced: sizes differ by at most one.
+            let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_returns_in_task_order() {
+        // The canonical sharding pattern: shard_ranges + one task per
+        // range, partial results reduced in shard order at the join.
+        let pool = WorkerPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let tasks: Vec<_> = shard_ranges(data.len(), pool.threads())
+            .into_iter()
+            .enumerate()
+            .map(|(s, range)| {
+                let data = &data;
+                move || (s, data[range].iter().sum::<u64>())
+            })
+            .collect();
+        let partials = pool.run_tasks(tasks);
+        assert_eq!(partials.len(), 4);
+        for (expect_s, (s, _)) in partials.iter().enumerate() {
+            assert_eq!(expect_s, *s);
+        }
+        let total: u64 = partials.iter().map(|(_, p)| p).sum();
+        assert_eq!(total, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn run_tasks_single_runs_inline() {
+        // One task must not spawn: verify it runs on the calling thread.
+        let caller = std::thread::current().id();
+        let pool = WorkerPool::new(8);
+        let ids = pool.run_tasks(vec![move || std::thread::current().id()]);
+        assert_eq!(ids[0], caller);
+    }
+
+    #[test]
+    fn run_tasks_borrows_disjoint_mut_slices() {
+        // The pattern the parallel backend relies on: each task owns a
+        // disjoint &mut chunk of one output buffer.
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0u32; 9];
+        let mut tasks = Vec::new();
+        let mut rest = out.as_mut_slice();
+        for s in 0..3u32 {
+            let (head, tail) = rest.split_at_mut(3);
+            rest = tail;
+            tasks.push(move || {
+                for v in head.iter_mut() {
+                    *v = s + 1;
+                }
+                s
+            });
+        }
+        let done = pool.run_tasks(tasks);
+        assert_eq!(done, vec![0, 1, 2]);
+        assert_eq!(out, vec![1, 1, 1, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn pool_width_clamps_to_one() {
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+        assert!(WorkerPool::with_auto(0).threads() >= 1);
+    }
+}

@@ -20,9 +20,10 @@
 
 use super::Session;
 use crate::config::{Backend, EmbedConfig, Init};
-use crate::coordinator::driver::{default_artifact_dir, make_backend, maybe_pca_reduce};
+use crate::coordinator::driver::{default_artifact_dir, make_backend};
 use crate::data::Matrix;
 use crate::engine::FuncSne;
+use crate::linalg::Pca;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -158,9 +159,19 @@ impl SessionBuilder {
     }
 
     /// Linearly pre-reduce data wider than `max_dim` with PCA (the
-    /// paper's §3 preprocessing). Off by default.
+    /// paper's §3 preprocessing). Off by default. The fitted basis is
+    /// retained by the [`Session`], which keeps accepting
+    /// *original-dimension* rows for `InsertPoints` / `MovePoint` and
+    /// projects them through the same basis.
     pub fn pca_max_dim(mut self, max_dim: usize) -> Self {
         self.pca_max_dim = Some(max_dim);
+        self
+    }
+
+    /// Worker threads for the native compute path (`> 1` selects the
+    /// sharded backend — bitwise-identical results; `0` = auto-detect).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
         self
     }
 
@@ -193,8 +204,17 @@ impl SessionBuilder {
             cfg.backend = name.parse().context("SessionBuilder: bad backend name")?;
         }
         cfg.validate().context("SessionBuilder: invalid configuration")?;
+        // PCA pre-reduction keeps the fitted basis: the session must be
+        // able to project incoming dynamic rows (insert/move arrive in
+        // the ORIGINAL space) through the same projection, otherwise
+        // dynamic data silently lands in the wrong basis.
+        let mut pca = None;
         if let Some(max_dim) = self.pca_max_dim {
-            x = maybe_pca_reduce(x, max_dim, cfg.seed);
+            if x.d() > max_dim {
+                let fitted = Pca::fit(&x, max_dim, cfg.seed);
+                x = fitted.transform(&x);
+                pca = Some(fitted);
+            }
         }
         let artifact_dir = self.artifact_dir.unwrap_or_else(default_artifact_dir);
         let backend = make_backend(&cfg, x.d(), &artifact_dir)
@@ -203,6 +223,7 @@ impl SessionBuilder {
         Ok(Session::from_parts(
             engine,
             backend,
+            pca,
             self.snapshot_stride,
             self.snapshot_capacity,
         ))

@@ -25,7 +25,13 @@
 //! `Rc`s; the PJRT client pins to a thread). A server shards sessions
 //! across one [`SessionManager`] per worker thread rather than
 //! migrating sessions between threads; cross-thread command routing
-//! belongs in a layer above this module.
+//! belongs in a layer above this module. *Within* a session,
+//! parallelism lives entirely inside the compute-backend boundary:
+//! [`SessionBuilder::threads`] selects the sharded
+//! [`crate::ld::ParallelBackend`], whose scoped worker threads fork and
+//! join inside each `forces` / `sqdist_batch` call and produce
+//! bitwise-identical results to the sequential backend — the session
+//! itself never observes the concurrency.
 
 pub mod builder;
 pub mod command;
@@ -40,6 +46,7 @@ pub use manager::{SessionId, SessionManager};
 use crate::config::EmbedConfig;
 use crate::data::Matrix;
 use crate::engine::{ComputeBackend, EngineStats, FuncSne};
+use crate::linalg::Pca;
 use anyhow::Result;
 use std::collections::VecDeque;
 
@@ -47,6 +54,13 @@ use std::collections::VecDeque;
 pub struct Session {
     engine: FuncSne,
     backend: Box<dyn ComputeBackend>,
+    /// The PCA basis fitted by the builder's pre-reduction, if any.
+    /// Dynamic rows (`InsertPoints` / `MovePoint`) arrive in the
+    /// ORIGINAL space and are projected through this basis; without it
+    /// they would be rejected with a misleading dimension error — or
+    /// worse, silently accepted in the wrong basis when the dims happen
+    /// to coincide.
+    pca: Option<Pca>,
     queue: VecDeque<Command>,
     sinks: Vec<Box<dyn EventSink>>,
     snapshots: SnapshotBuffer,
@@ -78,12 +92,14 @@ impl Session {
     pub(crate) fn from_parts(
         engine: FuncSne,
         backend: Box<dyn ComputeBackend>,
+        pca: Option<Pca>,
         snapshot_stride: usize,
         snapshot_capacity: usize,
     ) -> Session {
         Session {
             engine,
             backend,
+            pca,
             queue: VecDeque::new(),
             sinks: Vec::new(),
             snapshots: SnapshotBuffer::new(snapshot_capacity),
@@ -215,6 +231,7 @@ impl Session {
                 self.engine.set_candidate_routes(routes);
             }
             Command::InsertPoints(m) => {
+                let m = self.project_incoming(m)?;
                 if m.d() != self.engine.x.d() {
                     return Err(format!(
                         "insert dim {} != data dim {}",
@@ -243,6 +260,7 @@ impl Session {
                         self.engine.n()
                     ));
                 }
+                let row = self.project_incoming_row(row)?;
                 if row.len() != self.engine.x.d() {
                     return Err(format!(
                         "move row dim {} != data dim {}",
@@ -263,6 +281,39 @@ impl Session {
             }
         }
         Ok(None)
+    }
+
+    /// Project an incoming row batch through the retained PCA basis (if
+    /// the session was built with PCA pre-reduction). Rows must be in
+    /// the *original* data space; passing already-reduced rows is an
+    /// error — accepting them would bypass the projection and mix bases.
+    fn project_incoming(&self, m: Matrix) -> std::result::Result<Matrix, String> {
+        match &self.pca {
+            None => Ok(m),
+            Some(pca) => {
+                if m.d() != pca.input_dim() {
+                    return Err(format!(
+                        "row dim {} != original data dim {} (this session PCA-reduces \
+                         {} → {}; dynamic rows must arrive in the original space)",
+                        m.d(),
+                        pca.input_dim(),
+                        pca.input_dim(),
+                        pca.out_dim()
+                    ));
+                }
+                Ok(pca.transform(&m))
+            }
+        }
+    }
+
+    /// Single-row variant of [`Session::project_incoming`].
+    fn project_incoming_row(&self, row: Vec<f32>) -> std::result::Result<Vec<f32>, String> {
+        if self.pca.is_none() {
+            return Ok(row);
+        }
+        let d = row.len();
+        let m = Matrix::from_vec(row, 1, d).map_err(|e| e.to_string())?;
+        Ok(self.project_incoming(m)?.row(0).to_vec())
     }
 
     fn emit(&mut self, event: Event) {
@@ -303,9 +354,15 @@ impl Session {
         &self.engine
     }
 
-    /// The force backend's name (`"native"` / `"pjrt"`).
+    /// The force backend's name (`"native"` / `"parallel"` / `"pjrt"`).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The PCA basis fitted by the builder's pre-reduction, if any
+    /// (incoming dynamic rows are projected through it).
+    pub fn pca(&self) -> Option<&Pca> {
+        self.pca.as_ref()
     }
 
     /// Recorded embedding snapshots.

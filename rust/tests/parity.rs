@@ -1,9 +1,14 @@
-//! Integration: the PJRT tile backend must agree with the native Rust
-//! backend on identical inputs — the strongest evidence that the L1
-//! Pallas kernel, the L2 graph, the AOT pipeline, the runtime and the
-//! coordinator's tiling/padding all implement the same math.
+//! Integration: every alternative backend must agree with the native
+//! Rust reference on identical inputs.
 //!
-//! Skipped (with a notice) if `artifacts/` has not been built.
+//! * PJRT — numerical agreement within tolerance (f32 fma/reassociation
+//!   inside XLA): the strongest evidence that the L1 Pallas kernel, the
+//!   L2 graph, the AOT pipeline, the runtime and the coordinator's
+//!   tiling/padding all implement the same math. Skipped (with a
+//!   notice) if `artifacts/` has not been built.
+//! * Parallel (sharded threads) — **bitwise** agreement at any thread
+//!   count: sharding must never change an embedding, only its
+//!   wall-clock.
 
 use funcsne::config::EmbedConfig;
 use funcsne::coordinator::driver::default_artifact_dir;
@@ -13,7 +18,8 @@ use funcsne::engine::{ComputeBackend, FuncSne, NegSamples};
 use funcsne::hd::Affinities;
 use funcsne::knn::brute::brute_knn;
 use funcsne::knn::iterative::IterativeKnn;
-use funcsne::ld::NativeBackend;
+use funcsne::ld::{NativeBackend, ParallelBackend};
+use funcsne::session::Session;
 use funcsne::util::Rng;
 
 fn have_artifacts() -> bool {
@@ -47,6 +53,107 @@ fn build_state(
     let mut aff = Affinities::new(n, k_hd);
     aff.recalibrate_all(&mut knn, (k_hd as f64 / 3.0).max(2.0));
     (ds.x, y, knn, aff)
+}
+
+#[test]
+fn forces_and_sqdist_bitwise_parity_native_vs_parallel() {
+    // n = 513 makes every multi-thread partition uneven; d = 3 exercises
+    // the non-vectorised sqdist tail.
+    let n = 513usize;
+    let d_ld = 3usize;
+    for &threads in &[1usize, 2, 4] {
+        for &alpha in &[0.5f32, 1.0, 2.0] {
+            let (x, y, knn, aff) = build_state(n, d_ld, 16, 8, 1000 + threads as u64);
+            let mut rng = Rng::new(17);
+            let neg = NegSamples::draw(n, 8, &mut rng);
+            let far_scale = ((n - 1 - 20) as f32) / 8.0;
+
+            let mut native = NativeBackend::new();
+            let (mut a1, mut r1) = (Matrix::zeros(n, d_ld), Matrix::zeros(n, d_ld));
+            let s1 = native
+                .forces(&y, &knn, &aff, &neg, alpha, far_scale, &mut a1, &mut r1)
+                .unwrap();
+
+            // Floors dropped to (1, 1) so n = 513 genuinely fans out.
+            let mut par = ParallelBackend::new(threads).with_shard_floors(1, 1);
+            let (mut a2, mut r2) = (Matrix::zeros(n, d_ld), Matrix::zeros(n, d_ld));
+            let s2 = par
+                .forces(&y, &knn, &aff, &neg, alpha, far_scale, &mut a2, &mut r2)
+                .unwrap();
+
+            for (t, (u, v)) in a1.data().iter().zip(a2.data()).enumerate() {
+                assert_eq!(
+                    u.to_bits(),
+                    v.to_bits(),
+                    "attr[{t}] native={u} parallel={v} (threads={threads}, α={alpha})"
+                );
+            }
+            for (t, (u, v)) in r1.data().iter().zip(r2.data()).enumerate() {
+                assert_eq!(
+                    u.to_bits(),
+                    v.to_bits(),
+                    "rep[{t}] native={u} parallel={v} (threads={threads}, α={alpha})"
+                );
+            }
+            assert_eq!(
+                s1.wsum.to_bits(),
+                s2.wsum.to_bits(),
+                "wsum native={} parallel={} (threads={threads}, α={alpha})",
+                s1.wsum,
+                s2.wsum
+            );
+            assert_eq!(s1.count, s2.count);
+            assert_eq!(s1.covered, s2.covered);
+
+            // Candidate scoring: same inputs, bitwise-equal outputs.
+            let owners: Vec<u32> = (0..n as u32).collect();
+            let cands: Vec<u32> = (0..n as u32).map(|i| (i + 7) % n as u32).collect();
+            let (mut o1, mut o2) = (Vec::new(), Vec::new());
+            native.sqdist_batch(&x, &owners, &cands, &mut o1).unwrap();
+            par.sqdist_batch(&x, &owners, &cands, &mut o2).unwrap();
+            assert_eq!(o1.len(), o2.len());
+            for (t, (u, v)) in o1.iter().zip(&o2).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "sqdist[{t}] (threads={threads})");
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_trajectory_is_thread_count_invariant() {
+    // End-to-end consequence of bitwise backend parity: the same seed
+    // must produce the same embedding regardless of --threads. n = 600
+    // clears the production min-points-per-shard floor, so the 4-thread
+    // run really does fork worker threads every force pass.
+    let run = |threads: usize| {
+        let ds = datasets::blobs(600, 8, 3, 0.6, 10.0, 5);
+        let mut s = Session::builder()
+            .dataset(ds.x)
+            .k_hd(12)
+            .k_ld(8)
+            .perplexity(8.0)
+            .n_neg(6)
+            .jumpstart_iters(5)
+            .early_exag_iters(10)
+            .seed(7)
+            .threads(threads)
+            .build()
+            .unwrap();
+        s.run(60).unwrap();
+        (s.backend_name(), s.embedding().data().to_vec())
+    };
+    let (name1, y1) = run(1);
+    let (name4, y4) = run(4);
+    assert_eq!(name1, "native");
+    assert_eq!(name4, "parallel");
+    assert_eq!(y1.len(), y4.len());
+    for (t, (a, b)) in y1.iter().zip(&y4).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "embedding[{t}] diverged between 1 and 4 threads: {a} vs {b}"
+        );
+    }
 }
 
 #[test]

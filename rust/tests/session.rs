@@ -1,7 +1,8 @@
 //! Integration: the session facade — command-queue ordering guarantees,
-//! builder validation, event stream, and multi-session management.
+//! builder validation, event stream, dynamic data under PCA
+//! pre-reduction, and multi-session management.
 
-use funcsne::data::datasets;
+use funcsne::data::{datasets, Matrix};
 use funcsne::session::{Command, Event, Session, SessionManager};
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -97,6 +98,62 @@ fn insert_then_remove_in_one_batch_sees_inserted_points() {
             assert!((j as usize) < s.n(), "stale neighbour {j}");
         }
     }
+}
+
+#[test]
+fn dynamic_rows_after_pca_project_through_the_retained_basis() {
+    // Regression: the builder's PCA pre-reduction used to discard the
+    // fitted basis, so original-dimension inserts/moves were rejected
+    // with a misleading "insert dim != data dim" error.
+    let ds = datasets::mnist_like(150, 64, 2);
+    let extra = datasets::mnist_like(10, 64, 3);
+    let mut s = Session::builder()
+        .dataset(ds.x.clone())
+        .pca_max_dim(16)
+        .k_hd(12)
+        .k_ld(8)
+        .perplexity(8.0)
+        .jumpstart_iters(0)
+        .seed(4)
+        .build()
+        .unwrap();
+    assert_eq!(s.engine().x.d(), 16, "data must be pre-reduced");
+    let pca = s.pca().expect("fitted basis must be retained");
+    assert_eq!((pca.input_dim(), pca.out_dim()), (64, 16));
+    s.run(10).unwrap();
+
+    // Insert 64-dim rows: accepted and projected into the 16-dim basis.
+    s.enqueue(Command::InsertPoints(extra.x.clone()));
+    s.run(1).unwrap();
+    assert_eq!(s.n(), 160);
+    let expect = s.pca().unwrap().transform(&extra.x);
+    for r in 0..10 {
+        assert_eq!(
+            s.engine().x.row(150 + r),
+            expect.row(r),
+            "inserted row {r} not projected through the session's own basis"
+        );
+    }
+
+    // Move a point with a 64-dim row: same projection.
+    s.enqueue(Command::MovePoint(0, extra.x.row(3).to_vec()));
+    s.run(1).unwrap();
+    assert_eq!(s.engine().x.row(0), expect.row(3));
+    let (_, rejected) = s.command_counts();
+    assert_eq!(rejected, 0, "original-dimension dynamic rows must be accepted");
+
+    // Already-reduced (16-dim) rows must be rejected with a message
+    // naming the original dimension — not silently mixed into the basis.
+    s.enqueue(Command::InsertPoints(Matrix::zeros(2, 16)));
+    s.enqueue(Command::MovePoint(1, vec![0.0; 16]));
+    s.run(1).unwrap();
+    let (_, rejected) = s.command_counts();
+    assert_eq!(rejected, 2);
+    assert_eq!(s.n(), 160);
+
+    // And the session keeps optimising fine afterwards.
+    s.run(30).unwrap();
+    assert!(s.embedding().data().iter().all(|v| v.is_finite()));
 }
 
 #[test]
