@@ -1,0 +1,177 @@
+//! Demo client for the HTTP/JSON embedding service.
+//!
+//! Starts a server in-process on an ephemeral port (so the example is
+//! self-contained), then drives it exactly like an external client
+//! would — plain `TcpStream`, no HTTP library: create a session,
+//! watch the background stepper advance it, flip α mid-run (the
+//! paper's attraction–repulsion steering), insert points into the live
+//! embedding, fetch frames, scrape metrics, and shut down.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+//!
+//! Against a standalone server (`funcsne serve`), the same requests
+//! work verbatim via curl — see the crate docs of `funcsne::server`.
+
+use funcsne::server::json::{self, Json};
+use funcsne::server::{Server, ServerConfig};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // --- boot the service -------------------------------------------------
+    let server = Server::bind(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 2,
+        max_sessions: 8,
+        snapshot_every: 25,
+    })?;
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run());
+    println!("» service listening on http://{addr}");
+
+    // --- create a session from inline rows (three blobs in 8-D) ----------
+    let ds = funcsne::data::datasets::blobs(300, 8, 3, 0.5, 8.0, 42);
+    let rows: Vec<String> = (0..ds.x.n())
+        .map(|i| {
+            let cells: Vec<String> =
+                ds.x.row(i).iter().map(|v| format!("{v:.4}")).collect();
+            format!("[{}]", cells.join(","))
+        })
+        .collect();
+    let spec = format!(
+        "{{\"rows\": [{}], \"perplexity\": 12, \"k_hd\": 16, \"k_ld\": 8, \
+          \"jumpstart_iters\": 20, \"seed\": 42}}",
+        rows.join(",")
+    );
+    let (status, created) = request(addr, "POST", "/sessions", Some(&spec))?;
+    anyhow::ensure!(status == 201, "create failed ({status}): {created}");
+    let v = json::parse(&created)?;
+    let id = v.get("id").and_then(Json::as_usize).unwrap_or(0);
+    println!(
+        "» created session {id}: n={}, backend={}",
+        v.get("n").and_then(Json::as_usize).unwrap_or(0),
+        v.get("backend").and_then(Json::as_str).unwrap_or("?")
+    );
+
+    // --- the stepper runs it in the background ----------------------------
+    std::thread::sleep(Duration::from_millis(400));
+    let iter_before = stat_usize(addr, id, "iter")?;
+    println!("» {iter_before} iterations completed with zero client involvement");
+
+    // --- steer mid-run: heavier tails, like the paper's α sweeps ----------
+    let (status, _) = request(
+        addr,
+        "POST",
+        &format!("/sessions/{id}/commands"),
+        Some("{\"command\": \"set_alpha\", \"value\": 0.5}"),
+    )?;
+    anyhow::ensure!(status == 202, "command rejected ({status})");
+    wait_for(addr, id, |v| v.get("alpha").and_then(Json::as_f64) == Some(0.5))?;
+    println!("» α → 0.5 applied between two iterations, optimisation uninterrupted");
+
+    // --- dynamic data: stream new points into the running embedding -------
+    let extra: Vec<String> = (0..10)
+        .map(|i| {
+            let cells: Vec<String> =
+                ds.x.row(i).iter().map(|v| format!("{:.4}", v + 0.1)).collect();
+            format!("[{}]", cells.join(","))
+        })
+        .collect();
+    let (status, _) = request(
+        addr,
+        "POST",
+        &format!("/sessions/{id}/commands"),
+        Some(&format!("{{\"command\": \"insert_points\", \"rows\": [{}]}}", extra.join(","))),
+    )?;
+    anyhow::ensure!(status == 202);
+    wait_for(addr, id, |v| v.get("n").and_then(Json::as_usize) == Some(310))?;
+    println!("» inserted 10 points mid-run (n: 300 → 310)");
+
+    // --- fetch the live embedding frame ------------------------------------
+    let (status, frame) = request(addr, "GET", &format!("/sessions/{id}/embedding"), None)?;
+    anyhow::ensure!(status == 200, "embedding fetch failed ({status})");
+    let frame = json::parse(&frame)?;
+    println!(
+        "» live frame at iteration {}: {}×{} coordinates",
+        frame.get("iter").and_then(Json::as_usize).unwrap_or(0),
+        frame.get("n").and_then(Json::as_usize).unwrap_or(0),
+        frame.get("d").and_then(Json::as_usize).unwrap_or(0),
+    );
+
+    // --- observability ------------------------------------------------------
+    let (_, metrics) = request(addr, "GET", "/metrics", None)?;
+    let steps = metrics
+        .lines()
+        .find(|l| l.starts_with("funcsne_steps_total"))
+        .unwrap_or("funcsne_steps_total ?");
+    println!("» /metrics: {steps}");
+
+    // --- teardown -----------------------------------------------------------
+    let (status, _) = request(addr, "DELETE", &format!("/sessions/{id}"), None)?;
+    anyhow::ensure!(status == 200);
+    handle.shutdown();
+    server_thread.join().expect("server thread")?;
+    println!("» session deleted, server drained cleanly");
+    Ok(())
+}
+
+/// One `Connection: close` HTTP exchange; returns (status, body).
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: funcsne\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw);
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed response"))?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow::anyhow!("no status code"))?
+        .parse()?;
+    Ok((status, body.to_string()))
+}
+
+fn stat_usize(addr: SocketAddr, id: usize, key: &str) -> anyhow::Result<usize> {
+    let (status, body) = request(addr, "GET", &format!("/sessions/{id}/stats"), None)?;
+    anyhow::ensure!(status == 200, "stats failed ({status}): {body}");
+    let v = json::parse(&body)?;
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("stats missing {key:?}"))
+}
+
+/// Poll stats until `cond` holds (30 s deadline).
+fn wait_for(
+    addr: SocketAddr,
+    id: usize,
+    cond: impl Fn(&Json) -> bool,
+) -> anyhow::Result<()> {
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = request(addr, "GET", &format!("/sessions/{id}/stats"), None)?;
+        anyhow::ensure!(status == 200, "stats failed ({status}): {body}");
+        if cond(&json::parse(&body)?) {
+            return Ok(());
+        }
+        anyhow::ensure!(std::time::Instant::now() < deadline, "timed out polling stats");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}

@@ -10,10 +10,12 @@ use crate::config::toml_lite::{parse_value, Value};
 use crate::config::{EmbedConfig, KnnConfig};
 use crate::coordinator::driver::{dataset_by_name, default_artifact_dir, run_embedding};
 use crate::data::datasets::Dataset;
+use crate::data::Matrix;
 use crate::figures::common::Scale;
 use crate::knn::brute::brute_knn;
 use crate::knn::nn_descent::nn_descent;
 use crate::metrics::rnx::{rnx_curve, rnx_curve_vs_table};
+use crate::server::{Server, ServerConfig};
 use crate::session::Session;
 use crate::util::{io, plot};
 use anyhow::{bail, Result};
@@ -126,10 +128,16 @@ SUBCOMMANDS
   knn        compare KNN finders        --dataset NAME --n N [--k K] [--iters I]
   figure     regenerate paper figures   [--only fig1..fig11|table1|table2] [--full]
   hierarchy  α-sweep hierarchy graph    --dataset NAME --n N [--ld-dim D]
+  serve      run the HTTP/JSON service  [--addr 127.0.0.1:7878] [--threads T]
+             [--max-sessions N] [--snapshot-every I]
+             REST surface: POST /sessions, POST /sessions/:id/commands,
+             GET /sessions/:id/embedding[?iter=N], GET /sessions/:id/stats,
+             DELETE /sessions/:id, GET /healthz, GET /metrics
   info       show artifact menu / platform
 
 Datasets: scurve scurve_unbalanced blobs blobs_overlap blobs_disjoint coil
           mnist rat_brain tabula deep_features nested
+          (or --data path.npy / --data path.csv to load a file)
 ";
 
 /// Dispatch a parsed command line.
@@ -139,6 +147,7 @@ pub fn run(args: &Args) -> Result<()> {
         "knn" => cmd_knn(args),
         "figure" | "figures" => cmd_figure(args),
         "hierarchy" => cmd_hierarchy(args),
+        "serve" => cmd_serve(args),
         "info" => cmd_info(),
         "" | "help" => {
             print!("{HELP}");
@@ -149,6 +158,20 @@ pub fn run(args: &Args) -> Result<()> {
 }
 
 fn load_dataset(args: &Args) -> Result<Dataset> {
+    // `--data path.npy` / `--data path.csv` loads a file instead of a
+    // named synthetic dataset (labels default to a single class).
+    let data_path = args.get_str("data", "");
+    if !data_path.is_empty() {
+        let (data, n, d) = io::read_matrix_f32(std::path::Path::new(&data_path))?;
+        let x = Matrix::from_vec(data, n, d)?;
+        return Ok(Dataset {
+            name: data_path,
+            x,
+            labels: vec![0; n],
+            coarse_labels: None,
+            hierarchy: None,
+        });
+    }
     let name = args.get_str("dataset", "blobs");
     let n = args.get_usize("n", 2000)?;
     let seed = args.get_usize("seed", 42)? as u64;
@@ -289,6 +312,24 @@ fn cmd_hierarchy(args: &Args) -> Result<()> {
         crate::cluster::layout::render_ascii(&graph, &pos, 70, 20)
     );
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ServerConfig {
+        addr: args.get_str("addr", "127.0.0.1:7878"),
+        threads: args.get_usize("threads", 4)?,
+        max_sessions: args.get_usize("max_sessions", 64)?,
+        snapshot_every: args.get_usize("snapshot_every", 25)?,
+    };
+    let server = Server::bind(cfg)?;
+    let addr = server.local_addr();
+    println!("funcsne service listening on http://{addr}");
+    println!("  create:  curl -s -X POST {addr}/sessions -d '{{\"rows\": [[...], ...]}}'");
+    println!("  steer:   curl -s -X POST {addr}/sessions/0/commands \\");
+    println!("                -d '{{\"command\": \"set_alpha\", \"value\": 0.5}}'");
+    println!("  fetch:   curl -s {addr}/sessions/0/embedding");
+    println!("  health:  curl -s {addr}/healthz   ·   metrics: curl -s {addr}/metrics");
+    server.run()
 }
 
 fn cmd_info() -> Result<()> {

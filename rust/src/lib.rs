@@ -47,6 +47,13 @@
 //! (engine state stays readable for metrics and figures; writing those
 //! fields directly bypasses the setters' bookkeeping).
 //!
+//! The same capability is exposed over the wire by the [`server`]
+//! module: `funcsne serve` runs a zero-dependency HTTP/JSON service
+//! (std-only listener, vendored-shim policy) in which a background
+//! stepping thread owns the [`session::SessionManager`] and request
+//! handlers reach it through channels — create sessions, steer them
+//! mid-run, stream embedding frames, scrape Prometheus metrics.
+//!
 //! ## Threading model
 //!
 //! Two orthogonal axes, deliberately kept apart:
@@ -101,6 +108,7 @@ pub mod hd;
 pub mod ld;
 pub mod engine;
 pub mod session;
+pub mod server;
 pub mod baselines;
 pub mod metrics;
 pub mod cluster;

@@ -5,6 +5,7 @@
 //! funcsne knn      --dataset blobs_disjoint --n 3000 --k 16
 //! funcsne figure   --only fig6            # regenerate paper figures
 //! funcsne hierarchy --dataset mnist --n 2000
+//! funcsne serve    --addr 127.0.0.1:7878  # HTTP/JSON embedding service
 //! funcsne info                            # backends, artifacts, dims
 //! ```
 //!

@@ -1,0 +1,649 @@
+//! The REST surface: routes HTTP requests onto the stepper channel and
+//! translates between JSON payloads and the typed session API.
+//!
+//! | Route                               | Meaning                                   |
+//! |-------------------------------------|-------------------------------------------|
+//! | `GET  /healthz`                     | liveness (round-trips the stepper)        |
+//! | `GET  /metrics`                     | Prometheus text-format counters           |
+//! | `POST /sessions`                    | create from inline `rows` or a `path`     |
+//! | `GET  /sessions`                    | list live sessions                        |
+//! | `GET  /sessions/:id`                | the session resource (same view as stats) |
+//! | `GET  /sessions/:id/stats`          | config, counters, last step error         |
+//! | `GET  /sessions/:id/embedding`      | live frame, or `?iter=N` nearest snapshot |
+//! | `POST /sessions/:id/commands`       | queue a typed [`Command`]                 |
+//! | `DELETE /sessions/:id`              | remove the session                        |
+//!
+//! Command payloads mirror [`Command`] variants by snake-case name:
+//! `{"command":"set_alpha","value":0.5}`,
+//! `{"command":"insert_points","rows":[[...],...]}`,
+//! `{"command":"move_point","index":3,"row":[...]}`, etc.
+
+use super::http::{Handler, Request, Response};
+use super::json::{self, Json};
+use super::stepper::{
+    CreateSpec, EmbeddingFrame, ServiceError, ServiceMetrics, ServiceResult, SessionView,
+    StepperRequest,
+};
+use crate::data::Matrix;
+use crate::knn::iterative::CandidateRoutes;
+use crate::session::{Command, Session};
+use crate::util::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How long a handler waits for the stepper to reply before reporting
+/// the service unavailable (the stepper answers between sweeps, so
+/// this bounds one sweep plus queueing).
+const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-worker request handler; clone one per [`crate::runtime::WorkerPool`]
+/// slot (the channel sender is cloneable, the counters are shared).
+#[derive(Clone)]
+pub struct Api {
+    tx: Sender<StepperRequest>,
+    http_requests: Arc<AtomicU64>,
+    started: Instant,
+    /// Default `snapshot_stride` for sessions that don't specify one
+    /// (the CLI's `--snapshot-every`).
+    default_snapshot_stride: usize,
+}
+
+impl Api {
+    pub fn new(
+        tx: Sender<StepperRequest>,
+        http_requests: Arc<AtomicU64>,
+        default_snapshot_stride: usize,
+    ) -> Api {
+        Api { tx, http_requests, started: Instant::now(), default_snapshot_stride }
+    }
+
+    /// Send one request to the stepper and wait for its typed reply.
+    fn ask<T>(
+        &self,
+        make: impl FnOnce(Sender<ServiceResult<T>>) -> StepperRequest,
+    ) -> ServiceResult<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| ServiceError::Unavailable("stepper thread is gone".to_string()))?;
+        reply_rx
+            .recv_timeout(REPLY_TIMEOUT)
+            .map_err(|_| ServiceError::Unavailable("stepper did not reply".to_string()))?
+    }
+
+    /// Same as [`Api::ask`] for the two replies that are not
+    /// `ServiceResult`-wrapped (list, metrics).
+    fn ask_infallible<T>(
+        &self,
+        make: impl FnOnce(Sender<T>) -> StepperRequest,
+    ) -> ServiceResult<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| ServiceError::Unavailable("stepper thread is gone".to_string()))?;
+        reply_rx
+            .recv_timeout(REPLY_TIMEOUT)
+            .map_err(|_| ServiceError::Unavailable("stepper did not reply".to_string()))
+    }
+
+    fn route(&mut self, req: &Request) -> ServiceResult<Response> {
+        let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+        match (req.method.as_str(), segments.as_slice()) {
+            ("GET", ["healthz"]) => self.healthz(),
+            ("GET", ["metrics"]) => self.metrics(),
+            ("POST", ["sessions"]) => self.create_session(req),
+            ("GET", ["sessions"]) => self.list_sessions(),
+            // The session resource itself (the url `POST /sessions`
+            // returns) answers with the same view as /stats.
+            ("GET", ["sessions", id]) | ("GET", ["sessions", id, "stats"]) => {
+                let id = parse_id(id)?;
+                let view = self.ask(|r| StepperRequest::Stats(id, r))?;
+                Ok(Response::json(200, &view_json(&view)))
+            }
+            ("GET", ["sessions", id, "embedding"]) => {
+                let id = parse_id(id)?;
+                let iter = req
+                    .query_usize("iter")
+                    .map_err(|e| ServiceError::Invalid(e.to_string()))?;
+                let frame = self.ask(|r| StepperRequest::Embedding(id, iter, r))?;
+                Ok(Response::json(200, &frame_json(id, &frame)))
+            }
+            ("POST", ["sessions", id, "commands"]) => {
+                let id = parse_id(id)?;
+                let body = parse_body(req)?;
+                let command = command_from_json(&body).map_err(ServiceError::Invalid)?;
+                let description = command.describe();
+                self.ask(|r| StepperRequest::Enqueue(id, command, r))?;
+                let body = Json::obj(vec![
+                    ("status", "queued".into()),
+                    ("command", description.into()),
+                ]);
+                Ok(Response::json(202, &body))
+            }
+            ("DELETE", ["sessions", id]) => {
+                let id = parse_id(id)?;
+                self.ask(|r| StepperRequest::Delete(id, r))?;
+                Ok(Response::json(200, &Json::obj(vec![("deleted", true.into())])))
+            }
+            // Known paths with the wrong method get 405; anything else
+            // (including typo'd subresources) is a plain 404.
+            (_, ["healthz" | "metrics"])
+            | (_, ["sessions"])
+            | (_, ["sessions", _])
+            | (_, ["sessions", _, "stats" | "embedding" | "commands"]) => Ok(Response::json(
+                405,
+                &Json::obj(vec![(
+                    "error",
+                    format!("method {} not allowed on {}", req.method, req.path).into(),
+                )]),
+            )),
+            _ => Err(ServiceError::NotFound(format!("no route for {}", req.path))),
+        }
+    }
+
+    fn healthz(&self) -> ServiceResult<Response> {
+        // Round-trip the stepper so "ok" proves the loop is live, not
+        // just that the socket accepts.
+        let m = self.ask_infallible(StepperRequest::Metrics)?;
+        Ok(Response::json(
+            200,
+            &Json::obj(vec![
+                ("status", "ok".into()),
+                ("sessions", m.sessions.into()),
+                ("sweeps", m.sweeps.into()),
+                ("uptime_ms", (self.started.elapsed().as_millis() as u64).into()),
+            ]),
+        ))
+    }
+
+    fn metrics(&self) -> ServiceResult<Response> {
+        let m = self.ask_infallible(StepperRequest::Metrics)?;
+        Ok(Response::text(200, render_prometheus(&m, &self.http_requests, self.started)))
+    }
+
+    fn create_session(&self, req: &Request) -> ServiceResult<Response> {
+        let body = parse_body(req)?;
+        let spec = create_spec_from_json(&body, self.default_snapshot_stride)?;
+        let view = self.ask(|r| StepperRequest::Create(Box::new(spec), r))?;
+        let mut obj = match view_json(&view) {
+            Json::Obj(m) => m,
+            _ => unreachable!("view_json returns an object"),
+        };
+        obj.insert("url".to_string(), format!("/sessions/{}", view.id).into());
+        Ok(Response::json(201, &Json::Obj(obj)))
+    }
+
+    fn list_sessions(&self) -> ServiceResult<Response> {
+        let views = self.ask_infallible(StepperRequest::List)?;
+        let items: Vec<Json> = views.iter().map(view_json).collect();
+        Ok(Response::json(200, &Json::obj(vec![("sessions", items.into())])))
+    }
+}
+
+impl Handler for Api {
+    fn handle(&mut self, req: &Request) -> Response {
+        self.http_requests.fetch_add(1, Ordering::Relaxed);
+        match self.route(req) {
+            Ok(resp) => resp,
+            Err(e) => Response::json(e.status(), &Json::obj(vec![("error", e.message().into())])),
+        }
+    }
+}
+
+fn parse_id(raw: &str) -> ServiceResult<u64> {
+    raw.parse::<u64>()
+        .map_err(|_| ServiceError::Invalid(format!("bad session id {raw:?}")))
+}
+
+fn parse_body(req: &Request) -> ServiceResult<Json> {
+    let text = req.body_str().map_err(|e| ServiceError::Invalid(e.to_string()))?;
+    if text.trim().is_empty() {
+        return Err(ServiceError::Invalid("empty request body (expected JSON)".to_string()));
+    }
+    json::parse(text).map_err(|e| ServiceError::Invalid(format!("bad JSON: {e}")))
+}
+
+/// `{"rows": [[...], ...]}` → row-major [`Matrix`].
+fn matrix_from_rows(rows: &Json) -> Result<Matrix, String> {
+    let rows = rows.as_arr().ok_or("\"rows\" must be an array of arrays")?;
+    if rows.is_empty() {
+        return Err("\"rows\" is empty".to_string());
+    }
+    let d = rows[0].as_arr().ok_or("\"rows\" must be an array of arrays")?.len();
+    if d == 0 {
+        return Err("rows must have at least one column".to_string());
+    }
+    let mut data = Vec::with_capacity(rows.len() * d);
+    for (i, row) in rows.iter().enumerate() {
+        let row = row.as_arr().ok_or_else(|| format!("row {i} is not an array"))?;
+        if row.len() != d {
+            return Err(format!("row {i} has {} values, expected {d}", row.len()));
+        }
+        for v in row {
+            data.push(v.as_f64().ok_or_else(|| format!("row {i} has a non-number"))? as f32);
+        }
+    }
+    Matrix::from_vec(data, rows.len(), d).map_err(|e| e.to_string())
+}
+
+fn f32_vec(v: &Json, what: &str) -> Result<Vec<f32>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("{what} must be an array of numbers"))?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as f32).ok_or_else(|| format!("{what} has a non-number")))
+        .collect()
+}
+
+fn num_field(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("command needs a numeric {key:?} field"))
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("command needs a non-negative integer {key:?} field"))
+}
+
+/// Map a JSON command object onto the typed [`Command`] enum.
+pub fn command_from_json(v: &Json) -> Result<Command, String> {
+    let name = v
+        .get("command")
+        .and_then(Json::as_str)
+        .ok_or("missing string \"command\" field")?;
+    match name {
+        "set_alpha" => Ok(Command::SetAlpha(num_field(v, "value")?)),
+        "set_perplexity" => Ok(Command::SetPerplexity(num_field(v, "value")?)),
+        "set_attraction" => Ok(Command::SetAttraction(num_field(v, "value")?)),
+        "set_repulsion" => Ok(Command::SetRepulsion(num_field(v, "value")?)),
+        "set_routes" => {
+            let mut routes = CandidateRoutes::default();
+            if let Some(b) = v.get("same_space").and_then(Json::as_bool) {
+                routes.same_space = b;
+            }
+            if let Some(b) = v.get("cross_space").and_then(Json::as_bool) {
+                routes.cross_space = b;
+            }
+            if let Some(b) = v.get("random").and_then(Json::as_bool) {
+                routes.random = b;
+            }
+            Ok(Command::SetRoutes(routes))
+        }
+        "insert_points" => {
+            let rows = v.get("rows").ok_or("insert_points needs a \"rows\" field")?;
+            Ok(Command::InsertPoints(matrix_from_rows(rows)?))
+        }
+        "remove_point" => Ok(Command::RemovePoint(usize_field(v, "index")?)),
+        "move_point" => {
+            let index = usize_field(v, "index")?;
+            let row = v.get("row").ok_or("move_point needs a \"row\" field")?;
+            Ok(Command::MovePoint(index, f32_vec(row, "\"row\"")?))
+        }
+        "implode" => Ok(Command::Implode),
+        "pause" => Ok(Command::Pause),
+        "resume" => Ok(Command::Resume),
+        other => Err(format!(
+            "unknown command {other:?} (set_alpha, set_perplexity, set_attraction, \
+             set_repulsion, set_routes, insert_points, remove_point, move_point, \
+             implode, pause, resume)"
+        )),
+    }
+}
+
+/// Build a [`CreateSpec`] from the `POST /sessions` body.
+fn create_spec_from_json(v: &Json, default_stride: usize) -> ServiceResult<CreateSpec> {
+    let x = match (v.get("rows"), v.get("path")) {
+        (Some(rows), None) => matrix_from_rows(rows).map_err(ServiceError::Invalid)?,
+        (None, Some(path)) => {
+            let path = path
+                .as_str()
+                .ok_or_else(|| ServiceError::Invalid("\"path\" must be a string".to_string()))?;
+            // Extension check comes first — before any filesystem
+            // access — so the endpoint cannot be used to probe
+            // arbitrary server-side files. (Path-based creation is
+            // inherently trusting; see the README's loopback note.)
+            let lower = path.to_ascii_lowercase();
+            if !lower.ends_with(".npy") && !lower.ends_with(".csv") {
+                return Err(ServiceError::Invalid(
+                    "\"path\" must name a .npy or .csv file".to_string(),
+                ));
+            }
+            // Server-side loads get the same size budget as inline
+            // bodies — checked up front so a huge file never reaches
+            // read_to_string and OOMs the process. The exact size is
+            // deliberately not echoed back.
+            let cap = super::http::MAX_BODY_BYTES as u64;
+            if std::fs::metadata(path).map(|m| m.len()).unwrap_or(0) > cap {
+                return Err(ServiceError::Invalid(format!(
+                    "{path:?} exceeds the {cap}-byte limit"
+                )));
+            }
+            let (data, n, d) = io::read_matrix_f32(std::path::Path::new(path))
+                .map_err(|e| ServiceError::Invalid(format!("loading {path:?}: {e:?}")))?;
+            Matrix::from_vec(data, n, d).map_err(|e| ServiceError::Invalid(e.to_string()))?
+        }
+        _ => {
+            return Err(ServiceError::Invalid(
+                "provide exactly one of \"rows\" (inline data) or \"path\" (.npy/.csv)"
+                    .to_string(),
+            ))
+        }
+    };
+    let n = x.n();
+    let mut builder = Session::builder().dataset(x);
+
+    let get_usize = |key: &str| -> ServiceResult<Option<usize>> {
+        match v.get(key) {
+            None => Ok(None),
+            Some(j) => j.as_usize().map(Some).ok_or_else(|| {
+                ServiceError::Invalid(format!("{key:?} must be a non-negative integer"))
+            }),
+        }
+    };
+    let get_f64 = |key: &str| -> ServiceResult<Option<f64>> {
+        match v.get(key) {
+            None => Ok(None),
+            Some(j) => j
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| ServiceError::Invalid(format!("{key:?} must be a number"))),
+        }
+    };
+
+    if let Some(d) = get_usize("ld_dim")? {
+        builder = builder.ld_dim(d);
+    }
+    if let Some(a) = get_f64("alpha")? {
+        builder = builder.alpha(a);
+    }
+    // Clamp the neighbour-set knobs to the dataset like the CLI does
+    // (`cmd_embed`): k_hd never exceeds n-1, and perplexity rides down
+    // with an explicit k_hd so the default perplexity (30) cannot fail
+    // `k_hd >= perplexity` validation on a small requested k_hd.
+    let p_req = get_f64("perplexity")?;
+    match get_usize("k_hd")? {
+        Some(k) => {
+            let k = k.min(n.saturating_sub(1)).max(2);
+            builder = builder.k_hd(k);
+            let default_p = crate::config::EmbedConfig::default().perplexity;
+            builder = builder.perplexity(p_req.unwrap_or(default_p).min(k as f64));
+        }
+        None => {
+            if let Some(p) = p_req {
+                builder = builder.perplexity(p);
+            }
+        }
+    }
+    if let Some(k) = get_usize("k_ld")? {
+        builder = builder.k_ld(k.min(n.saturating_sub(1)).max(1));
+    }
+    if let Some(m) = get_usize("n_neg")? {
+        builder = builder.n_neg(m);
+    }
+    if let Some(lr) = get_f64("lr")? {
+        builder = builder.lr(lr);
+    }
+    if let Some(a) = get_f64("attraction")? {
+        builder = builder.attraction(a);
+    }
+    if let Some(r) = get_f64("repulsion")? {
+        builder = builder.repulsion(r);
+    }
+    if let Some(s) = get_usize("seed")? {
+        builder = builder.seed(s as u64);
+    }
+    if let Some(t) = get_usize("threads")? {
+        builder = builder.threads(t);
+    }
+    if let Some(i) = get_usize("n_iters")? {
+        builder = builder.n_iters(i);
+    }
+    if let Some(i) = get_usize("jumpstart_iters")? {
+        builder = builder.jumpstart_iters(i);
+    }
+    if let Some(i) = get_usize("early_exag_iters")? {
+        builder = builder.early_exag_iters(i);
+    }
+    if let Some(d) = get_usize("pca_max_dim")? {
+        builder = builder.pca_max_dim(d);
+    }
+    if let Some(name) = v.get("backend") {
+        let name = name
+            .as_str()
+            .ok_or_else(|| ServiceError::Invalid("\"backend\" must be a string".to_string()))?;
+        builder = builder.backend_name(name);
+    }
+    let stride = get_usize("snapshot_stride")?.unwrap_or(default_stride);
+    builder = builder.snapshot_stride(stride);
+    builder = builder.snapshot_capacity(get_usize("snapshot_capacity")?.unwrap_or(64));
+    let max_iters = get_usize("max_iters")?.unwrap_or(0);
+    Ok(CreateSpec { builder, max_iters })
+}
+
+fn view_json(v: &SessionView) -> Json {
+    Json::obj(vec![
+        ("id", v.id.into()),
+        ("iter", v.iter.into()),
+        ("n", v.n.into()),
+        ("hd_dim", v.hd_dim.into()),
+        ("ld_dim", v.ld_dim.into()),
+        ("paused", v.paused.into()),
+        ("queued", v.queued.into()),
+        ("commands_applied", v.commands_applied.into()),
+        ("commands_rejected", v.commands_rejected.into()),
+        ("backend", v.backend.into()),
+        ("alpha", v.alpha.into()),
+        ("perplexity", v.perplexity.into()),
+        ("attraction", v.attraction.into()),
+        ("repulsion", v.repulsion.into()),
+        ("snapshots_held", v.snapshots_held.into()),
+        ("snapshots_total", v.snapshots_total.into()),
+        ("max_iters", v.max_iters.into()),
+        (
+            "last_error",
+            v.last_error.as_ref().map_or(Json::Null, |e| e.as_str().into()),
+        ),
+    ])
+}
+
+fn frame_json(id: u64, frame: &EmbeddingFrame) -> Json {
+    let points: Vec<Json> = frame
+        .data
+        .chunks_exact(frame.d.max(1))
+        .map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect()))
+        .collect();
+    Json::obj(vec![
+        ("id", id.into()),
+        ("iter", frame.iter.into()),
+        ("n", frame.n.into()),
+        ("d", frame.d.into()),
+        ("source", frame.source.into()),
+        ("points", points.into()),
+    ])
+}
+
+fn render_prometheus(
+    m: &ServiceMetrics,
+    http_requests: &AtomicU64,
+    started: Instant,
+) -> String {
+    let mut out = String::new();
+    let mut metric = |name: &str, kind: &str, help: &str, value: String| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n{value}\n"));
+    };
+    metric(
+        "funcsne_sessions",
+        "gauge",
+        "Live embedding sessions.",
+        format!("funcsne_sessions {}", m.sessions),
+    );
+    metric(
+        "funcsne_steps_total",
+        "counter",
+        "Engine iterations run across all sessions.",
+        format!("funcsne_steps_total {}", m.steps),
+    );
+    metric(
+        "funcsne_sweeps_total",
+        "counter",
+        "Round-robin step_all sweeps.",
+        format!("funcsne_sweeps_total {}", m.sweeps),
+    );
+    metric(
+        "funcsne_session_failures_total",
+        "counter",
+        "Session steps that errored (session auto-paused).",
+        format!("funcsne_session_failures_total {}", m.step_failures),
+    );
+    metric(
+        "funcsne_commands_queued_total",
+        "counter",
+        "Commands accepted over HTTP.",
+        format!("funcsne_commands_queued_total {}", m.commands_queued),
+    );
+    metric(
+        "funcsne_sessions_created_total",
+        "counter",
+        "Sessions created.",
+        format!("funcsne_sessions_created_total {}", m.sessions_created),
+    );
+    metric(
+        "funcsne_sessions_deleted_total",
+        "counter",
+        "Sessions deleted.",
+        format!("funcsne_sessions_deleted_total {}", m.sessions_deleted),
+    );
+    metric(
+        "funcsne_http_requests_total",
+        "counter",
+        "HTTP requests handled.",
+        format!("funcsne_http_requests_total {}", http_requests.load(Ordering::Relaxed)),
+    );
+    metric(
+        "funcsne_uptime_seconds",
+        "gauge",
+        "Seconds since the server started.",
+        format!("funcsne_uptime_seconds {}", started.elapsed().as_secs()),
+    );
+    if !m.session_iters.is_empty() {
+        let lines: Vec<String> = m
+            .session_iters
+            .iter()
+            .map(|(id, iter)| format!("funcsne_session_iterations{{id=\"{id}\"}} {iter}"))
+            .collect();
+        metric(
+            "funcsne_session_iterations",
+            "gauge",
+            "Iterations completed per live session.",
+            lines.join("\n"),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd(text: &str) -> Result<Command, String> {
+        command_from_json(&json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn commands_map_from_json() {
+        assert!(matches!(
+            cmd("{\"command\":\"set_alpha\",\"value\":0.5}").unwrap(),
+            Command::SetAlpha(v) if v == 0.5
+        ));
+        assert!(matches!(
+            cmd("{\"command\":\"set_perplexity\",\"value\":40}").unwrap(),
+            Command::SetPerplexity(v) if v == 40.0
+        ));
+        assert!(matches!(
+            cmd("{\"command\":\"remove_point\",\"index\":7}").unwrap(),
+            Command::RemovePoint(7)
+        ));
+        assert!(matches!(cmd("{\"command\":\"pause\"}").unwrap(), Command::Pause));
+        assert!(matches!(cmd("{\"command\":\"resume\"}").unwrap(), Command::Resume));
+        assert!(matches!(cmd("{\"command\":\"implode\"}").unwrap(), Command::Implode));
+    }
+
+    #[test]
+    fn insert_and_move_carry_payloads() {
+        let c = cmd("{\"command\":\"insert_points\",\"rows\":[[1,2],[3,4],[5,6]]}").unwrap();
+        match c {
+            Command::InsertPoints(m) => {
+                assert_eq!((m.n(), m.d()), (3, 2));
+                assert_eq!(m.row(2), &[5.0, 6.0]);
+            }
+            other => panic!("wrong command {other:?}"),
+        }
+        let c = cmd("{\"command\":\"move_point\",\"index\":2,\"row\":[9,8,7]}").unwrap();
+        match c {
+            Command::MovePoint(i, row) => {
+                assert_eq!(i, 2);
+                assert_eq!(row, vec![9.0, 8.0, 7.0]);
+            }
+            other => panic!("wrong command {other:?}"),
+        }
+    }
+
+    #[test]
+    fn set_routes_defaults_then_overrides() {
+        let c = cmd("{\"command\":\"set_routes\",\"random\":false}").unwrap();
+        match c {
+            Command::SetRoutes(r) => {
+                assert!(r.same_space && r.cross_space && !r.random);
+            }
+            other => panic!("wrong command {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_commands_are_rejected() {
+        assert!(cmd("{\"value\":1}").is_err(), "missing command");
+        assert!(cmd("{\"command\":\"warp_speed\"}").is_err(), "unknown command");
+        assert!(cmd("{\"command\":\"set_alpha\"}").is_err(), "missing value");
+        assert!(cmd("{\"command\":\"remove_point\",\"index\":-1}").is_err());
+        assert!(cmd("{\"command\":\"insert_points\",\"rows\":[[1],[2,3]]}").is_err(), "ragged");
+        assert!(cmd("{\"command\":\"insert_points\",\"rows\":[]}").is_err(), "empty");
+        assert!(cmd("{\"command\":\"move_point\",\"index\":0,\"row\":[\"x\"]}").is_err());
+    }
+
+    #[test]
+    fn create_spec_requires_exactly_one_source() {
+        let stride = 25;
+        let err = create_spec_from_json(&json::parse("{}").unwrap(), stride).unwrap_err();
+        assert_eq!(err.status(), 400);
+        let both = json::parse("{\"rows\":[[1]],\"path\":\"x.npy\"}").unwrap();
+        assert_eq!(create_spec_from_json(&both, stride).unwrap_err().status(), 400);
+        let ok = json::parse("{\"rows\":[[1,2],[3,4],[5,6],[7,8]]}").unwrap();
+        let spec = create_spec_from_json(&ok, stride).unwrap();
+        assert_eq!(spec.max_iters, 0);
+    }
+
+    #[test]
+    fn prometheus_rendering_has_counters() {
+        let m = ServiceMetrics {
+            sessions: 2,
+            sweeps: 10,
+            steps: 17,
+            step_failures: 1,
+            commands_queued: 3,
+            sessions_created: 2,
+            sessions_deleted: 0,
+            session_iters: vec![(0, 9), (1, 8)],
+        };
+        let reqs = AtomicU64::new(5);
+        let text = render_prometheus(&m, &reqs, Instant::now());
+        assert!(text.contains("# TYPE funcsne_sessions gauge"), "{text}");
+        assert!(text.contains("funcsne_sessions 2"));
+        assert!(text.contains("funcsne_steps_total 17"));
+        assert!(text.contains("funcsne_session_failures_total 1"));
+        assert!(text.contains("funcsne_http_requests_total 5"));
+        assert!(text.contains("funcsne_session_iterations{id=\"1\"} 8"));
+    }
+}

@@ -1,0 +1,525 @@
+//! A minimal HTTP/1.1 server on `std::net` — request parsing, routing
+//! glue, keep-alive connection handling, and an accept loop that runs
+//! one connection handler per [`WorkerPool`] slot.
+//!
+//! Scope: exactly what the embedding service needs. `Content-Length`
+//! bodies (no chunked transfer), a bounded header section, percent-
+//! decoded query strings, and keep-alive by default (HTTP/1.1
+//! semantics; `Connection: close` honoured). The listener runs in
+//! non-blocking mode and workers poll it with a short sleep, so
+//! shutdown is a plain atomic flag — no self-connect tricks, no
+//! platform-specific socket teardown.
+
+use crate::runtime::WorkerPool;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Largest accepted request body (inline datasets can be sizeable).
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+/// Largest accepted request line / header line.
+const MAX_LINE_BYTES: usize = 16 * 1024;
+/// Maximum number of headers per request.
+const MAX_HEADERS: usize = 64;
+/// Accept-loop poll interval while idle (the listener is non-blocking).
+const IDLE_POLL: Duration = Duration::from_millis(10);
+/// Per-read socket timeout: bounds how long a worker sits in a blocking
+/// read on an idle keep-alive connection before re-checking shutdown.
+const READ_TIMEOUT: Duration = Duration::from_millis(250);
+/// Overall deadline for receiving one request (line, headers or body —
+/// individual reads may hit [`READ_TIMEOUT`] and retry; a slow but
+/// live client is fine, a trickling one is bounded).
+const BODY_DEADLINE: Duration = Duration::from_secs(60);
+/// How long a keep-alive connection may sit idle between requests
+/// before the worker closes it and returns to the accept loop —
+/// without this, `threads` idle clients would pin every worker.
+const IDLE_CONN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Upper-case method (`GET`, `POST`, `DELETE`, ...).
+    pub method: String,
+    /// Decoded path without the query string (e.g. `/sessions/3/stats`).
+    pub path: String,
+    /// Percent-decoded query parameters.
+    pub query: BTreeMap<String, String>,
+    /// Headers with lower-cased names.
+    pub headers: BTreeMap<String, String>,
+    /// Raw body bytes (`Content-Length` framed).
+    pub body: Vec<u8>,
+    /// Whether the client asked to close the connection after this
+    /// exchange (`Connection: close`, or HTTP/1.0 without keep-alive).
+    pub close: bool,
+}
+
+impl Request {
+    /// The body as UTF-8 text.
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+
+    /// An optional non-negative integer query parameter.
+    pub fn query_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.query.get(key) {
+            None => Ok(None),
+            Some(raw) => {
+                let v = raw
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("query {key}={raw:?} is not an integer"))?;
+                Ok(Some(v))
+            }
+        }
+    }
+}
+
+/// An HTTP response ready for serialisation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, value: &super::json::Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: value.encode().into_bytes(),
+        }
+    }
+
+    /// A plain-text response (e.g. Prometheus metrics).
+    pub fn text(status: u16, body: String) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8", body: body.into_bytes() }
+    }
+}
+
+/// Reason phrase for the status codes this service emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Per-worker request handler. One instance lives on each accept-loop
+/// slot (handlers are `Send`, not `Sync` — each worker owns its own,
+/// so cheap per-worker state like channel senders needs no locking).
+pub trait Handler: Send {
+    fn handle(&mut self, req: &Request) -> Response;
+}
+
+/// Run the accept loop until `shutdown` is set: one connection-handler
+/// per [`WorkerPool`] slot (`handlers.len()` slots), all accepting from
+/// the same non-blocking listener — the kernel load-balances accepts.
+/// Blocks the caller until every worker has exited.
+pub fn serve<H: Handler>(listener: &TcpListener, shutdown: &AtomicBool, handlers: Vec<H>) {
+    let pool = WorkerPool::new(handlers.len());
+    let tasks: Vec<_> = handlers
+        .into_iter()
+        .map(|mut h| move || worker_loop(listener, shutdown, &mut h))
+        .collect();
+    pool.run_tasks(tasks);
+}
+
+fn worker_loop<H: Handler>(listener: &TcpListener, shutdown: &AtomicBool, handler: &mut H) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Connection errors only tear down that connection.
+                let _ = handle_connection(stream, shutdown, handler);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(IDLE_POLL),
+            Err(_) => std::thread::sleep(IDLE_POLL),
+        }
+    }
+}
+
+/// Serve one (possibly keep-alive) connection to completion.
+fn handle_connection<H: Handler>(
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    handler: &mut H,
+) -> Result<()> {
+    // The accepted socket may inherit the listener's non-blocking mode.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    // A client that stops reading must not pin this worker: a stalled
+    // send errors out after the deadline and the connection closes.
+    stream.set_write_timeout(Some(BODY_DEADLINE))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut idle_since = Instant::now();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // Wait for the next request without consuming anything, so an
+        // idle tick (timeout) can loop back and re-check shutdown.
+        match reader.fill_buf() {
+            Ok(buf) if buf.is_empty() => break, // clean EOF
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if idle_since.elapsed() >= IDLE_CONN_TIMEOUT {
+                    break; // free the worker slot for other clients
+                }
+                continue;
+            }
+            Err(_) => break,
+        }
+        let req = match read_request(&mut reader, Some(shutdown)) {
+            Ok(r) => r,
+            Err(e) => {
+                let body = super::json::Json::obj(vec![("error", format!("{e}").into())]);
+                let _ = write_response(&mut writer, &Response::json(400, &body), true);
+                break;
+            }
+        };
+        let resp = handler.handle(&req);
+        let close = req.close || shutdown.load(Ordering::SeqCst);
+        write_response(&mut writer, &resp, close)?;
+        if close {
+            break;
+        }
+        idle_since = Instant::now();
+    }
+    Ok(())
+}
+
+/// Read one request (request line, headers, `Content-Length` body) from
+/// a buffered stream positioned at a request boundary. One
+/// [`BODY_DEADLINE`] covers the whole request, so a trickling client
+/// cannot stretch it per-line; setting `cancel` (the server's shutdown
+/// flag) aborts mid-request so shutdown never waits out the deadline.
+pub fn read_request<R: BufRead>(r: &mut R, cancel: Option<&AtomicBool>) -> Result<Request> {
+    let deadline = Instant::now() + BODY_DEADLINE;
+    let line = read_line(r, deadline, cancel)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .context("empty request line")?
+        .to_ascii_uppercase();
+    let target = parts.next().context("request line has no target")?;
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    let http10 = version.eq_ignore_ascii_case("HTTP/1.0");
+    let (path, query) = split_target(target);
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = read_line(r, deadline, cancel)?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            bail!("too many headers");
+        }
+        let (name, value) = line.split_once(':').context("malformed header line")?;
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+
+    if let Some(te) = headers.get("transfer-encoding") {
+        // Parsing a chunked body as empty would desync the keep-alive
+        // stream (chunk framing read as the next request line) — refuse.
+        bail!("Transfer-Encoding {te:?} unsupported (use Content-Length)");
+    }
+    let len = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v.parse::<usize>().context("bad Content-Length")?,
+    };
+    if len > MAX_BODY_BYTES {
+        bail!("body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte limit");
+    }
+    let body = read_body(r, len, deadline, cancel)?;
+
+    let conn = headers.get("connection").map(|s| s.to_ascii_lowercase()).unwrap_or_default();
+    let close = conn.contains("close") || (http10 && !conn.contains("keep-alive"));
+    Ok(Request { method, path, query, headers, body, close })
+}
+
+/// Read exactly `len` body bytes, retrying reads that hit the short
+/// socket [`READ_TIMEOUT`] (a large upload legitimately spans many
+/// reads) under the request's shared `deadline`.
+fn read_body<R: BufRead>(
+    r: &mut R,
+    len: usize,
+    deadline: Instant,
+    cancel: Option<&AtomicBool>,
+) -> Result<Vec<u8>> {
+    let mut body = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => bail!("connection closed mid-body ({filled}/{len} bytes)"),
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if cancelled(cancel) {
+                    bail!("server shutting down");
+                }
+                if Instant::now() >= deadline {
+                    bail!("timed out reading request body ({filled}/{len} bytes)");
+                }
+            }
+            Err(e) => return Err(e).context("read request body"),
+        }
+    }
+    Ok(body)
+}
+
+fn cancelled(cancel: Option<&AtomicBool>) -> bool {
+    cancel.is_some_and(|c| c.load(Ordering::SeqCst))
+}
+
+/// Read one CRLF- (or LF-) terminated line, bounded by
+/// [`MAX_LINE_BYTES`]. Reads that hit the short socket
+/// [`READ_TIMEOUT`] mid-line retry under the request's shared
+/// `deadline` (already-read bytes stay accumulated in `buf`),
+/// mirroring [`read_body`] — a header split across slow packets must
+/// not 400.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    deadline: Instant,
+    cancel: Option<&AtomicBool>,
+) -> Result<String> {
+    let mut buf = Vec::new();
+    loop {
+        let remaining = MAX_LINE_BYTES.saturating_sub(buf.len());
+        if remaining == 0 {
+            bail!("header line exceeds {MAX_LINE_BYTES} bytes");
+        }
+        match r.by_ref().take(remaining as u64).read_until(b'\n', &mut buf) {
+            Ok(0) => bail!("connection closed mid-request"),
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    break;
+                }
+                // Hit the length cap or EOF mid-line; loop to find out
+                // (cap → remaining == 0 bails, EOF → Ok(0) bails).
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if cancelled(cancel) {
+                    bail!("server shutting down");
+                }
+                if Instant::now() >= deadline {
+                    bail!("timed out reading request line/headers");
+                }
+            }
+            Err(e) => return Err(e).context("read line"),
+        }
+    }
+    while matches!(buf.last(), Some(b'\n' | b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).context("header line is not UTF-8")
+}
+
+/// Split a request target into its decoded path and query map.
+fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
+    let (path, qs) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = BTreeMap::new();
+    for pair in qs.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.insert(percent_decode(k, true), percent_decode(v, true));
+    }
+    // RFC 3986: '+' is only space-encoded in form-style query data,
+    // never in the path — a literal '+' in a path must survive.
+    (percent_decode(path, false), query)
+}
+
+/// Decode `%XX` escapes (and, for query components, `+`-as-space);
+/// malformed escapes pass through literally.
+fn percent_decode(s: &str, plus_as_space: bool) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' if plus_as_space => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' => match (hex_val(bytes.get(i + 1)), hex_val(bytes.get(i + 2))) {
+                (Some(h), Some(l)) => {
+                    out.push(h * 16 + l);
+                    i += 3;
+                }
+                _ => {
+                    out.push(b'%');
+                    i += 1;
+                }
+            },
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn hex_val(b: Option<&u8>) -> Option<u8> {
+    match b? {
+        c @ b'0'..=b'9' => Some(c - b'0'),
+        c @ b'a'..=b'f' => Some(c - b'a' + 10),
+        c @ b'A'..=b'F' => Some(c - b'A' + 10),
+        _ => None,
+    }
+}
+
+/// Serialise a response; `close` selects the `Connection` header.
+pub fn write_response(w: &mut impl Write, resp: &Response, close: bool) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if close { "close" } else { "keep-alive" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse_req(raw: &str) -> Request {
+        read_request(&mut Cursor::new(raw.as_bytes()), None).unwrap()
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let req = parse_req("GET /sessions/3/embedding?iter=120&x=a%20b HTTP/1.1\r\n\r\n");
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/sessions/3/embedding");
+        assert_eq!(req.query.get("iter").unwrap(), "120");
+        assert_eq!(req.query.get("x").unwrap(), "a b");
+        assert_eq!(req.query_usize("iter").unwrap(), Some(120));
+        assert_eq!(req.query_usize("missing").unwrap(), None);
+        assert!(req.query_usize("x").is_err());
+        assert!(!req.close, "HTTP/1.1 defaults to keep-alive");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body_and_headers() {
+        let raw = "POST /sessions HTTP/1.1\r\nContent-Type: application/json\r\n\
+                   Content-Length: 14\r\nConnection: close\r\n\r\n{\"rows\":[[1]]}";
+        let req = read_request(&mut Cursor::new(raw.as_bytes()), None).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.headers.get("content-type").unwrap(), "application/json");
+        assert_eq!(req.body_str().unwrap(), "{\"rows\":[[1]]}");
+        assert!(req.close);
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let req = parse_req("GET / HTTP/1.0\r\n\r\n");
+        assert!(req.close);
+        let req = parse_req("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(!req.close);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for raw in [
+            "",
+            "\r\n\r\n",
+            "GET\r\n\r\n",
+            "GET / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: nan\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort",
+        ] {
+            assert!(
+                read_request(&mut Cursor::new(raw.as_bytes()), None).is_err(),
+                "should reject {raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_body_declaration() {
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(read_request(&mut Cursor::new(raw.as_bytes()), None).is_err());
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%2Fb+c", true), "a/b c");
+        assert_eq!(percent_decode("no-escapes", true), "no-escapes");
+        assert_eq!(percent_decode("bad%zz", true), "bad%zz");
+        assert_eq!(percent_decode("%41%42", true), "AB");
+        assert_eq!(percent_decode("trail%4", true), "trail%4");
+        // '+' survives in path position, decodes only in queries.
+        assert_eq!(percent_decode("a+b", false), "a+b");
+        let req = parse_req("GET /a+b?q=c+d HTTP/1.1\r\n\r\n");
+        assert_eq!(req.path, "/a+b");
+        assert_eq!(req.query.get("q").unwrap(), "c d");
+    }
+
+    #[test]
+    fn rejects_transfer_encoding() {
+        let raw = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(raw.as_bytes()), None).is_err());
+    }
+
+    #[test]
+    fn response_serialises_with_framing() {
+        let resp = Response::text(200, "hello".into());
+        let mut out = Vec::new();
+        write_response(&mut out, &resp, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 5\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\nhello"));
+
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::text(404, "x".into()), true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn multiple_requests_parse_from_one_stream() {
+        let raw = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        assert_eq!(read_request(&mut cur, None).unwrap().path, "/a");
+        assert_eq!(read_request(&mut cur, None).unwrap().path, "/b");
+        assert!(read_request(&mut cur, None).is_err(), "EOF after the second");
+    }
+}

@@ -1,0 +1,173 @@
+//! The embedding service: a zero-dependency HTTP/1.1 + JSON layer over
+//! the [`crate::session`] facade, turning the crate from a library
+//! into a deployable server.
+//!
+//! The paper's headline feature is *interactive* neighbour embedding —
+//! steering a running optimisation between any two iterations. The
+//! session layer provides that in-process; this module puts it on the
+//! wire so GUI/web frontends (and load generators) can create
+//! sessions, change hyperparameters mid-run, stream embedding frames,
+//! and tear sessions down, all over plain HTTP. Everything is `std`:
+//! the listener ([`http`]), the JSON codec ([`json`]), the REST
+//! routing ([`api`]) and the stepping thread ([`stepper`]).
+//!
+//! Architecture:
+//!
+//! ```text
+//!        TcpListener (non-blocking)
+//!        │  one connection-handler per WorkerPool slot
+//!        ▼
+//!   http::serve ── Api (per worker) ──┐ mpsc commands / replies
+//!                                     ▼
+//!                        stepper thread: owns SessionManager,
+//!                        loops { drain requests; step_all }
+//! ```
+//!
+//! [`crate::session::Session`] is `!Send` by design, so sessions live
+//! only on the stepper thread; HTTP workers exchange plain-data specs,
+//! commands and frames with it over channels. Stepping therefore never
+//! blocks on a slow client, and a client never observes a session
+//! mid-iteration.
+//!
+//! # Running as a service
+//!
+//! ```sh
+//! funcsne serve --addr 127.0.0.1:7878 --threads 4 --max-sessions 64
+//! ```
+//!
+//! ```sh
+//! # create a session from inline rows (or {"path": "data.npy"|"data.csv"})
+//! curl -s -X POST localhost:7878/sessions \
+//!      -d '{"rows": [[0,1],[1,0],[1,1],[0,0]], "perplexity": 3, "k_hd": 3}'
+//! # steer it mid-run
+//! curl -s -X POST localhost:7878/sessions/0/commands \
+//!      -d '{"command": "set_alpha", "value": 0.5}'
+//! # fetch the live embedding, or the nearest snapshot ≤ iteration 500
+//! curl -s localhost:7878/sessions/0/embedding
+//! curl -s 'localhost:7878/sessions/0/embedding?iter=500'
+//! curl -s localhost:7878/sessions/0/stats
+//! curl -s localhost:7878/healthz
+//! curl -s localhost:7878/metrics     # Prometheus text format
+//! curl -s -X DELETE localhost:7878/sessions/0
+//! ```
+
+pub mod api;
+pub mod http;
+pub mod json;
+pub mod stepper;
+
+pub use api::Api;
+pub use http::{Request, Response};
+pub use json::Json;
+pub use stepper::{ServiceError, Stepper, StepperRequest};
+
+use crate::runtime::WorkerPool;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Service configuration (the CLI `serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// HTTP worker slots (0 = auto-detect hardware parallelism).
+    pub threads: usize,
+    /// Maximum concurrent sessions; creates beyond it get HTTP 429.
+    pub max_sessions: usize,
+    /// Default snapshot stride for sessions that don't specify one
+    /// (how often `GET ...?iter=` history is recorded).
+    pub snapshot_every: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            threads: 4,
+            max_sessions: 64,
+            snapshot_every: 25,
+        }
+    }
+}
+
+/// A bound (but not yet serving) embedding service.
+///
+/// [`Server::bind`] reserves the port and spawns the stepper thread;
+/// [`Server::run`] blocks serving requests until a [`ServerHandle`]
+/// fires. Tests and embedders run `run()` on a spawned thread.
+pub struct Server {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    stepper: Stepper,
+    cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+    http_requests: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Bind the listener and spawn the stepping thread.
+    pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        // Non-blocking accept lets workers poll the shutdown flag; the
+        // accepted streams are switched back to blocking mode.
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let local_addr = listener.local_addr().context("local_addr")?;
+        let stepper = Stepper::spawn(cfg.max_sessions.max(1));
+        Ok(Server {
+            listener,
+            local_addr,
+            stepper,
+            cfg,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            http_requests: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// A handle that can stop [`Server::run`] from another thread.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shutdown: Arc::clone(&self.shutdown) }
+    }
+
+    /// Serve until the [`ServerHandle`] fires: one connection-handler
+    /// per worker slot, all feeding the stepper thread. Joins the
+    /// stepper on the way out.
+    pub fn run(self) -> Result<()> {
+        let slots = WorkerPool::with_auto(self.cfg.threads).threads();
+        let handlers: Vec<Api> = (0..slots)
+            .map(|_| {
+                Api::new(
+                    self.stepper.sender(),
+                    Arc::clone(&self.http_requests),
+                    self.cfg.snapshot_every,
+                )
+            })
+            .collect();
+        http::serve(&self.listener, &self.shutdown, handlers);
+        self.stepper.shutdown();
+        Ok(())
+    }
+}
+
+/// Stops a running [`Server`]; cheap to clone across threads.
+#[derive(Clone)]
+pub struct ServerHandle {
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Ask the server to stop. Workers notice within their poll
+    /// interval (~10 ms); `Server::run` then joins the stepper and
+    /// returns.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}

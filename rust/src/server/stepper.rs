@@ -1,0 +1,572 @@
+//! The stepping thread: a dedicated background thread that owns the
+//! [`SessionManager`] and continuously sweeps
+//! [`SessionManager::step_all_detailed`], while HTTP handlers talk to
+//! it through a command/reply channel.
+//!
+//! [`crate::session::Session`] is deliberately `!Send`, so sessions
+//! are created *on* this thread (the [`SessionBuilder`] spec crosses
+//! the channel; the built session never does) and never migrate.
+//! Request handling is interleaved with stepping — every pending
+//! request drains before each sweep — so a slow client can never
+//! back-pressure the optimisation, and stepping never blocks on
+//! socket I/O.
+//!
+//! Known trade-off: `POST /sessions` builds the session (KNN tables,
+//! calibration, optional PCA) on this thread, so a very large create
+//! stalls other sessions for its duration. Moving construction onto
+//! the HTTP workers would require splitting `SessionBuilder::build`
+//! at the `Send` boundary (engine construction is `Send`, backend
+//! attachment is not) — worth doing if create latency ever matters
+//! more than implementation weight.
+
+use crate::session::{Command, Session, SessionBuilder, SessionId, SessionManager};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long the loop naps when no session is actively stepping.
+const IDLE_WAIT: Duration = Duration::from_millis(25);
+
+/// A service-level failure, carrying the HTTP status it maps to.
+#[derive(Clone, Debug)]
+pub enum ServiceError {
+    /// Unknown session / snapshot not available.
+    NotFound(String),
+    /// Malformed or semantically invalid request payload.
+    Invalid(String),
+    /// The `--max-sessions` capacity limit was hit.
+    Full(String),
+    /// The stepper thread is gone or unresponsive.
+    Unavailable(String),
+}
+
+impl ServiceError {
+    /// The HTTP status code this error renders as.
+    pub fn status(&self) -> u16 {
+        match self {
+            ServiceError::NotFound(_) => 404,
+            ServiceError::Invalid(_) => 400,
+            ServiceError::Full(_) => 429,
+            ServiceError::Unavailable(_) => 503,
+        }
+    }
+
+    /// The human-readable message.
+    pub fn message(&self) -> &str {
+        match self {
+            ServiceError::NotFound(m)
+            | ServiceError::Invalid(m)
+            | ServiceError::Full(m)
+            | ServiceError::Unavailable(m) => m,
+        }
+    }
+}
+
+/// `Result` with a [`ServiceError`] (what reply channels carry).
+pub type ServiceResult<T> = Result<T, ServiceError>;
+
+/// One embedding frame handed back to a client.
+#[derive(Clone, Debug)]
+pub struct EmbeddingFrame {
+    /// Iteration the frame was taken at.
+    pub iter: usize,
+    pub n: usize,
+    pub d: usize,
+    /// Row-major N × d coordinates.
+    pub data: Vec<f32>,
+    /// `"live"` (current embedding) or `"snapshot"` (ring buffer).
+    pub source: &'static str,
+}
+
+/// Per-session state surfaced by `GET /sessions/:id/stats`.
+#[derive(Clone, Debug)]
+pub struct SessionView {
+    pub id: u64,
+    pub iter: usize,
+    pub n: usize,
+    pub hd_dim: usize,
+    pub ld_dim: usize,
+    pub paused: bool,
+    pub queued: usize,
+    pub commands_applied: u64,
+    pub commands_rejected: u64,
+    pub backend: &'static str,
+    pub alpha: f64,
+    pub perplexity: f64,
+    pub attraction: f64,
+    pub repulsion: f64,
+    pub snapshots_held: usize,
+    pub snapshots_total: u64,
+    /// Auto-pause budget (0 = step until paused or deleted). Fires
+    /// once; a `resume` command afterwards overrides it.
+    pub max_iters: usize,
+    /// The most recent step error, if the session has ever failed
+    /// (cleared by a successful step after a `Resume`).
+    pub last_error: Option<String>,
+}
+
+/// Service-wide counters surfaced by `GET /metrics`.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceMetrics {
+    pub sessions: usize,
+    pub sweeps: u64,
+    pub steps: u64,
+    pub step_failures: u64,
+    pub commands_queued: u64,
+    pub sessions_created: u64,
+    pub sessions_deleted: u64,
+    /// `(id, iteration)` per live session.
+    pub session_iters: Vec<(u64, usize)>,
+}
+
+/// Everything needed to create a session on the stepper thread.
+pub struct CreateSpec {
+    pub builder: SessionBuilder,
+    /// Force-pause after this many iterations (0 = unbounded). One-
+    /// shot: a `resume` command after the pause overrides the budget.
+    pub max_iters: usize,
+}
+
+/// The channel protocol between request handlers and the stepper.
+pub enum StepperRequest {
+    Create(Box<CreateSpec>, Sender<ServiceResult<SessionView>>),
+    Enqueue(u64, Command, Sender<ServiceResult<()>>),
+    Embedding(u64, Option<usize>, Sender<ServiceResult<EmbeddingFrame>>),
+    Stats(u64, Sender<ServiceResult<SessionView>>),
+    List(Sender<Vec<SessionView>>),
+    Delete(u64, Sender<ServiceResult<()>>),
+    Metrics(Sender<ServiceMetrics>),
+    Shutdown,
+}
+
+// Everything crossing the channel must be Send (the Session itself
+// never does). Compile-time proof, so a refactor that sneaks a
+// non-Send field into the builder or a command fails here, loudly.
+const fn assert_send<T: Send>() {}
+const _: () = {
+    assert_send::<StepperRequest>();
+    assert_send::<SessionBuilder>();
+    assert_send::<Command>();
+};
+
+/// Handle to a running stepper thread. Dropping it (or calling
+/// [`Stepper::shutdown`]) stops the loop and joins the thread.
+pub struct Stepper {
+    tx: Sender<StepperRequest>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Stepper {
+    /// Spawn the stepping thread. `max_sessions` bounds concurrent
+    /// sessions (creates beyond it are refused with
+    /// [`ServiceError::Full`]).
+    pub fn spawn(max_sessions: usize) -> Stepper {
+        let (tx, rx) = mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name("funcsne-stepper".to_string())
+            .spawn(move || run_loop(rx, max_sessions))
+            .expect("spawn stepper thread");
+        Stepper { tx, join: Some(join) }
+    }
+
+    /// A cloneable sender for request handlers (one per HTTP worker).
+    pub fn sender(&self) -> Sender<StepperRequest> {
+        self.tx.clone()
+    }
+
+    /// Stop the loop and join the thread (also what `Drop` does).
+    pub fn shutdown(self) {
+        // Drop impl does the work.
+    }
+}
+
+impl Drop for Stepper {
+    fn drop(&mut self) {
+        let _ = self.tx.send(StepperRequest::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Side-table entries the manager doesn't know about.
+struct SessionMeta {
+    max_iters: usize,
+    /// The budget fires **once**: after the auto-pause, an explicit
+    /// `resume` command is an override and the session runs unbounded
+    /// (otherwise resume would be silently re-paused every sweep).
+    budget_fired: bool,
+    last_error: Option<String>,
+}
+
+struct Service {
+    mgr: SessionManager,
+    meta: BTreeMap<u64, SessionMeta>,
+    max_sessions: usize,
+    sweeps: u64,
+    steps: u64,
+    step_failures: u64,
+    commands_queued: u64,
+    sessions_created: u64,
+    sessions_deleted: u64,
+}
+
+fn run_loop(rx: Receiver<StepperRequest>, max_sessions: usize) {
+    let mut svc = Service {
+        mgr: SessionManager::new(),
+        meta: BTreeMap::new(),
+        max_sessions,
+        sweeps: 0,
+        steps: 0,
+        step_failures: 0,
+        commands_queued: 0,
+        sessions_created: 0,
+        sessions_deleted: 0,
+    };
+    loop {
+        // 1. Drain every pending request: client latency is bounded by
+        //    one sweep, and bursts don't queue behind stepping.
+        loop {
+            match rx.try_recv() {
+                Ok(StepperRequest::Shutdown) => return,
+                Ok(req) => svc.handle(req),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        // 2. One fair sweep over every live session.
+        let outcome = svc.mgr.step_all_detailed();
+        svc.sweeps += 1;
+        svc.steps += outcome.stepped as u64;
+        for (id, err) in &outcome.failed {
+            svc.step_failures += 1;
+            if let Some(meta) = svc.meta.get_mut(&id.0) {
+                meta.last_error = Some(err.clone());
+            }
+        }
+        // A session that is unpaused and absent from `failed` stepped
+        // cleanly this sweep — a recorded error is stale, clear it
+        // (e.g. the client fixed the cause and sent `resume`).
+        for (id, meta) in svc.meta.iter_mut() {
+            if meta.last_error.is_some()
+                && !outcome.failed.iter().any(|(fid, _)| fid.0 == *id)
+                && svc.mgr.get(SessionId(*id)).is_some_and(|s| !s.is_paused())
+            {
+                meta.last_error = None;
+            }
+        }
+        // 3. Enforce per-session iteration budgets.
+        svc.enforce_budgets();
+        // 4. Nothing running? Block briefly instead of spinning.
+        if outcome.stepped == 0 {
+            match rx.recv_timeout(IDLE_WAIT) {
+                Ok(StepperRequest::Shutdown) => return,
+                Ok(req) => svc.handle(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
+}
+
+impl Service {
+    fn handle(&mut self, req: StepperRequest) {
+        match req {
+            StepperRequest::Create(spec, reply) => {
+                let _ = reply.send(self.create(*spec));
+            }
+            StepperRequest::Enqueue(id, command, reply) => {
+                let result = match self.mgr.enqueue(SessionId(id), command) {
+                    Ok(()) => {
+                        self.commands_queued += 1;
+                        Ok(())
+                    }
+                    Err(e) => Err(ServiceError::NotFound(e.to_string())),
+                };
+                let _ = reply.send(result);
+            }
+            StepperRequest::Embedding(id, iter, reply) => {
+                let _ = reply.send(self.embedding(id, iter));
+            }
+            StepperRequest::Stats(id, reply) => {
+                let result = match self.mgr.get(SessionId(id)) {
+                    Some(session) => Ok(self.view(id, session)),
+                    None => Err(not_found(id)),
+                };
+                let _ = reply.send(result);
+            }
+            StepperRequest::List(reply) => {
+                let views: Vec<SessionView> = self
+                    .mgr
+                    .ids()
+                    .into_iter()
+                    .filter_map(|sid| self.mgr.get(sid).map(|s| self.view(sid.0, s)))
+                    .collect();
+                let _ = reply.send(views);
+            }
+            StepperRequest::Delete(id, reply) => {
+                let result = match self.mgr.remove(SessionId(id)) {
+                    Some(_) => {
+                        self.meta.remove(&id);
+                        self.sessions_deleted += 1;
+                        Ok(())
+                    }
+                    None => Err(not_found(id)),
+                };
+                let _ = reply.send(result);
+            }
+            StepperRequest::Metrics(reply) => {
+                let _ = reply.send(self.metrics());
+            }
+            StepperRequest::Shutdown => unreachable!("handled by the loop"),
+        }
+    }
+
+    fn create(&mut self, spec: CreateSpec) -> ServiceResult<SessionView> {
+        if self.mgr.len() >= self.max_sessions {
+            return Err(ServiceError::Full(format!(
+                "session limit reached ({} live, max {})",
+                self.mgr.len(),
+                self.max_sessions
+            )));
+        }
+        let session = spec
+            .builder
+            .build()
+            .map_err(|e| ServiceError::Invalid(format!("session build failed: {e:?}")))?;
+        let sid = self.mgr.add(session);
+        let meta =
+            SessionMeta { max_iters: spec.max_iters, budget_fired: false, last_error: None };
+        self.meta.insert(sid.0, meta);
+        self.sessions_created += 1;
+        let session = self.mgr.get(sid).expect("just inserted");
+        Ok(self.view(sid.0, session))
+    }
+
+    fn embedding(&self, id: u64, iter: Option<usize>) -> ServiceResult<EmbeddingFrame> {
+        let session = self.mgr.get(SessionId(id)).ok_or_else(|| not_found(id))?;
+        match iter {
+            None => {
+                let y = session.embedding();
+                Ok(EmbeddingFrame {
+                    iter: session.iterations(),
+                    n: y.n(),
+                    d: y.d(),
+                    data: y.data().to_vec(),
+                    source: "live",
+                })
+            }
+            Some(at) => match session.snapshots().at_or_before(at) {
+                Some(snap) => Ok(EmbeddingFrame {
+                    iter: snap.iter,
+                    n: snap.y.n(),
+                    d: snap.y.d(),
+                    data: snap.y.data().to_vec(),
+                    source: "snapshot",
+                }),
+                None => Err(ServiceError::NotFound(format!(
+                    "no snapshot at or before iteration {at} for session {id} \
+                     ({} held; was the session created with snapshot_stride > 0?)",
+                    session.snapshots().len()
+                ))),
+            },
+        }
+    }
+
+    fn view(&self, id: u64, session: &Session) -> SessionView {
+        let cfg = session.config();
+        let (applied, rejected) = session.command_counts();
+        let meta = self.meta.get(&id);
+        SessionView {
+            id,
+            iter: session.iterations(),
+            n: session.n(),
+            hd_dim: session.engine().x.d(),
+            ld_dim: cfg.ld_dim,
+            paused: session.is_paused(),
+            queued: session.queued(),
+            commands_applied: applied,
+            commands_rejected: rejected,
+            backend: session.backend_name(),
+            alpha: cfg.alpha,
+            perplexity: cfg.perplexity,
+            attraction: cfg.attraction,
+            repulsion: cfg.repulsion,
+            snapshots_held: session.snapshots().len(),
+            snapshots_total: session.snapshots().total_recorded(),
+            max_iters: meta.map_or(0, |m| m.max_iters),
+            last_error: meta.and_then(|m| m.last_error.clone()),
+        }
+    }
+
+    fn metrics(&self) -> ServiceMetrics {
+        ServiceMetrics {
+            sessions: self.mgr.len(),
+            sweeps: self.sweeps,
+            steps: self.steps,
+            step_failures: self.step_failures,
+            commands_queued: self.commands_queued,
+            sessions_created: self.sessions_created,
+            sessions_deleted: self.sessions_deleted,
+            session_iters: self
+                .mgr
+                .ids()
+                .into_iter()
+                .filter_map(|sid| self.mgr.get(sid).map(|s| (sid.0, s.iterations())))
+                .collect(),
+        }
+    }
+
+    fn enforce_budgets(&mut self) {
+        for (id, meta) in self.meta.iter_mut() {
+            if meta.max_iters == 0 || meta.budget_fired {
+                continue;
+            }
+            if let Some(session) = self.mgr.get_mut(SessionId(*id)) {
+                if !session.is_paused() && session.iterations() >= meta.max_iters {
+                    session.force_pause();
+                    meta.budget_fired = true;
+                }
+            }
+        }
+    }
+}
+
+fn not_found(id: u64) -> ServiceError {
+    ServiceError::NotFound(format!("unknown session {id}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::session::Session;
+    use std::time::Instant;
+
+    fn spec(seed: u64, max_iters: usize) -> Box<CreateSpec> {
+        let ds = datasets::blobs(80, 5, 3, 0.5, 8.0, seed);
+        let builder = Session::builder()
+            .dataset(ds.x)
+            .k_hd(10)
+            .k_ld(6)
+            .perplexity(6.0)
+            .jumpstart_iters(2)
+            .snapshot_stride(4)
+            .snapshot_capacity(8)
+            .seed(seed);
+        Box::new(CreateSpec { builder, max_iters })
+    }
+
+    fn ask<T>(
+        tx: &Sender<StepperRequest>,
+        make: impl FnOnce(Sender<ServiceResult<T>>) -> StepperRequest,
+    ) -> ServiceResult<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(make(reply_tx)).expect("stepper alive");
+        reply_rx.recv_timeout(Duration::from_secs(30)).expect("stepper reply")
+    }
+
+    fn wait_until<F: FnMut() -> bool>(mut cond: F, what: &str) {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn stepper_steps_in_background_and_applies_commands() {
+        let stepper = Stepper::spawn(8);
+        let tx = stepper.sender();
+        let view = ask(&tx, |r| StepperRequest::Create(spec(1, 0), r)).unwrap();
+        assert_eq!(view.n, 80);
+        assert_eq!(view.iter, 0);
+        let id = view.id;
+
+        // The background thread steps without any further requests.
+        wait_until(
+            || ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap().iter >= 5,
+            "background stepping",
+        );
+
+        // Mid-run hyperparameter change lands between iterations.
+        ask(&tx, |r| StepperRequest::Enqueue(id, Command::SetAlpha(0.5), r)).unwrap();
+        wait_until(
+            || {
+                let v = ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap();
+                v.alpha == 0.5 && v.commands_applied >= 1
+            },
+            "alpha change to drain",
+        );
+
+        // Live embedding reflects the current iteration.
+        let frame = ask(&tx, |r| StepperRequest::Embedding(id, None, r)).unwrap();
+        assert_eq!((frame.n, frame.d), (80, 2));
+        assert_eq!(frame.source, "live");
+        assert_eq!(frame.data.len(), 160);
+
+        // Snapshot lookup resolves to the nearest recorded frame.
+        wait_until(
+            || ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap().snapshots_total >= 2,
+            "snapshots to record",
+        );
+        let snap = ask(&tx, |r| StepperRequest::Embedding(id, Some(1_000_000), r)).unwrap();
+        assert_eq!(snap.source, "snapshot");
+        assert_eq!(snap.iter % 4, 0, "stride-4 snapshot");
+
+        ask(&tx, |r| StepperRequest::Delete(id, r)).unwrap();
+        let err = ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap_err();
+        assert_eq!(err.status(), 404);
+        stepper.shutdown();
+    }
+
+    #[test]
+    fn max_iters_budget_auto_pauses() {
+        let stepper = Stepper::spawn(8);
+        let tx = stepper.sender();
+        let id = ask(&tx, |r| StepperRequest::Create(spec(2, 6), r)).unwrap().id;
+        wait_until(
+            || ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap().paused,
+            "budget pause",
+        );
+        let v = ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap();
+        assert!((6..=7).contains(&v.iter), "stopped at the budget, got {}", v.iter);
+        // A budget-paused session still drains queued commands, so it
+        // stays steerable (and resumable) — never deadlocked.
+        ask(&tx, |r| StepperRequest::Enqueue(id, Command::SetRepulsion(1.5), r)).unwrap();
+        wait_until(
+            || ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap().repulsion == 1.5,
+            "command drain while paused",
+        );
+        stepper.shutdown();
+    }
+
+    #[test]
+    fn session_capacity_is_enforced() {
+        let stepper = Stepper::spawn(1);
+        let tx = stepper.sender();
+        ask(&tx, |r| StepperRequest::Create(spec(3, 0), r)).unwrap();
+        let err = ask(&tx, |r| StepperRequest::Create(spec(4, 0), r)).unwrap_err();
+        assert_eq!(err.status(), 429);
+        stepper.shutdown();
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_not_fatal() {
+        let stepper = Stepper::spawn(4);
+        let tx = stepper.sender();
+        let bad = Box::new(CreateSpec {
+            builder: Session::builder(), // no dataset
+            max_iters: 0,
+        });
+        let err = ask(&tx, |r| StepperRequest::Create(bad, r)).unwrap_err();
+        assert_eq!(err.status(), 400);
+        // The loop survived; metrics still answer.
+        let (mtx, mrx) = mpsc::channel();
+        tx.send(StepperRequest::Metrics(mtx)).unwrap();
+        let m = mrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(m.sessions, 0);
+        stepper.shutdown();
+    }
+}

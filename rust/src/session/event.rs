@@ -94,6 +94,16 @@ impl SnapshotBuffer {
         self.buf.back()
     }
 
+    /// The nearest recorded frame at or before `iter` — the principled
+    /// lookup for "give me the embedding as of iteration N". Returns
+    /// `None` when every held frame is newer than `iter` (the ring may
+    /// have evicted the requested history) or the buffer is empty.
+    pub fn at_or_before(&self, iter: usize) -> Option<&Snapshot> {
+        // Frames are pushed in iteration order, so scanning from the
+        // back finds the newest frame that is not too new.
+        self.buf.iter().rev().find(|s| s.iter <= iter)
+    }
+
     /// Frames currently held, oldest first.
     pub fn iter(&self) -> impl Iterator<Item = &Snapshot> {
         self.buf.iter()
@@ -134,6 +144,46 @@ mod tests {
         let iters: Vec<usize> = b.iter().map(|s| s.iter).collect();
         assert_eq!(iters, vec![30, 40, 50]);
         assert_eq!(b.latest().unwrap().iter, 50);
+    }
+
+    #[test]
+    fn at_or_before_picks_nearest_not_newer() {
+        let mut b = SnapshotBuffer::new(8);
+        let y = Matrix::zeros(4, 2);
+        for it in [10, 20, 30] {
+            b.push(it, &y);
+        }
+        assert!(b.at_or_before(9).is_none(), "before the first frame");
+        assert_eq!(b.at_or_before(10).unwrap().iter, 10);
+        assert_eq!(b.at_or_before(19).unwrap().iter, 10);
+        assert_eq!(b.at_or_before(20).unwrap().iter, 20);
+        assert_eq!(b.at_or_before(29).unwrap().iter, 20);
+        assert_eq!(b.at_or_before(30).unwrap().iter, 30);
+        assert_eq!(b.at_or_before(usize::MAX).unwrap().iter, 30);
+    }
+
+    #[test]
+    fn at_or_before_after_ring_wraparound() {
+        // Capacity 3, pushes at 10..=60: frames 10/20/30 are evicted,
+        // the ring holds 40/50/60 with its head in the middle of the
+        // backing storage.
+        let mut b = SnapshotBuffer::new(3);
+        let y = Matrix::zeros(2, 2);
+        for it in 1..=6 {
+            b.push(it * 10, &y);
+        }
+        assert_eq!(b.total_recorded(), 6);
+        assert!(b.at_or_before(39).is_none(), "evicted history must not resolve");
+        assert_eq!(b.at_or_before(40).unwrap().iter, 40);
+        assert_eq!(b.at_or_before(55).unwrap().iter, 50);
+        assert_eq!(b.at_or_before(60).unwrap().iter, 60);
+        assert_eq!(b.at_or_before(1000).unwrap().iter, 60);
+    }
+
+    #[test]
+    fn at_or_before_empty_buffer() {
+        let b = SnapshotBuffer::new(4);
+        assert!(b.at_or_before(100).is_none());
     }
 
     #[test]

@@ -16,6 +16,21 @@ impl std::fmt::Display for SessionId {
     }
 }
 
+/// What one [`SessionManager::step_all_detailed`] sweep did: how many
+/// sessions advanced, and which ones failed (with the step error).
+/// Failed sessions are force-paused in place with their command queues
+/// intact — a server surfaces `failed` per session (e.g. in a stats
+/// endpoint) and clients resume with [`crate::session::Command::Resume`]
+/// once the cause is fixed.
+#[derive(Clone, Debug, Default)]
+pub struct StepOutcome {
+    /// Sessions that ran one iteration this sweep.
+    pub stepped: usize,
+    /// Sessions whose step errored, with the error message. Each was
+    /// paused via [`Session::force_pause`] (queued commands survive).
+    pub failed: Vec<(SessionId, String)>,
+}
+
 /// Owns multiple independent [`Session`]s keyed by [`SessionId`] and
 /// steps them fairly ([`SessionManager::step_all`] runs one iteration
 /// per session per call, in id order).
@@ -81,36 +96,46 @@ impl SessionManager {
     }
 
     /// One round-robin sweep: each session drains its queue and runs
-    /// one iteration (paused sessions only drain). Returns how many
-    /// sessions actually stepped.
+    /// one iteration (paused sessions only drain).
     ///
-    /// Fault isolation: a session whose step errors is auto-paused (so
-    /// it stops erroring every sweep; resume it with
-    /// [`Command::Resume`] after fixing the cause) and the sweep
-    /// continues — one broken session never starves the others. The
-    /// error returned afterwards names every failed session.
-    pub fn step_all(&mut self) -> Result<usize> {
-        let mut stepped = 0usize;
-        let mut failures: Vec<String> = Vec::new();
+    /// Fault isolation: a session whose step errors is paused *in
+    /// place* via [`Session::force_pause`] — it stops erroring every
+    /// sweep, its command queue is untouched (anything clients queued
+    /// keeps draining on later sweeps, so a `Resume` after fixing the
+    /// cause behaves normally), and the sweep continues: one broken
+    /// session never starves the others. The failed ids come back
+    /// structurally in [`StepOutcome::failed`] so a server can surface
+    /// the error per session instead of losing it in a formatted blob.
+    pub fn step_all_detailed(&mut self) -> StepOutcome {
+        let mut out = StepOutcome::default();
         for (id, session) in self.sessions.iter_mut() {
             match session.step() {
-                Ok(true) => stepped += 1,
+                Ok(true) => out.stepped += 1,
                 Ok(false) => {}
                 Err(e) => {
-                    session.enqueue(Command::Pause);
-                    session.drain_commands();
-                    failures.push(format!("{}: {e}", SessionId(*id)));
+                    session.force_pause();
+                    out.failed.push((SessionId(*id), e.to_string()));
                 }
             }
         }
-        if !failures.is_empty() {
-            bail!(
-                "{} session(s) failed and were paused — {}",
-                failures.len(),
-                failures.join("; ")
-            );
+        out
+    }
+
+    /// [`SessionManager::step_all_detailed`] with failures folded into
+    /// one error naming every failed session (convenient for callers
+    /// that treat any failure as fatal; servers want the detailed form).
+    /// Returns how many sessions actually stepped.
+    pub fn step_all(&mut self) -> Result<usize> {
+        let out = self.step_all_detailed();
+        if out.failed.is_empty() {
+            return Ok(out.stepped);
         }
-        Ok(stepped)
+        let list: Vec<String> = out.failed.iter().map(|(id, e)| format!("{id}: {e}")).collect();
+        bail!(
+            "{} session(s) failed and were paused — {}",
+            out.failed.len(),
+            list.join("; ")
+        )
     }
 
     /// `rounds` interleaved sweeps of [`SessionManager::step_all`] —
@@ -126,7 +151,12 @@ impl SessionManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::EmbedConfig;
     use crate::data::datasets;
+    use crate::data::Matrix;
+    use crate::engine::{ComputeBackend, FuncSne, NegSamples, NegStats};
+    use crate::hd::Affinities;
+    use crate::knn::iterative::IterativeKnn;
     use crate::session::Session;
 
     fn builder(seed: u64) -> SessionBuilder {
@@ -176,5 +206,114 @@ mod tests {
     fn enqueue_unknown_session_errors() {
         let mut mgr = SessionManager::new();
         assert!(mgr.enqueue(SessionId(99), Command::Implode).is_err());
+    }
+
+    /// A backend whose every numeric call errors — stands in for a
+    /// dying PJRT client / poisoned artifact to exercise fault
+    /// isolation deterministically.
+    struct FailingBackend;
+
+    impl ComputeBackend for FailingBackend {
+        fn sqdist_batch(
+            &mut self,
+            _x: &Matrix,
+            _owners: &[u32],
+            _cands: &[u32],
+            _out: &mut Vec<f32>,
+        ) -> anyhow::Result<()> {
+            anyhow::bail!("injected backend failure (sqdist)")
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn forces(
+            &mut self,
+            _y: &Matrix,
+            _knn: &IterativeKnn,
+            _aff: &Affinities,
+            _neg: &NegSamples,
+            _alpha: f32,
+            _far_scale: f32,
+            _attr: &mut Matrix,
+            _rep: &mut Matrix,
+        ) -> anyhow::Result<NegStats> {
+            anyhow::bail!("injected backend failure (forces)")
+        }
+
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    /// A session whose first step is guaranteed to error (no jumpstart
+    /// phase, so the failing backend is hit immediately).
+    fn failing_session(seed: u64) -> Session {
+        let ds = datasets::blobs(60, 5, 3, 0.5, 8.0, seed);
+        let cfg = EmbedConfig {
+            k_hd: 10,
+            k_ld: 6,
+            perplexity: 6.0,
+            jumpstart_iters: 0,
+            seed,
+            ..EmbedConfig::default()
+        };
+        let engine = FuncSne::new(ds.x, cfg).unwrap();
+        Session::from_parts(engine, Box::new(FailingBackend), None, 0, 8)
+    }
+
+    #[test]
+    fn failed_session_is_paused_and_siblings_keep_stepping() {
+        let mut mgr = SessionManager::new();
+        let a = mgr.create(builder(6)).unwrap();
+        let b = mgr.add(failing_session(7));
+        let c = mgr.create(builder(8)).unwrap();
+        // A command queued on a healthy sibling before the sweep in
+        // which `b` dies must be applied, not lost.
+        mgr.enqueue(c, Command::SetAlpha(0.5)).unwrap();
+        let out = mgr.step_all_detailed();
+        assert_eq!(out.stepped, 2, "healthy sessions still step");
+        assert_eq!(out.failed.len(), 1);
+        assert_eq!(out.failed[0].0, b);
+        assert!(out.failed[0].1.contains("injected backend failure"), "{}", out.failed[0].1);
+        assert!(mgr.get(b).unwrap().is_paused(), "failed session auto-pauses");
+        assert_eq!(mgr.get(c).unwrap().config().alpha, 0.5);
+        assert_eq!(mgr.get(a).unwrap().iterations(), 1);
+        // The next sweep is clean: the paused session no longer errors.
+        let out = mgr.step_all_detailed();
+        assert_eq!(out.stepped, 2);
+        assert!(out.failed.is_empty());
+    }
+
+    #[test]
+    fn queued_commands_survive_failure_and_drain_while_paused() {
+        let mut mgr = SessionManager::new();
+        let b = mgr.add(failing_session(9));
+        let out = mgr.step_all_detailed();
+        assert_eq!(out.failed.len(), 1);
+        // Commands queued on the *failed* session are not discarded by
+        // the auto-pause: they stay queued and drain on the next sweep
+        // (paused sessions drain without stepping).
+        mgr.enqueue(b, Command::SetAttraction(2.0)).unwrap();
+        assert_eq!(mgr.get(b).unwrap().queued(), 1);
+        let out = mgr.step_all_detailed();
+        assert!(out.failed.is_empty());
+        let s = mgr.get(b).unwrap();
+        assert!(s.is_paused());
+        assert_eq!(s.queued(), 0, "command drained while paused");
+        assert_eq!(s.config().attraction, 2.0, "command applied, not dropped");
+        let (applied, rejected) = s.command_counts();
+        assert_eq!((applied, rejected), (1, 0));
+    }
+
+    #[test]
+    fn step_all_folds_failures_into_one_error() {
+        let mut mgr = SessionManager::new();
+        let good = mgr.create(builder(10)).unwrap();
+        let bad = mgr.add(failing_session(11));
+        let err = mgr.step_all().unwrap_err().to_string();
+        assert!(err.contains(&bad.to_string()), "{err}");
+        assert!(err.contains("injected backend failure"), "{err}");
+        // The healthy session advanced despite the reported failure.
+        assert_eq!(mgr.get(good).unwrap().iterations(), 1);
+        assert!(mgr.step_all().is_ok(), "paused failure stops erroring");
     }
 }

@@ -41,7 +41,7 @@ pub mod manager;
 pub use builder::SessionBuilder;
 pub use command::Command;
 pub use event::{Event, EventSink, Snapshot, SnapshotBuffer};
-pub use manager::{SessionId, SessionManager};
+pub use manager::{SessionId, SessionManager, StepOutcome};
 
 use crate::config::EmbedConfig;
 use crate::data::Matrix;
@@ -125,6 +125,22 @@ impl Session {
     /// Whether the session is paused (commands still drain).
     pub fn is_paused(&self) -> bool {
         self.paused
+    }
+
+    /// Pause immediately, **without** draining the command queue.
+    ///
+    /// This is the fault-isolation path: when a step fails, the owner
+    /// ([`SessionManager`], a server) must stop the session from
+    /// erroring every sweep but must not flush commands clients have
+    /// already queued — they stay queued and drain normally on the next
+    /// sweep (paused sessions still drain). Emits [`Event::Paused`] on
+    /// the transition; a no-op if already paused.
+    pub fn force_pause(&mut self) {
+        if !self.paused {
+            self.paused = true;
+            let iter = self.engine.iter;
+            self.emit(Event::Paused { iter });
+        }
     }
 
     /// Subscribe a sink to the event stream. Closures work directly:

@@ -25,6 +25,84 @@ pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<(
     Ok(())
 }
 
+/// Read a CSV file of f32 values: one row per line, comma-separated.
+/// Returns `(data, rows, cols)` with `data` in C order.
+///
+/// The first non-empty line may be a textual header (as produced by
+/// [`write_csv`]); it is skipped when any of its fields fails to parse
+/// as a number. Blank lines are ignored; ragged rows are an error.
+pub fn read_csv_f32(path: &Path) -> Result<(Vec<f32>, usize, usize)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    parse_csv_f32(&text).with_context(|| format!("parse {path:?}"))
+}
+
+/// Parse CSV text (see [`read_csv_f32`] for the accepted dialect).
+pub fn parse_csv_f32(text: &str) -> Result<(Vec<f32>, usize, usize)> {
+    let mut data = Vec::new();
+    let mut rows = 0usize;
+    let mut cols = 0usize;
+    let mut seen_any = false;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: std::result::Result<Vec<f32>, _> =
+            fields.iter().map(|f| f.parse::<f32>()).collect();
+        match parsed {
+            Ok(vals) => {
+                if rows == 0 {
+                    cols = vals.len();
+                } else if vals.len() != cols {
+                    bail!("line {}: {} fields, expected {cols}", lineno + 1, vals.len());
+                }
+                data.extend(vals);
+                rows += 1;
+            }
+            Err(e) => {
+                // Only the leading line may be non-numeric (a header).
+                if !seen_any {
+                    seen_any = true;
+                    continue;
+                }
+                bail!("line {}: unparseable number ({e})", lineno + 1);
+            }
+        }
+        seen_any = true;
+    }
+    if rows == 0 {
+        bail!("no numeric rows");
+    }
+    Ok((data, rows, cols))
+}
+
+/// Read a dataset matrix from disk, dispatching on the file extension:
+/// `.npy` ([`read_npy_f32`], 1-D shapes become a single column) or
+/// `.csv` ([`read_csv_f32`]). Returns `(data, rows, cols)`.
+pub fn read_matrix_f32(path: &Path) -> Result<(Vec<f32>, usize, usize)> {
+    let ext = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .unwrap_or("")
+        .to_ascii_lowercase();
+    match ext.as_str() {
+        "npy" => {
+            let (data, shape) = read_npy_f32(path)?;
+            match shape.len() {
+                1 => {
+                    let n = shape[0];
+                    Ok((data, n, 1))
+                }
+                2 => Ok((data, shape[0], shape[1])),
+                d => bail!("{path:?}: expected a 1-D or 2-D array, got {d}-D"),
+            }
+        }
+        "csv" => read_csv_f32(path),
+        other => bail!("unsupported dataset extension {other:?} for {path:?} (.npy or .csv)"),
+    }
+}
+
 /// Write plain text (used for ASCII figures).
 pub fn write_text(path: &Path, text: &str) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -203,6 +281,54 @@ mod tests {
     #[test]
     fn npy_rejects_garbage() {
         assert!(parse_npy_f32(b"not an npy at all").is_err());
+    }
+
+    #[test]
+    fn csv_roundtrip_against_write_csv() {
+        let path = tmp("rt.csv");
+        let values = [[1.5f32, -2.0, 0.25], [3.0, 4.5, -0.125], [0.0, 7.0, 9.5]];
+        let rows: Vec<Vec<String>> = values
+            .iter()
+            .map(|r| r.iter().map(|v| v.to_string()).collect())
+            .collect();
+        write_csv(&path, &["x0", "x1", "x2"], &rows).unwrap();
+        let (data, n, d) = read_csv_f32(&path).unwrap();
+        assert_eq!((n, d), (3, 3));
+        let flat: Vec<f32> = values.iter().flatten().copied().collect();
+        assert_eq!(data, flat, "header skipped, values exact");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_parses_without_header_and_skips_blanks() {
+        let (data, n, d) = parse_csv_f32("1,2\n\n3,4\n").unwrap();
+        assert_eq!((n, d), (2, 2));
+        assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn csv_rejects_ragged_rows_and_mid_file_text() {
+        assert!(parse_csv_f32("1,2\n3\n").is_err(), "ragged");
+        assert!(parse_csv_f32("1,2\nx,y\n").is_err(), "text after data");
+        assert!(parse_csv_f32("a,b\nc,d\n").is_err(), "two header-ish lines");
+        assert!(parse_csv_f32("").is_err(), "empty");
+        assert!(parse_csv_f32("a,b\n").is_err(), "header only");
+    }
+
+    #[test]
+    fn read_matrix_dispatches_on_extension() {
+        let npy = tmp("dispatch.npy");
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        write_npy_f32(&npy, &data, &[2, 3]).unwrap();
+        let (back, n, d) = read_matrix_f32(&npy).unwrap();
+        assert_eq!((n, d), (2, 3));
+        assert_eq!(back, data);
+        std::fs::remove_file(npy).ok();
+
+        let bad = tmp("dispatch.parquet");
+        std::fs::write(&bad, b"x").unwrap();
+        assert!(read_matrix_f32(&bad).is_err());
+        std::fs::remove_file(bad).ok();
     }
 
     #[test]

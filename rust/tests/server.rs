@@ -1,0 +1,344 @@
+//! End-to-end tests for the HTTP/JSON embedding service, using only
+//! std's `TcpStream` as the client: bind an ephemeral port, create a
+//! session over the wire, let the stepper advance it in the
+//! background, change hyperparameters mid-run, fetch embeddings and
+//! stats, and tear everything down.
+
+use funcsne::server::json::{self, Json};
+use funcsne::server::{Server, ServerConfig, ServerHandle};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// A server running on its own thread; shuts down (and joins) on drop.
+struct TestServer {
+    addr: SocketAddr,
+    handle: ServerHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(max_sessions: usize) -> TestServer {
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 2,
+            max_sessions,
+            snapshot_every: 4,
+        };
+        let server = Server::bind(cfg).expect("bind ephemeral port");
+        let addr = server.local_addr();
+        let handle = server.handle();
+        let join = std::thread::spawn(move || server.run().expect("server run"));
+        TestServer { addr, handle, join: Some(join) }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(join) = self.join.take() {
+            join.join().expect("server thread");
+        }
+    }
+}
+
+/// One HTTP exchange on a fresh connection (`Connection: close`).
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout");
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: funcsne\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send request");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    parse_response(&raw)
+}
+
+fn parse_response(raw: &[u8]) -> (u16, String) {
+    let text = String::from_utf8_lossy(raw);
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    (status, body.to_string())
+}
+
+fn http_json(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let (status, body) = http(addr, method, path, body);
+    let parsed = json::parse(&body).unwrap_or_else(|e| panic!("bad JSON {body:?}: {e}"));
+    (status, parsed)
+}
+
+/// Deterministic pseudo-random rows: two displaced blobs, n × d.
+fn rows_json(n: usize, d: usize) -> String {
+    let mut state = 0x2545F4914F6CDD1Du64;
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let shift = if i % 2 == 0 { 0.0 } else { 4.0 };
+        let mut row = Vec::with_capacity(d);
+        for _ in 0..d {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let unit = ((state >> 33) as f64) / ((1u64 << 31) as f64); // [0, 1)
+            row.push(format!("{:.4}", unit + shift));
+        }
+        rows.push(format!("[{}]", row.join(",")));
+    }
+    format!("[{}]", rows.join(","))
+}
+
+fn get_stats(addr: SocketAddr, id: u64) -> Json {
+    let (status, v) = http_json(addr, "GET", &format!("/sessions/{id}/stats"), None);
+    assert_eq!(status, 200, "stats failed: {v}");
+    v
+}
+
+fn wait_until<F: FnMut() -> bool>(mut cond: F, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn http_round_trip_create_steer_fetch_delete() {
+    let server = TestServer::start(8);
+    let addr = server.addr;
+
+    // --- create a session from inline rows ----------------------------
+    let spec = format!(
+        "{{\"rows\": {}, \"k_hd\": 10, \"k_ld\": 6, \"perplexity\": 6, \
+          \"jumpstart_iters\": 2, \"seed\": 7}}",
+        rows_json(60, 4)
+    );
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "create failed: {created}");
+    let id = created.get("id").and_then(Json::as_usize).expect("id") as u64;
+    assert_eq!(created.get("n").and_then(Json::as_usize), Some(60));
+    assert_eq!(created.get("ld_dim").and_then(Json::as_usize), Some(2));
+    assert_eq!(created.get("alpha").and_then(Json::as_f64), Some(1.0));
+    // The advertised resource url dereferences.
+    let url = created.get("url").and_then(Json::as_str).expect("url").to_string();
+    let (status, resource) = http_json(addr, "GET", &url, None);
+    assert_eq!(status, 200, "GET {url} failed: {resource}");
+    assert_eq!(resource.get("id").and_then(Json::as_usize), Some(id as usize));
+
+    // --- the background stepper advances it with no further requests --
+    wait_until(
+        || get_stats(addr, id).get("iter").and_then(Json::as_usize).unwrap() >= 5,
+        "background stepping",
+    );
+
+    // --- /healthz and /metrics respond while stepping ------------------
+    let (status, health) = http_json(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(health.get("sessions").and_then(Json::as_usize), Some(1));
+    let (status, metrics) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(metrics.contains("funcsne_sessions 1"), "{metrics}");
+    assert!(metrics.contains("# TYPE funcsne_steps_total counter"), "{metrics}");
+    assert!(metrics.contains(&format!("funcsne_session_iterations{{id=\"{id}\"}}")));
+
+    // --- mid-run hyperparameter change over the wire -------------------
+    let (status, queued) = http_json(
+        addr,
+        "POST",
+        &format!("/sessions/{id}/commands"),
+        Some("{\"command\": \"set_alpha\", \"value\": 0.5}"),
+    );
+    assert_eq!(status, 202, "command failed: {queued}");
+    assert_eq!(queued.get("status").and_then(Json::as_str), Some("queued"));
+    wait_until(
+        || {
+            let v = get_stats(addr, id);
+            v.get("alpha").and_then(Json::as_f64) == Some(0.5)
+                && v.get("commands_applied").and_then(Json::as_usize).unwrap() >= 1
+        },
+        "alpha change to drain between iterations",
+    );
+
+    // --- dynamic-dataset command: insert points mid-run ----------------
+    let (status, _) = http_json(
+        addr,
+        "POST",
+        &format!("/sessions/{id}/commands"),
+        Some("{\"command\": \"insert_points\", \"rows\": [[0.1,0.2,0.3,0.4],[4.1,4.2,4.3,4.4]]}"),
+    );
+    assert_eq!(status, 202);
+    wait_until(
+        || get_stats(addr, id).get("n").and_then(Json::as_usize) == Some(62),
+        "insert to apply",
+    );
+
+    // --- live embedding reflects the grown dataset ---------------------
+    let (status, frame) = http_json(addr, "GET", &format!("/sessions/{id}/embedding"), None);
+    assert_eq!(status, 200, "embedding failed: {frame}");
+    assert_eq!(frame.get("source").and_then(Json::as_str), Some("live"));
+    assert_eq!(frame.get("n").and_then(Json::as_usize), Some(62));
+    assert_eq!(frame.get("d").and_then(Json::as_usize), Some(2));
+    let points = frame.get("points").and_then(Json::as_arr).expect("points");
+    assert_eq!(points.len(), 62);
+    assert_eq!(points[0].as_arr().unwrap().len(), 2);
+    for p in points {
+        for c in p.as_arr().unwrap() {
+            assert!(c.as_f64().unwrap().is_finite());
+        }
+    }
+
+    // --- snapshot lookup: nearest frame ≤ the requested iteration ------
+    wait_until(
+        || get_stats(addr, id).get("snapshots_total").and_then(Json::as_usize).unwrap() >= 2,
+        "snapshots to record",
+    );
+    let (status, snap) =
+        http_json(addr, "GET", &format!("/sessions/{id}/embedding?iter=999999"), None);
+    assert_eq!(status, 200, "snapshot fetch failed: {snap}");
+    assert_eq!(snap.get("source").and_then(Json::as_str), Some("snapshot"));
+    let snap_iter = snap.get("iter").and_then(Json::as_usize).unwrap();
+    assert_eq!(snap_iter % 4, 0, "snapshot_every=4 stride, got {snap_iter}");
+    // A pre-history iteration has no snapshot at or before it.
+    let (status, missing) =
+        http_json(addr, "GET", &format!("/sessions/{id}/embedding?iter=1"), None);
+    assert_eq!(status, 404, "unexpected: {missing}");
+
+    // --- delete, then the session is gone ------------------------------
+    let (status, deleted) = http_json(addr, "DELETE", &format!("/sessions/{id}"), None);
+    assert_eq!(status, 200, "delete failed: {deleted}");
+    let (status, _) = http_json(addr, "GET", &format!("/sessions/{id}/stats"), None);
+    assert_eq!(status, 404);
+    let (_, health) = http_json(addr, "GET", "/healthz", None);
+    assert_eq!(health.get("sessions").and_then(Json::as_usize), Some(0));
+}
+
+#[test]
+fn keep_alive_serves_multiple_requests_per_connection() {
+    let server = TestServer::start(8);
+    let mut stream = TcpStream::connect(server.addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    for _ in 0..3 {
+        stream.write_all(b"GET /healthz HTTP/1.1\r\nHost: funcsne\r\n\r\n").expect("send");
+        let body = read_keep_alive_response(&mut stream);
+        let v = json::parse(&body).expect("healthz JSON");
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+    }
+}
+
+/// Read exactly one `Content-Length`-framed keep-alive response.
+fn read_keep_alive_response(stream: &mut TcpStream) -> String {
+    let mut raw = Vec::new();
+    let mut byte = [0u8; 1];
+    // Headers end at the first CRLFCRLF.
+    while !raw.ends_with(b"\r\n\r\n") {
+        stream.read_exact(&mut byte).expect("read header byte");
+        raw.push(byte[0]);
+    }
+    let head = String::from_utf8_lossy(&raw);
+    assert!(head.contains("Connection: keep-alive"), "{head}");
+    let len: usize = head
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Length: "))
+        .expect("Content-Length")
+        .trim()
+        .parse()
+        .expect("length");
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).expect("read body");
+    String::from_utf8(body).expect("utf8 body")
+}
+
+#[test]
+fn session_capacity_and_error_handling() {
+    let server = TestServer::start(1);
+    let addr = server.addr;
+
+    // Malformed JSON and unknown routes fail cleanly.
+    let (status, err) = http_json(addr, "POST", "/sessions", Some("{not json"));
+    assert_eq!(status, 400, "{err}");
+    let (status, _) = http_json(addr, "GET", "/no/such/route", None);
+    assert_eq!(status, 404);
+    let (status, _) = http_json(addr, "PUT", "/sessions", None);
+    assert_eq!(status, 405);
+    let (status, _) = http_json(addr, "GET", "/sessions/999/stats", None);
+    assert_eq!(status, 404);
+    let (status, _) = http_json(addr, "GET", "/sessions/bogus/stats", None);
+    assert_eq!(status, 400);
+
+    // Unknown command names are rejected before touching the session.
+    let spec = format!(
+        "{{\"rows\": {}, \"k_hd\": 8, \"perplexity\": 5, \"max_iters\": 3}}",
+        rows_json(40, 3)
+    );
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "{created}");
+    let id = created.get("id").and_then(Json::as_usize).unwrap();
+    let (status, err) = http_json(
+        addr,
+        "POST",
+        &format!("/sessions/{id}/commands"),
+        Some("{\"command\": \"warp_speed\"}"),
+    );
+    assert_eq!(status, 400);
+    assert!(err.get("error").and_then(Json::as_str).unwrap().contains("warp_speed"));
+
+    // The capacity limit returns 429 without disturbing the live session.
+    let spec2 = format!("{{\"rows\": {}, \"k_hd\": 8, \"perplexity\": 5}}", rows_json(40, 3));
+    let (status, err) = http_json(addr, "POST", "/sessions", Some(&spec2));
+    assert_eq!(status, 429, "{err}");
+
+    // The max_iters budget pauses the session by itself.
+    wait_until(
+        || {
+            let v = get_stats(addr, id as u64);
+            v.get("paused").and_then(Json::as_bool) == Some(true)
+        },
+        "max_iters budget pause",
+    );
+    let v = get_stats(addr, id as u64);
+    assert_eq!(v.get("iter").and_then(Json::as_usize), Some(3));
+}
+
+#[test]
+fn create_from_csv_path() {
+    let server = TestServer::start(4);
+    let addr = server.addr;
+
+    // Write a small CSV (with header — the reader skips it).
+    let mut path = std::env::temp_dir();
+    path.push(format!("funcsne_server_test_{}.csv", std::process::id()));
+    let mut text = String::from("x0,x1,x2\n");
+    let mut state = 99u64;
+    for i in 0..50 {
+        let shift = if i % 2 == 0 { 0.0 } else { 5.0 };
+        let mut cells = Vec::new();
+        for _ in 0..3 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            cells.push(format!("{:.3}", ((state >> 33) as f64 / 2.0e9) + shift));
+        }
+        text.push_str(&cells.join(","));
+        text.push('\n');
+    }
+    std::fs::write(&path, text).expect("write csv");
+
+    let spec = format!(
+        "{{\"path\": {:?}, \"k_hd\": 8, \"perplexity\": 5, \"seed\": 3}}",
+        path.to_str().unwrap()
+    );
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "csv create failed: {created}");
+    assert_eq!(created.get("n").and_then(Json::as_usize), Some(50));
+    assert_eq!(created.get("hd_dim").and_then(Json::as_usize), Some(3));
+
+    // A bad path is a clean 400, not a server failure.
+    let (status, err) =
+        http_json(addr, "POST", "/sessions", Some("{\"path\": \"/no/such/file.csv\"}"));
+    assert_eq!(status, 400, "{err}");
+    std::fs::remove_file(path).ok();
+}
