@@ -190,6 +190,57 @@ fn main() {
             n as f64 / per_iter,
         );
     }
+    // ---- online quality-probe overhead ----------------------------------
+    // Acceptance: with probe_anchors=256 on blobs(n=5000) the probe adds
+    // < 10% to the MEDIAN step time (the probe fires 1-in-probe_every
+    // steps, so the median step is untouched by design; the mean and the
+    // probe-step cost quantify the amortised and worst-case overhead).
+    {
+        let n = 5000usize;
+        let iters = if full { 100 } else { 50 };
+        let run = |probe_every: usize| -> Vec<f64> {
+            let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 7);
+            let cfg = EmbedConfig {
+                n_iters: 0,
+                jumpstart_iters: 0,
+                early_exag_iters: 0,
+                probe_every,
+                probe_anchors: 256,
+                ..EmbedConfig::default()
+            };
+            let mut engine = FuncSne::new(ds.x, cfg).unwrap();
+            let mut backend = NativeBackend::new();
+            engine.run(10, &mut backend).unwrap(); // warm up KNN state
+            let mut per_step = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let sw = Stopwatch::new();
+                engine.step(&mut backend).unwrap();
+                per_step.push(sw.elapsed_s());
+            }
+            per_step
+        };
+        let stats = |mut v: Vec<f64>| -> (f64, f64, f64) {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = v[v.len() / 2];
+            let mean = v.iter().sum::<f64>() / v.len() as f64;
+            (median, mean, *v.last().unwrap())
+        };
+        let (off_med, off_mean, _) = stats(run(0));
+        let (on_med, on_mean, on_max) = stats(run(25));
+        println!(
+            "probe overhead n={n} anchors=256 every=25 ({iters} steps):\n\
+             \x20 median step  off {:.3} ms | on {:.3} ms ({:+.1}%)\n\
+             \x20 mean   step  off {:.3} ms | on {:.3} ms ({:+.1}%)\n\
+             \x20 worst (probe) step {:.3} ms",
+            off_med * 1e3,
+            on_med * 1e3,
+            (on_med / off_med - 1.0) * 100.0,
+            off_mean * 1e3,
+            on_mean * 1e3,
+            (on_mean / off_mean - 1.0) * 100.0,
+            on_max * 1e3
+        );
+    }
     // ---- exact-KNN ground truth is the benchmark's own cost; note it ---
     let ds = datasets::blobs(2000, 32, 10, 1.0, 20.0, 6);
     let sw = Stopwatch::new();

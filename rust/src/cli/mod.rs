@@ -15,8 +15,9 @@ use crate::figures::common::Scale;
 use crate::knn::brute::brute_knn;
 use crate::knn::nn_descent::nn_descent;
 use crate::metrics::rnx::{rnx_curve, rnx_curve_vs_table};
+use crate::server::json::Json;
 use crate::server::{Server, ServerConfig};
-use crate::session::Session;
+use crate::session::{Event, Session};
 use crate::util::{io, plot};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -126,6 +127,12 @@ SUBCOMMANDS
                             FUNCSNE_THREADS or 1)
              [--attraction X] [--repulsion X] [--seed S] [--out results/embed]
   knn        compare KNN finders        --dataset NAME --n N [--k K] [--iters I]
+  eval       run to convergence and print the sampled quality trajectory
+             as JSON                    --dataset NAME --n N [--iters I]
+             [--probe-every P] [--anchors A] [--seed S] [--threads T]
+             [--out file.json]  also write the JSON to a file
+             [--min-recall R]   exit non-zero if final KNN recall@10 < R
+                                (the CI quality gate)
   figure     regenerate paper figures   [--only fig1..fig11|table1|table2] [--full]
   hierarchy  α-sweep hierarchy graph    --dataset NAME --n N [--ld-dim D]
   serve      run the HTTP/JSON service  [--addr 127.0.0.1:7878] [--threads T]
@@ -145,6 +152,7 @@ pub fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "embed" => cmd_embed(args),
         "knn" => cmd_knn(args),
+        "eval" => cmd_eval(args),
         "figure" | "figures" => cmd_figure(args),
         "hierarchy" => cmd_hierarchy(args),
         "serve" => cmd_serve(args),
@@ -260,6 +268,98 @@ fn cmd_knn(args: &Args) -> Result<()> {
         c1.auc, nnd.dist_evals, c2.auc
     );
     Ok(())
+}
+
+/// `eval`: run a dataset to convergence with the online quality probe
+/// on, print the quality trajectory as JSON, and optionally gate on a
+/// committed recall floor (the CI `quality-gate` job).
+fn cmd_eval(args: &Args) -> Result<()> {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    let ds = load_dataset(args)?;
+    let n = ds.n();
+    if n < 4 {
+        bail!("eval needs at least 4 points (got {n})");
+    }
+    let iters = args.get_usize("iters", 300)?;
+    let probe_every = args.get_usize("probe_every", 25)?;
+    if probe_every == 0 {
+        // 0 means "probe off" everywhere else; an eval without a probe
+        // has nothing to report, so reject rather than silently coerce.
+        bail!("--probe-every must be >= 1 (eval IS the probe; use `embed` to run without one)");
+    }
+    // Clamp to N here (the probe clamps identically) so the reported
+    // anchor count matches what actually ran.
+    let anchors = args.get_usize("anchors", 256)?.max(1).min(n);
+    let mut cfg = EmbedConfig {
+        seed: args.get_usize("seed", 42)? as u64,
+        n_iters: iters,
+        probe_every,
+        probe_anchors: anchors,
+        ..EmbedConfig::default()
+    };
+    cfg.alpha = args.get_f64("alpha", cfg.alpha)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.k_hd = args.get_usize("k_hd", cfg.k_hd)?.min(n - 1);
+    cfg.k_ld = args.get_usize("k_ld", cfg.k_ld)?.min(n - 1);
+    cfg.perplexity = args.get_f64("perplexity", cfg.perplexity)?.min(cfg.k_hd as f64);
+    let mut session = Session::builder().dataset(ds.x.clone()).config(cfg).build()?;
+    let trajectory: Rc<RefCell<Vec<Json>>> = Rc::new(RefCell::new(Vec::new()));
+    let tap = Rc::clone(&trajectory);
+    session.add_sink(Box::new(move |e: &Event| {
+        if let Event::Quality { iter, recall, trust, cont, knn_recall_hd } = e {
+            tap.borrow_mut().push(Json::obj(vec![
+                ("iter", (*iter).into()),
+                ("knn_recall", (*recall).into()),
+                ("trustworthiness", (*trust).into()),
+                ("continuity", (*cont).into()),
+                ("knn_recall_hd", (*knn_recall_hd).into()),
+            ]));
+        }
+    }));
+    session.run(iters)?;
+    let final_q = session.quality().copied();
+    let final_json = match &final_q {
+        None => Json::Null,
+        Some(q) => Json::obj(vec![
+            ("iter", q.iter.into()),
+            ("anchors", q.anchors.into()),
+            ("k", q.k.into()),
+            ("knn_recall", q.knn_recall.into()),
+            ("trustworthiness", q.trustworthiness.into()),
+            ("continuity", q.continuity.into()),
+            ("knn_recall_hd", q.knn_recall_hd.into()),
+        ]),
+    };
+    let doc = Json::obj(vec![
+        ("dataset", ds.name.as_str().into()),
+        ("n", n.into()),
+        ("iters", iters.into()),
+        ("probe_every", probe_every.into()),
+        ("anchors", anchors.into()),
+        ("trajectory", Json::Arr(trajectory.borrow().clone())),
+        ("final", final_json),
+    ]);
+    let text = doc.encode();
+    let out = args.get_str("out", "");
+    if !out.is_empty() {
+        std::fs::write(&out, &text)?;
+        eprintln!("wrote {out}");
+    }
+    println!("{text}");
+    let floor = args.get_f64("min_recall", 0.0)?;
+    match final_q {
+        Some(q) if q.knn_recall >= floor => Ok(()),
+        Some(q) => bail!(
+            "quality gate FAILED: final knn_recall {:.4} < committed floor {floor}",
+            q.knn_recall
+        ),
+        None if floor > 0.0 => bail!(
+            "quality gate FAILED: no probe report produced \
+             (iters {iters} < probe_every {probe_every}?)"
+        ),
+        None => Ok(()),
+    }
 }
 
 fn cmd_figure(args: &Args) -> Result<()> {

@@ -99,12 +99,25 @@ pub struct EmbedConfig {
     /// (falling back to 1), which is how the CI matrix runs the whole
     /// test suite under both backends.
     pub threads: usize,
+    /// Iterations between online quality-probe measurements
+    /// ([`crate::metrics::probe`]); `0` disables the probe entirely
+    /// (no anchor state is allocated). The default honours the
+    /// `FUNCSNE_PROBE` environment variable (falling back to 0 = off).
+    pub probe_every: usize,
+    /// Anchor-subset size for the sampled quality probe (clamped to N).
+    pub probe_anchors: usize,
 }
 
 /// Default worker-thread count: `FUNCSNE_THREADS` if set and parseable,
 /// else 1 (sequential).
 fn default_threads() -> usize {
     std::env::var("FUNCSNE_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
+/// Default quality-probe cadence: `FUNCSNE_PROBE` if set and parseable,
+/// else 0 (probe off).
+fn default_probe_every() -> usize {
+    std::env::var("FUNCSNE_PROBE").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
 }
 
 impl Default for EmbedConfig {
@@ -134,6 +147,8 @@ impl Default for EmbedConfig {
             seed: 42,
             recalibrate_every: 10,
             threads: default_threads(),
+            probe_every: default_probe_every(),
+            probe_anchors: 256,
         }
     }
 }
@@ -177,6 +192,16 @@ impl EmbedConfig {
         }
         if self.threads > 4096 {
             bail!("threads must be <= 4096 (0 = auto-detect; got {})", self.threads);
+        }
+        if self.probe_every > 0 && self.probe_anchors == 0 {
+            bail!("probe_anchors must be >= 1 when probe_every > 0");
+        }
+        if self.probe_anchors > 16384 {
+            // Anchors are clamped to N at probe construction, so an
+            // unbounded request on a large dataset would turn the
+            // "sampled" probe into O(N²·d) work on whatever thread owns
+            // the session (the server's shared stepper, for one).
+            bail!("probe_anchors must be <= 16384 (got {})", self.probe_anchors);
         }
         Ok(())
     }
@@ -240,6 +265,8 @@ impl EmbedConfig {
             "implosion_factor" => f64_field!(implosion_factor),
             "recalibrate_every" => usize_field!(recalibrate_every),
             "threads" => usize_field!(threads),
+            "probe_every" => usize_field!(probe_every),
+            "probe_anchors" => usize_field!(probe_anchors),
             "seed" => {
                 self.seed = val.as_i64().context("expected integer")? as u64;
             }
@@ -372,6 +399,22 @@ mod tests {
         cfg.validate().unwrap();
         assert!(cfg.resolved_threads() >= 1);
         cfg.threads = 5000;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn probe_knobs_parse_and_validate() {
+        let map = toml_lite::parse("[embed]\nprobe_every = 25\nprobe_anchors = 128\n").unwrap();
+        let mut cfg = EmbedConfig::default();
+        cfg.apply(&map, "embed").unwrap();
+        assert_eq!(cfg.probe_every, 25);
+        assert_eq!(cfg.probe_anchors, 128);
+        cfg.validate().unwrap();
+        cfg.probe_anchors = 0; // invalid only while the probe is on
+        assert!(cfg.validate().is_err());
+        cfg.probe_every = 0;
+        cfg.validate().unwrap();
+        cfg.probe_anchors = 1_000_000; // capped even while the probe is off
         assert!(cfg.validate().is_err());
     }
 

@@ -331,6 +331,61 @@ mod tests {
         );
     }
 
+    /// Refinement only ever replaces a stored neighbour with a strictly
+    /// closer one, so (with table k == truth k and distinct distances)
+    /// the hit count against exact ground truth can never drop: an
+    /// insert that evicts a true top-k member admits a point that is
+    /// itself inside the true top-k radius. This is the invariant the
+    /// online quality probe's `knn_recall_hd` trajectory relies on.
+    #[test]
+    fn property_recall_vs_brute_non_decreasing_over_rounds() {
+        use crate::util::proptest as pt;
+        pt::check("iterative-recall-monotone", 6, |rng, _| {
+            let n = rng.range_usize(120, 250);
+            let seed = rng.next_u64();
+            let ds = datasets::blobs(n, 6, 3, 0.6, 8.0, seed);
+            let k = 8usize;
+            let truth = brute_knn(&ds.x, k);
+            let mut krng = crate::util::Rng::new(seed ^ 0x51);
+            let mut knn = IterativeKnn::new(n, k, k);
+            knn.seed_random(&ds.x, &ds.x, &mut krng);
+            let hits = |knn: &IterativeKnn| -> usize {
+                (0..n)
+                    .map(|i| {
+                        truth.neighbors(i).iter().filter(|&&j| knn.hd.contains(i, j)).count()
+                    })
+                    .sum()
+            };
+            let mut scratch = Vec::new();
+            let mut prev = hits(&knn);
+            for round in 0..15 {
+                knn.refine_hd_native(
+                    &ds.x,
+                    8,
+                    CandidateRoutes::default(),
+                    &mut krng,
+                    &mut scratch,
+                );
+                knn.refine_ld_native(
+                    &ds.x,
+                    8,
+                    CandidateRoutes::default(),
+                    &mut krng,
+                    &mut scratch,
+                );
+                let h = hits(&knn);
+                crate::prop_assert!(
+                    h >= prev,
+                    "recall dropped at round {round}: {h} < {prev} (n = {n})"
+                );
+                prev = h;
+            }
+            let recall = prev as f64 / (n * k) as f64;
+            crate::prop_assert!(recall > 0.4, "recall never improved: {recall} (n = {n})");
+            Ok(())
+        });
+    }
+
     #[test]
     fn gen_candidates_dedups_and_excludes_self() {
         let mut rng = crate::util::Rng::new(5);

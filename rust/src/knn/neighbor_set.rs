@@ -371,6 +371,64 @@ mod tests {
         });
     }
 
+    /// The probe/metrics stack leans on three table invariants holding
+    /// at ANY insertion order: ranked lists come out sorted by distance,
+    /// and are free of duplicates and self-links. The kept top-k
+    /// *distance multiset* must also be insertion-order invariant
+    /// (candidate ids may differ under exact distance ties at the cut).
+    #[test]
+    fn property_insert_order_sorted_dupfree_selffree() {
+        pt::check("neighbor-insert-order", 48, |rng, _| {
+            let k = rng.range_usize(1, 9);
+            let m = rng.range_usize(1, 30);
+            // Candidate pool over ids 0..=m with one fixed distance per
+            // id (0 is the owner, i.e. a self-link), plus duplicate
+            // submissions of existing candidates.
+            let mut pool: Vec<(u32, f32)> =
+                (0..=m as u32).map(|j| (j, rng.f32() * 10.0)).collect();
+            for _ in 0..rng.below(m + 1) {
+                let dup = pool[rng.below(m + 1)];
+                pool.push(dup);
+            }
+            let build = |order: &[(u32, f32)]| {
+                let mut t = NeighborTable::new(1, k);
+                for &(j, d) in order {
+                    t.insert(0, j, d);
+                }
+                t
+            };
+            let t1 = build(&pool);
+            let mut shuffled = pool.clone();
+            rng.shuffle(&mut shuffled);
+            let t2 = build(&shuffled);
+            for t in [&t1, &t2] {
+                crate::prop_assert!(heap_ok(t, 0), "heap violated");
+                let nb = t.sorted_neighbors(0);
+                crate::prop_assert!(!nb.contains(&0), "self-link kept");
+                let distinct: std::collections::HashSet<u32> = nb.iter().copied().collect();
+                crate::prop_assert!(distinct.len() == nb.len(), "duplicate kept");
+                // sorted_neighbors is ascending in stored distance.
+                let dist_of = |j: u32| t.entries(0).find(|&(jj, _)| jj == j).unwrap().1;
+                let mut prev = f32::NEG_INFINITY;
+                for &j in &nb {
+                    let d = dist_of(j);
+                    crate::prop_assert!(d >= prev, "sorted_neighbors not ascending");
+                    prev = d;
+                }
+            }
+            let sorted_dists = |t: &NeighborTable| {
+                let mut v: Vec<f32> = t.entries(0).map(|(_, d)| d).collect();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v
+            };
+            crate::prop_assert!(
+                sorted_dists(&t1) == sorted_dists(&t2),
+                "top-k distances depend on insertion order"
+            );
+            Ok(())
+        });
+    }
+
     #[test]
     fn rescore_reheapifies() {
         let mut t = NeighborTable::new(1, 4);

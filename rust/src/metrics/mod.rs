@@ -1,8 +1,12 @@
 //! Embedding-quality metrics: R_NX(K) and its AUC (Lee et al. [23]),
 //! pointwise distance correlation and neighbourhood preservation
-//! (Fig. 1 colour maps), and KNN recall.
+//! (Fig. 1 colour maps), KNN recall — and the *online* sampled quality
+//! probe ([`probe`]) that streams recall / trustworthiness / continuity
+//! through the session and server layers during a run.
 
-pub mod rnx;
 pub mod pointwise;
+pub mod probe;
+pub mod rnx;
 
+pub use probe::{ProbeConfig, QualityProbe, QualityReport};
 pub use rnx::{rnx_auc, rnx_curve, RnxCurve};

@@ -1,0 +1,591 @@
+//! Online quality probe: cheap *sampled* structure-preservation metrics
+//! computed **during** the run, so interactive hyperparameter changes
+//! come with a live quality signal instead of a post-hoc O(N²) batch
+//! evaluation (the running-quality methodology of the
+//! attraction-repulsion-spectrum line of work, and the paper's own
+//! Fig. 6/7 evaluation style).
+//!
+//! # Estimators
+//!
+//! A fixed, seeded **anchor subset** of `A` points (default 256) is
+//! sampled once at construction. For each anchor the probe stores its
+//! exact brute-force HD squared-distance row to *all* points — computed
+//! once, O(A·N·d), then *patched* on dynamic mutation: O(A·d) per
+//! insert, O(A) per remove, O(A·d) per move — except that moving a
+//! point that is *itself* an anchor rescans its whole row, O(N·d) —
+//! and each measurement computes, per anchor:
+//!
+//! * **KNN recall@k** — overlap between the anchor's exact HD k-NN and
+//!   its exact *embedding* k-NN (both over the full point set);
+//! * **trustworthiness / continuity** (Venna & Kaski) — rank penalties
+//!   for intruders/missing points in the anchor's k-neighbourhood,
+//!   normalised by the maximum achievable penalty per query
+//!   (`k·(2n−3k−1)/2` for `k < n/2`, `(n−k)·(n−k−1)/2` otherwise — the
+//!   two-case form keeps the score in [0, 1] at every dataset size),
+//!   with the population sum replaced by the anchor sum;
+//! * **iterative-KNN recall** — overlap between the anchor's exact HD
+//!   k-NN and the engine's *estimated* [`NeighborTable`] row: the
+//!   paper's central ANN-quality claim, measured at runtime against
+//!   ground truth that is already paid for.
+//!
+//! # Bias
+//!
+//! All four numbers are unbiased Monte-Carlo estimates of their
+//! full-population counterparts **at construction time**: anchors are a
+//! uniform sample without replacement. Two sources of bias appear under
+//! dynamic data: (1) points inserted later can never become anchors
+//! (they still appear as *neighbours* of anchors, so they are not
+//! invisible — but the query side of the estimate ignores them), and
+//! (2) removing an anchored point shrinks the sample (anchor
+//! attrition) rather than resampling, to keep the estimate seed-stable.
+//! Both effects are second-order while insertions/removals are a small
+//! fraction of N; recreate the session for a fresh sample otherwise.
+//!
+//! # Determinism
+//!
+//! Measurements are **bitwise-deterministic** for a fixed seed at any
+//! thread count and any anchor sampling order: anchors are kept sorted
+//! by index, per-anchor partial statistics are exact integers (hit
+//! counts and rank penalties), and the final fold walks anchors in
+//! index order — the same discipline as
+//! [`crate::ld::ParallelBackend`]'s per-point f64 subtotals. Work is
+//! sharded across a [`WorkerPool`] by contiguous anchor ranges, each
+//! shard writing a disjoint slice. Note the probe still runs
+//! *synchronously inside* [`crate::engine::FuncSne::step`] on probe
+//! iterations — sharding shortens that stall and `probe_every`
+//! amortises it (1-in-`probe_every` steps pay it), but it is not
+//! asynchronous; none of this ever changes a bit of the output.
+
+use crate::data::matrix::{sqdist, Matrix};
+use crate::knn::NeighborTable;
+use crate::runtime::pool::{shard_ranges, WorkerPool};
+use crate::util::Rng;
+
+/// Default `k` for recall@k / trustworthiness / continuity.
+pub const DEFAULT_K: usize = 10;
+
+/// Probe construction parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeConfig {
+    /// Anchor-subset size (clamped to N).
+    pub anchors: usize,
+    /// Neighbourhood size for all four metrics.
+    pub k: usize,
+    /// Seed for the anchor sample (derived from the engine seed).
+    pub seed: u64,
+    /// Worker threads for the sharded measurement (resolved; ≥ 1).
+    pub threads: usize,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        ProbeConfig { anchors: 256, k: DEFAULT_K, seed: 42, threads: 1 }
+    }
+}
+
+/// One quality measurement (all metrics in [0, 1]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QualityReport {
+    /// Iteration the measurement was taken at.
+    pub iter: usize,
+    /// Anchors that contributed (≤ configured after attrition).
+    pub anchors: usize,
+    /// Effective neighbourhood size used.
+    pub k: usize,
+    /// Sampled embedding KNN recall@k vs exact HD neighbours.
+    pub knn_recall: f64,
+    /// Sampled trustworthiness (LD-neighbourhood intruder penalty).
+    pub trustworthiness: f64,
+    /// Sampled continuity (HD-neighbourhood miss penalty).
+    pub continuity: f64,
+    /// Iterative-KNN (estimated HD table) recall vs anchor ground truth.
+    pub knn_recall_hd: f64,
+}
+
+/// Exact integer partial statistics for one anchor. Integers make the
+/// cross-anchor reduction trivially order- and sharding-invariant.
+#[derive(Clone, Copy, Debug, Default)]
+struct AnchorStats {
+    hits: u64,
+    hits_hd: u64,
+    trust_pen: u64,
+    cont_pen: u64,
+}
+
+/// The probe: seeded anchors + patched brute-force HD ground truth.
+pub struct QualityProbe {
+    cfg: ProbeConfig,
+    /// Anchor point indices, **sorted ascending** (the fold order).
+    anchors: Vec<u32>,
+    /// Per anchor: squared HD distance to every point (len = N),
+    /// parallel to `anchors`. Patched on insert/remove/move.
+    rows: Vec<Vec<f32>>,
+    pool: WorkerPool,
+}
+
+/// `(d, idx)` strict total order (index breaks distance ties), shared
+/// by selection and ranking so the two can never disagree.
+#[inline(always)]
+fn closer(d1: f32, j1: u32, d2: f32, j2: u32) -> bool {
+    d1 < d2 || (d1 == d2 && j1 < j2)
+}
+
+/// The `k` nearest entries of `row` (skipping `skip`), sorted ascending
+/// by `(d, idx)`.
+fn top_k(row: &[f32], skip: usize, k: usize) -> Vec<(f32, u32)> {
+    let mut out: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+    for (j, &d) in row.iter().enumerate() {
+        if j == skip {
+            continue;
+        }
+        let j = j as u32;
+        if out.len() == k {
+            let (wd, wj) = out[k - 1];
+            if !closer(d, j, wd, wj) {
+                continue;
+            }
+        }
+        let pos = out.partition_point(|&(pd, pj)| closer(pd, pj, d, j));
+        out.insert(pos, (d, j));
+        out.truncate(k);
+    }
+    out
+}
+
+/// Rank (1-based, self excluded) of point `j` in `row` under `(d, idx)`.
+fn rank_of(row: &[f32], skip: usize, j: usize) -> usize {
+    let dj = row[j];
+    let mut count = 0usize;
+    for (l, &d) in row.iter().enumerate() {
+        if l == skip || l == j {
+            continue;
+        }
+        if closer(d, l as u32, dj, j as u32) {
+            count += 1;
+        }
+    }
+    count + 1
+}
+
+/// All four partial statistics for one anchor. `ld_row` is caller
+/// scratch (reused across a shard's anchors).
+fn anchor_stats(
+    anchor: usize,
+    hd_row: &[f32],
+    y: &Matrix,
+    estimated_hd: &NeighborTable,
+    k: usize,
+    k_hd: usize,
+    ld_row: &mut Vec<f32>,
+) -> AnchorStats {
+    let n = y.n();
+    ld_row.clear();
+    let ya = y.row(anchor);
+    ld_row.extend((0..n).map(|j| sqdist(ya, y.row(j))));
+    let hd_top = top_k(hd_row, anchor, k);
+    let ld_top = top_k(ld_row, anchor, k);
+    let mut s = AnchorStats::default();
+    for &(_, j) in &ld_top {
+        if hd_top.iter().any(|&(_, t)| t == j) {
+            s.hits += 1;
+        } else {
+            // An intruder: it ranks strictly beyond k in HD.
+            s.trust_pen += (rank_of(hd_row, anchor, j as usize) - k) as u64;
+        }
+    }
+    for &(_, j) in &hd_top {
+        if !ld_top.iter().any(|&(_, t)| t == j) {
+            s.cont_pen += (rank_of(ld_row, anchor, j as usize) - k) as u64;
+        }
+    }
+    for &(_, j) in hd_top.iter().take(k_hd) {
+        if estimated_hd.contains(anchor, j) {
+            s.hits_hd += 1;
+        }
+    }
+    s
+}
+
+impl QualityProbe {
+    /// Sample `cfg.anchors` anchors from `x` (seeded) and compute their
+    /// ground-truth HD distance rows.
+    pub fn new(x: &Matrix, cfg: ProbeConfig) -> QualityProbe {
+        let n = x.n();
+        let count = cfg.anchors.max(1).min(n);
+        let mut rng = Rng::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+        let ids: Vec<u32> =
+            rng.sample_indices(n, count).into_iter().map(|i| i as u32).collect();
+        QualityProbe::with_anchors(x, ids, cfg)
+    }
+
+    /// Build over an explicit anchor set (tests, rebuild-after-dynamics
+    /// verification). Out-of-range ids are dropped; the set is sorted
+    /// and deduplicated, so the *sampling order never matters*.
+    pub fn with_anchors(x: &Matrix, mut ids: Vec<u32>, cfg: ProbeConfig) -> QualityProbe {
+        let n = x.n();
+        ids.retain(|&j| (j as usize) < n);
+        ids.sort_unstable();
+        ids.dedup();
+        let pool = WorkerPool::new(cfg.threads.max(1));
+        let mut rows: Vec<Vec<f32>> = vec![Vec::new(); ids.len()];
+        let ranges = shard_ranges(ids.len(), pool.threads());
+        let ids_ref = &ids;
+        let mut tasks = Vec::with_capacity(ranges.len());
+        let mut rest = rows.as_mut_slice();
+        for range in ranges {
+            let (chunk, tail) = rest.split_at_mut(range.len().min(rest.len()));
+            rest = tail;
+            let start = range.start;
+            tasks.push(move || {
+                for (slot, row) in chunk.iter_mut().enumerate() {
+                    let a = ids_ref[start + slot] as usize;
+                    let xa = x.row(a);
+                    *row = (0..n).map(|j| sqdist(xa, x.row(j))).collect();
+                }
+            });
+        }
+        pool.run_tasks(tasks);
+        QualityProbe { cfg, anchors: ids, rows, pool }
+    }
+
+    /// The live anchor indices (sorted ascending).
+    pub fn anchors(&self) -> &[u32] {
+        &self.anchors
+    }
+
+    /// Measure the current embedding `y` and the engine's estimated HD
+    /// table. `None` when the probe is degenerate (no anchors left, or
+    /// fewer than 3 points). Read-only and bitwise-deterministic at any
+    /// thread count.
+    pub fn measure(
+        &self,
+        y: &Matrix,
+        estimated_hd: &NeighborTable,
+        iter: usize,
+    ) -> Option<QualityReport> {
+        let n = y.n();
+        let a = self.anchors.len();
+        if a == 0 || n < 3 {
+            return None;
+        }
+        debug_assert!(self.rows.iter().all(|r| r.len() == n), "probe rows unpatched");
+        let k = self.cfg.k.min(n.saturating_sub(2)).max(1);
+        // NeighborTable::new asserts k >= 1, so this is belt-and-braces
+        // against a 0/0 in the recall denominator.
+        let k_hd = k.min(estimated_hd.k()).max(1);
+        let mut per = vec![AnchorStats::default(); a];
+        let ranges = shard_ranges(a, self.pool.threads());
+        let anchors = &self.anchors;
+        let rows = &self.rows;
+        let mut tasks = Vec::with_capacity(ranges.len());
+        let mut rest = per.as_mut_slice();
+        for range in ranges {
+            let (chunk, tail) = rest.split_at_mut(range.len().min(rest.len()));
+            rest = tail;
+            let start = range.start;
+            tasks.push(move || {
+                let mut ld_row: Vec<f32> = Vec::with_capacity(n);
+                for (slot, stat) in chunk.iter_mut().enumerate() {
+                    let idx = start + slot;
+                    *stat = anchor_stats(
+                        anchors[idx] as usize,
+                        &rows[idx],
+                        y,
+                        estimated_hd,
+                        k,
+                        k_hd,
+                        &mut ld_row,
+                    );
+                }
+            });
+        }
+        self.pool.run_tasks(tasks);
+        // Exact-integer fold in anchor (index) order: order- and
+        // shard-invariant by construction.
+        let (mut hits, mut hits_hd, mut trust_pen, mut cont_pen) = (0u64, 0u64, 0u64, 0u64);
+        for s in &per {
+            hits += s.hits;
+            hits_hd += s.hits_hd;
+            trust_pen += s.trust_pen;
+            cont_pen += s.cont_pen;
+        }
+        // Venna–Kaski normalisation by the maximum achievable penalty
+        // per query. For k < n/2 all k slots can be intruders with the
+        // worst ranks (n−k..n−1), giving k·(2n−3k−1)/2; for k ≥ n/2
+        // only the n−1−k points beyond rank k can intrude, giving
+        // (n−k)·(n−k−1)/2. With k ≤ n−2 both are ≥ 1, so the metrics
+        // land in [0, 1] for every dataset size — the single-case
+        // formula would go negative (or degenerate) for k ≥ n/2.
+        let max_pen = if 2 * k < n {
+            k as f64 * (2.0 * n as f64 - 3.0 * k as f64 - 1.0) / 2.0
+        } else {
+            let nk = (n - k) as f64;
+            nk * (nk - 1.0) / 2.0
+        };
+        let denom = a as f64 * max_pen;
+        let trustworthiness = 1.0 - trust_pen as f64 / denom;
+        let continuity = 1.0 - cont_pen as f64 / denom;
+        Some(QualityReport {
+            iter,
+            anchors: a,
+            k,
+            knn_recall: hits as f64 / (a * k) as f64,
+            trustworthiness,
+            continuity,
+            knn_recall_hd: hits_hd as f64 / (a * k_hd) as f64,
+        })
+    }
+
+    // --- dynamic-dataset patches (call AFTER the data matrix mutated) --
+
+    /// A point was appended (index `x.n() - 1`): extend every anchor row.
+    pub fn push_point(&mut self, x: &Matrix) {
+        let new = x.n() - 1;
+        let xn = x.row(new);
+        for (a, row) in self.anchors.iter().zip(self.rows.iter_mut()) {
+            row.push(sqdist(x.row(*a as usize), xn));
+        }
+    }
+
+    /// Point `gone` was swap-removed (the old last point now has index
+    /// `gone`). Drops `gone` from the anchor set if present (anchor
+    /// attrition — see the module docs), renames the moved anchor, and
+    /// patches every row with the same swap-remove.
+    pub fn swap_remove_point(&mut self, gone: usize, x: &Matrix) {
+        let old_last = x.n(); // after removal: old n - 1 == new n
+        if let Ok(pos) = self.anchors.binary_search(&(gone as u32)) {
+            self.anchors.remove(pos);
+            self.rows.remove(pos);
+        }
+        if gone != old_last {
+            if let Ok(pos) = self.anchors.binary_search(&(old_last as u32)) {
+                // old_last is the largest id → last element; re-insert
+                // under its new name to keep the set sorted.
+                let row = self.rows.remove(pos);
+                self.anchors.remove(pos);
+                let at = self.anchors.partition_point(|&a| a < gone as u32);
+                self.anchors.insert(at, gone as u32);
+                self.rows.insert(at, row);
+            }
+        }
+        for row in self.rows.iter_mut() {
+            row.swap_remove(gone);
+        }
+    }
+
+    /// Point `moved` got new HD coordinates: rescore its column in every
+    /// row, and its whole row if it is itself an anchor.
+    pub fn move_point(&mut self, moved: usize, x: &Matrix) {
+        if let Ok(pos) = self.anchors.binary_search(&(moved as u32)) {
+            let xm = x.row(moved);
+            let row = &mut self.rows[pos];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = sqdist(xm, x.row(j));
+            }
+        }
+        for (a, row) in self.anchors.iter().zip(self.rows.iter_mut()) {
+            row[moved] = sqdist(x.row(*a as usize), x.row(moved));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::knn::brute::brute_knn;
+    use crate::util::proptest as pt;
+
+    fn cfg(k: usize, threads: usize) -> ProbeConfig {
+        ProbeConfig { anchors: 256, k, seed: 0, threads }
+    }
+
+    /// The hand-computed n=5 fixture: x = 0,1,2,3,4 on a line; the
+    /// embedding swaps the last two points. With k = 2 and all points
+    /// as anchors:
+    ///   recall@2          = (1 + 1 + 0.5 + 1 + 1)/5 = 0.9
+    ///   trustworthiness   = 1 − 2·2/(5·2·(10−6−1))  = 13/15
+    ///   continuity        = 1 − 2·2/(5·2·(10−6−1))  = 13/15
+    /// (anchor 2's LD set {1,4} has intruder 4 at HD rank 4 → penalty 2;
+    /// its HD set {1,3} misses 3 at LD rank 4 → penalty 2.)
+    fn fixture() -> (Matrix, Matrix) {
+        let x = Matrix::from_vec(vec![0.0, 1.0, 2.0, 3.0, 4.0], 5, 1).unwrap();
+        let y = Matrix::from_vec(vec![0.0, 1.0, 2.0, 4.0, 3.0], 5, 1).unwrap();
+        (x, y)
+    }
+
+    #[test]
+    fn hand_computed_trust_continuity_recall() {
+        let (x, y) = fixture();
+        let probe = QualityProbe::with_anchors(&x, vec![0, 1, 2, 3, 4], cfg(2, 1));
+        let truth = brute_knn(&x, 2);
+        let q = probe.measure(&y, &truth, 7).unwrap();
+        assert_eq!((q.iter, q.anchors, q.k), (7, 5, 2));
+        assert!((q.knn_recall - 0.9).abs() < 1e-12, "recall {}", q.knn_recall);
+        assert!(
+            (q.trustworthiness - 13.0 / 15.0).abs() < 1e-12,
+            "trust {}",
+            q.trustworthiness
+        );
+        assert!((q.continuity - 13.0 / 15.0).abs() < 1e-12, "cont {}", q.continuity);
+        // The estimated table here IS the ground truth.
+        assert!((q.knn_recall_hd - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_embedding_scores_one() {
+        let ds = datasets::blobs(80, 5, 3, 0.5, 8.0, 3);
+        let probe = QualityProbe::new(&ds.x, ProbeConfig { anchors: 40, ..cfg(10, 1) });
+        let truth = brute_knn(&ds.x, 10);
+        let q = probe.measure(&ds.x, &truth, 1).unwrap();
+        assert!((q.knn_recall - 1.0).abs() < 1e-12);
+        assert!((q.trustworthiness - 1.0).abs() < 1e-12);
+        assert!((q.continuity - 1.0).abs() < 1e-12);
+        assert!((q.knn_recall_hd - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_datasets_stay_in_range_even_with_large_k() {
+        // k ≥ n/2 invalidates the single-case Venna–Kaski normaliser
+        // (n = 8, k = 5 makes 2n−3k−1 = 0); the two-case max-penalty
+        // form keeps every metric in [0, 1] and never degenerates to a
+        // constant perfect score.
+        let x = Matrix::from_vec((0..8).map(|v| v as f32).collect(), 8, 1).unwrap();
+        let truth = brute_knn(&x, 5);
+        let probe = QualityProbe::with_anchors(&x, (0..8).collect(), cfg(5, 1));
+        let mut rng = Rng::new(31);
+        let mut saw_imperfect = false;
+        for _ in 0..8 {
+            let y = Matrix::from_vec(pt::gauss_mat(&mut rng, 8, 1, 1.0), 8, 1).unwrap();
+            let q = probe.measure(&y, &truth, 1).unwrap();
+            for v in [q.knn_recall, q.trustworthiness, q.continuity, q.knn_recall_hd] {
+                assert!((0.0..=1.0).contains(&v), "metric out of [0,1]: {v}");
+            }
+            if q.trustworthiness < 1.0 || q.continuity < 1.0 {
+                saw_imperfect = true;
+            }
+        }
+        assert!(saw_imperfect, "random embeddings never produced a rank penalty");
+        let q = probe.measure(&x, &truth, 1).unwrap();
+        assert!((q.trustworthiness - 1.0).abs() < 1e-12);
+        assert!((q.continuity - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_estimated_table_scores_zero_hd_recall() {
+        let (x, y) = fixture();
+        let probe = QualityProbe::with_anchors(&x, vec![0, 1, 2, 3, 4], cfg(2, 1));
+        let empty = NeighborTable::new(5, 2);
+        let q = probe.measure(&y, &empty, 1).unwrap();
+        assert_eq!(q.knn_recall_hd, 0.0);
+    }
+
+    #[test]
+    fn anchor_sampling_order_is_irrelevant() {
+        let ds = datasets::blobs(120, 6, 3, 0.6, 8.0, 5);
+        let mut rng = Rng::new(8);
+        let y = Matrix::from_vec(pt::gauss_mat(&mut rng, 120, 2, 1.0), 120, 2).unwrap();
+        let est = brute_knn(&ds.x, 6);
+        let sorted: Vec<u32> = (0..40).map(|i| i * 3).collect();
+        let mut shuffled = sorted.clone();
+        rng.shuffle(&mut shuffled);
+        let a = QualityProbe::with_anchors(&ds.x, sorted, cfg(10, 1));
+        let b = QualityProbe::with_anchors(&ds.x, shuffled, cfg(10, 1));
+        let (qa, qb) = (a.measure(&y, &est, 1).unwrap(), b.measure(&y, &est, 1).unwrap());
+        assert_reports_bitwise_equal(&qa, &qb);
+    }
+
+    #[test]
+    fn bitwise_identical_across_thread_counts() {
+        let ds = datasets::blobs(300, 8, 4, 0.7, 10.0, 9);
+        let mut rng = Rng::new(4);
+        let y = Matrix::from_vec(pt::gauss_mat(&mut rng, 300, 2, 1.0), 300, 2).unwrap();
+        let est = brute_knn(&ds.x, 6);
+        let reports: Vec<QualityReport> = [1usize, 2, 4]
+            .iter()
+            .map(|&t| {
+                let p = QualityProbe::new(&ds.x, ProbeConfig { anchors: 64, ..cfg(10, t) });
+                p.measure(&y, &est, 1).unwrap()
+            })
+            .collect();
+        for r in &reports[1..] {
+            assert_reports_bitwise_equal(&reports[0], r);
+        }
+    }
+
+    #[test]
+    fn dynamic_patches_match_fresh_rebuild() {
+        let base = datasets::blobs(80, 5, 3, 0.5, 8.0, 11);
+        let mut x = base.x.clone();
+        let mut probe = QualityProbe::new(&x, ProbeConfig { anchors: 24, ..cfg(6, 2) });
+        // Insert two points.
+        let extra = datasets::blobs(2, 5, 1, 0.5, 8.0, 70);
+        for r in 0..2 {
+            x.push_row(extra.x.row(r));
+            probe.push_point(&x);
+        }
+        // Move one point far away.
+        let far = vec![9.0f32; 5];
+        x.row_mut(4).copy_from_slice(&far);
+        probe.move_point(4, &x);
+        // Remove two points (swap-remove semantics), likely hitting an
+        // anchor and a moved-into-anchor case across seeds.
+        for &gone in &[3usize, 10] {
+            x.swap_remove_row(gone);
+            probe.swap_remove_point(gone, &x);
+        }
+        let fresh = QualityProbe::with_anchors(&x, probe.anchors().to_vec(), cfg(6, 1));
+        let mut rng = Rng::new(2);
+        let y = Matrix::from_vec(pt::gauss_mat(&mut rng, x.n(), 2, 1.0), x.n(), 2).unwrap();
+        let est = brute_knn(&x, 6);
+        let qa = probe.measure(&y, &est, 5).unwrap();
+        let qb = fresh.measure(&y, &est, 5).unwrap();
+        assert_reports_bitwise_equal(&qa, &qb);
+    }
+
+    #[test]
+    fn removing_every_anchor_disables_the_probe() {
+        let ds = datasets::blobs(10, 3, 1, 0.5, 4.0, 1);
+        let mut x = ds.x.clone();
+        let mut probe = QualityProbe::with_anchors(&x, vec![0, 1], cfg(2, 1));
+        // Remove points 0 and 1 (anchor attrition down to zero).
+        for _ in 0..2 {
+            x.swap_remove_row(0);
+            probe.swap_remove_point(0, &x);
+        }
+        // Whatever remains, the anchors referencing removed rows are gone
+        // or renamed consistently; if none survive, measure is None.
+        if probe.anchors().is_empty() {
+            assert!(probe.measure(&x, &NeighborTable::new(x.n(), 2), 1).is_none());
+        } else {
+            for &a in probe.anchors() {
+                assert!((a as usize) < x.n(), "stale anchor {a}");
+            }
+        }
+    }
+
+    fn assert_reports_bitwise_equal(a: &QualityReport, b: &QualityReport) {
+        assert_eq!(a.anchors, b.anchors);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.knn_recall.to_bits(), b.knn_recall.to_bits(), "recall");
+        assert_eq!(
+            a.trustworthiness.to_bits(),
+            b.trustworthiness.to_bits(),
+            "trustworthiness"
+        );
+        assert_eq!(a.continuity.to_bits(), b.continuity.to_bits(), "continuity");
+        assert_eq!(a.knn_recall_hd.to_bits(), b.knn_recall_hd.to_bits(), "hd recall");
+    }
+
+    #[test]
+    fn top_k_and_rank_agree_on_ties() {
+        // Two equidistant candidates: index breaks the tie both in
+        // selection and in ranking.
+        let row = vec![0.0, 1.0, 1.0, 4.0];
+        let top = top_k(&row, 0, 2);
+        assert_eq!(top, vec![(1.0, 1), (1.0, 2)]);
+        assert_eq!(rank_of(&row, 0, 1), 1);
+        assert_eq!(rank_of(&row, 0, 2), 2);
+        assert_eq!(rank_of(&row, 0, 3), 3);
+    }
+}

@@ -26,6 +26,7 @@ use super::stepper::{
 };
 use crate::data::Matrix;
 use crate::knn::iterative::CandidateRoutes;
+use crate::metrics::probe::QualityReport;
 use crate::session::{Command, Session};
 use crate::util::io;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -410,6 +411,12 @@ fn create_spec_from_json(v: &Json, default_stride: usize) -> ServiceResult<Creat
     if let Some(d) = get_usize("pca_max_dim")? {
         builder = builder.pca_max_dim(d);
     }
+    if let Some(p) = get_usize("probe_every")? {
+        builder = builder.probe_every(p);
+    }
+    if let Some(a) = get_usize("probe_anchors")? {
+        builder = builder.probe_anchors(a);
+    }
     if let Some(name) = v.get("backend") {
         let name = name
             .as_str()
@@ -446,6 +453,19 @@ fn view_json(v: &SessionView) -> Json {
             "last_error",
             v.last_error.as_ref().map_or(Json::Null, |e| e.as_str().into()),
         ),
+        ("quality", v.quality.as_ref().map_or(Json::Null, quality_json)),
+    ])
+}
+
+fn quality_json(q: &QualityReport) -> Json {
+    Json::obj(vec![
+        ("iter", q.iter.into()),
+        ("anchors", q.anchors.into()),
+        ("k", q.k.into()),
+        ("knn_recall", q.knn_recall.into()),
+        ("trustworthiness", q.trustworthiness.into()),
+        ("continuity", q.continuity.into()),
+        ("knn_recall_hd", q.knn_recall_hd.into()),
     ])
 }
 
@@ -540,6 +560,39 @@ fn render_prometheus(
             "Iterations completed per live session.",
             lines.join("\n"),
         );
+    }
+    if !m.session_quality.is_empty() {
+        type Get = fn(&QualityReport) -> f64;
+        let gauges: [(&str, &str, Get); 4] = [
+            (
+                "funcsne_quality_recall",
+                "Sampled embedding KNN recall@k per session.",
+                |q| q.knn_recall,
+            ),
+            (
+                "funcsne_quality_trustworthiness",
+                "Sampled trustworthiness per session.",
+                |q| q.trustworthiness,
+            ),
+            (
+                "funcsne_quality_continuity",
+                "Sampled continuity per session.",
+                |q| q.continuity,
+            ),
+            (
+                "funcsne_knn_recall",
+                "Iterative-KNN recall vs anchor HD ground truth per session.",
+                |q| q.knn_recall_hd,
+            ),
+        ];
+        for (name, help, get) in gauges {
+            let lines: Vec<String> = m
+                .session_quality
+                .iter()
+                .map(|(id, q)| format!("{name}{{id=\"{id}\"}} {}", get(q)))
+                .collect();
+            metric(name, "gauge", help, lines.join("\n"));
+        }
     }
     out
 }
@@ -636,6 +689,18 @@ mod tests {
             sessions_created: 2,
             sessions_deleted: 0,
             session_iters: vec![(0, 9), (1, 8)],
+            session_quality: vec![(
+                1,
+                QualityReport {
+                    iter: 8,
+                    anchors: 64,
+                    k: 10,
+                    knn_recall: 0.75,
+                    trustworthiness: 0.875,
+                    continuity: 0.9375,
+                    knn_recall_hd: 0.5,
+                },
+            )],
         };
         let reqs = AtomicU64::new(5);
         let text = render_prometheus(&m, &reqs, Instant::now());
@@ -645,5 +710,58 @@ mod tests {
         assert!(text.contains("funcsne_session_failures_total 1"));
         assert!(text.contains("funcsne_http_requests_total 5"));
         assert!(text.contains("funcsne_session_iterations{id=\"1\"} 8"));
+        assert!(text.contains("# TYPE funcsne_quality_recall gauge"), "{text}");
+        assert!(text.contains("funcsne_quality_recall{id=\"1\"} 0.75"), "{text}");
+        assert!(text.contains("funcsne_quality_trustworthiness{id=\"1\"} 0.875"), "{text}");
+        assert!(text.contains("funcsne_quality_continuity{id=\"1\"} 0.9375"), "{text}");
+        assert!(text.contains("funcsne_knn_recall{id=\"1\"} 0.5"), "{text}");
+    }
+
+    #[test]
+    fn prometheus_omits_quality_when_no_session_has_reports() {
+        let m = ServiceMetrics { sessions: 1, session_iters: vec![(0, 3)], ..Default::default() };
+        let reqs = AtomicU64::new(0);
+        let text = render_prometheus(&m, &reqs, Instant::now());
+        assert!(!text.contains("funcsne_quality_recall"), "{text}");
+    }
+
+    #[test]
+    fn view_json_carries_quality_object() {
+        let view = SessionView {
+            id: 3,
+            iter: 40,
+            n: 100,
+            hd_dim: 8,
+            ld_dim: 2,
+            paused: false,
+            queued: 0,
+            commands_applied: 0,
+            commands_rejected: 0,
+            backend: "native",
+            alpha: 1.0,
+            perplexity: 30.0,
+            attraction: 1.0,
+            repulsion: 1.0,
+            snapshots_held: 0,
+            snapshots_total: 0,
+            max_iters: 0,
+            last_error: None,
+            quality: Some(QualityReport {
+                iter: 40,
+                anchors: 32,
+                k: 10,
+                knn_recall: 0.625,
+                trustworthiness: 1.0,
+                continuity: 1.0,
+                knn_recall_hd: 0.25,
+            }),
+        };
+        let j = view_json(&view);
+        let q = j.get("quality").expect("quality present");
+        assert_eq!(q.get("iter").and_then(Json::as_usize), Some(40));
+        assert_eq!(q.get("knn_recall").and_then(Json::as_f64), Some(0.625));
+        assert_eq!(q.get("knn_recall_hd").and_then(Json::as_f64), Some(0.25));
+        let view = SessionView { quality: None, ..view };
+        assert_eq!(view_json(&view).get("quality"), Some(&Json::Null));
     }
 }

@@ -332,6 +332,12 @@ impl Parser<'_> {
         let v: f64 = text
             .parse()
             .map_err(|_| anyhow::anyhow!("bad number {text:?} at byte {start}"))?;
+        // JSON has no NaN/Inf; literals that overflow f64 (e.g. 1e999)
+        // would otherwise smuggle an Inf into payloads that every
+        // consumer assumes finite.
+        if !v.is_finite() {
+            bail!("number {text:?} overflows f64 at byte {start}");
+        }
         Ok(Json::Num(v))
     }
 
@@ -490,6 +496,118 @@ mod tests {
     fn non_finite_numbers_encode_as_null() {
         assert_eq!(Json::Num(f64::NAN).encode(), "null");
         assert_eq!(Json::Num(f64::INFINITY).encode(), "null");
+    }
+
+    #[test]
+    fn nan_and_inf_are_rejected_on_parse() {
+        for bad in ["NaN", "nan", "Infinity", "-Infinity", "inf", "1e999", "-1e999", "[1e400]"] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+        // The largest finite f64 still parses.
+        assert!(parse("1.7976931348623157e308").is_ok());
+    }
+
+    // --- property tests (util::proptest harness) ------------------------
+
+    use crate::util::proptest as pt;
+    use crate::util::Rng;
+
+    fn gen_string(rng: &mut Rng) -> String {
+        let len = rng.below(10);
+        (0..len)
+            .map(|_| loop {
+                // Mix ASCII, control characters, BMP and astral planes.
+                let code = match rng.below(4) {
+                    0 => rng.below(0x80) as u32,
+                    1 => rng.below(0x20) as u32,
+                    2 => rng.below(0x1_0000) as u32,
+                    _ => 0x1_0000 + rng.below(0x2_0000) as u32,
+                };
+                if let Some(c) = char::from_u32(code) {
+                    break c;
+                }
+            })
+            .collect()
+    }
+
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        let pick = if depth >= 4 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => match rng.below(4) {
+                0 => Json::Num(rng.below(2_000_000) as f64 - 1_000_000.0),
+                1 => Json::Num((rng.f64() - 0.5) * 1e9),
+                2 => Json::Num(rng.gauss_ms(0.0, 1e-4)),
+                // Integral beyond u32 but inside the exact-i64 window.
+                _ => Json::Num((rng.below(1 << 52)) as f64),
+            },
+            3 => Json::Str(gen_string(rng)),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen_value(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5)).map(|_| (gen_string(rng), gen_value(rng, depth + 1))).collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn property_encode_decode_round_trip() {
+        pt::check("json-roundtrip", 128, |rng, _| {
+            let v = gen_value(rng, 0);
+            let text = v.encode();
+            let back = parse(&text).map_err(|e| format!("decode of {text:?} failed: {e}"))?;
+            crate::prop_assert!(back == v, "round-trip mismatch: {v:?} -> {text} -> {back:?}");
+            // Encoding is a fixed point: encode(decode(encode(v))) == encode(v).
+            crate::prop_assert!(back.encode() == text, "re-encode differs for {text}");
+            Ok(())
+        });
+    }
+
+    /// Every char written as `\uXXXX` (surrogate pairs for astral
+    /// planes) must decode back to the same Rust string.
+    fn escape_all(s: &str) -> String {
+        let mut out = String::from("\"");
+        for c in s.chars() {
+            let code = c as u32;
+            if code < 0x1_0000 {
+                out.push_str(&format!("\\u{code:04x}"));
+            } else {
+                let v = code - 0x1_0000;
+                out.push_str(&format!(
+                    "\\u{:04x}\\u{:04x}",
+                    0xD800 + (v >> 10),
+                    0xDC00 + (v & 0x3FF)
+                ));
+            }
+        }
+        out.push('"');
+        out
+    }
+
+    #[test]
+    fn property_unicode_escapes_decode() {
+        pt::check("json-unicode-escapes", 96, |rng, _| {
+            let s = gen_string(rng);
+            let escaped = escape_all(&s);
+            let parsed = parse(&escaped).map_err(|e| format!("{escaped}: {e}"))?;
+            crate::prop_assert!(
+                parsed == Json::Str(s.clone()),
+                "escape round-trip mismatch for {s:?} via {escaped}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_nesting_below_limit_parses() {
+        pt::check("json-depth", 24, |rng, _| {
+            let d = rng.range_usize(1, 100);
+            let text = "[".repeat(d) + &"]".repeat(d);
+            crate::prop_assert!(parse(&text).is_ok(), "depth {d} rejected");
+            let deep = "[".repeat(d + 150) + &"]".repeat(d + 150);
+            crate::prop_assert!(parse(&deep).is_err(), "depth {} accepted", d + 150);
+            Ok(())
+        });
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! attachment is not) — worth doing if create latency ever matters
 //! more than implementation weight.
 
+use crate::metrics::probe::QualityReport;
 use crate::session::{Command, Session, SessionBuilder, SessionId, SessionManager};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
@@ -104,6 +105,9 @@ pub struct SessionView {
     /// The most recent step error, if the session has ever failed
     /// (cleared by a successful step after a `Resume`).
     pub last_error: Option<String>,
+    /// Latest online quality-probe report (`None` while probing is off
+    /// or before the first probe iteration).
+    pub quality: Option<QualityReport>,
 }
 
 /// Service-wide counters surfaced by `GET /metrics`.
@@ -118,6 +122,8 @@ pub struct ServiceMetrics {
     pub sessions_deleted: u64,
     /// `(id, iteration)` per live session.
     pub session_iters: Vec<(u64, usize)>,
+    /// `(id, latest probe report)` per live session that has one.
+    pub session_quality: Vec<(u64, QualityReport)>,
 }
 
 /// Everything needed to create a session on the stepper thread.
@@ -397,6 +403,7 @@ impl Service {
             snapshots_total: session.snapshots().total_recorded(),
             max_iters: meta.map_or(0, |m| m.max_iters),
             last_error: meta.and_then(|m| m.last_error.clone()),
+            quality: session.quality().copied(),
         }
     }
 
@@ -414,6 +421,14 @@ impl Service {
                 .ids()
                 .into_iter()
                 .filter_map(|sid| self.mgr.get(sid).map(|s| (sid.0, s.iterations())))
+                .collect(),
+            session_quality: self
+                .mgr
+                .ids()
+                .into_iter()
+                .filter_map(|sid| {
+                    self.mgr.get(sid).and_then(|s| s.quality().copied().map(|q| (sid.0, q)))
+                })
                 .collect(),
         }
     }

@@ -182,6 +182,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Measure online quality every `every` iterations (0 = off, the
+    /// default): sampled KNN recall / trustworthiness / continuity and
+    /// iterative-KNN recall stream out as [`crate::session::Event::Quality`].
+    pub fn probe_every(mut self, every: usize) -> Self {
+        self.cfg.probe_every = every;
+        self
+    }
+
+    /// Anchor-subset size for the quality probe (default 256).
+    pub fn probe_anchors(mut self, anchors: usize) -> Self {
+        self.cfg.probe_anchors = anchors;
+        self
+    }
+
     /// Record an embedding snapshot every `stride` iterations (0 = off).
     pub fn snapshot_stride(mut self, stride: usize) -> Self {
         self.snapshot_stride = stride;

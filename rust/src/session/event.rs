@@ -18,6 +18,11 @@ pub enum Event {
     Iteration { iter: usize, stats: EngineStats },
     /// An embedding snapshot was recorded into the [`SnapshotBuffer`].
     Snapshot { iter: usize },
+    /// The online quality probe measured this iteration
+    /// ([`crate::metrics::probe`]): sampled embedding KNN recall@k,
+    /// trustworthiness, continuity, and the iterative-KNN recall vs the
+    /// anchors' exact HD ground truth.
+    Quality { iter: usize, recall: f64, trust: f64, cont: f64, knn_recall_hd: f64 },
     /// A queued command was applied between iterations.
     CommandApplied { iter: usize, description: String },
     /// A queued command failed validation and was dropped (the session
@@ -35,6 +40,7 @@ impl Event {
         match self {
             Event::Iteration { iter, .. }
             | Event::Snapshot { iter }
+            | Event::Quality { iter, .. }
             | Event::CommandApplied { iter, .. }
             | Event::CommandRejected { iter, .. }
             | Event::Paused { iter }

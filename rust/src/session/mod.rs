@@ -47,6 +47,7 @@ use crate::config::EmbedConfig;
 use crate::data::Matrix;
 use crate::engine::{ComputeBackend, EngineStats, FuncSne};
 use crate::linalg::Pca;
+use crate::metrics::probe::QualityReport;
 use anyhow::Result;
 use std::collections::VecDeque;
 
@@ -162,6 +163,19 @@ impl Session {
         let iter = self.engine.iter;
         let stats = self.engine.stats.clone();
         self.emit(Event::Iteration { iter, stats });
+        // A probe report stamped with this iteration is fresh — stream
+        // it; older reports were already streamed when they happened.
+        if let Some(q) = self.engine.stats.quality {
+            if q.iter == iter {
+                self.emit(Event::Quality {
+                    iter,
+                    recall: q.knn_recall,
+                    trust: q.trustworthiness,
+                    cont: q.continuity,
+                    knn_recall_hd: q.knn_recall_hd,
+                });
+            }
+        }
         if self.snapshot_stride > 0 && iter % self.snapshot_stride == 0 {
             self.snapshots.push(iter, &self.engine.y);
             self.emit(Event::Snapshot { iter });
@@ -350,6 +364,12 @@ impl Session {
         &self.engine.stats
     }
 
+    /// The most recent online quality-probe report, if probing is
+    /// enabled (`probe_every > 0`) and at least one probe has run.
+    pub fn quality(&self) -> Option<&QualityReport> {
+        self.engine.stats.quality.as_ref()
+    }
+
     /// Iterations completed.
     pub fn iterations(&self) -> usize {
         self.engine.iter
@@ -471,6 +491,39 @@ mod tests {
         assert_eq!(s.snapshots().len(), 3); // ring evicted iter-5
         assert_eq!(s.snapshots().latest().unwrap().iter, 20);
         assert_eq!(s.snapshots().latest().unwrap().y.n(), 80);
+    }
+
+    #[test]
+    fn quality_events_emitted_at_probe_cadence() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let ds = datasets::blobs(100, 5, 2, 0.5, 8.0, 6);
+        let mut s = Session::builder()
+            .dataset(ds.x)
+            .k_hd(10)
+            .k_ld(6)
+            .perplexity(6.0)
+            .jumpstart_iters(0)
+            .probe_every(4)
+            .probe_anchors(16)
+            .seed(6)
+            .build()
+            .unwrap();
+        let iters: Rc<RefCell<Vec<usize>>> = Rc::new(RefCell::new(Vec::new()));
+        let tap = Rc::clone(&iters);
+        s.add_sink(Box::new(move |e: &Event| {
+            if let Event::Quality { iter, recall, trust, cont, knn_recall_hd } = e {
+                for v in [recall, trust, cont, knn_recall_hd] {
+                    assert!((0.0..=1.0).contains(v), "quality metric out of range: {v}");
+                }
+                tap.borrow_mut().push(*iter);
+            }
+        }));
+        s.run(10).unwrap();
+        assert_eq!(*iters.borrow(), vec![4, 8], "probe cadence");
+        let q = s.quality().expect("latest report retained");
+        assert_eq!(q.iter, 8);
+        assert_eq!(q.anchors, 16);
     }
 
     #[test]

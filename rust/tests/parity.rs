@@ -19,7 +19,7 @@ use funcsne::hd::Affinities;
 use funcsne::knn::brute::brute_knn;
 use funcsne::knn::iterative::IterativeKnn;
 use funcsne::ld::{NativeBackend, ParallelBackend};
-use funcsne::session::Session;
+use funcsne::session::{Event, Session};
 use funcsne::util::Rng;
 
 fn have_artifacts() -> bool {
@@ -153,6 +153,76 @@ fn engine_trajectory_is_thread_count_invariant() {
             b.to_bits(),
             "embedding[{t}] diverged between 1 and 4 threads: {a} vs {b}"
         );
+    }
+}
+
+/// Golden-trajectory regression: for a fixed seed, 50 iterations of
+/// `blobs` and `scurve` must produce bitwise-identical embeddings AND
+/// bitwise-identical quality-probe trajectories at every thread count —
+/// the determinism contract the online probe (and every reproducible
+/// experiment) relies on. The CI matrix additionally runs this whole
+/// suite under `FUNCSNE_THREADS=1` and `=4`; the explicit
+/// `.threads(...)` here pins the contract independently of the env.
+#[test]
+fn golden_trajectory_and_probe_bitwise_identical_across_threads() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    fn checksum(data: &[f32]) -> u64 {
+        data.iter().fold(0xcbf2_9ce4_8422_2325u64, |h, v| {
+            (h ^ v.to_bits() as u64).wrapping_mul(0x1000_0000_01b3)
+        })
+    }
+    for dataset in ["blobs", "scurve"] {
+        let run = |threads: usize| -> (u64, Vec<[u64; 5]>) {
+            let x = match dataset {
+                "blobs" => datasets::blobs(400, 8, 4, 0.6, 10.0, 21).x,
+                _ => datasets::scurve(400, 0.02, false, 21).x,
+            };
+            let traj: Rc<RefCell<Vec<[u64; 5]>>> = Rc::new(RefCell::new(Vec::new()));
+            let tap = Rc::clone(&traj);
+            let mut s = Session::builder()
+                .dataset(x)
+                .k_hd(12)
+                .k_ld(8)
+                .perplexity(8.0)
+                .n_neg(6)
+                .jumpstart_iters(5)
+                .early_exag_iters(10)
+                .seed(13)
+                .threads(threads)
+                .probe_every(10)
+                .probe_anchors(64)
+                .build()
+                .unwrap();
+            s.add_sink(Box::new(move |e: &Event| {
+                if let Event::Quality { iter, recall, trust, cont, knn_recall_hd } = e {
+                    tap.borrow_mut().push([
+                        *iter as u64,
+                        recall.to_bits(),
+                        trust.to_bits(),
+                        cont.to_bits(),
+                        knn_recall_hd.to_bits(),
+                    ]);
+                }
+            }));
+            s.run(50).unwrap();
+            let sum = checksum(s.embedding().data());
+            let traj = traj.borrow().clone();
+            (sum, traj)
+        };
+        let (c1, t1) = run(1);
+        assert_eq!(t1.len(), 5, "{dataset}: expected 5 probe reports over 50 iters");
+        for &threads in &[2usize, 4] {
+            let (c, t) = run(threads);
+            assert_eq!(
+                c1, c,
+                "{dataset}: embedding checksum diverged between 1 and {threads} threads"
+            );
+            assert_eq!(
+                t1, t,
+                "{dataset}: probe trajectory diverged between 1 and {threads} threads"
+            );
+        }
     }
 }
 

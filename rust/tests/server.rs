@@ -219,6 +219,77 @@ fn http_round_trip_create_steer_fetch_delete() {
 }
 
 #[test]
+fn quality_probe_streams_through_stats_and_prometheus() {
+    let server = TestServer::start(4);
+    let addr = server.addr;
+
+    // A session with the probe on (every 2 iterations, 16 anchors).
+    let spec = format!(
+        "{{\"rows\": {}, \"k_hd\": 10, \"k_ld\": 6, \"perplexity\": 6, \
+          \"jumpstart_iters\": 2, \"seed\": 5, \"probe_every\": 2, \"probe_anchors\": 16}}",
+        rows_json(60, 4)
+    );
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "create failed: {created}");
+    let id = created.get("id").and_then(Json::as_usize).expect("id") as u64;
+    // Before the first probe iteration the field is null.
+    assert!(
+        created.get("quality").is_some(),
+        "stats view must always carry a quality field: {created}"
+    );
+
+    // The background stepper produces a report within a few sweeps.
+    wait_until(
+        || get_stats(addr, id).get("quality").is_some_and(|q| q.get("iter").is_some()),
+        "first probe report",
+    );
+    let v = get_stats(addr, id);
+    let q = v.get("quality").expect("quality object");
+    assert_eq!(q.get("anchors").and_then(Json::as_usize), Some(16));
+    assert!(q.get("iter").and_then(Json::as_usize).unwrap() >= 2);
+    for key in ["knn_recall", "trustworthiness", "continuity", "knn_recall_hd"] {
+        let val = q
+            .get(key)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("missing {key} in {q}"));
+        assert!(
+            val.is_finite() && (0.0..=1.0).contains(&val),
+            "{key} out of range: {val}"
+        );
+    }
+
+    // The same numbers surface as per-session Prometheus gauges.
+    let (status, metrics) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    for name in [
+        "funcsne_quality_recall",
+        "funcsne_quality_trustworthiness",
+        "funcsne_quality_continuity",
+        "funcsne_knn_recall",
+    ] {
+        assert!(
+            metrics.contains(&format!("# TYPE {name} gauge")),
+            "missing TYPE line for {name}: {metrics}"
+        );
+        assert!(
+            metrics.contains(&format!("{name}{{id=\"{id}\"}}")),
+            "missing {name} gauge for session {id}: {metrics}"
+        );
+    }
+
+    // Probe-less sessions coexist: no gauge lines for them, stats null.
+    let spec2 = format!("{{\"rows\": {}, \"k_hd\": 8, \"perplexity\": 5}}", rows_json(40, 3));
+    let (status, other) = http_json(addr, "POST", "/sessions", Some(&spec2));
+    assert_eq!(status, 201, "{other}");
+    let oid = other.get("id").and_then(Json::as_usize).unwrap() as u64;
+    let (_, metrics) = http(addr, "GET", "/metrics", None);
+    assert!(
+        !metrics.contains(&format!("funcsne_quality_recall{{id=\"{oid}\"}}")),
+        "probe-less session must not export quality gauges: {metrics}"
+    );
+}
+
+#[test]
 fn keep_alive_serves_multiple_requests_per_connection() {
     let server = TestServer::start(8);
     let mut stream = TcpStream::connect(server.addr).expect("connect");
