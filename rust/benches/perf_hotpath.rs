@@ -142,54 +142,124 @@ fn main() {
         }
     }
 
-    // ---- full iteration + phase breakdown (native) ----------------------
-    for &n in sizes {
-        let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 5);
-        let cfg = EmbedConfig {
-            n_iters: 0,
-            jumpstart_iters: 0,
-            early_exag_iters: 0,
-            ..EmbedConfig::default()
-        };
-        let mut engine = FuncSne::new(ds.x, cfg).unwrap();
-        let mut backend = NativeBackend::new();
-        // warm up the KNN state a bit
-        engine.run(20, &mut backend).unwrap();
+    // ---- full-step breakdown + BENCH artifact (threads 1 vs 4) ----------
+    // The Amdahl acceptance check for the stream-RNG sharding: at
+    // threads=4 on blobs n=8000 the FULL step() wall time — refinement,
+    // negative sampling, recalibration, forces AND update, not just the
+    // force pass — should improve ≥ 2× over threads=1. The per-phase
+    // split comes from EngineStats::phase_micros; the numbers land in
+    // BENCH_step_blobs.json for the CI perf-smoke artifact trail.
+    {
+        let n = 8000usize;
         let iters = if full { 100 } else { 40 };
-        let sw = Stopwatch::new();
-        engine.run(iters, &mut backend).unwrap();
-        let per_iter = sw.elapsed_s() / iters as f64;
-        println!(
-            "engine native n={n:>6}: {:>9.3} ms/iter  ({:.2e} point-updates/s; hd_refines {}/{})",
-            per_iter * 1e3,
-            n as f64 / per_iter,
-            engine.stats.hd_refines,
-            engine.stats.iters,
-        );
-    }
-    // ---- full iteration on the sharded backend (4 workers) --------------
-    for &n in sizes {
-        let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 5);
-        let cfg = EmbedConfig {
-            n_iters: 0,
-            jumpstart_iters: 0,
-            early_exag_iters: 0,
-            threads: 4,
-            ..EmbedConfig::default()
+        struct StepRun {
+            threads: usize,
+            median_ms: f64,
+            mean_ms: f64,
+            /// (phase, µs per iteration) in execution order.
+            phase_per_iter: Vec<(&'static str, f64)>,
+            /// HD refinement sweeps actually run / total iterations
+            /// (the probabilistic-skip heuristic in action).
+            hd_refines: usize,
+            iters_total: usize,
+        }
+        let run = |threads: usize| -> StepRun {
+            let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 5);
+            let cfg = EmbedConfig {
+                n_iters: 0,
+                jumpstart_iters: 0,
+                early_exag_iters: 0,
+                threads,
+                ..EmbedConfig::default()
+            };
+            let mut engine = FuncSne::new(ds.x, cfg).unwrap();
+            let mut backend: Box<dyn ComputeBackend> = if threads > 1 {
+                Box::new(ParallelBackend::new(threads))
+            } else {
+                Box::new(NativeBackend::new())
+            };
+            engine.run(20, backend.as_mut()).unwrap(); // warm up the KNN state
+            let phase0 = engine.stats.phase_micros;
+            let mut per_step = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let sw = Stopwatch::new();
+                engine.step(backend.as_mut()).unwrap();
+                per_step.push(sw.elapsed_s() * 1e3);
+            }
+            let phase1 = engine.stats.phase_micros;
+            per_step.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median_ms = per_step[per_step.len() / 2];
+            let mean_ms = per_step.iter().sum::<f64>() / per_step.len() as f64;
+            let phase_per_iter = phase1
+                .named()
+                .iter()
+                .zip(phase0.named().iter())
+                .map(|(&(name, after), &(_, before))| {
+                    (name, (after - before) as f64 / iters as f64)
+                })
+                .collect();
+            StepRun {
+                threads,
+                median_ms,
+                mean_ms,
+                phase_per_iter,
+                hd_refines: engine.stats.hd_refines,
+                iters_total: engine.stats.iters,
+            }
         };
-        let mut engine = FuncSne::new(ds.x, cfg).unwrap();
-        let mut backend = ParallelBackend::new(4);
-        engine.run(20, &mut backend).unwrap();
-        let iters = if full { 100 } else { 40 };
-        let sw = Stopwatch::new();
-        engine.run(iters, &mut backend).unwrap();
-        let per_iter = sw.elapsed_s() / iters as f64;
+        let runs = [run(1), run(4)];
+        for r in &runs {
+            let split: Vec<String> = r
+                .phase_per_iter
+                .iter()
+                .map(|(name, us)| format!("{name} {:.0}us", us))
+                .collect();
+            println!(
+                "step blobs x{} n={n}: median {:>8.3} ms | mean {:>8.3} ms \
+                 ({:.2e} point-updates/s; hd_refines {}/{}) | {}",
+                r.threads,
+                r.median_ms,
+                r.mean_ms,
+                n as f64 / (r.median_ms * 1e-3),
+                r.hd_refines,
+                r.iters_total,
+                split.join(" | ")
+            );
+        }
         println!(
-            "engine par x4 n={n:>6}: {:>9.3} ms/iter  ({:.2e} point-updates/s)",
-            per_iter * 1e3,
-            n as f64 / per_iter,
+            "step blobs speedup x4 vs x1: {:.2}x (median), {:.2}x (mean)",
+            runs[0].median_ms / runs[1].median_ms,
+            runs[0].mean_ms / runs[1].mean_ms
         );
+        // Minimal hand-rolled JSON (the repo is zero-dependency).
+        let run_json = |r: &StepRun| -> String {
+            let phases: Vec<String> = r
+                .phase_per_iter
+                .iter()
+                .map(|(name, us)| format!("\"{name}\":{:.3}", us))
+                .collect();
+            format!(
+                "{{\"median_step_ms\":{:.4},\"mean_step_ms\":{:.4},\
+                 \"phase_micros_per_iter\":{{{}}}}}",
+                r.median_ms,
+                r.mean_ms,
+                phases.join(",")
+            )
+        };
+        let payload = format!(
+            "{{\"bench\":\"step_blobs\",\"dataset\":\"blobs\",\"n\":{n},\
+             \"iters\":{iters},\"threads\":{{\"1\":{},\"4\":{}}},\
+             \"speedup_median_4_vs_1\":{:.3}}}\n",
+            run_json(&runs[0]),
+            run_json(&runs[1]),
+            runs[0].median_ms / runs[1].median_ms
+        );
+        match std::fs::write("BENCH_step_blobs.json", &payload) {
+            Ok(()) => println!("(wrote BENCH_step_blobs.json)"),
+            Err(e) => println!("(could not write BENCH_step_blobs.json: {e})"),
+        }
     }
+
     // ---- online quality-probe overhead ----------------------------------
     // Acceptance: with probe_anchors=256 on blobs(n=5000) the probe adds
     // < 10% to the MEDIAN step time (the probe fires 1-in-probe_every

@@ -91,13 +91,17 @@ pub struct EmbedConfig {
     pub seed: u64,
     /// σ_i recalibration cadence (iterations between flag sweeps).
     pub recalibrate_every: usize,
-    /// Worker threads for the native compute path. `1` runs the
-    /// sequential [`crate::ld::NativeBackend`]; `> 1` selects the
-    /// sharded [`crate::ld::ParallelBackend`] (bitwise-identical
-    /// results); `0` auto-detects the machine's parallelism. The
-    /// default honours the `FUNCSNE_THREADS` environment variable
-    /// (falling back to 1), which is how the CI matrix runs the whole
-    /// test suite under both backends.
+    /// Worker threads for the native compute path. `1` runs everything
+    /// sequentially ([`crate::ld::NativeBackend`] + inline engine
+    /// passes); `> 1` selects the sharded
+    /// [`crate::ld::ParallelBackend`] *and* widens the engine's own
+    /// pool, which shards the per-iteration KNN refinement and
+    /// negative sampling from counter-based RNG streams; `0`
+    /// auto-detects the machine's parallelism. Results are
+    /// bitwise-identical at any setting — the knob only changes
+    /// wall-clock. The default honours the `FUNCSNE_THREADS`
+    /// environment variable (falling back to 1), which is how the CI
+    /// matrix runs the whole test suite under both configurations.
     pub threads: usize,
     /// Iterations between online quality-probe measurements
     /// ([`crate::metrics::probe`]); `0` disables the probe entirely

@@ -16,7 +16,14 @@
 use crate::data::Matrix;
 use crate::hd::Affinities;
 use crate::knn::iterative::IterativeKnn;
+use crate::runtime::pool::{effective_shards, shard_ranges, split_by_ranges, WorkerPool};
+use crate::util::{lane, RandomSource, StreamRng};
 use anyhow::Result;
+
+/// Minimum points per shard when refilling negative samples from
+/// counter streams (a point costs only `m` stream draws, so small
+/// inputs are cheaper inline than forked).
+pub const MIN_NEG_POINTS_PER_SHARD: usize = 2048;
 
 /// Statistics from the force pass, used by the engine to maintain its
 /// running estimate of the global normaliser
@@ -57,14 +64,21 @@ impl NegSamples {
 
     /// Refill in place (§Perf: the engine reuses one buffer per run
     /// instead of allocating n·m ids every iteration).
+    ///
+    /// With `n < 2` there is no valid non-self sample, so the buffer is
+    /// left empty (`m` draws per point would previously index out of
+    /// range at `n == 1`: `n.max(2) - 1` put 1 in a 1-row table).
     pub fn redraw(&mut self, n: usize, rng: &mut crate::util::Rng) {
         let m = self.m;
         self.idx.clear();
+        if n < 2 || m == 0 {
+            return;
+        }
         self.idx.reserve(n * m);
         for i in 0..n {
             for _ in 0..m {
                 // Uniform over the n-1 others: draw in [0, n-1) and skip i.
-                let mut j = rng.below(n.max(2) - 1);
+                let mut j = rng.below(n - 1);
                 if j >= i {
                     j += 1;
                 }
@@ -73,13 +87,66 @@ impl NegSamples {
         }
     }
 
+    /// Refill from per-point counter streams (`lane::NEG`), sharded
+    /// over `pool`: row `i` depends only on `(seed, iter, i)`, so the
+    /// result is bitwise-identical at any thread count and any shard
+    /// partition — unlike [`NegSamples::redraw`], whose sequential
+    /// stream forces a single consumption order. Same `n < 2` contract
+    /// as `redraw`.
+    pub fn redraw_streams(
+        &mut self,
+        n: usize,
+        seed: u64,
+        iter: u64,
+        pool: &WorkerPool,
+        min_points_per_shard: usize,
+    ) {
+        let m = self.m;
+        if n < 2 || m == 0 {
+            self.idx.clear();
+            return;
+        }
+        if self.idx.len() != n * m {
+            // Every slot is overwritten by the shard tasks below, so
+            // stale ids never leak; skipping the clear avoids a
+            // per-iteration memset of the whole buffer.
+            self.idx.clear();
+            self.idx.resize(n * m, 0);
+        }
+        let ranges = shard_ranges(n, effective_shards(pool, n, min_points_per_shard));
+        let chunks = split_by_ranges(self.idx.as_mut_slice(), &ranges, m);
+        let tasks: Vec<_> = chunks
+            .into_iter()
+            .zip(ranges)
+            .map(|(chunk, range)| {
+                move || {
+                    let start = range.start;
+                    for i in range {
+                        let mut rng = StreamRng::at(seed, iter, i as u64, lane::NEG);
+                        let row = &mut chunk[(i - start) * m..(i - start + 1) * m];
+                        for slot in row.iter_mut() {
+                            // Uniform over the n-1 others: draw then skip i.
+                            let mut j = rng.below(n - 1);
+                            if j >= i {
+                                j += 1;
+                            }
+                            *slot = j as u32;
+                        }
+                    }
+                }
+            })
+            .collect();
+        pool.run_tasks(tasks);
+    }
+
     #[inline(always)]
     pub fn row(&self, i: usize) -> &[u32] {
         &self.idx[i * self.m..(i + 1) * self.m]
     }
 }
 
-/// The two numeric services the engine needs per iteration.
+/// The numeric services the engine needs per iteration: candidate
+/// scoring, the force pass, and the gradient/momentum update.
 pub trait ComputeBackend {
     /// Squared HD distances for candidate pairs: `out[t] = ||x[owners[t]]
     /// - x[cands[t]]||²`. Batches may be any length; implementations tile
@@ -116,6 +183,53 @@ pub trait ComputeBackend {
         attr: &mut Matrix,
         rep: &mut Matrix,
     ) -> Result<NegStats>;
+
+    /// Step 5 of an iteration: the gradient/momentum update with the
+    /// implosion-RMS reduction fused in. For every coordinate `t`:
+    /// `v[t] = mom·v[t] + lr·(a_mult·attr[t] + r_mult·rep[t])`, then
+    /// `y[t] += v[t]`. Returns Σ y² (post-update) for the engine's
+    /// implosion guard.
+    ///
+    /// Summation contract (the same discipline as [`NegStats::wsum`]):
+    /// one f64 subtotal per *point*, folded in point order — the
+    /// default implementation and the sharded override share
+    /// [`crate::ld::forces::update_range`], so the fold (and therefore
+    /// the implosion decision) is bitwise-identical at any thread
+    /// count. The default runs sequentially on the calling thread;
+    /// [`crate::ld::ParallelBackend`] shards it by point ranges.
+    #[allow(clippy::too_many_arguments)]
+    fn update(
+        &mut self,
+        y: &mut Matrix,
+        vel: &mut Matrix,
+        attr: &Matrix,
+        rep: &Matrix,
+        a_mult: f32,
+        r_mult: f32,
+        lr: f32,
+        mom: f32,
+    ) -> Result<f64> {
+        let n = y.n();
+        let d = y.d();
+        debug_assert_eq!(vel.n(), n);
+        debug_assert_eq!(attr.n(), n);
+        debug_assert_eq!(rep.n(), n);
+        let mut total = 0.0f64;
+        crate::ld::forces::update_range(
+            0..n,
+            d,
+            y.data_mut(),
+            vel.data_mut(),
+            attr.data(),
+            rep.data(),
+            a_mult,
+            r_mult,
+            lr,
+            mom,
+            |_, ss| total += ss,
+        );
+        Ok(total)
+    }
 
     /// Human-readable name for logs / EXPERIMENTS.md.
     fn name(&self) -> &'static str;
@@ -157,5 +271,65 @@ mod tests {
                 "count[{j}] = {c}, expect ~{expect}"
             );
         }
+    }
+
+    /// Regression: `n == 1` used to draw `below(1) = 0`, bump it past
+    /// the skipped self index and emit 1 — out of range for a 1-row
+    /// matrix. There is no valid non-self sample, so the buffer must
+    /// come back empty instead.
+    #[test]
+    fn neg_samples_single_point_yields_empty() {
+        let mut rng = Rng::new(5);
+        let neg = NegSamples::draw(1, 8, &mut rng);
+        assert!(neg.idx.is_empty(), "no non-self sample exists at n = 1");
+        let mut s = NegSamples { m: 3, idx: vec![9, 9, 9] };
+        s.redraw(0, &mut rng);
+        assert!(s.idx.is_empty());
+        let pool = crate::runtime::pool::WorkerPool::new(4);
+        s.redraw_streams(1, 7, 3, &pool, 1);
+        assert!(s.idx.is_empty());
+    }
+
+    /// The stream refill is bitwise-identical at any pool width and
+    /// shard partition, never self-samples, and stays in range.
+    #[test]
+    fn neg_samples_streams_thread_count_invariant() {
+        let n = 137usize; // odd: every multi-shard partition is uneven
+        let m = 6usize;
+        let fill = |threads: usize, floor: usize| -> Vec<u32> {
+            let pool = crate::runtime::pool::WorkerPool::new(threads);
+            let mut s = NegSamples { m, idx: Vec::new() };
+            s.redraw_streams(n, 42, 9, &pool, floor);
+            s.idx
+        };
+        let base = fill(1, 1);
+        assert_eq!(base.len(), n * m);
+        for i in 0..n {
+            for &j in &base[i * m..(i + 1) * m] {
+                assert_ne!(j as usize, i, "self-sample at {i}");
+                assert!((j as usize) < n);
+            }
+        }
+        for threads in [2usize, 4, 16] {
+            assert_eq!(fill(threads, 1), base, "idx differs at {threads} threads");
+        }
+        // Production floor collapses to one shard — still identical.
+        assert_eq!(fill(8, MIN_NEG_POINTS_PER_SHARD), base);
+    }
+
+    /// Streams differ across iterations and seeds (no accidental
+    /// constant-lane reuse).
+    #[test]
+    fn neg_samples_streams_vary_by_iter_and_seed() {
+        let pool = crate::runtime::pool::WorkerPool::new(1);
+        let fill = |seed: u64, iter: u64| -> Vec<u32> {
+            let mut s = NegSamples { m: 8, idx: Vec::new() };
+            s.redraw_streams(64, seed, iter, &pool, 1);
+            s.idx
+        };
+        let a = fill(1, 1);
+        assert_ne!(a, fill(1, 2), "same stream across iterations");
+        assert_ne!(a, fill(2, 1), "same stream across seeds");
+        assert_eq!(a, fill(1, 1), "not reproducible");
     }
 }

@@ -1,4 +1,4 @@
-//! The paper's iterative *cross-space* KNN refinement.
+//! The paper's iterative *cross-space* KNN refinement — sharded.
 //!
 //! Twin estimated neighbour tables — `hd` (under the data metric) and
 //! `ld` (under the embedding metric) — are refined a little at every
@@ -15,14 +15,84 @@
 //! the HD sets improve and vice versa, the two refinements form the
 //! positive feedback loop of Fig. 4.
 //!
-//! Candidate *generation* (index juggling) is separated from candidate
-//! *scoring* (distance computation) so the coordinator can score a whole
-//! tile of candidates in one AOT-compiled XLA call (the `sqdist_*`
-//! artifact) instead of point by point.
+//! # Sharding and determinism
+//!
+//! A refinement sweep used to be the engine's serial Amdahl tail: one
+//! sequential [`Rng`](crate::util::Rng) threaded through candidate
+//! generation forced the whole sweep onto one core. The sweep is now a
+//! multi-pass pipeline over a [`WorkerPool`], **bitwise
+//! thread-count-invariant by construction**:
+//!
+//! 1. **rescore pass** (LD only; sharded) — each worker owns a disjoint
+//!    row range ([`NeighborTable::rows_mut`]) and rescores its rows
+//!    against the current embedding;
+//! 2. **generate + score pass** (sharded, read-only) — candidates for
+//!    point `i` come from the counter-based stream
+//!    [`StreamRng::at`]`(seed, iter, i, lane)`, so every shard
+//!    partition computes identical candidates; scored results land in
+//!    per-shard buffers (scoring is where the arithmetic lives — for
+//!    the HD sweep it is batched through the engine's
+//!    [`ComputeBackend`](crate::engine::ComputeBackend) instead);
+//! 3. **apply pass** — primary inserts go in sharded (each row is
+//!    owned by exactly one worker), then symmetric inserts run on the
+//!    calling thread in fixed *shard-then-point* order — the one order
+//!    every thread count reproduces.
+//!
+//! Candidate *generation* (index juggling) stays separated from
+//! candidate *scoring* (distance computation) so the coordinator can
+//! score a whole tile of candidates in one AOT-compiled XLA call (the
+//! `sqdist_*` artifact) instead of point by point.
 
-use super::neighbor_set::NeighborTable;
+use super::neighbor_set::{NeighborTable, RowsMut};
 use crate::data::matrix::{sqdist, Matrix};
-use crate::util::Rng;
+use crate::runtime::pool::{effective_shards, shard_ranges, split_by_ranges, WorkerPool};
+use crate::util::{lane, RandomSource, Rng, StreamRng};
+use std::ops::Range;
+
+/// Minimum points per shard for the refinement passes: below this the
+/// scoped-thread fork/join costs more than the per-point rescoring +
+/// generation + scoring it buys. Purely a wall-clock knob — the shard
+/// partition never changes a single output bit.
+pub const MIN_REFINE_POINTS_PER_SHARD: usize = 256;
+
+/// Minimum scored pairs per shard for [`score_pairs_native`].
+pub const MIN_SCORE_PAIRS_PER_SHARD: usize = 8192;
+
+/// Apply one shard's scored primary candidates (`owners[t]` ascending,
+/// grouped) to its row view, invoking `on_improved(owner)` per
+/// successful insert. Returns the number of owners that improved — the
+/// paper's per-sweep "points that received new neighbours" count.
+/// Shared by the LD and HD apply passes so the `N_new` semantics
+/// feeding the refresh-probability EWMA can never fork between spaces.
+fn apply_primary(
+    view: &mut RowsMut<'_>,
+    owners: &[u32],
+    cands: &[u32],
+    dists: &[f32],
+    mut on_improved: impl FnMut(u32),
+) -> usize {
+    let mut new_points = 0usize;
+    let mut prev = u32::MAX;
+    let mut improved = false;
+    for t in 0..owners.len() {
+        let i = owners[t];
+        if i != prev {
+            if improved {
+                new_points += 1;
+            }
+            improved = false;
+            prev = i;
+        }
+        if view.insert(i as usize, cands[t], dists[t]) {
+            improved = true;
+            on_improved(i);
+        }
+    }
+    if improved {
+        new_points += 1;
+    }
+    new_points
+}
 
 /// The twin tables plus refresh bookkeeping.
 #[derive(Clone, Debug)]
@@ -48,6 +118,91 @@ pub struct CandidateRoutes {
 impl Default for CandidateRoutes {
     fn default() -> Self {
         CandidateRoutes { same_space: true, cross_space: true, random: true }
+    }
+}
+
+/// Generation-stamped membership scratch for candidate deduplication:
+/// one `u32` stamp per point id, reused across points and iterations
+/// with **no per-call clearing** — `begin` bumps the generation and a
+/// candidate is fresh iff its stamp differs. Replaces the old
+/// O(budget²) `Vec::contains` scan in [`gen_candidates`].
+#[derive(Clone, Debug, Default)]
+pub struct SeenStamp {
+    stamp: Vec<u32>,
+    gen: u32,
+}
+
+impl SeenStamp {
+    /// Start a fresh generation covering ids `[0, n)`. O(1) except on
+    /// first use per capacity and on `u32` generation wrap-around
+    /// (every 2³² calls), where the stamps are re-zeroed.
+    pub fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+        }
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.gen = 1;
+        }
+    }
+
+    /// Mark `c` seen; returns true iff it was fresh this generation.
+    #[inline(always)]
+    pub fn mark(&mut self, c: u32) -> bool {
+        let s = &mut self.stamp[c as usize];
+        if *s == self.gen {
+            false
+        } else {
+            *s = self.gen;
+            true
+        }
+    }
+}
+
+/// Per-worker buffers for one refinement shard.
+#[derive(Debug, Default)]
+struct ShardScratch {
+    seen: SeenStamp,
+    /// Per-point candidate ids (cleared per point).
+    out: Vec<u32>,
+    /// Shard-local flattened (owner, candidate[, distance]) triples in
+    /// point order.
+    owners: Vec<u32>,
+    cands: Vec<u32>,
+    dists: Vec<f32>,
+}
+
+/// Reusable buffers for the sharded refinement passes — allocation-free
+/// once warm. One per engine; pass the same instance to every sweep.
+#[derive(Debug, Default)]
+pub struct RefineScratch {
+    shards: Vec<ShardScratch>,
+    /// Flat candidate pairs in shard-then-point order (filled by
+    /// [`IterativeKnn::gen_hd_candidates`]; the engine scores them
+    /// through its backend and hands the distances back to
+    /// [`IterativeKnn::apply_hd_scored`]).
+    pub(crate) owners: Vec<u32>,
+    pub(crate) cands: Vec<u32>,
+    /// Native-path scores for the flat pairs (backend paths keep their
+    /// own distance buffer).
+    pub(crate) dists: Vec<f32>,
+    /// Per-shard pair counts into the flat arrays.
+    spans: Vec<usize>,
+    /// The point ranges of the generating pass (the apply partition).
+    ranges: Vec<Range<usize>>,
+}
+
+impl RefineScratch {
+    /// The flat candidate pairs of the last generation pass.
+    pub fn pairs(&self) -> (&[u32], &[u32]) {
+        (&self.owners, &self.cands)
+    }
+
+    fn ensure_shards(&mut self, count: usize) {
+        if self.shards.len() < count {
+            self.shards.resize_with(count, ShardScratch::default);
+        }
     }
 }
 
@@ -90,79 +245,267 @@ impl IterativeKnn {
         }
     }
 
-    /// One HD refinement sweep over all points (native scoring).
-    /// Returns the number of points that received ≥1 new neighbour —
-    /// the `N_new` of the paper's refresh-probability heuristic.
-    pub fn refine_hd_native(
+    /// One LD refinement sweep, sharded over `pool` with per-point
+    /// counter streams (`lane::LD`) — see the module docs for the
+    /// three-pass structure. LD coordinates move at every gradient
+    /// step, so stored distances are first rescored against the current
+    /// embedding. Returns the number of points that received ≥1 new
+    /// neighbour — the `N_new` of the paper's refresh-probability
+    /// heuristic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refine_ld(
         &mut self,
-        x: &Matrix,
+        y: &Matrix,
         n_candidates: usize,
         routes: CandidateRoutes,
-        rng: &mut Rng,
-        scratch: &mut Vec<u32>,
+        seed: u64,
+        iter: u64,
+        pool: &WorkerPool,
+        min_points_per_shard: usize,
+        scratch: &mut RefineScratch,
     ) -> usize {
         let n = self.n();
-        let mut n_new = 0usize;
-        for i in 0..n {
-            scratch.clear();
-            gen_candidates(i, &self.hd, &self.ld, n, n_candidates, routes, rng, scratch);
-            let mut improved = false;
-            let xi = x.row(i);
-            for &c in scratch.iter() {
-                let d = sqdist(xi, x.row(c as usize));
-                if self.hd.insert(i, c, d) {
-                    improved = true;
-                }
-                // Symmetric insertion: i may be a good neighbour for c.
-                // (Counted via the dirty flag, not n_new, to keep the
-                // paper's "points that received new neighbours" per-sweep
-                // semantics.)
-                if self.hd.insert(c as usize, i as u32, d) {
-                    self.hd_dirty[c as usize] = true;
-                }
-            }
-            if improved {
-                self.hd_dirty[i] = true;
-                n_new += 1;
+        if n < 2 {
+            return 0;
+        }
+        let shards = effective_shards(pool, n, min_points_per_shard);
+        let ranges = shard_ranges(n, shards);
+        // --- pass 1: rescore (sharded, disjoint rows) ------------------
+        {
+            let tasks: Vec<_> = self
+                .ld
+                .rows_mut(&ranges)
+                .into_iter()
+                .map(|mut view| {
+                    move || {
+                        for i in view.start()..view.start() + view.rows() {
+                            view.rescore(i, |j| sqdist(y.row(i), y.row(j as usize)));
+                        }
+                    }
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+        // --- pass 2: generate + score (sharded, read-only) -------------
+        scratch.ensure_shards(ranges.len());
+        {
+            let ld = &self.ld;
+            let hd = &self.hd;
+            let tasks: Vec<_> = scratch.shards[..ranges.len()]
+                .iter_mut()
+                .zip(ranges.iter().cloned())
+                .map(|(sh, range)| {
+                    move || {
+                        sh.owners.clear();
+                        sh.cands.clear();
+                        sh.dists.clear();
+                        for i in range {
+                            sh.out.clear();
+                            let mut rng = StreamRng::at(seed, iter, i as u64, lane::LD);
+                            // Note the swapped table roles: LD is
+                            // primary, HD is cross.
+                            gen_candidates(
+                                i,
+                                ld,
+                                hd,
+                                n,
+                                n_candidates,
+                                routes,
+                                &mut rng,
+                                &mut sh.seen,
+                                &mut sh.out,
+                            );
+                            let yi = y.row(i);
+                            for &c in &sh.out {
+                                sh.owners.push(i as u32);
+                                sh.cands.push(c);
+                                sh.dists.push(sqdist(yi, y.row(c as usize)));
+                            }
+                        }
+                    }
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+        // --- pass 3a: primary inserts (sharded, disjoint rows) ---------
+        let n_new: usize = {
+            let tasks: Vec<_> = self
+                .ld
+                .rows_mut(&ranges)
+                .into_iter()
+                .zip(scratch.shards[..ranges.len()].iter())
+                .map(|(mut view, sh)| {
+                    move || apply_primary(&mut view, &sh.owners, &sh.cands, &sh.dists, |_| {})
+                })
+                .collect();
+            pool.run_tasks(tasks).into_iter().sum()
+        };
+        // --- pass 3b: symmetric inserts (fixed shard-then-point order) -
+        for sh in &scratch.shards[..ranges.len()] {
+            for t in 0..sh.owners.len() {
+                // i may be a good neighbour for c; result deliberately
+                // unused (LD symmetric improvements carry no flag).
+                self.ld.insert(sh.cands[t] as usize, sh.owners[t], sh.dists[t]);
             }
         }
         n_new
     }
 
-    /// One LD refinement sweep (native scoring). LD coordinates move at
-    /// every gradient step, so stored distances are first rescored
-    /// against the current embedding before candidates are tested.
-    pub fn refine_ld_native(
-        &mut self,
-        y: &Matrix,
+    /// Pass 1 of an HD refinement sweep: sharded candidate generation
+    /// from per-point counter streams (`lane::HD`) into `scratch`'s
+    /// flat pair arrays, in shard-then-point order. Read-only on the
+    /// tables. The caller scores the pairs (engine: one batched
+    /// [`ComputeBackend::sqdist_batch`](crate::engine::ComputeBackend::sqdist_batch)
+    /// call; standalone: [`score_pairs_native`]) and then applies them
+    /// with [`IterativeKnn::apply_hd_scored`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn gen_hd_candidates(
+        &self,
         n_candidates: usize,
         routes: CandidateRoutes,
-        rng: &mut Rng,
-        scratch: &mut Vec<u32>,
-    ) -> usize {
+        seed: u64,
+        iter: u64,
+        pool: &WorkerPool,
+        min_points_per_shard: usize,
+        scratch: &mut RefineScratch,
+    ) {
         let n = self.n();
-        let mut n_new = 0usize;
-        for i in 0..n {
-            self.ld.rescore(i, |j| sqdist(y.row(i), y.row(j as usize)));
-            scratch.clear();
-            // Note the swapped table roles: LD is primary, HD is cross.
-            gen_candidates(i, &self.ld, &self.hd, n, n_candidates, routes, rng, scratch);
-            let mut improved = false;
-            let yi = y.row(i);
-            for &c in scratch.iter() {
-                let d = sqdist(yi, y.row(c as usize));
-                if self.ld.insert(i, c, d) {
-                    improved = true;
-                }
-                if self.ld.insert(c as usize, i as u32, d) {
-                    // symmetric improvement
-                }
+        scratch.owners.clear();
+        scratch.cands.clear();
+        scratch.spans.clear();
+        if n < 2 {
+            scratch.ranges.clear();
+            return;
+        }
+        let shards = effective_shards(pool, n, min_points_per_shard);
+        let ranges = shard_ranges(n, shards);
+        scratch.ensure_shards(ranges.len());
+        {
+            let hd = &self.hd;
+            let ld = &self.ld;
+            let tasks: Vec<_> = scratch.shards[..ranges.len()]
+                .iter_mut()
+                .zip(ranges.iter().cloned())
+                .map(|(sh, range)| {
+                    move || {
+                        sh.owners.clear();
+                        sh.cands.clear();
+                        for i in range {
+                            sh.out.clear();
+                            let mut rng = StreamRng::at(seed, iter, i as u64, lane::HD);
+                            gen_candidates(
+                                i,
+                                hd,
+                                ld,
+                                n,
+                                n_candidates,
+                                routes,
+                                &mut rng,
+                                &mut sh.seen,
+                                &mut sh.out,
+                            );
+                            for &c in &sh.out {
+                                sh.owners.push(i as u32);
+                                sh.cands.push(c);
+                            }
+                        }
+                    }
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+        let RefineScratch { shards, owners, cands, spans, .. } = &mut *scratch;
+        for sh in &shards[..ranges.len()] {
+            spans.push(sh.owners.len());
+            owners.extend_from_slice(&sh.owners);
+            cands.extend_from_slice(&sh.cands);
+        }
+        scratch.ranges = ranges;
+    }
+
+    /// Pass 2 of an HD refinement sweep: apply scored candidates.
+    /// `dists[t]` scores the pair `(owners[t], cands[t])` of the
+    /// preceding [`IterativeKnn::gen_hd_candidates`] call. Primary
+    /// inserts (and their dirty flags) go in sharded over disjoint row
+    /// ranges, then symmetric inserts run on the calling thread in
+    /// fixed shard-then-point order. Returns the number of points whose
+    /// primary inserts improved — the paper's per-sweep `N_new`.
+    pub fn apply_hd_scored(
+        &mut self,
+        dists: &[f32],
+        pool: &WorkerPool,
+        scratch: &RefineScratch,
+    ) -> usize {
+        debug_assert_eq!(dists.len(), scratch.owners.len());
+        if scratch.owners.is_empty() {
+            return 0;
+        }
+        let ranges = &scratch.ranges;
+        let n_new: usize = {
+            let views = self.hd.rows_mut(ranges);
+            // hd_dirty chunks matching the row ranges.
+            let dirty_chunks = split_by_ranges(self.hd_dirty.as_mut_slice(), ranges, 1);
+            let mut tasks = Vec::with_capacity(views.len());
+            let mut off = 0usize;
+            for ((mut view, dirty), &span) in
+                views.into_iter().zip(dirty_chunks).zip(&scratch.spans)
+            {
+                let owners = &scratch.owners[off..off + span];
+                let cands = &scratch.cands[off..off + span];
+                let ds = &dists[off..off + span];
+                off += span;
+                tasks.push(move || {
+                    let start = view.start();
+                    apply_primary(&mut view, owners, cands, ds, |i| {
+                        dirty[i as usize - start] = true;
+                    })
+                });
             }
-            if improved {
-                n_new += 1;
+            pool.run_tasks(tasks).into_iter().sum()
+        };
+        // Symmetric insertion: i may be a good neighbour for c. Counted
+        // via the dirty flag, not n_new, to keep the paper's "points
+        // that received new neighbours" per-sweep semantics.
+        for t in 0..scratch.owners.len() {
+            let c = scratch.cands[t];
+            if self.hd.insert(c as usize, scratch.owners[t], dists[t]) {
+                self.hd_dirty[c as usize] = true;
             }
         }
         n_new
+    }
+
+    /// One HD refinement sweep with native (pure Rust, sharded)
+    /// scoring: generate → score → apply. The engine uses the split
+    /// form instead so a whole sweep's candidates become one batched
+    /// backend call; this composition serves the standalone KNN tests
+    /// and benches. Returns `N_new`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refine_hd_native(
+        &mut self,
+        x: &Matrix,
+        n_candidates: usize,
+        routes: CandidateRoutes,
+        seed: u64,
+        iter: u64,
+        pool: &WorkerPool,
+        min_points_per_shard: usize,
+        scratch: &mut RefineScratch,
+    ) -> usize {
+        self.gen_hd_candidates(
+            n_candidates,
+            routes,
+            seed,
+            iter,
+            pool,
+            min_points_per_shard,
+            scratch,
+        );
+        {
+            let RefineScratch { owners, cands, dists, .. } = &mut *scratch;
+            score_pairs_native(x, owners, cands, pool, MIN_SCORE_PAIRS_PER_SHARD, dists);
+        }
+        self.apply_hd_scored(&scratch.dists, pool, scratch)
     }
 
     /// Dynamic insertion: append a point (its sets start empty and fill
@@ -190,29 +533,73 @@ impl IterativeKnn {
     }
 }
 
+/// Score candidate pairs natively: `out[t] = ||x[owners[t]] −
+/// x[cands[t]]||²`, sharded by pair ranges over `pool` (each output
+/// element is independent, so any partition is bitwise-identical).
+pub fn score_pairs_native(
+    x: &Matrix,
+    owners: &[u32],
+    cands: &[u32],
+    pool: &WorkerPool,
+    min_pairs_per_shard: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(owners.len(), cands.len());
+    let len = owners.len();
+    if out.len() != len {
+        // Every element is overwritten below, so stale contents never
+        // leak; skipping the clear avoids a per-sweep memset.
+        out.clear();
+        out.resize(len, 0.0);
+    }
+    let ranges = shard_ranges(len, effective_shards(pool, len, min_pairs_per_shard));
+    let chunks = split_by_ranges(out.as_mut_slice(), &ranges, 1);
+    let tasks: Vec<_> = chunks
+        .into_iter()
+        .zip(ranges)
+        .map(|(chunk, range)| {
+            move || {
+                let start = range.start;
+                for t in range {
+                    chunk[t - start] =
+                        sqdist(x.row(owners[t] as usize), x.row(cands[t] as usize));
+                }
+            }
+        })
+        .collect();
+    pool.run_tasks(tasks);
+}
+
 /// Generate up to `budget` candidate neighbour ids for point `i`.
 ///
 /// `primary` is the table being refined; `other` is the twin table in
 /// the opposite space (the cross-pollination source). Candidates are
-/// deduplicated against each other and against `i`; they may already be
-/// in the table (insert rejects those cheaply).
+/// deduplicated against each other (via the generation-stamped `seen`
+/// scratch — O(1) per candidate, no per-call clearing) and against `i`;
+/// they may already be in the table (insert rejects those cheaply).
+///
+/// Generic over the random source: the engine's sharded sweeps pass a
+/// per-point [`StreamRng`], which is what makes a sweep's candidate set
+/// independent of the thread count.
 #[allow(clippy::too_many_arguments)]
-pub fn gen_candidates(
+pub fn gen_candidates<R: RandomSource>(
     i: usize,
     primary: &NeighborTable,
     other: &NeighborTable,
     n: usize,
     budget: usize,
     routes: CandidateRoutes,
-    rng: &mut Rng,
+    rng: &mut R,
+    seen: &mut SeenStamp,
     out: &mut Vec<u32>,
 ) {
     debug_assert!(out.is_empty());
     if n < 2 {
         return;
     }
-    let push = |c: u32, out: &mut Vec<u32>| {
-        if c as usize != i && !out.contains(&c) {
+    seen.begin(n);
+    let push = |c: u32, out: &mut Vec<u32>, seen: &mut SeenStamp| {
+        if c as usize != i && seen.mark(c) {
             out.push(c);
         }
     };
@@ -228,9 +615,9 @@ pub fn gen_candidates(
             let j = nb[rng.below(nb.len())] as usize;
             let nb2 = primary.neighbors(j);
             if !nb2.is_empty() {
-                push(nb2[rng.below(nb2.len())], out);
+                push(nb2[rng.below(nb2.len())], out, seen);
             } else {
-                push(j as u32, out);
+                push(j as u32, out, seen);
             }
         }
     }
@@ -245,13 +632,13 @@ pub fn gen_candidates(
             }
             let j = nb[rng.below(nb.len())];
             if t % 2 == 0 {
-                push(j, out);
+                push(j, out, seen);
             } else {
                 let nb2 = other.neighbors(j as usize);
                 if !nb2.is_empty() {
-                    push(nb2[rng.below(nb2.len())], out);
+                    push(nb2[rng.below(nb2.len())], out, seen);
                 } else {
-                    push(j, out);
+                    push(j, out, seen);
                 }
             }
         }
@@ -260,7 +647,7 @@ pub fn gen_candidates(
     if routes.random {
         let tries = (budget / 4).max(1);
         for _ in 0..tries {
-            push(rng.below(n) as u32, out);
+            push(rng.below(n) as u32, out, seen);
         }
     }
     out.truncate(budget.max(1));
@@ -295,10 +682,29 @@ mod tests {
         let mut knn = IterativeKnn::new(500, 10, 10);
         // LD == HD here (the best possible embedding).
         knn.seed_random(&ds.x, &ds.x, &mut rng);
-        let mut scratch = Vec::new();
-        for _ in 0..40 {
-            knn.refine_hd_native(&ds.x, 8, CandidateRoutes::default(), &mut rng, &mut scratch);
-            knn.refine_ld_native(&ds.x, 8, CandidateRoutes::default(), &mut rng, &mut scratch);
+        let pool = WorkerPool::new(2);
+        let mut scratch = RefineScratch::default();
+        for round in 1..=40u64 {
+            knn.refine_hd_native(
+                &ds.x,
+                8,
+                CandidateRoutes::default(),
+                7,
+                round,
+                &pool,
+                1,
+                &mut scratch,
+            );
+            knn.refine_ld(
+                &ds.x,
+                8,
+                CandidateRoutes::default(),
+                7,
+                round,
+                &pool,
+                1,
+                &mut scratch,
+            );
         }
         let truth = brute_knn(&ds.x, 10);
         let r = recall(&truth, &knn.hd);
@@ -315,10 +721,11 @@ mod tests {
             let mut rng = crate::util::Rng::new(seed);
             let mut knn = IterativeKnn::new(400, 8, 8);
             knn.seed_random(&ds.x, &ds.x, &mut rng);
-            let mut scratch = Vec::new();
-            for _ in 0..15 {
-                knn.refine_hd_native(&ds.x, 8, routes, &mut rng, &mut scratch);
-                knn.refine_ld_native(&ds.x, 8, routes, &mut rng, &mut scratch);
+            let pool = WorkerPool::new(1);
+            let mut scratch = RefineScratch::default();
+            for round in 1..=15u64 {
+                knn.refine_hd_native(&ds.x, 8, routes, seed, round, &pool, 1, &mut scratch);
+                knn.refine_ld(&ds.x, 8, routes, seed, round, &pool, 1, &mut scratch);
             }
             recall(&truth, &knn.hd)
         };
@@ -356,21 +763,28 @@ mod tests {
                     })
                     .sum()
             };
-            let mut scratch = Vec::new();
+            let pool = WorkerPool::new(2);
+            let mut scratch = RefineScratch::default();
             let mut prev = hits(&knn);
-            for round in 0..15 {
+            for round in 1..=15u64 {
                 knn.refine_hd_native(
                     &ds.x,
                     8,
                     CandidateRoutes::default(),
-                    &mut krng,
+                    seed,
+                    round,
+                    &pool,
+                    1,
                     &mut scratch,
                 );
-                knn.refine_ld_native(
+                knn.refine_ld(
                     &ds.x,
                     8,
                     CandidateRoutes::default(),
-                    &mut krng,
+                    seed,
+                    round,
+                    &pool,
+                    1,
                     &mut scratch,
                 );
                 let h = hits(&knn);
@@ -386,24 +800,120 @@ mod tests {
         });
     }
 
+    /// The new determinism contract: a refinement sweep is bitwise
+    /// thread-count-invariant — tables, stored distances and dirty
+    /// flags agree exactly at any pool width and shard partition.
+    #[test]
+    fn refinement_bitwise_invariant_across_thread_counts() {
+        let ds = datasets::blobs(300, 6, 3, 0.6, 8.0, 17);
+        let n = 300usize;
+        // A rough "embedding": the first two data dimensions.
+        let mut yv = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            yv.extend_from_slice(&ds.x.row(i)[..2]);
+        }
+        let y = Matrix::from_vec(yv, n, 2).unwrap();
+        let run = |threads: usize| -> (IterativeKnn, Vec<usize>) {
+            let mut rng = crate::util::Rng::new(3);
+            let mut knn = IterativeKnn::new(n, 8, 6);
+            knn.seed_random(&ds.x, &y, &mut rng);
+            let pool = WorkerPool::new(threads);
+            let mut scratch = RefineScratch::default();
+            let mut n_news = Vec::new();
+            for round in 1..=10u64 {
+                n_news.push(knn.refine_ld(
+                    &y,
+                    8,
+                    CandidateRoutes::default(),
+                    99,
+                    round,
+                    &pool,
+                    1,
+                    &mut scratch,
+                ));
+                n_news.push(knn.refine_hd_native(
+                    &ds.x,
+                    8,
+                    CandidateRoutes::default(),
+                    99,
+                    round,
+                    &pool,
+                    1,
+                    &mut scratch,
+                ));
+            }
+            (knn, n_news)
+        };
+        let state = |t: &NeighborTable| -> Vec<Vec<(u32, u32)>> {
+            (0..n).map(|i| t.entries(i).map(|(j, d)| (j, d.to_bits())).collect()).collect()
+        };
+        let (base, base_news) = run(1);
+        for threads in [2usize, 4, 7] {
+            let (other, other_news) = run(threads);
+            assert_eq!(base_news, other_news, "N_new differs at {threads} threads");
+            assert_eq!(
+                state(&base.hd),
+                state(&other.hd),
+                "hd table differs at {threads} threads"
+            );
+            assert_eq!(
+                state(&base.ld),
+                state(&other.ld),
+                "ld table differs at {threads} threads"
+            );
+            assert_eq!(base.hd_dirty, other.hd_dirty, "dirty flags differ at {threads} threads");
+        }
+    }
+
     #[test]
     fn gen_candidates_dedups_and_excludes_self() {
-        let mut rng = crate::util::Rng::new(5);
         let mut primary = NeighborTable::new(10, 4);
         let mut other = NeighborTable::new(10, 4);
         for j in 1..5u32 {
             primary.insert(0, j, j as f32);
             other.insert(0, j + 4, j as f32);
         }
+        let mut seen = SeenStamp::default();
         let mut out = Vec::new();
-        for _ in 0..20 {
+        for t in 0..20u64 {
             out.clear();
-            gen_candidates(0, &primary, &other, 10, 12, CandidateRoutes::default(), &mut rng, &mut out);
+            let mut rng = StreamRng::at(5, t, 0, lane::HD);
+            gen_candidates(
+                0,
+                &primary,
+                &other,
+                10,
+                12,
+                CandidateRoutes::default(),
+                &mut rng,
+                &mut seen,
+                &mut out,
+            );
             assert!(!out.contains(&0), "self in candidates");
             let set: std::collections::HashSet<_> = out.iter().collect();
             assert_eq!(set.len(), out.len(), "duplicates in candidates");
             assert!(out.len() <= 12);
         }
+    }
+
+    /// The stamp scratch survives reuse across points and iterations
+    /// without clearing: candidates fresh for one point stay fresh for
+    /// the next even when ids repeat.
+    #[test]
+    fn seen_stamp_resets_per_generation_without_clearing() {
+        let mut seen = SeenStamp::default();
+        seen.begin(8);
+        assert!(seen.mark(3));
+        assert!(!seen.mark(3), "duplicate within a generation");
+        assert!(seen.mark(5));
+        seen.begin(8);
+        assert!(seen.mark(3), "previous generation must not leak");
+        assert!(seen.mark(5));
+        // Growing n mid-life keeps old stamps valid.
+        seen.begin(16);
+        assert!(seen.mark(15));
+        assert!(seen.mark(3));
+        assert!(!seen.mark(15));
     }
 
     #[test]
@@ -413,9 +923,18 @@ mod tests {
         let mut knn = IterativeKnn::new(100, 6, 6);
         knn.seed_random(&ds.x, &ds.x, &mut rng);
         knn.hd_dirty.iter_mut().for_each(|f| *f = false);
-        let mut scratch = Vec::new();
-        let n_new =
-            knn.refine_hd_native(&ds.x, 8, CandidateRoutes::default(), &mut rng, &mut scratch);
+        let pool = WorkerPool::new(2);
+        let mut scratch = RefineScratch::default();
+        let n_new = knn.refine_hd_native(
+            &ds.x,
+            8,
+            CandidateRoutes::default(),
+            9,
+            1,
+            &pool,
+            1,
+            &mut scratch,
+        );
         let dirty = knn.hd_dirty.iter().filter(|&&f| f).count();
         assert!(dirty >= n_new, "dirty {dirty} < n_new {n_new}");
         assert!(n_new > 0, "refinement found nothing on a fresh random table");
@@ -438,6 +957,26 @@ mod tests {
             }
             for &j in knn.ld.neighbors(i) {
                 assert!((j as usize) < knn.n(), "stale ld ref {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn score_pairs_native_matches_direct_at_any_width() {
+        let ds = datasets::blobs(50, 7, 2, 1.0, 5.0, 9);
+        let owners: Vec<u32> = (0..37).collect();
+        let cands: Vec<u32> = (10..47).collect();
+        let mut expect = Vec::new();
+        for t in 0..owners.len() {
+            expect.push(sqdist(ds.x.row(owners[t] as usize), ds.x.row(cands[t] as usize)));
+        }
+        for threads in [1usize, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            let mut out = Vec::new();
+            score_pairs_native(&ds.x, &owners, &cands, &pool, 1, &mut out);
+            assert_eq!(out.len(), expect.len());
+            for (a, b) in out.iter().zip(&expect) {
+                assert_eq!(a.to_bits(), b.to_bits(), "score differs at {threads} threads");
             }
         }
     }

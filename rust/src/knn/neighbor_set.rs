@@ -7,9 +7,102 @@
 //! replacement. Membership tests are linear scans — `k` ≤ 64 in
 //! practice, so a scan over one or two cache lines beats any hash
 //! structure.
+//!
+//! For the sharded refinement passes, [`NeighborTable::rows_mut`]
+//! splits the table into disjoint contiguous row-range views
+//! ([`RowsMut`]) so each worker thread mutates only the rows it owns,
+//! with the borrow checker proving disjointness. Both the whole-table
+//! and row-view mutators funnel into the same row-level `row_insert` /
+//! `row_rescore` primitives, so sharded and sequential execution are
+//! bitwise-identical by construction.
 
 /// Sentinel index for an empty slot.
 pub const EMPTY: u32 = u32::MAX;
+
+use std::ops::Range;
+
+/// Core insert into one row's slot arrays (`dists` / `idxs` are that
+/// row's `k` slots). Shared by [`NeighborTable::insert`] and
+/// [`RowsMut::insert`] — a single implementation is what makes the
+/// sharded refinement bitwise-identical to the sequential path.
+#[inline]
+fn row_insert(
+    k: usize,
+    owner: usize,
+    len: &mut u32,
+    dists: &mut [f32],
+    idxs: &mut [u32],
+    j: u32,
+    d: f32,
+) -> bool {
+    debug_assert!(j != EMPTY);
+    if j as usize == owner || !d.is_finite() {
+        return false;
+    }
+    let l = *len as usize;
+    if l == k && d >= dists[0] {
+        return false; // not better than the worst
+    }
+    if idxs[..l].contains(&j) {
+        return false;
+    }
+    if l < k {
+        // Append then sift up (max-heap).
+        let mut slot = l;
+        dists[slot] = d;
+        idxs[slot] = j;
+        *len += 1;
+        while slot > 0 {
+            let parent = (slot - 1) / 2;
+            if dists[parent] < dists[slot] {
+                dists.swap(parent, slot);
+                idxs.swap(parent, slot);
+                slot = parent;
+            } else {
+                break;
+            }
+        }
+    } else {
+        // Replace root then sift down.
+        dists[0] = d;
+        idxs[0] = j;
+        sift_down(dists, idxs, 0, k);
+    }
+    true
+}
+
+/// Restore the max-heap property downward from `slot` over `len` slots.
+#[inline]
+fn sift_down(dists: &mut [f32], idxs: &mut [u32], mut slot: usize, len: usize) {
+    loop {
+        let l = 2 * slot + 1;
+        let r = 2 * slot + 2;
+        let mut largest = slot;
+        if l < len && dists[l] > dists[largest] {
+            largest = l;
+        }
+        if r < len && dists[r] > dists[largest] {
+            largest = r;
+        }
+        if largest == slot {
+            break;
+        }
+        dists.swap(slot, largest);
+        idxs.swap(slot, largest);
+        slot = largest;
+    }
+}
+
+/// Recompute one row's stored distances and re-heapify (`dists` /
+/// `idxs` are the row's *filled* slots). Shared by
+/// [`NeighborTable::rescore`] and [`RowsMut::rescore`].
+#[inline]
+fn row_rescore(dists: &mut [f32], idxs: &mut [u32], mut dist_of: impl FnMut(u32) -> f32) {
+    for s in 0..dists.len() {
+        dists[s] = dist_of(idxs[s]);
+    }
+    heapify(dists, idxs);
+}
 
 /// A contiguous (n × k) neighbour table.
 #[derive(Clone, Debug)]
@@ -99,91 +192,77 @@ impl NeighborTable {
     /// and candidates no better than the current worst.
     #[inline]
     pub fn insert(&mut self, i: usize, j: u32, d: f32) -> bool {
-        debug_assert!(j != EMPTY);
-        if j as usize == i || !d.is_finite() {
-            return false;
-        }
         let base = i * self.k;
-        let len = self.len(i);
-        if len == self.k && d >= self.dists[base] {
-            return false; // not better than the worst
-        }
-        if self.idxs[base..base + len].contains(&j) {
-            return false;
-        }
-        if len < self.k {
-            // Append then sift up.
-            let mut slot = len;
-            self.dists[base + slot] = d;
-            self.idxs[base + slot] = j;
-            self.lens[i] += 1;
-            // Sift up (max-heap).
-            while slot > 0 {
-                let parent = (slot - 1) / 2;
-                if self.dists[base + parent] < self.dists[base + slot] {
-                    self.dists.swap(base + parent, base + slot);
-                    self.idxs.swap(base + parent, base + slot);
-                    slot = parent;
-                } else {
-                    break;
-                }
-            }
-        } else {
-            // Replace root then sift down.
-            self.dists[base] = d;
-            self.idxs[base] = j;
-            let mut slot = 0;
-            loop {
-                let l = 2 * slot + 1;
-                let r = 2 * slot + 2;
-                let mut largest = slot;
-                if l < self.k && self.dists[base + l] > self.dists[base + largest] {
-                    largest = l;
-                }
-                if r < self.k && self.dists[base + r] > self.dists[base + largest] {
-                    largest = r;
-                }
-                if largest == slot {
-                    break;
-                }
-                self.dists.swap(base + slot, base + largest);
-                self.idxs.swap(base + slot, base + largest);
-                slot = largest;
-            }
-        }
-        true
+        row_insert(
+            self.k,
+            i,
+            &mut self.lens[i],
+            &mut self.dists[base..base + self.k],
+            &mut self.idxs[base..base + self.k],
+            j,
+            d,
+        )
     }
 
     /// Recompute all stored distances for point `i` with a new metric /
     /// moved coordinates, re-heapifying. Used when LD points move or the
     /// HD metric changes on the fly.
-    pub fn rescore(&mut self, i: usize, mut dist_of: impl FnMut(u32) -> f32) {
+    pub fn rescore(&mut self, i: usize, dist_of: impl FnMut(u32) -> f32) {
         let base = i * self.k;
         let len = self.len(i);
-        for s in 0..len {
-            self.dists[base + s] = dist_of(self.idxs[base + s]);
+        row_rescore(
+            &mut self.dists[base..base + len],
+            &mut self.idxs[base..base + len],
+            dist_of,
+        );
+    }
+
+    /// Split the table into disjoint mutable row-range views for the
+    /// sharded refinement passes: each worker owns one view and can
+    /// only reach rows inside it, so concurrent mutation is data-race
+    /// free by construction. `ranges` must be ascending, disjoint and
+    /// within `[0, n)`; they need not cover every row. Cross-row
+    /// *reads* during a mutating pass are not possible through these
+    /// views — do them in a separate read-only pass.
+    pub fn rows_mut(&mut self, ranges: &[Range<usize>]) -> Vec<RowsMut<'_>> {
+        let k = self.k;
+        let n = self.n;
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut dists = self.dists.as_mut_slice();
+        let mut idxs = self.idxs.as_mut_slice();
+        let mut lens = self.lens.as_mut_slice();
+        let mut consumed = 0usize;
+        for r in ranges {
+            assert!(
+                r.start >= consumed && r.start <= r.end && r.end <= n,
+                "rows_mut: bad range {r:?} (consumed {consumed}, n {n})"
+            );
+            // Skip any gap before this range, then split off its rows.
+            let skip = r.start - consumed;
+            let (_, tail) = dists.split_at_mut(skip * k);
+            dists = tail;
+            let (_, tail) = idxs.split_at_mut(skip * k);
+            idxs = tail;
+            let (_, tail) = lens.split_at_mut(skip);
+            lens = tail;
+            let rows = r.end - r.start;
+            let (d_head, d_tail) = dists.split_at_mut(rows * k);
+            dists = d_tail;
+            let (i_head, i_tail) = idxs.split_at_mut(rows * k);
+            idxs = i_tail;
+            let (l_head, l_tail) = lens.split_at_mut(rows);
+            lens = l_tail;
+            out.push(RowsMut {
+                k,
+                start: r.start,
+                rows,
+                dists: d_head,
+                idxs: i_head,
+                lens: l_head,
+            });
+            consumed = r.end;
         }
-        // Heapify the region.
-        for s in (0..len / 2).rev() {
-            let mut slot = s;
-            loop {
-                let l = 2 * slot + 1;
-                let r = 2 * slot + 2;
-                let mut largest = slot;
-                if l < len && self.dists[base + l] > self.dists[base + largest] {
-                    largest = l;
-                }
-                if r < len && self.dists[base + r] > self.dists[base + largest] {
-                    largest = r;
-                }
-                if largest == slot {
-                    break;
-                }
-                self.dists.swap(base + slot, base + largest);
-                self.idxs.swap(base + slot, base + largest);
-                slot = largest;
-            }
-        }
+        out
     }
 
     /// Drop every stored reference to point `gone`, and rewrite
@@ -263,24 +342,74 @@ impl NeighborTable {
 fn heapify(dists: &mut [f32], idxs: &mut [u32]) {
     let len = dists.len();
     for s in (0..len / 2).rev() {
-        let mut slot = s;
-        loop {
-            let l = 2 * slot + 1;
-            let r = 2 * slot + 2;
-            let mut largest = slot;
-            if l < len && dists[l] > dists[largest] {
-                largest = l;
-            }
-            if r < len && dists[r] > dists[largest] {
-                largest = r;
-            }
-            if largest == slot {
-                break;
-            }
-            dists.swap(slot, largest);
-            idxs.swap(slot, largest);
-            slot = largest;
-        }
+        sift_down(dists, idxs, s, len);
+    }
+}
+
+/// A mutable view over a contiguous row range of a [`NeighborTable`],
+/// produced by [`NeighborTable::rows_mut`]. Row indices passed to its
+/// methods are *absolute* (same coordinates as the whole-table API);
+/// reaching outside the view's range panics.
+#[derive(Debug)]
+pub struct RowsMut<'a> {
+    k: usize,
+    start: usize,
+    rows: usize,
+    dists: &'a mut [f32],
+    idxs: &'a mut [u32],
+    lens: &'a mut [u32],
+}
+
+impl RowsMut<'_> {
+    /// First absolute row covered by this view.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Rows covered by this view.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    fn local(&self, i: usize) -> usize {
+        assert!(
+            i >= self.start && i < self.start + self.rows,
+            "row {i} outside view [{}, {})",
+            self.start,
+            self.start + self.rows
+        );
+        i - self.start
+    }
+
+    /// Same contract as [`NeighborTable::insert`], restricted to this
+    /// view's rows.
+    #[inline]
+    pub fn insert(&mut self, i: usize, j: u32, d: f32) -> bool {
+        let li = self.local(i);
+        let base = li * self.k;
+        row_insert(
+            self.k,
+            i,
+            &mut self.lens[li],
+            &mut self.dists[base..base + self.k],
+            &mut self.idxs[base..base + self.k],
+            j,
+            d,
+        )
+    }
+
+    /// Same contract as [`NeighborTable::rescore`], restricted to this
+    /// view's rows.
+    pub fn rescore(&mut self, i: usize, dist_of: impl FnMut(u32) -> f32) {
+        let li = self.local(i);
+        let base = li * self.k;
+        let len = self.lens[li] as usize;
+        row_rescore(
+            &mut self.dists[base..base + len],
+            &mut self.idxs[base..base + len],
+            dist_of,
+        );
     }
 }
 
@@ -511,5 +640,73 @@ mod tests {
         t.clear_point(0);
         assert_eq!(t.len(0), 0);
         assert_eq!(t.worst_dist(0), f32::INFINITY);
+    }
+
+    /// The contract the sharded refinement passes stand on: inserts and
+    /// rescores through disjoint [`RowsMut`] views leave the table in
+    /// exactly (bitwise) the state the whole-table methods produce.
+    #[test]
+    fn rows_mut_matches_whole_table_bitwise() {
+        let mut rng = crate::util::Rng::new(31);
+        let n = 10usize;
+        let k = 4usize;
+        let mut ops: Vec<(usize, u32, f32)> = Vec::new();
+        for _ in 0..200 {
+            ops.push((rng.below(n), rng.below(n) as u32, rng.f32() * 9.0));
+        }
+        let mut whole = NeighborTable::new(n, k);
+        let mut results_whole = Vec::new();
+        for &(i, j, d) in &ops {
+            results_whole.push(whole.insert(i, j, d));
+        }
+        let mut sharded = NeighborTable::new(n, k);
+        let ranges = [0..3usize, 3..7, 7..10];
+        {
+            let mut views = sharded.rows_mut(&ranges);
+            let mut results = Vec::new();
+            for &(i, j, d) in &ops {
+                let v = views
+                    .iter_mut()
+                    .find(|v| i >= v.start() && i < v.start() + v.rows())
+                    .unwrap();
+                results.push(v.insert(i, j, d));
+            }
+            assert_eq!(results, results_whole, "insert outcomes differ");
+        }
+        let state = |t: &NeighborTable| -> Vec<Vec<(u32, u32)>> {
+            (0..n).map(|i| t.entries(i).map(|(j, d)| (j, d.to_bits())).collect()).collect()
+        };
+        assert_eq!(state(&whole), state(&sharded), "slot state differs");
+        // Rescore through views == rescore through the table.
+        whole.rescore(5, |j| 20.0 - j as f32);
+        {
+            let mut views = sharded.rows_mut(&[3..7]);
+            views[0].rescore(5, |j| 20.0 - j as f32);
+        }
+        assert_eq!(state(&whole), state(&sharded), "rescore state differs");
+    }
+
+    #[test]
+    fn rows_mut_supports_gaps_and_partial_cover() {
+        let mut t = NeighborTable::new(6, 2);
+        let views = t.rows_mut(&[1..2, 4..6]);
+        assert_eq!(views.len(), 2);
+        assert_eq!((views[0].start(), views[0].rows()), (1, 1));
+        assert_eq!((views[1].start(), views[1].rows()), (4, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside view")]
+    fn rows_mut_view_rejects_foreign_row() {
+        let mut t = NeighborTable::new(6, 2);
+        let mut views = t.rows_mut(&[0..3, 3..6]);
+        views[0].insert(4, 1, 1.0); // row 4 belongs to the second view
+    }
+
+    #[test]
+    #[should_panic(expected = "bad range")]
+    fn rows_mut_rejects_overlapping_ranges() {
+        let mut t = NeighborTable::new(6, 2);
+        let _ = t.rows_mut(&[0..4, 2..6]);
     }
 }

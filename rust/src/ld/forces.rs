@@ -147,6 +147,50 @@ pub(crate) fn forces_range(
     (count, covered)
 }
 
+/// The gradient/momentum update for every point in `range`, with the
+/// implosion-RMS reduction fused in: for each coordinate
+/// `v = mom·v + lr·(a_mult·attr + r_mult·rep)`, then `y += v`. Row `i`
+/// of `y_out` / `vel_out` (and of the `attr` / `rep` inputs) lives at
+/// offset `(i - range.start) * d`; each point's post-update Σ y² f64
+/// subtotal is reported through `on_ss(i, subtotal)` in point order.
+///
+/// Like [`forces_range`], this is the single source of truth shared by
+/// the sequential default ([`ComputeBackend::update`]) and the sharded
+/// override ([`crate::ld::ParallelBackend`]), which is what makes the
+/// update — and the implosion decision derived from the fold — bitwise
+/// thread-count-invariant.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn update_range(
+    range: Range<usize>,
+    d: usize,
+    y_out: &mut [f32],
+    vel_out: &mut [f32],
+    attr: &[f32],
+    rep: &[f32],
+    a_mult: f32,
+    r_mult: f32,
+    lr: f32,
+    mom: f32,
+    mut on_ss: impl FnMut(usize, f64),
+) {
+    let start = range.start;
+    debug_assert!(y_out.len() >= range.len() * d);
+    debug_assert!(vel_out.len() >= range.len() * d);
+    debug_assert!(attr.len() >= range.len() * d);
+    debug_assert!(rep.len() >= range.len() * d);
+    for i in range {
+        let off = (i - start) * d;
+        let mut ss = 0.0f64;
+        for t in off..off + d {
+            let grad = a_mult * attr[t] + r_mult * rep[t];
+            vel_out[t] = mom * vel_out[t] + lr * grad;
+            y_out[t] += vel_out[t];
+            ss += (y_out[t] as f64) * (y_out[t] as f64);
+        }
+        on_ss(i, ss);
+    }
+}
+
 impl ComputeBackend for NativeBackend {
     fn sqdist_batch(
         &mut self,
@@ -392,6 +436,50 @@ mod tests {
         knn.ld.insert(1, 0, 1.0);
         let stats = b.forces(&y, &knn, &aff, &neg, 1.0, 1.0, &mut attr, &mut rep).unwrap();
         assert_eq!(stats.covered, 2, "HD slot of 0 plus non-overlapping LD slot of 1");
+    }
+
+    #[test]
+    fn update_range_matches_manual_loop_and_reports_subtotals() {
+        let n = 7usize;
+        let d = 3usize;
+        let mut rng = Rng::new(21);
+        let mk = |rng: &mut Rng| -> Vec<f32> {
+            (0..n * d).map(|_| rng.gauss_ms(0.0, 1.0) as f32).collect()
+        };
+        let y0 = mk(&mut rng);
+        let v0 = mk(&mut rng);
+        let attr = mk(&mut rng);
+        let rep = mk(&mut rng);
+        let (a_mult, r_mult, lr, mom) = (1.5f32, 0.25f32, 0.1f32, 0.8f32);
+        // Manual reference with the same per-point fold structure.
+        let mut ye = y0.clone();
+        let mut ve = v0.clone();
+        let mut expect_ss = vec![0.0f64; n];
+        for i in 0..n {
+            for k in 0..d {
+                let t = i * d + k;
+                let grad = a_mult * attr[t] + r_mult * rep[t];
+                ve[t] = mom * ve[t] + lr * grad;
+                ye[t] += ve[t];
+                expect_ss[i] += (ye[t] as f64) * (ye[t] as f64);
+            }
+        }
+        let mut y = y0;
+        let mut v = v0;
+        let mut got_ss = vec![0.0f64; n];
+        let mut order = Vec::new();
+        update_range(0..n, d, &mut y, &mut v, &attr, &rep, a_mult, r_mult, lr, mom, |i, ss| {
+            order.push(i);
+            got_ss[i] = ss;
+        });
+        assert_eq!(order, (0..n).collect::<Vec<_>>(), "subtotals must fold in point order");
+        for t in 0..n * d {
+            assert_eq!(y[t].to_bits(), ye[t].to_bits(), "y[{t}]");
+            assert_eq!(v[t].to_bits(), ve[t].to_bits(), "vel[{t}]");
+        }
+        for i in 0..n {
+            assert_eq!(got_ss[i].to_bits(), expect_ss[i].to_bits(), "ss[{i}]");
+        }
     }
 
     #[test]

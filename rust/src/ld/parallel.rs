@@ -12,6 +12,11 @@
 //! * `attr` / `rep` — each row is produced by the shared sequential
 //!   per-point accumulation;
 //! * `sqdist_batch` — each output element is one independent `sqdist`;
+//! * `update` — the gradient/momentum step writes disjoint `y` / `vel`
+//!   row chunks through the shared
+//!   [`crate::ld::forces::update_range`] kernel, and the implosion Σy²
+//!   folds one f64 subtotal per point in point order (same discipline
+//!   as `wsum`), so even the implosion decision is partition-free;
 //! * [`NegStats::wsum`] — both backends fold one f64 subtotal per point
 //!   in point order (shards write their subtotals into a disjoint slice
 //!   of a shared scratch vector; the fold happens after the join), so
@@ -32,8 +37,8 @@ use crate::data::matrix::{sqdist, Matrix};
 use crate::engine::backend::{ComputeBackend, NegSamples, NegStats};
 use crate::hd::Affinities;
 use crate::knn::iterative::IterativeKnn;
-use crate::ld::forces::{ensure_supported_dim, forces_range};
-use crate::runtime::pool::{shard_ranges, WorkerPool};
+use crate::ld::forces::{ensure_supported_dim, forces_range, update_range};
+use crate::runtime::pool::{self, shard_ranges, WorkerPool};
 use anyhow::Result;
 
 /// Default minimum points per shard in `forces` (a point costs roughly
@@ -52,6 +57,9 @@ pub struct ParallelBackend {
     /// after the join (reused across calls; no per-call allocation once
     /// warm).
     wsub: Vec<f64>,
+    /// Per-point Σ y² subtotals for the sharded `update` pass, reduced
+    /// in point order after the join (same discipline as `wsub`).
+    ssub: Vec<f64>,
 }
 
 impl ParallelBackend {
@@ -63,6 +71,7 @@ impl ParallelBackend {
             min_points_per_shard: MIN_POINTS_PER_SHARD,
             min_pairs_per_shard: MIN_PAIRS_PER_SHARD,
             wsub: Vec::new(),
+            ssub: Vec::new(),
         }
     }
 
@@ -81,9 +90,10 @@ impl ParallelBackend {
         self.pool.threads()
     }
 
-    /// Shards to actually use for `len` items under a per-shard floor.
+    /// Shards to actually use for `len` items under a per-shard floor
+    /// (delegates to the shared [`pool::effective_shards`] formula).
     fn effective_shards(&self, len: usize, min_per_shard: usize) -> usize {
-        self.pool.threads().min(len / min_per_shard).max(1)
+        pool::effective_shards(&self.pool, len, min_per_shard)
     }
 }
 
@@ -135,8 +145,13 @@ impl ComputeBackend for ParallelBackend {
         debug_assert_eq!(attr.d(), d);
         debug_assert_eq!(rep.d(), d);
         ensure_supported_dim(d)?;
-        self.wsub.clear();
-        self.wsub.resize(n, 0.0);
+        if self.wsub.len() != n {
+            // Every slot is written by forces_range below (the ranges
+            // cover [0, n)), so stale subtotals never leak; skipping
+            // the clear avoids a per-iteration memset.
+            self.wsub.clear();
+            self.wsub.resize(n, 0.0);
+        }
         let shards = self.effective_shards(n, self.min_points_per_shard);
         let mut tasks = Vec::new();
         let mut attr_rest: &mut [f32] = attr.data_mut();
@@ -178,6 +193,73 @@ impl ComputeBackend for ParallelBackend {
             stats.wsum += w;
         }
         Ok(stats)
+    }
+
+    fn update(
+        &mut self,
+        y: &mut Matrix,
+        vel: &mut Matrix,
+        attr: &Matrix,
+        rep: &Matrix,
+        a_mult: f32,
+        r_mult: f32,
+        lr: f32,
+        mom: f32,
+    ) -> Result<f64> {
+        let n = y.n();
+        let d = y.d();
+        debug_assert_eq!(vel.n(), n);
+        debug_assert_eq!(attr.n(), n);
+        debug_assert_eq!(rep.n(), n);
+        if self.ssub.len() != n {
+            // Same skip-clear discipline as `wsub`: update_range writes
+            // every slot, so only a size change needs a reset.
+            self.ssub.clear();
+            self.ssub.resize(n, 0.0);
+        }
+        let shards = self.effective_shards(n, self.min_points_per_shard);
+        let mut tasks = Vec::new();
+        let mut y_rest: &mut [f32] = y.data_mut();
+        let mut v_rest: &mut [f32] = vel.data_mut();
+        let mut s_rest: &mut [f64] = self.ssub.as_mut_slice();
+        let attr_all = attr.data();
+        let rep_all = rep.data();
+        for range in shard_ranges(n, shards) {
+            let rows = range.len();
+            let (y_chunk, tail) = y_rest.split_at_mut(rows * d);
+            y_rest = tail;
+            let (v_chunk, tail) = v_rest.split_at_mut(rows * d);
+            v_rest = tail;
+            let (s_chunk, tail) = s_rest.split_at_mut(rows);
+            s_rest = tail;
+            let a_chunk = &attr_all[range.start * d..range.end * d];
+            let r_chunk = &rep_all[range.start * d..range.end * d];
+            let start = range.start;
+            tasks.push(move || {
+                update_range(
+                    range,
+                    d,
+                    y_chunk,
+                    v_chunk,
+                    a_chunk,
+                    r_chunk,
+                    a_mult,
+                    r_mult,
+                    lr,
+                    mom,
+                    |i, ss| s_chunk[i - start] = ss,
+                )
+            });
+        }
+        self.pool.run_tasks(tasks);
+        // Point-order fold: the same f64 summation structure as the
+        // sequential default, so the implosion decision is independent
+        // of the shard partition.
+        let mut total = 0.0f64;
+        for &s in &self.ssub {
+            total += s;
+        }
+        Ok(total)
     }
 
     fn name(&self) -> &'static str {
@@ -267,6 +349,43 @@ mod tests {
         assert_eq!(a0.data(), a1.data());
         assert_eq!(r0.data(), r1.data());
         assert_eq!(s0.wsum.to_bits(), s1.wsum.to_bits());
+    }
+
+    #[test]
+    fn update_bitwise_matches_native_across_thread_counts() {
+        // The default (sequential) trait implementation vs the sharded
+        // override: y, vel and the Σy² fold must agree bit-for-bit, so
+        // the implosion decision can never depend on --threads.
+        for &n in &[97usize, 513] {
+            let d = 3usize;
+            let mut rng = Rng::new(19);
+            let mk = |rng: &mut Rng| -> Matrix {
+                let v: Vec<f32> = (0..n * d).map(|_| rng.gauss_ms(0.0, 1.0) as f32).collect();
+                Matrix::from_vec(v, n, d).unwrap()
+            };
+            let y0 = mk(&mut rng);
+            let v0 = mk(&mut rng);
+            let attr = mk(&mut rng);
+            let rep = mk(&mut rng);
+            let (a_mult, r_mult, lr, mom) = (2.0f32, 0.03f32, 0.1f32, 0.8f32);
+            let mut native = NativeBackend::new();
+            let (mut y1, mut v1) = (y0.clone(), v0.clone());
+            let ss1 =
+                native.update(&mut y1, &mut v1, &attr, &rep, a_mult, r_mult, lr, mom).unwrap();
+            for threads in [1usize, 2, 4, 9] {
+                let mut par = ParallelBackend::new(threads).with_shard_floors(1, 1);
+                let (mut y2, mut v2) = (y0.clone(), v0.clone());
+                let ss2 =
+                    par.update(&mut y2, &mut v2, &attr, &rep, a_mult, r_mult, lr, mom).unwrap();
+                assert_eq!(ss1.to_bits(), ss2.to_bits(), "Σy² differs at {threads} threads");
+                for (a, b) in y1.data().iter().zip(y2.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "y differs at {threads} threads");
+                }
+                for (a, b) in v1.data().iter().zip(v2.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "vel differs at {threads} threads");
+                }
+            }
+        }
     }
 
     #[test]

@@ -63,20 +63,26 @@
 //!   to a thread). A server scales out by owning one
 //!   [`session::SessionManager`] per worker thread and sharding
 //!   sessions across them; sessions never migrate between threads.
-//! * **Within a session** — parallelism lives entirely *inside* the
-//!   [`engine::ComputeBackend`] boundary. The `threads` knob
+//! * **Within a session** — the *entire* iteration is parallel, not
+//!   just the force pass. The `threads` knob
 //!   ([`config::EmbedConfig::threads`], [`session::SessionBuilder::threads`],
 //!   CLI `--threads`; `0` = auto-detect, default honours the
-//!   `FUNCSNE_THREADS` env var) selects [`ld::ParallelBackend`], which
-//!   shards the force pass by point ranges and candidate scoring by
-//!   pair ranges over scoped worker threads
-//!   ([`runtime::WorkerPool`]), forking and joining inside each call.
-//!   Because each point's output rows are written by exactly one shard
-//!   and the f64 normaliser statistics are reduced in a
-//!   partition-independent order, results are **bitwise-identical** to
-//!   the sequential [`ld::NativeBackend`] at any thread count — an
-//!   embedding is reproducible from its seed regardless of `--threads`
-//!   (enforced by `rust/tests/parity.rs`).
+//!   `FUNCSNE_THREADS` env var) widens two cooperating pools of scoped
+//!   worker threads ([`runtime::WorkerPool`]): [`ld::ParallelBackend`]
+//!   shards the force pass, candidate scoring and the gradient/
+//!   momentum update behind the [`engine::ComputeBackend`] boundary,
+//!   and the engine's own pool shards the per-iteration LD/HD
+//!   neighbour refinement and negative sampling. Three disciplines
+//!   keep every bit identical at any thread count: (1) all per-point
+//!   randomness comes from counter-based [`util::StreamRng`] streams
+//!   (`at(seed, iter, point, lane)`) instead of one sequential cursor,
+//!   so candidates and samples are pure functions of their
+//!   coordinates; (2) each output row is written by exactly one shard
+//!   (disjoint row views), with symmetric neighbour inserts applied in
+//!   fixed shard-then-point order; (3) f64 reductions (kernel
+//!   normaliser, implosion Σy²) fold one per-point subtotal in point
+//!   order. An embedding is reproducible from its seed regardless of
+//!   `--threads` (enforced by `rust/tests/parity.rs`).
 //!
 //! ## Architecture
 //!

@@ -1,19 +1,68 @@
 //! A zero-dependency worker pool built on `std::thread::scope`.
 //!
-//! The force decomposition isolates per-point accumulation (backends are
-//! deterministic given their arguments), so the hot passes shard cleanly
-//! by contiguous index ranges: each shard owns a disjoint slice of the
-//! output and no synchronisation is needed beyond the fork/join itself.
-//! Scoped threads let shards borrow the engine's matrices and tables
-//! directly — no `Arc`, no channels, no `'static` bounds.
+//! Every hot pass of an iteration shards cleanly by contiguous index
+//! ranges: the force, update and scoring passes because per-point
+//! accumulation is isolated (backends are deterministic given their
+//! arguments), and the KNN-refinement and negative-sampling passes
+//! because their randomness comes from counter-based
+//! [`crate::util::StreamRng`] streams — a per-point pure function, so
+//! no shard ever waits on another's RNG cursor. Each shard owns a
+//! disjoint slice of the output (or a disjoint row view of a
+//! neighbour table) and no synchronisation is needed beyond the
+//! fork/join itself. Cross-row writes that cannot be made disjoint
+//! (symmetric neighbour inserts) are buffered per shard and applied on
+//! the calling thread in fixed shard-then-point order — so the result
+//! is bitwise thread-count-invariant by construction. Scoped threads
+//! let shards borrow the engine's matrices and tables directly — no
+//! `Arc`, no channels, no `'static` bounds.
 //!
 //! Spawning is per call (a scoped thread costs tens of microseconds),
-//! which is negligible against a multi-millisecond force pass over tens
-//! of thousands of points; a persistent pool would save nothing
-//! measurable and would force `Send` bounds through the backend
-//! boundary.
+//! which is negligible against a multi-millisecond pass over tens of
+//! thousands of points and is gated by per-shard work floors on every
+//! call site (small inputs run inline); a persistent pool would save
+//! nothing measurable and would force `Send` bounds through the
+//! backend boundary.
 
 use std::ops::Range;
+
+/// Shards to actually use for `len` items under a per-shard work
+/// floor: below `min_per_shard` items per extra shard the scoped-thread
+/// fork/join costs more than the compute it buys, so the call falls
+/// back to fewer shards — possibly one (inline on the caller's
+/// thread). Purely a wall-clock knob: every sharded pass in this repo
+/// is bitwise partition-invariant by construction, so the floor never
+/// changes an output bit. This is THE floor formula — call sites must
+/// not reimplement it, or their fallback policies silently diverge.
+pub fn effective_shards(pool: &WorkerPool, len: usize, min_per_shard: usize) -> usize {
+    pool.threads().min(len / min_per_shard.max(1)).max(1)
+}
+
+/// Split `slice` into disjoint mutable chunks matching `ranges`
+/// (ascending, non-overlapping index ranges; gaps are skipped), each
+/// index spanning `width` elements. The sharded passes use this to
+/// hand each worker the sub-slice matching its point range — the
+/// borrow checker proves disjointness, so no synchronisation is needed.
+pub fn split_by_ranges<'a, T>(
+    slice: &'a mut [T],
+    ranges: &[Range<usize>],
+    width: usize,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest = slice;
+    let mut consumed = 0usize;
+    for r in ranges {
+        assert!(
+            r.start >= consumed && r.start <= r.end,
+            "split_by_ranges: bad range {r:?} (consumed {consumed})"
+        );
+        let (_, tail) = rest.split_at_mut((r.start - consumed) * width);
+        let (head, tail) = tail.split_at_mut((r.end - r.start) * width);
+        out.push(head);
+        rest = tail;
+        consumed = r.end;
+    }
+    out
+}
 
 /// Split `[0, len)` into at most `shards` contiguous ranges whose sizes
 /// differ by at most one. Returns fewer ranges when `len < shards`;
@@ -178,5 +227,34 @@ mod tests {
     fn pool_width_clamps_to_one() {
         assert_eq!(WorkerPool::new(0).threads(), 1);
         assert!(WorkerPool::with_auto(0).threads() >= 1);
+    }
+
+    #[test]
+    fn effective_shards_honours_floor_and_width() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(effective_shards(&pool, 1000, 256), 3); // floor-bound
+        assert_eq!(effective_shards(&pool, 100_000, 256), 4); // width-bound
+        assert_eq!(effective_shards(&pool, 10, 256), 1); // tiny input inline
+        assert_eq!(effective_shards(&pool, 0, 256), 1);
+        assert_eq!(effective_shards(&pool, 10, 0), 4, "zero floor must not divide by zero");
+    }
+
+    #[test]
+    fn split_by_ranges_matches_ranges_with_width_and_gaps() {
+        let mut data: Vec<u32> = (0..20).collect();
+        let chunks = split_by_ranges(&mut data, &[0..2, 3..5], 2);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].to_vec(), vec![0, 1, 2, 3]); // indices 0..2 at width 2
+        assert_eq!(chunks[1].to_vec(), vec![6, 7, 8, 9]); // gap (index 2) skipped
+        chunks.into_iter().flatten().for_each(|v| *v = 99);
+        assert_eq!(data[4], 4, "gap untouched");
+        assert_eq!(data[0], 99);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad range")]
+    fn split_by_ranges_rejects_overlap() {
+        let mut data = vec![0u8; 10];
+        let _ = split_by_ranges(&mut data, &[0..4, 2..6], 1);
     }
 }

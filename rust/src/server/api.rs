@@ -25,6 +25,7 @@ use super::stepper::{
     StepperRequest,
 };
 use crate::data::Matrix;
+use crate::engine::PhaseMicros;
 use crate::knn::iterative::CandidateRoutes;
 use crate::metrics::probe::QualityReport;
 use crate::session::{Command, Session};
@@ -454,6 +455,7 @@ fn view_json(v: &SessionView) -> Json {
             v.last_error.as_ref().map_or(Json::Null, |e| e.as_str().into()),
         ),
         ("quality", v.quality.as_ref().map_or(Json::Null, quality_json)),
+        ("phase_micros", phase_json(&v.phase_micros)),
     ])
 }
 
@@ -467,6 +469,10 @@ fn quality_json(q: &QualityReport) -> Json {
         ("continuity", q.continuity.into()),
         ("knn_recall_hd", q.knn_recall_hd.into()),
     ])
+}
+
+fn phase_json(p: &PhaseMicros) -> Json {
+    Json::obj(p.named().into_iter().map(|(name, us)| (name, us.into())).collect())
 }
 
 fn frame_json(id: u64, frame: &EmbeddingFrame) -> Json {
@@ -594,6 +600,26 @@ fn render_prometheus(
             metric(name, "gauge", help, lines.join("\n"));
         }
     }
+    if !m.session_phase.is_empty() {
+        let lines: Vec<String> = m
+            .session_phase
+            .iter()
+            .flat_map(|(id, p)| {
+                p.named()
+                    .into_iter()
+                    .map(move |(phase, us)| {
+                        format!("funcsne_phase_micros{{id=\"{id}\",phase=\"{phase}\"}} {us}")
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        metric(
+            "funcsne_phase_micros",
+            "gauge",
+            "Cumulative engine wall-clock per step phase (microseconds).",
+            lines.join("\n"),
+        );
+    }
     out
 }
 
@@ -701,6 +727,16 @@ mod tests {
                     knn_recall_hd: 0.5,
                 },
             )],
+            session_phase: vec![(
+                1,
+                PhaseMicros {
+                    refine_ld: 100,
+                    refine_hd: 200,
+                    recalibrate: 30,
+                    forces: 400,
+                    update: 50,
+                },
+            )],
         };
         let reqs = AtomicU64::new(5);
         let text = render_prometheus(&m, &reqs, Instant::now());
@@ -715,6 +751,19 @@ mod tests {
         assert!(text.contains("funcsne_quality_trustworthiness{id=\"1\"} 0.875"), "{text}");
         assert!(text.contains("funcsne_quality_continuity{id=\"1\"} 0.9375"), "{text}");
         assert!(text.contains("funcsne_knn_recall{id=\"1\"} 0.5"), "{text}");
+        assert!(text.contains("# TYPE funcsne_phase_micros gauge"), "{text}");
+        assert!(
+            text.contains("funcsne_phase_micros{id=\"1\",phase=\"refine_ld\"} 100"),
+            "{text}"
+        );
+        assert!(
+            text.contains("funcsne_phase_micros{id=\"1\",phase=\"forces\"} 400"),
+            "{text}"
+        );
+        assert!(
+            text.contains("funcsne_phase_micros{id=\"1\",phase=\"update\"} 50"),
+            "{text}"
+        );
     }
 
     #[test]
@@ -755,12 +804,25 @@ mod tests {
                 continuity: 1.0,
                 knn_recall_hd: 0.25,
             }),
+            phase_micros: PhaseMicros {
+                refine_ld: 11,
+                refine_hd: 22,
+                recalibrate: 3,
+                forces: 44,
+                update: 5,
+            },
         };
         let j = view_json(&view);
         let q = j.get("quality").expect("quality present");
         assert_eq!(q.get("iter").and_then(Json::as_usize), Some(40));
         assert_eq!(q.get("knn_recall").and_then(Json::as_f64), Some(0.625));
         assert_eq!(q.get("knn_recall_hd").and_then(Json::as_f64), Some(0.25));
+        let p = j.get("phase_micros").expect("phase split present");
+        assert_eq!(p.get("refine_ld").and_then(Json::as_usize), Some(11));
+        assert_eq!(p.get("refine_hd").and_then(Json::as_usize), Some(22));
+        assert_eq!(p.get("recalibrate").and_then(Json::as_usize), Some(3));
+        assert_eq!(p.get("forces").and_then(Json::as_usize), Some(44));
+        assert_eq!(p.get("update").and_then(Json::as_usize), Some(5));
         let view = SessionView { quality: None, ..view };
         assert_eq!(view_json(&view).get("quality"), Some(&Json::Null));
     }

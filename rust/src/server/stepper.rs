@@ -19,6 +19,7 @@
 //! attachment is not) — worth doing if create latency ever matters
 //! more than implementation weight.
 
+use crate::engine::PhaseMicros;
 use crate::metrics::probe::QualityReport;
 use crate::session::{Command, Session, SessionBuilder, SessionId, SessionManager};
 use std::collections::BTreeMap;
@@ -108,6 +109,9 @@ pub struct SessionView {
     /// Latest online quality-probe report (`None` while probing is off
     /// or before the first probe iteration).
     pub quality: Option<QualityReport>,
+    /// Cumulative per-phase wall-clock split of the engine's `step`
+    /// (refine_ld / refine_hd / recalibrate / forces / update), µs.
+    pub phase_micros: PhaseMicros,
 }
 
 /// Service-wide counters surfaced by `GET /metrics`.
@@ -124,6 +128,8 @@ pub struct ServiceMetrics {
     pub session_iters: Vec<(u64, usize)>,
     /// `(id, latest probe report)` per live session that has one.
     pub session_quality: Vec<(u64, QualityReport)>,
+    /// `(id, cumulative phase split)` per live session.
+    pub session_phase: Vec<(u64, PhaseMicros)>,
 }
 
 /// Everything needed to create a session on the stepper thread.
@@ -404,6 +410,7 @@ impl Service {
             max_iters: meta.map_or(0, |m| m.max_iters),
             last_error: meta.and_then(|m| m.last_error.clone()),
             quality: session.quality().copied(),
+            phase_micros: session.stats().phase_micros,
         }
     }
 
@@ -428,6 +435,14 @@ impl Service {
                 .into_iter()
                 .filter_map(|sid| {
                     self.mgr.get(sid).and_then(|s| s.quality().copied().map(|q| (sid.0, q)))
+                })
+                .collect(),
+            session_phase: self
+                .mgr
+                .ids()
+                .into_iter()
+                .filter_map(|sid| {
+                    self.mgr.get(sid).map(|s| (sid.0, s.stats().phase_micros))
                 })
                 .collect(),
         }

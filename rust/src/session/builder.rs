@@ -168,8 +168,10 @@ impl SessionBuilder {
         self
     }
 
-    /// Worker threads for the native compute path (`> 1` selects the
-    /// sharded backend — bitwise-identical results; `0` = auto-detect).
+    /// Worker threads for the native compute path (`> 1` shards the
+    /// backend passes *and* the engine's refinement / negative-sampling
+    /// passes — bitwise-identical results at any width; `0` =
+    /// auto-detect).
     pub fn threads(mut self, threads: usize) -> Self {
         self.cfg.threads = threads;
         self

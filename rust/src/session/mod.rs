@@ -26,12 +26,13 @@
 //! across one [`SessionManager`] per worker thread rather than
 //! migrating sessions between threads; cross-thread command routing
 //! belongs in a layer above this module. *Within* a session,
-//! parallelism lives entirely inside the compute-backend boundary:
-//! [`SessionBuilder::threads`] selects the sharded
-//! [`crate::ld::ParallelBackend`], whose scoped worker threads fork and
-//! join inside each `forces` / `sqdist_batch` call and produce
-//! bitwise-identical results to the sequential backend — the session
-//! itself never observes the concurrency.
+//! [`SessionBuilder::threads`] widens both the sharded
+//! [`crate::ld::ParallelBackend`] (forces / candidate scoring / the
+//! gradient update) and the engine's own pool (KNN refinement and
+//! negative sampling, randomised by counter-based
+//! [`crate::util::StreamRng`] streams). All of it forks and joins
+//! inside one `step` and produces bitwise-identical results at any
+//! thread count — the session itself never observes the concurrency.
 
 pub mod builder;
 pub mod command;

@@ -14,5 +14,5 @@ pub mod io;
 pub mod proptest;
 pub mod stats;
 
-pub use rng::Rng;
+pub use rng::{lane, RandomSource, Rng, StreamRng};
 pub use timer::Stopwatch;

@@ -1,12 +1,30 @@
 //! Deterministic pseudo-random number generation.
 //!
-//! A small, fast, reproducible generator (SplitMix64 seeding into
-//! xoshiro256**), plus the distribution helpers the embedding engine and
-//! the synthetic dataset generators need: uniforms, bounded integers,
+//! Two generators with different contracts:
+//!
+//! * [`Rng`] — a *sequential* generator (SplitMix64 seeding into
+//!   xoshiro256**) for setup-time work (dataset synthesis, embedding
+//!   init, table seeding) and single-threaded mutators. Its stream is
+//!   consumed in call order, so it can never be shared across shards
+//!   without serialising them.
+//! * [`StreamRng`] — a *counter-based* generator:
+//!   [`StreamRng::at`]`(seed, iter, point, lane)` derives an independent
+//!   stream from its coordinates alone, statelessly. Draw `t` of stream
+//!   `(seed, iter, point, lane)` is one pure function of those five
+//!   numbers — no shared cursor, no consumption order. This is what
+//!   lets the per-iteration hot passes (LD/HD candidate generation,
+//!   negative sampling) shard across worker threads while staying
+//!   **bitwise thread-count-invariant**: every shard partition computes
+//!   the identical stream for every point.
+//!
+//! Both also back the distribution helpers the embedding engine and the
+//! synthetic dataset generators need: uniforms, bounded integers,
 //! Gaussians (Box–Muller with caching), shuffles and subset sampling.
 //!
 //! Determinism matters here: every experiment driver takes an explicit
-//! seed so that paper figures regenerate bit-identically.
+//! seed so that paper figures regenerate bit-identically, and the
+//! `StreamRng` constants below are pinned by unit tests — changing them
+//! re-pins every golden trajectory in the repo.
 
 /// xoshiro256** pseudo-random generator.
 ///
@@ -27,6 +45,125 @@ fn splitmix64(state: &mut u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)
+}
+
+/// SplitMix64's finalizer: a bijective 64-bit mixer.
+#[inline(always)]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stream-lane identifiers: each per-point random consumer in one
+/// engine iteration draws from its own lane so the streams never
+/// overlap (LD candidate generation, HD candidate generation, negative
+/// sampling, and iteration-level decisions).
+pub mod lane {
+    /// LD-table candidate generation.
+    pub const LD: u64 = 0;
+    /// HD-table candidate generation.
+    pub const HD: u64 = 1;
+    /// Negative-sample drawing.
+    pub const NEG: u64 = 2;
+    /// Per-iteration engine decisions (e.g. the HD-refinement skip).
+    pub const STEP: u64 = 3;
+}
+
+/// The minimal uniform-draw surface shared by [`Rng`] and [`StreamRng`]
+/// so the candidate-generation code is generic over its random source.
+///
+/// `below` is the same Lemire multiply-shift rejection as
+/// [`Rng::below`]; both implementations consume identical raw draws for
+/// identical bounds, so swapping sources never changes *how much* of a
+/// stream a call consumes for a given outcome sequence.
+pub trait RandomSource {
+    /// Next raw 64 bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in [0, 1).
+    #[inline(always)]
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias; `n` must be > 0.
+    #[inline(always)]
+    fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline(always)]
+    fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// Counter-based stream generator (the CBRNG of Salmon et al.'s
+/// "Parallel random numbers: as easy as 1, 2, 3", in splitmix64
+/// clothing): the state is a pure hash of `(seed, iter, point, lane)`
+/// and successive draws walk a splitmix64 sequence from it.
+///
+/// Properties the sharded hot passes rely on:
+///
+/// * **Stateless derivation** — `at` is a pure function; no generator
+///   object is threaded through the iteration, so there is no serial
+///   cursor forcing an execution order.
+/// * **Order independence** — stream `(s, i, p, l)` is identical no
+///   matter which thread materialises it, when, or how many siblings
+///   exist: shard partitions cannot change a single draw.
+/// * **Per-coordinate distinctness** — each coordinate is folded in by
+///   XOR with a distinct odd-constant multiple followed by a bijective
+///   mix, so two calls differing in any one coordinate start from
+///   different states (multiplication by an odd constant and `mix64`
+///   are both bijections on u64).
+///
+/// The constants are pinned by `stream_rng_pinned_constants`; changing
+/// any of them re-pins every golden trajectory in the repo.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamRng {
+    state: u64,
+}
+
+impl StreamRng {
+    /// The stream for `point` in `lane` at iteration `iter` under
+    /// `seed`. Cheap enough to call once per point per pass (4 mixes).
+    #[inline(always)]
+    pub fn at(seed: u64, iter: u64, point: u64, lane: u64) -> StreamRng {
+        let mut h = seed ^ 0x5851_F42D_4C95_7F2D;
+        h = mix64(h ^ iter.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        h = mix64(h ^ point.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        h = mix64(h ^ lane.wrapping_mul(0x1656_67B1_9E37_79F9));
+        StreamRng { state: h }
+    }
+}
+
+impl RandomSource for StreamRng {
+    #[inline(always)]
+    fn next_u64(&mut self) -> u64 {
+        splitmix64(&mut self.state)
+    }
+}
+
+impl RandomSource for Rng {
+    #[inline(always)]
+    fn next_u64(&mut self) -> u64 {
+        self.step()
+    }
 }
 
 impl Rng {
@@ -51,6 +188,13 @@ impl Rng {
     /// Next raw 64 bits.
     #[inline(always)]
     pub fn next_u64(&mut self) -> u64 {
+        self.step()
+    }
+
+    /// The xoshiro256** state transition (shared by the inherent
+    /// methods and the [`RandomSource`] impl).
+    #[inline(always)]
+    fn step(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = s[1] << 17;
@@ -63,11 +207,11 @@ impl Rng {
         result
     }
 
-    /// Uniform in [0, 1).
+    /// Uniform in [0, 1). (Delegates to the [`RandomSource`] default so
+    /// the draw logic exists exactly once.)
     #[inline(always)]
     pub fn f64(&mut self) -> f64 {
-        // 53 high bits -> [0,1)
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+        RandomSource::f64(self)
     }
 
     /// Uniform in [0, 1) as f32.
@@ -83,24 +227,12 @@ impl Rng {
     }
 
     /// Uniform integer in [0, n). Uses Lemire's multiply-shift rejection
-    /// to avoid modulo bias; `n` must be > 0.
+    /// to avoid modulo bias; `n` must be > 0. (Delegates to the
+    /// [`RandomSource`] default — one implementation, so inherent and
+    /// generic call sites can never fork their draw streams.)
     #[inline(always)]
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
-        let n = n as u64;
-        // Fast path: 64x64->128 multiply.
-        let mut x = self.next_u64();
-        let mut m = (x as u128) * (n as u128);
-        let mut l = m as u64;
-        if l < n {
-            let t = n.wrapping_neg() % n;
-            while l < t {
-                x = self.next_u64();
-                m = (x as u128) * (n as u128);
-                l = m as u64;
-            }
-        }
-        (m >> 64) as usize
+        RandomSource::below(self, n)
     }
 
     /// Uniform integer in [lo, hi).
@@ -172,7 +304,7 @@ impl Rng {
     /// Bernoulli trial with probability `p`.
     #[inline]
     pub fn chance(&mut self, p: f64) -> bool {
-        self.f64() < p
+        RandomSource::chance(self, p)
     }
 }
 
@@ -258,5 +390,115 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+
+    // --- StreamRng: the determinism contract of the sharded passes ----
+
+    /// The counter-based streams are part of the repo's reproducibility
+    /// surface: these constants pin the exact mixing. Changing them is
+    /// allowed but re-pins every golden trajectory.
+    #[test]
+    fn stream_rng_pinned_constants() {
+        let draws = |seed, iter, point, lane| {
+            let mut r = StreamRng::at(seed, iter, point, lane);
+            [r.next_u64(), r.next_u64(), r.next_u64()]
+        };
+        assert_eq!(
+            draws(42, 1, 2, 3),
+            [0x212AF89AA521A4CA, 0x965BAD16122526B0, 0xF8DDD5DC8D7CE43E]
+        );
+        assert_eq!(
+            draws(0, 0, 0, 0),
+            [0x758E01BF3E076C76, 0x334CFD5650EB918E, 0x450D30C53DB3FA41]
+        );
+        assert_eq!(
+            draws(0xDEADBEEF, 7, 123456, 1),
+            [0x4F263EBF5A5D3DD2, 0x1AA182C741B20642, 0x733FC1284838DA09]
+        );
+    }
+
+    /// Streams are pure functions of their coordinates: materialising
+    /// them in any order — or interleaved, as concurrent shards would —
+    /// yields identical draws (the property the sharded refinement and
+    /// negative sampling lean on).
+    #[test]
+    fn stream_rng_order_and_interleave_invariant() {
+        let points = [0u64, 1, 7, 500, 8191];
+        let forward: Vec<Vec<u64>> = points
+            .iter()
+            .map(|&p| {
+                let mut r = StreamRng::at(9, 3, p, lane::NEG);
+                (0..8).map(|_| r.next_u64()).collect()
+            })
+            .collect();
+        // Reverse order.
+        for (pi, &p) in points.iter().enumerate().rev() {
+            let mut r = StreamRng::at(9, 3, p, lane::NEG);
+            let draws: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+            assert_eq!(draws, forward[pi], "stream for point {p} depends on order");
+        }
+        // Interleaved one-draw-at-a-time (simulating shard scheduling).
+        let mut cursors: Vec<StreamRng> =
+            points.iter().map(|&p| StreamRng::at(9, 3, p, lane::NEG)).collect();
+        for t in 0..8 {
+            for (pi, c) in cursors.iter_mut().enumerate() {
+                assert_eq!(c.next_u64(), forward[pi][t]);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_rng_coordinates_give_distinct_streams() {
+        let base = {
+            let mut r = StreamRng::at(5, 10, 20, lane::LD);
+            r.next_u64()
+        };
+        for (s, i, p, l) in [
+            (6u64, 10u64, 20u64, lane::LD),
+            (5, 11, 20, lane::LD),
+            (5, 10, 21, lane::LD),
+            (5, 10, 20, lane::HD),
+            (5, 10, 20, lane::NEG),
+            (5, 10, 20, lane::STEP),
+        ] {
+            let mut r = StreamRng::at(s, i, p, l);
+            assert_ne!(r.next_u64(), base, "stream ({s},{i},{p},{l}) collides with base");
+        }
+    }
+
+    #[test]
+    fn stream_rng_below_in_range_and_roughly_uniform() {
+        let mut counts = [0usize; 10];
+        for point in 0..2000u64 {
+            let mut r = StreamRng::at(1, 1, point, lane::NEG);
+            for _ in 0..5 {
+                let v = r.below(10);
+                assert!(v < 10);
+                counts[v] += 1;
+            }
+        }
+        let expect = 10_000.0 / 10.0;
+        for (v, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > expect * 0.85 && (c as f64) < expect * 1.15,
+                "below(10) count[{v}] = {c}, expect ~{expect}"
+            );
+        }
+    }
+
+    /// `Rng` and `StreamRng` share the Lemire `below` via
+    /// [`RandomSource`]; the trait path must agree with the inherent
+    /// `Rng::below` draw-for-draw.
+    #[test]
+    fn trait_below_matches_inherent_below() {
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        for n in [1usize, 2, 3, 10, 1000, 12345] {
+            for _ in 0..50 {
+                let inherent = a.below(n);
+                let through_trait = RandomSource::below(&mut b, n);
+                assert_eq!(inherent, through_trait, "below({n}) diverged");
+            }
+        }
     }
 }

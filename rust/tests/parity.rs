@@ -226,6 +226,63 @@ fn golden_trajectory_and_probe_bitwise_identical_across_threads() {
     }
 }
 
+/// The stream-RNG determinism model end to end: a refinement-heavy run
+/// must leave the embedding, the velocity-driven trajectory, BOTH
+/// estimated neighbour tables (ids and stored distances), the dirty
+/// flags and the engine counters bitwise-identical across threads
+/// 1/2/4. n = 701 clears the 256-point refinement and force/update
+/// floors, so those passes genuinely fork (with uneven partitions) at
+/// every multi-thread width; negative sampling (floor 2048) and HD
+/// pair scoring (floor 8192 pairs) stay single-shard here — their
+/// sharded paths are pinned by the floor-1 unit tests in
+/// `engine::backend` and `knn::iterative`.
+#[test]
+fn refinement_and_full_step_trajectories_bitwise_across_threads() {
+    fn table_state(t: &funcsne::knn::NeighborTable) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for i in 0..t.n() {
+            for (j, d) in t.entries(i) {
+                out.push((j, d.to_bits()));
+            }
+            out.push((u32::MAX, 0)); // row separator
+        }
+        out
+    }
+    let run = |threads: usize| {
+        let ds = datasets::blobs(701, 10, 4, 0.6, 10.0, 33);
+        let mut s = Session::builder()
+            .dataset(ds.x)
+            .k_hd(16)
+            .k_ld(8)
+            .perplexity(10.0)
+            .n_neg(8)
+            .jumpstart_iters(4)
+            .early_exag_iters(10)
+            .seed(29)
+            .threads(threads)
+            .build()
+            .unwrap();
+        s.run(40).unwrap();
+        let eng = s.engine();
+        (
+            s.embedding().data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            table_state(&eng.knn.hd),
+            table_state(&eng.knn.ld),
+            eng.knn.hd_dirty.clone(),
+            (eng.stats.hd_refines, eng.stats.hd_new_last, eng.stats.implosions),
+        )
+    };
+    let (y1, hd1, ld1, dirty1, counters1) = run(1);
+    for threads in [2usize, 4] {
+        let (y, hd, ld, dirty, counters) = run(threads);
+        assert_eq!(y1, y, "embedding diverged at {threads} threads");
+        assert_eq!(hd1, hd, "HD table diverged at {threads} threads");
+        assert_eq!(ld1, ld, "LD table diverged at {threads} threads");
+        assert_eq!(dirty1, dirty, "dirty flags diverged at {threads} threads");
+        assert_eq!(counters1, counters, "engine counters diverged at {threads} threads");
+    }
+}
+
 #[test]
 fn forces_parity_native_vs_pjrt() {
     if !have_artifacts() {

@@ -146,6 +146,21 @@ fn http_round_trip_create_steer_fetch_delete() {
     assert!(metrics.contains("funcsne_sessions 1"), "{metrics}");
     assert!(metrics.contains("# TYPE funcsne_steps_total counter"), "{metrics}");
     assert!(metrics.contains(&format!("funcsne_session_iterations{{id=\"{id}\"}}")));
+    assert!(
+        metrics.contains(&format!("funcsne_phase_micros{{id=\"{id}\",phase=\"refine_ld\"}}")),
+        "{metrics}"
+    );
+
+    // --- per-phase timing telemetry in the stats view ------------------
+    let v = get_stats(addr, id);
+    let phases = v.get("phase_micros").expect("stats must carry phase_micros");
+    for key in ["refine_ld", "refine_hd", "recalibrate", "forces", "update"] {
+        assert!(phases.get(key).is_some(), "phase_micros missing {key}: {phases}");
+    }
+    assert!(
+        phases.get("refine_ld").and_then(Json::as_usize).unwrap() > 0,
+        "refine_ld ran ≥5 iterations but reports zero µs: {phases}"
+    );
 
     // --- mid-run hyperparameter change over the wire -------------------
     let (status, queued) = http_json(
