@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         addr: "127.0.0.1:0".to_string(),
         threads: 2,
         max_sessions: 8,
-        snapshot_every: 25,
+        ..ServerConfig::default()
     })?;
     let addr = server.local_addr();
     let handle = server.handle();

@@ -1,0 +1,164 @@
+//! Minimal streaming client for `GET /sessions/:id/stream`.
+//!
+//! Boots a server in-process on an ephemeral port (so the example is
+//! self-contained), creates a session, then consumes the chunked
+//! binary frame stream exactly as an external visualiser would: plain
+//! `TcpStream`, hand-rolled chunked-transfer parsing, and the
+//! [`FrameDecoder`] from `funcsne::server::frames` folding keyframes
+//! and deltas back into f32 coordinates. See docs/wire-format.md for
+//! the byte-level frame layout.
+//!
+//! ```sh
+//! cargo run --release --example stream_client
+//! ```
+//!
+//! Point `open_stream` at any running `funcsne serve` address to watch
+//! a real deployment instead.
+
+use funcsne::server::frames::{decode, FrameDecoder};
+use funcsne::server::json::{self, Json};
+use funcsne::server::{Server, ServerConfig};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // --- boot the service and a session to watch --------------------------
+    let server = Server::bind(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 3, // a streaming client pins one worker slot
+        max_sessions: 4,
+        ..ServerConfig::default()
+    })?;
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run());
+    println!("» service listening on http://{addr}");
+
+    let ds = funcsne::data::datasets::blobs(500, 8, 4, 0.6, 10.0, 21);
+    let rows: Vec<String> = (0..ds.x.n())
+        .map(|i| {
+            let cells: Vec<String> = ds.x.row(i).iter().map(|v| format!("{v:.4}")).collect();
+            format!("[{}]", cells.join(","))
+        })
+        .collect();
+    let spec = format!(
+        "{{\"rows\": [{}], \"perplexity\": 12, \"k_hd\": 16, \"k_ld\": 8, \
+          \"jumpstart_iters\": 10, \"seed\": 21}}",
+        rows.join(",")
+    );
+    let (status, body) = request(addr, "POST", "/sessions", Some(&spec))?;
+    anyhow::ensure!(status == 201, "create failed ({status}): {body}");
+    let id = json::parse(&body)?.get("id").and_then(Json::as_usize).unwrap_or(0);
+    println!("» session {id} created; subscribing to its frame stream");
+
+    // --- subscribe and decode frames as they arrive -----------------------
+    let mut stream = open_stream(addr, id)?;
+    let mut dec = FrameDecoder::new();
+    let mut bytes_total = 0usize;
+    for i in 0..25 {
+        let Some(bytes) = next_chunk(&mut stream)? else {
+            println!("» server closed the stream");
+            break;
+        };
+        bytes_total += bytes.len();
+        let frame = decode(&bytes).map_err(|e| anyhow::anyhow!("bad frame: {e}"))?;
+        // A delta that doesn't chain (frames were dropped for us) is
+        // skipped; the server follows up with a keyframe resync.
+        match dec.apply(&frame) {
+            Ok(()) => {
+                let coords = dec.coords();
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &c in &coords {
+                    lo = lo.min(c);
+                    hi = hi.max(c);
+                }
+                println!(
+                    "frame {i:>2}: iter {:>5} {} {:>5} B  n={} d={}  coords in [{lo:.3}, {hi:.3}]",
+                    frame.iter,
+                    if frame.keyframe { "key  " } else { "delta" },
+                    bytes.len(),
+                    dec.n(),
+                    dec.d(),
+                );
+            }
+            Err(reason) => println!("frame {i:>2}: skipped ({reason})"),
+        }
+    }
+    println!("» received {bytes_total} stream bytes total");
+
+    // --- tear down ---------------------------------------------------------
+    drop(stream);
+    let (status, _) = request(addr, "DELETE", &format!("/sessions/{id}"), None)?;
+    anyhow::ensure!(status == 200, "delete failed");
+    handle.shutdown();
+    server_thread.join().expect("server thread")?;
+    println!("» done");
+    Ok(())
+}
+
+/// Subscribe to a session's frame stream; returns the socket positioned
+/// at the first chunk.
+fn open_stream(addr: SocketAddr, id: usize) -> anyhow::Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let req = format!(
+        "GET /sessions/{id}/stream HTTP/1.1\r\nHost: funcsne\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        stream.read_exact(&mut byte)?;
+        head.push(byte[0]);
+    }
+    let head = String::from_utf8_lossy(&head);
+    anyhow::ensure!(head.starts_with("HTTP/1.1 200"), "subscribe failed:\n{head}");
+    anyhow::ensure!(head.contains("Transfer-Encoding: chunked"), "not a chunked stream");
+    Ok(stream)
+}
+
+/// Read one chunked-transfer chunk (the server sends one frame per
+/// chunk); `None` at the terminating zero-length chunk.
+fn next_chunk(stream: &mut TcpStream) -> anyhow::Result<Option<Vec<u8>>> {
+    let mut line = Vec::new();
+    let mut byte = [0u8; 1];
+    while !line.ends_with(b"\r\n") {
+        stream.read_exact(&mut byte)?;
+        line.push(byte[0]);
+    }
+    let len = usize::from_str_radix(String::from_utf8_lossy(&line).trim(), 16)?;
+    let mut payload = vec![0u8; len + 2]; // chunk body + trailing CRLF
+    stream.read_exact(&mut payload)?;
+    payload.truncate(len);
+    Ok(if len == 0 { None } else { Some(payload) })
+}
+
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: funcsne\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw);
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed response"))?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow::anyhow!("no status code"))?
+        .parse()?;
+    Ok((status, body.to_string()))
+}

@@ -1,0 +1,89 @@
+//! Streaming-frame throughput smoke: how fast can the codec turn live
+//! embedding state into wire frames, and how big are they?
+//!
+//! Runs blobs n=8000 for a window of real engine iterations, encodes
+//! every one through a [`FrameEncoder`] exactly as the server's
+//! broadcast path does, and reports encode frames/sec, mean bytes per
+//! frame and the keyframe size. The numbers land in BENCH_stream.json
+//! for the CI artifact trail (uploaded by the stream-smoke job).
+
+use funcsne::config::EmbedConfig;
+use funcsne::data::datasets;
+use funcsne::engine::{ComputeBackend, FuncSne};
+use funcsne::ld::NativeBackend;
+use funcsne::server::frames::{decode, FrameEncoder};
+use funcsne::util::Stopwatch;
+
+fn main() {
+    let full = std::env::var("FUNCSNE_FULL").map(|v| v == "1").unwrap_or(false);
+    let n = 8000usize;
+    let iters = if full { 120 } else { 40 };
+    println!("=== stream_smoke (blobs n={n}, {iters} encoded iterations) ===");
+
+    let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 7);
+    let cfg = EmbedConfig {
+        n_iters: 0,
+        jumpstart_iters: 0,
+        early_exag_iters: 0,
+        ..EmbedConfig::default()
+    };
+    let mut engine = FuncSne::new(ds.x, cfg).unwrap();
+    let mut backend = NativeBackend::new();
+    let b: &mut dyn ComputeBackend = &mut backend;
+    engine.run(20, &mut *b).unwrap(); // settle the KNN state first
+
+    let mut enc = FrameEncoder::new(30);
+    let mut frames = 0usize;
+    let mut keyframes = 0usize;
+    let mut bytes_total = 0usize;
+    let mut keyframe_bytes = 0usize;
+    let mut delta_bytes = 0usize;
+    let mut encode_s = 0.0f64;
+    let mut step_s = 0.0f64;
+    for _ in 0..iters {
+        let sw = Stopwatch::new();
+        engine.step(&mut *b).unwrap();
+        step_s += sw.elapsed_s();
+        let sw = Stopwatch::new();
+        let emitted = enc.encode(engine.iter as u64, &engine.y, engine.structure_version());
+        encode_s += sw.elapsed_s();
+        if let Some(bytes) = emitted {
+            let frame = decode(&bytes).expect("encoder output decodes");
+            frames += 1;
+            bytes_total += bytes.len();
+            if frame.keyframe {
+                keyframes += 1;
+                keyframe_bytes = bytes.len();
+            } else {
+                delta_bytes += bytes.len();
+            }
+        }
+    }
+
+    let deltas = frames - keyframes;
+    let mean_bytes = bytes_total as f64 / frames.max(1) as f64;
+    let mean_delta_bytes = delta_bytes as f64 / deltas.max(1) as f64;
+    let encode_fps = frames as f64 / encode_s.max(1e-12);
+    let end_to_end_fps = frames as f64 / (encode_s + step_s).max(1e-12);
+    println!(
+        "frames {frames} ({keyframes} key / {deltas} delta) | \
+         encode {encode_fps:.0} frames/s | mean {mean_bytes:.0} B/frame \
+         (keyframe {keyframe_bytes} B, delta mean {mean_delta_bytes:.0} B) | \
+         step+encode {end_to_end_fps:.1} frames/s"
+    );
+
+    // Minimal hand-rolled JSON (the repo is zero-dependency).
+    let payload = format!(
+        "{{\"bench\":\"stream_smoke\",\"dataset\":\"blobs\",\"n\":{n},\
+         \"iters\":{iters},\"frames\":{frames},\"keyframes\":{keyframes},\
+         \"encode_frames_per_sec\":{encode_fps:.1},\
+         \"end_to_end_frames_per_sec\":{end_to_end_fps:.2},\
+         \"mean_bytes_per_frame\":{mean_bytes:.1},\
+         \"keyframe_bytes\":{keyframe_bytes},\
+         \"mean_delta_bytes\":{mean_delta_bytes:.1}}}\n"
+    );
+    match std::fs::write("BENCH_stream.json", &payload) {
+        Ok(()) => println!("(wrote BENCH_stream.json)"),
+        Err(e) => println!("(could not write BENCH_stream.json: {e})"),
+    }
+}

@@ -137,8 +137,11 @@ SUBCOMMANDS
   hierarchy  α-sweep hierarchy graph    --dataset NAME --n N [--ld-dim D]
   serve      run the HTTP/JSON service  [--addr 127.0.0.1:7878] [--threads T]
              [--max-sessions N] [--snapshot-every I]
+             [--max-streams N] [--max-streams-per-session N]
+             [--stream-queue FRAMES] [--keyframe-every K]
              REST surface: POST /sessions, POST /sessions/:id/commands,
              GET /sessions/:id/embedding[?iter=N], GET /sessions/:id/stats,
+             GET /sessions/:id/stream (chunked binary frames),
              DELETE /sessions/:id, GET /healthz, GET /metrics
   info       show artifact menu / platform
 
@@ -415,11 +418,17 @@ fn cmd_hierarchy(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let defaults = ServerConfig::default();
     let cfg = ServerConfig {
         addr: args.get_str("addr", "127.0.0.1:7878"),
         threads: args.get_usize("threads", 4)?,
         max_sessions: args.get_usize("max_sessions", 64)?,
         snapshot_every: args.get_usize("snapshot_every", 25)?,
+        max_streams: args.get_usize("max_streams", defaults.max_streams)?,
+        max_streams_per_session: args
+            .get_usize("max_streams_per_session", defaults.max_streams_per_session)?,
+        stream_queue: args.get_usize("stream_queue", defaults.stream_queue)?,
+        keyframe_every: args.get_usize("keyframe_every", defaults.keyframe_every)?,
     };
     let server = Server::bind(cfg)?;
     let addr = server.local_addr();
@@ -428,6 +437,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  steer:   curl -s -X POST {addr}/sessions/0/commands \\");
     println!("                -d '{{\"command\": \"set_alpha\", \"value\": 0.5}}'");
     println!("  fetch:   curl -s {addr}/sessions/0/embedding");
+    println!("  stream:  curl -sN {addr}/sessions/0/stream -o frames.bin");
     println!("  health:  curl -s {addr}/healthz   ·   metrics: curl -s {addr}/metrics");
     server.run()
 }

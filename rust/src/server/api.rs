@@ -10,15 +10,23 @@
 //! | `GET  /sessions/:id`                | the session resource (same view as stats) |
 //! | `GET  /sessions/:id/stats`          | config, counters, last step error         |
 //! | `GET  /sessions/:id/embedding`      | live frame, or `?iter=N` nearest snapshot |
+//! | `GET  /sessions/:id/stream`         | chunked binary frame stream (push)        |
 //! | `POST /sessions/:id/commands`       | queue a typed [`Command`]                 |
 //! | `DELETE /sessions/:id`              | remove the session                        |
+//!
+//! `GET /sessions/:id/embedding` supports conditional polling: every
+//! response carries an `ETag` pinned to the frame's iteration (and the
+//! engine's structural epoch), and a request whose `If-None-Match`
+//! matches gets `304 Not Modified` without re-encoding the JSON body.
+//! `GET /sessions/:id/stream` upgrades the connection to a chunked
+//! `application/octet-stream` of binary frames (`docs/wire-format.md`).
 //!
 //! Command payloads mirror [`Command`] variants by snake-case name:
 //! `{"command":"set_alpha","value":0.5}`,
 //! `{"command":"insert_points","rows":[[...],...]}`,
 //! `{"command":"move_point","index":3,"row":[...]}`, etc.
 
-use super::http::{Handler, Request, Response};
+use super::http::{Handler, Reply, Request, Response, StreamStart};
 use super::json::{self, Json};
 use super::stepper::{
     CreateSpec, EmbeddingFrame, ServiceError, ServiceMetrics, ServiceResult, SessionView,
@@ -90,19 +98,19 @@ impl Api {
             .map_err(|_| ServiceError::Unavailable("stepper did not reply".to_string()))
     }
 
-    fn route(&mut self, req: &Request) -> ServiceResult<Response> {
+    fn route(&mut self, req: &Request) -> ServiceResult<Reply> {
         let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
         match (req.method.as_str(), segments.as_slice()) {
-            ("GET", ["healthz"]) => self.healthz(),
-            ("GET", ["metrics"]) => self.metrics(),
-            ("POST", ["sessions"]) => self.create_session(req),
-            ("GET", ["sessions"]) => self.list_sessions(),
+            ("GET", ["healthz"]) => self.healthz().map(Into::into),
+            ("GET", ["metrics"]) => self.metrics().map(Into::into),
+            ("POST", ["sessions"]) => self.create_session(req).map(Into::into),
+            ("GET", ["sessions"]) => self.list_sessions().map(Into::into),
             // The session resource itself (the url `POST /sessions`
             // returns) answers with the same view as /stats.
             ("GET", ["sessions", id]) | ("GET", ["sessions", id, "stats"]) => {
                 let id = parse_id(id)?;
                 let view = self.ask(|r| StepperRequest::Stats(id, r))?;
-                Ok(Response::json(200, &view_json(&view)))
+                Ok(Response::json(200, &view_json(&view)).into())
             }
             ("GET", ["sessions", id, "embedding"]) => {
                 let id = parse_id(id)?;
@@ -110,7 +118,26 @@ impl Api {
                     .query_usize("iter")
                     .map_err(|e| ServiceError::Invalid(e.to_string()))?;
                 let frame = self.ask(|r| StepperRequest::Embedding(id, iter, r))?;
-                Ok(Response::json(200, &frame_json(id, &frame)))
+                let etag = frame_etag(id, &frame);
+                if req
+                    .headers
+                    .get("if-none-match")
+                    .is_some_and(|h| etag_matches(h, &etag))
+                {
+                    // Identical frame: skip the JSON re-encode (the
+                    // dominant cost at large n) and send headers only.
+                    return Ok(Response::empty(304).header("ETag", etag).into());
+                }
+                Ok(Response::json(200, &frame_json(id, &frame)).header("ETag", etag).into())
+            }
+            ("GET", ["sessions", id, "stream"]) => {
+                let id = parse_id(id)?;
+                let sub = self.ask(|r| StepperRequest::Subscribe(id, r))?;
+                Ok(Reply::Stream(StreamStart {
+                    status: 200,
+                    content_type: "application/octet-stream",
+                    source: Box::new(sub),
+                }))
             }
             ("POST", ["sessions", id, "commands"]) => {
                 let id = parse_id(id)?;
@@ -122,25 +149,28 @@ impl Api {
                     ("status", "queued".into()),
                     ("command", description.into()),
                 ]);
-                Ok(Response::json(202, &body))
+                Ok(Response::json(202, &body).into())
             }
             ("DELETE", ["sessions", id]) => {
                 let id = parse_id(id)?;
                 self.ask(|r| StepperRequest::Delete(id, r))?;
-                Ok(Response::json(200, &Json::obj(vec![("deleted", true.into())])))
+                Ok(Response::json(200, &Json::obj(vec![("deleted", true.into())])).into())
             }
             // Known paths with the wrong method get 405; anything else
             // (including typo'd subresources) is a plain 404.
             (_, ["healthz" | "metrics"])
             | (_, ["sessions"])
             | (_, ["sessions", _])
-            | (_, ["sessions", _, "stats" | "embedding" | "commands"]) => Ok(Response::json(
-                405,
-                &Json::obj(vec![(
-                    "error",
-                    format!("method {} not allowed on {}", req.method, req.path).into(),
-                )]),
-            )),
+            | (_, ["sessions", _, "stats" | "embedding" | "commands" | "stream"]) => {
+                Ok(Response::json(
+                    405,
+                    &Json::obj(vec![(
+                        "error",
+                        format!("method {} not allowed on {}", req.method, req.path).into(),
+                    )]),
+                )
+                .into())
+            }
             _ => Err(ServiceError::NotFound(format!("no route for {}", req.path))),
         }
     }
@@ -185,13 +215,37 @@ impl Api {
 }
 
 impl Handler for Api {
-    fn handle(&mut self, req: &Request) -> Response {
+    fn handle(&mut self, req: &Request) -> Reply {
         self.http_requests.fetch_add(1, Ordering::Relaxed);
         match self.route(req) {
-            Ok(resp) => resp,
-            Err(e) => Response::json(e.status(), &Json::obj(vec![("error", e.message().into())])),
+            Ok(reply) => reply,
+            Err(e) => {
+                Response::json(e.status(), &Json::obj(vec![("error", e.message().into())])).into()
+            }
         }
     }
+}
+
+/// Strong validator for an embedding frame: source, iteration, shape
+/// and the engine's structural epoch pin the JSON body exactly (a
+/// same-iter poll after an insert/remove changes `version`, so it
+/// still misses).
+fn frame_etag(id: u64, frame: &EmbeddingFrame) -> String {
+    format!(
+        "\"s{id}-{}-i{}-n{}x{}-v{}\"",
+        frame.source, frame.iter, frame.n, frame.d, frame.version
+    )
+}
+
+/// RFC 9110 `If-None-Match`: a comma-separated list of entity-tags, or
+/// `*`. Comparison is weak (a `W/` prefix on either side is ignored),
+/// which is what cache revalidation on GET calls for.
+fn etag_matches(header: &str, etag: &str) -> bool {
+    let bare = etag.strip_prefix("W/").unwrap_or(etag);
+    header
+        .split(',')
+        .map(str::trim)
+        .any(|t| t == "*" || t.strip_prefix("W/").unwrap_or(t) == bare)
 }
 
 fn parse_id(raw: &str) -> ServiceResult<u64> {
@@ -549,6 +603,24 @@ fn render_prometheus(
         format!("funcsne_http_requests_total {}", http_requests.load(Ordering::Relaxed)),
     );
     metric(
+        "funcsne_stream_subscribers",
+        "gauge",
+        "Live frame-stream subscribers across all sessions.",
+        format!("funcsne_stream_subscribers {}", m.stream_subscribers_total),
+    );
+    metric(
+        "funcsne_frames_sent_total",
+        "counter",
+        "Binary frames enqueued to stream subscribers.",
+        format!("funcsne_frames_sent_total {}", m.frames_sent),
+    );
+    metric(
+        "funcsne_frames_dropped_total",
+        "counter",
+        "Binary frames dropped by per-subscriber backpressure.",
+        format!("funcsne_frames_dropped_total {}", m.frames_dropped),
+    );
+    metric(
         "funcsne_uptime_seconds",
         "gauge",
         "Seconds since the server started.",
@@ -617,6 +689,32 @@ fn render_prometheus(
             "funcsne_phase_micros",
             "gauge",
             "Cumulative engine wall-clock per step phase (microseconds).",
+            lines.join("\n"),
+        );
+    }
+    if !m.stream_subscribers.is_empty() {
+        let lines: Vec<String> = m
+            .stream_subscribers
+            .iter()
+            .map(|(id, subs)| format!("funcsne_stream_session_subscribers{{id=\"{id}\"}} {subs}"))
+            .collect();
+        metric(
+            "funcsne_stream_session_subscribers",
+            "gauge",
+            "Live frame-stream subscribers per session.",
+            lines.join("\n"),
+        );
+    }
+    if !m.session_budget.is_empty() {
+        let lines: Vec<String> = m
+            .session_budget
+            .iter()
+            .map(|(id, budget)| format!("funcsne_step_budget{{id=\"{id}\"}} {budget}"))
+            .collect();
+        metric(
+            "funcsne_step_budget",
+            "gauge",
+            "Steps the fair scheduler granted per session last sweep.",
             lines.join("\n"),
         );
     }
@@ -714,7 +812,12 @@ mod tests {
             commands_queued: 3,
             sessions_created: 2,
             sessions_deleted: 0,
+            stream_subscribers_total: 3,
+            stream_subscribers: vec![(1, 3)],
+            frames_sent: 120,
+            frames_dropped: 4,
             session_iters: vec![(0, 9), (1, 8)],
+            session_budget: vec![(0, 12), (1, 1)],
             session_quality: vec![(
                 1,
                 QualityReport {
@@ -764,6 +867,33 @@ mod tests {
             text.contains("funcsne_phase_micros{id=\"1\",phase=\"update\"} 50"),
             "{text}"
         );
+        assert!(text.contains("funcsne_stream_subscribers 3"), "{text}");
+        assert!(text.contains("funcsne_frames_sent_total 120"), "{text}");
+        assert!(text.contains("funcsne_frames_dropped_total 4"), "{text}");
+        assert!(text.contains("funcsne_stream_session_subscribers{id=\"1\"} 3"), "{text}");
+        assert!(text.contains("funcsne_step_budget{id=\"0\"} 12"), "{text}");
+    }
+
+    #[test]
+    fn etag_matching_follows_if_none_match_semantics() {
+        let frame = EmbeddingFrame {
+            iter: 42,
+            n: 10,
+            d: 2,
+            data: vec![0.0; 20],
+            source: "live",
+            version: 1,
+        };
+        let etag = frame_etag(3, &frame);
+        assert_eq!(etag, "\"s3-live-i42-n10x2-v1\"");
+        assert!(etag_matches(&etag, &etag));
+        assert!(etag_matches("*", &etag));
+        assert!(etag_matches(&format!("\"zzz\", {etag}"), &etag), "list member");
+        assert!(etag_matches(&format!("W/{etag}"), &etag), "weak comparison");
+        assert!(!etag_matches("\"s3-live-i41-n10x2-v1\"", &etag), "different iter");
+        // Same iter, bumped structural epoch (insert/remove) → miss.
+        let moved = EmbeddingFrame { version: 2, ..frame };
+        assert!(!etag_matches(&frame_etag(3, &moved), &etag));
     }
 
     #[test]

@@ -1,0 +1,639 @@
+//! Binary frame codec: pixel-quantized keyframes and per-point deltas.
+//!
+//! The insight (borrowed from PixelSNE, see PAPERS.md) is that a
+//! *visual* consumer of an embedding never needs f32 precision — a
+//! screen has at most a few thousand pixels per axis, so 16 bits of
+//! fixed-point per coordinate on a per-frame bounding grid is already
+//! ~30× finer than any display. Quantizing to `u16` shrinks a 2-D
+//! point from 8 bytes (2×f32) to 4 and, more importantly, makes
+//! "did this point move?" a well-posed integer question: a delta frame
+//! ships only the points whose quantized cell changed, which late in an
+//! embedding run is a small fraction of `n`.
+//!
+//! # Wire format (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"FSNE"
+//!      4     1  version  (1)
+//!      5     1  flags    bit0: 1 = keyframe, 0 = delta
+//!      6     2  d        u16  LD dimensionality
+//!      8     4  n        u32  points in the embedding
+//!     12     4  changed  u32  records in the payload (= n for keyframes)
+//!     16     8  iter     u64  iteration this frame depicts
+//!     24     8  base_iter u64 keyframe: == iter; delta: iter of the
+//!                             immediately preceding frame in the stream
+//!     32   8·d  bbox     d × (min f32, max f32) quantization grid
+//! 32+8d     …  payload
+//! ```
+//!
+//! Keyframe payload: `n·d` u16 coordinates, point-major. Delta
+//! payload: `changed` records of (u32 point index, `d` u16 coords).
+//! A decoder can therefore start at any keyframe and fold deltas
+//! forward as long as `base_iter` chains and the bbox is unchanged;
+//! anything else (resize, rescale, gap) forces a keyframe, which the
+//! encoder emits on its own for exactly those events.
+
+use crate::data::Matrix;
+
+/// Wire magic — first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"FSNE";
+/// Current wire version.
+pub const VERSION: u8 = 1;
+/// Flags bit 0: set for keyframes, clear for deltas.
+pub const FLAG_KEYFRAME: u8 = 1;
+/// Header length before the bbox: magic..=base_iter.
+pub const FIXED_HEADER: usize = 32;
+/// Fraction of the data extent padded onto each bbox side so points
+/// can drift a little between keyframes without leaving the grid.
+const BBOX_PAD: f32 = 0.05;
+
+fn header_len(d: usize) -> usize {
+    FIXED_HEADER + 8 * d
+}
+
+/// One axis of the quantization grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Axis {
+    pub min: f32,
+    pub max: f32,
+}
+
+impl Axis {
+    /// f32 → u16 on this axis. Degenerate axes (max ≤ min) collapse to
+    /// cell 0 so a constant coordinate round-trips to its own value.
+    pub fn quantize(&self, v: f32) -> u16 {
+        let span = self.max - self.min;
+        if !(span > 0.0) {
+            return 0;
+        }
+        let t = (v - self.min) / span * 65535.0;
+        if !(t > 0.0) {
+            0
+        } else if t >= 65535.0 {
+            65535
+        } else {
+            (t + 0.5) as u16
+        }
+    }
+
+    /// u16 → f32 (cell centre by construction of [`Axis::quantize`]).
+    pub fn dequantize(&self, q: u16) -> f32 {
+        let span = self.max - self.min;
+        if !(span > 0.0) {
+            return self.min;
+        }
+        self.min + f32::from(q) / 65535.0 * span
+    }
+
+    /// Width of one grid cell (the quantization error bound is half
+    /// of this).
+    pub fn cell(&self) -> f32 {
+        let span = self.max - self.min;
+        if span > 0.0 {
+            span / 65535.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A decoded frame header + payload, as parsed by [`decode`].
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub keyframe: bool,
+    pub d: usize,
+    pub n: usize,
+    pub iter: u64,
+    pub base_iter: u64,
+    pub bbox: Vec<Axis>,
+    /// Keyframe: empty. Delta: the changed point indices, ascending.
+    pub indices: Vec<u32>,
+    /// Quantized coords: keyframe `n·d`, delta `indices.len()·d`.
+    pub coords: Vec<u16>,
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn get_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn get_u64(b: &[u8], at: usize) -> u64 {
+    let mut raw = [0u8; 8];
+    raw.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(raw)
+}
+
+fn get_f32(b: &[u8], at: usize) -> f32 {
+    f32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn write_header(
+    buf: &mut Vec<u8>,
+    keyframe: bool,
+    d: usize,
+    n: usize,
+    changed: usize,
+    iter: u64,
+    base_iter: u64,
+    bbox: &[Axis],
+) {
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.push(if keyframe { FLAG_KEYFRAME } else { 0 });
+    put_u16(buf, d as u16);
+    put_u32(buf, n as u32);
+    put_u32(buf, changed as u32);
+    put_u64(buf, iter);
+    put_u64(buf, base_iter);
+    for ax in bbox {
+        put_f32(buf, ax.min);
+        put_f32(buf, ax.max);
+    }
+}
+
+/// Parse and validate one frame. Rejects wrong magic/version, truncated
+/// or oversized buffers, non-finite or inverted bboxes, and delta
+/// indices out of `0..n`.
+pub fn decode(bytes: &[u8]) -> Result<Frame, String> {
+    if bytes.len() < FIXED_HEADER {
+        return Err(format!("frame truncated: {} bytes < {FIXED_HEADER}-byte header", bytes.len()));
+    }
+    if bytes[0..4] != MAGIC {
+        return Err("bad magic (not an FSNE frame)".into());
+    }
+    if bytes[4] != VERSION {
+        return Err(format!("unsupported frame version {}", bytes[4]));
+    }
+    let flags = bytes[5];
+    let keyframe = flags & FLAG_KEYFRAME != 0;
+    let d = get_u16(bytes, 6) as usize;
+    let n = get_u32(bytes, 8) as usize;
+    let changed = get_u32(bytes, 12) as usize;
+    let iter = get_u64(bytes, 16);
+    let base_iter = get_u64(bytes, 24);
+    if d == 0 {
+        return Err("frame has d = 0".into());
+    }
+    let hdr = header_len(d);
+    if bytes.len() < hdr {
+        return Err(format!("frame truncated: {} bytes < {hdr}-byte header (d = {d})", bytes.len()));
+    }
+    let mut bbox = Vec::with_capacity(d);
+    for axis in 0..d {
+        let min = get_f32(bytes, FIXED_HEADER + 8 * axis);
+        let max = get_f32(bytes, FIXED_HEADER + 8 * axis + 4);
+        if !min.is_finite() || !max.is_finite() || min > max {
+            return Err(format!("axis {axis} bbox invalid: [{min}, {max}]"));
+        }
+        bbox.push(Axis { min, max });
+    }
+    let payload = &bytes[hdr..];
+    if keyframe {
+        if changed != n {
+            return Err(format!("keyframe changed = {changed} but n = {n}"));
+        }
+        let want = n * d * 2;
+        if payload.len() != want {
+            return Err(format!("keyframe payload {} bytes, expected {want}", payload.len()));
+        }
+        if base_iter != iter {
+            return Err(format!("keyframe base_iter {base_iter} != iter {iter}"));
+        }
+        let mut coords = Vec::with_capacity(n * d);
+        for p in 0..n * d {
+            coords.push(get_u16(payload, 2 * p));
+        }
+        Ok(Frame { keyframe, d, n, iter, base_iter, bbox, indices: Vec::new(), coords })
+    } else {
+        if changed > n {
+            return Err(format!("delta changed = {changed} exceeds n = {n}"));
+        }
+        let record = 4 + 2 * d;
+        let want = changed * record;
+        if payload.len() != want {
+            return Err(format!("delta payload {} bytes, expected {want}", payload.len()));
+        }
+        let mut indices = Vec::with_capacity(changed);
+        let mut coords = Vec::with_capacity(changed * d);
+        for r in 0..changed {
+            let at = r * record;
+            let idx = get_u32(payload, at);
+            if idx as usize >= n {
+                return Err(format!("delta index {idx} out of range (n = {n})"));
+            }
+            indices.push(idx);
+            for axis in 0..d {
+                coords.push(get_u16(payload, at + 4 + 2 * axis));
+            }
+        }
+        Ok(Frame { keyframe, d, n, iter, base_iter, bbox, indices, coords })
+    }
+}
+
+/// Stateful encoder: one per streamed session. Decides keyframe vs
+/// delta, owns the quantization grid, and emits ready-to-send frames.
+pub struct FrameEncoder {
+    /// Emit a keyframe after this many consecutive deltas (resync
+    /// bound for late joiners and lossy subscribers).
+    keyframe_every: usize,
+    deltas_since_key: usize,
+    force_key: bool,
+    started: bool,
+    n: usize,
+    d: usize,
+    structure_version: u64,
+    last_iter: u64,
+    bbox: Vec<Axis>,
+    /// Quantized coordinates of the last emitted frame, `n·d`.
+    grid: Vec<u16>,
+}
+
+impl FrameEncoder {
+    pub fn new(keyframe_every: usize) -> FrameEncoder {
+        FrameEncoder {
+            keyframe_every: keyframe_every.max(1),
+            deltas_since_key: 0,
+            force_key: true,
+            started: false,
+            n: 0,
+            d: 0,
+            structure_version: 0,
+            last_iter: 0,
+            bbox: Vec::new(),
+            grid: Vec::new(),
+        }
+    }
+
+    /// Make the next [`FrameEncoder::encode`] emit a keyframe
+    /// unconditionally (used to resync lagged subscribers — the
+    /// keyframe goes to *everyone*, keeping the shared byte sequence
+    /// identical across clients).
+    pub fn force_keyframe(&mut self) {
+        self.force_key = true;
+    }
+
+    /// Would `encode(iter, …)` produce a new frame? False only when the
+    /// stream is caught up: same iteration as the last frame and no
+    /// pending resync.
+    pub fn should_emit(&self, iter: u64) -> bool {
+        !self.started || self.force_key || iter != self.last_iter
+    }
+
+    /// Encode the embedding at `iter` into a frame, or `None` when
+    /// nothing changed ([`FrameEncoder::should_emit`] is false, or a
+    /// delta would carry zero moved points).
+    pub fn encode(&mut self, iter: u64, y: &Matrix, structure_version: u64) -> Option<Vec<u8>> {
+        if !self.should_emit(iter) && structure_version == self.structure_version {
+            return None;
+        }
+        let (n, d) = (y.n(), y.d());
+        if n == 0 || d == 0 || d > usize::from(u16::MAX) {
+            return None;
+        }
+        let key = self.force_key
+            || !self.started
+            || n != self.n
+            || d != self.d
+            || structure_version != self.structure_version
+            || self.deltas_since_key >= self.keyframe_every
+            || self.any_outside_bbox(y);
+        if key {
+            Some(self.encode_keyframe(iter, y, structure_version))
+        } else {
+            self.encode_delta(iter, y)
+        }
+    }
+
+    fn any_outside_bbox(&self, y: &Matrix) -> bool {
+        debug_assert_eq!(self.bbox.len(), y.d());
+        for row in 0..y.n() {
+            let p = y.row(row);
+            for (axis, &v) in self.bbox.iter().zip(p) {
+                if !v.is_finite() || v < axis.min || v > axis.max {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    fn fit_bbox(y: &Matrix) -> Vec<Axis> {
+        let d = y.d();
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for row in 0..y.n() {
+            for (axis, &v) in y.row(row).iter().enumerate() {
+                if v.is_finite() {
+                    lo[axis] = lo[axis].min(v);
+                    hi[axis] = hi[axis].max(v);
+                }
+            }
+        }
+        (0..d)
+            .map(|axis| {
+                let (mut min, mut max) = (lo[axis], hi[axis]);
+                if !min.is_finite() || !max.is_finite() || min > max {
+                    // No finite data on this axis — any grid will do.
+                    return Axis { min: 0.0, max: 1.0 };
+                }
+                // Pad so inter-keyframe drift stays inside the grid;
+                // the epsilon keeps degenerate (constant) axes usable.
+                let pad = (max - min) * BBOX_PAD + 1e-6;
+                min -= pad;
+                max += pad;
+                Axis { min, max }
+            })
+            .collect()
+    }
+
+    fn encode_keyframe(&mut self, iter: u64, y: &Matrix, structure_version: u64) -> Vec<u8> {
+        let (n, d) = (y.n(), y.d());
+        self.bbox = FrameEncoder::fit_bbox(y);
+        self.grid.clear();
+        self.grid.reserve(n * d);
+        for row in 0..y.n() {
+            for (axis, &v) in self.bbox.iter().zip(y.row(row)) {
+                self.grid.push(axis.quantize(v));
+            }
+        }
+        let mut buf = Vec::with_capacity(header_len(d) + n * d * 2);
+        write_header(&mut buf, true, d, n, n, iter, iter, &self.bbox);
+        for &q in &self.grid {
+            put_u16(&mut buf, q);
+        }
+        self.n = n;
+        self.d = d;
+        self.structure_version = structure_version;
+        self.last_iter = iter;
+        self.started = true;
+        self.force_key = false;
+        self.deltas_since_key = 0;
+        buf
+    }
+
+    fn encode_delta(&mut self, iter: u64, y: &Matrix) -> Option<Vec<u8>> {
+        let (n, d) = (self.n, self.d);
+        let mut fresh = Vec::with_capacity(n * d);
+        for row in 0..y.n() {
+            for (axis, &v) in self.bbox.iter().zip(y.row(row)) {
+                fresh.push(axis.quantize(v));
+            }
+        }
+        let mut changed: Vec<u32> = Vec::new();
+        for row in 0..n {
+            if fresh[row * d..(row + 1) * d] != self.grid[row * d..(row + 1) * d] {
+                changed.push(row as u32);
+            }
+        }
+        // A delta bigger than the keyframe it replaces is pointless —
+        // reset the grid too while we're at it.
+        if changed.len() * (4 + 2 * d) >= n * 2 * d {
+            self.force_key = true;
+            let sv = self.structure_version;
+            return Some(self.encode_keyframe(iter, y, sv));
+        }
+        if changed.is_empty() {
+            // Nothing moved a whole grid cell: no frame. `last_iter`
+            // stays at the last *emitted* frame so the next delta's
+            // base_iter matches what subscribers actually received.
+            return None;
+        }
+        let base_iter = self.last_iter;
+        self.grid = fresh;
+        self.last_iter = iter;
+        self.deltas_since_key += 1;
+        let mut buf = Vec::with_capacity(header_len(d) + changed.len() * (4 + 2 * d));
+        write_header(&mut buf, false, d, n, changed.len(), iter, base_iter, &self.bbox);
+        for &idx in &changed {
+            put_u32(&mut buf, idx);
+            let at = idx as usize * d;
+            for axis in 0..d {
+                put_u16(&mut buf, self.grid[at + axis]);
+            }
+        }
+        Some(buf)
+    }
+}
+
+/// Stateful decoder: folds a keyframe + delta sequence back into f32
+/// coordinates. The mirror of [`FrameEncoder`] for clients and tests.
+#[derive(Default)]
+pub struct FrameDecoder {
+    started: bool,
+    n: usize,
+    d: usize,
+    iter: u64,
+    bbox: Vec<Axis>,
+    grid: Vec<u16>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Has a keyframe arrived yet?
+    pub fn ready(&self) -> bool {
+        self.started
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Iteration of the last applied frame.
+    pub fn iter(&self) -> u64 {
+        self.iter
+    }
+
+    /// Fold one decoded frame into the running state. Deltas must chain
+    /// (`base_iter` equals the last applied frame's iter, same n/d/bbox)
+    /// — a broken chain means the caller lost frames and should wait
+    /// for the next keyframe.
+    pub fn apply(&mut self, frame: &Frame) -> Result<(), String> {
+        if frame.keyframe {
+            self.n = frame.n;
+            self.d = frame.d;
+            self.iter = frame.iter;
+            self.bbox = frame.bbox.clone();
+            self.grid = frame.coords.clone();
+            self.started = true;
+            return Ok(());
+        }
+        if !self.started {
+            return Err("delta before any keyframe".into());
+        }
+        if frame.n != self.n || frame.d != self.d {
+            return Err(format!(
+                "delta shape {}x{} does not match state {}x{}",
+                frame.n, frame.d, self.n, self.d
+            ));
+        }
+        if frame.base_iter != self.iter {
+            return Err(format!(
+                "delta base_iter {} does not chain from state iter {}",
+                frame.base_iter, self.iter
+            ));
+        }
+        if frame.bbox != self.bbox {
+            return Err("delta bbox differs from keyframe bbox".into());
+        }
+        for (r, &idx) in frame.indices.iter().enumerate() {
+            let at = idx as usize * self.d;
+            self.grid[at..at + self.d]
+                .copy_from_slice(&frame.coords[r * self.d..(r + 1) * self.d]);
+        }
+        self.iter = frame.iter;
+        Ok(())
+    }
+
+    /// Dequantized coordinates, `n·d` row-major.
+    pub fn coords(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n * self.d);
+        for row in 0..self.n {
+            for (axis, ax) in self.bbox.iter().enumerate() {
+                out.push(ax.dequantize(self.grid[row * self.d + axis]));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.row_mut(r)[c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn keyframe_round_trips_within_half_cell() {
+        let y = matrix(50, 2, |r, c| (r as f32).mul_add(0.37, c as f32 * 5.0) - 9.0);
+        let mut enc = FrameEncoder::new(30);
+        let bytes = enc.encode(3, &y, 0).expect("first frame is a keyframe");
+        let frame = decode(&bytes).unwrap();
+        assert!(frame.keyframe);
+        assert_eq!((frame.n, frame.d, frame.iter), (50, 2, 3));
+        let mut dec = FrameDecoder::new();
+        dec.apply(&frame).unwrap();
+        let coords = dec.coords();
+        for r in 0..50 {
+            for c in 0..2 {
+                let err = (coords[r * 2 + c] - y.row(r)[c]).abs();
+                let cell = frame.bbox[c].cell();
+                assert!(err <= cell * 0.5 + 1e-6, "err {err} > half cell {cell} at ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn unchanged_embedding_emits_nothing() {
+        let y = matrix(20, 2, |r, c| r as f32 + c as f32);
+        let mut enc = FrameEncoder::new(30);
+        assert!(enc.encode(1, &y, 0).is_some());
+        assert!(enc.encode(1, &y, 0).is_none(), "same iter, no resync → no frame");
+        assert!(enc.encode(2, &y, 0).is_none(), "new iter but nothing moved a cell");
+    }
+
+    #[test]
+    fn small_motion_yields_small_delta() {
+        let mut y = matrix(100, 2, |r, c| (r * 2 + c) as f32);
+        let mut enc = FrameEncoder::new(30);
+        enc.encode(1, &y, 0).unwrap();
+        // Move exactly one point far enough to cross many cells.
+        y.row_mut(7)[0] += 3.0;
+        let bytes = enc.encode(2, &y, 0).expect("one moved point → delta");
+        let frame = decode(&bytes).unwrap();
+        assert!(!frame.keyframe);
+        assert_eq!(frame.indices, vec![7]);
+        assert_eq!(frame.base_iter, 1);
+        assert_eq!(frame.iter, 2);
+    }
+
+    #[test]
+    fn structure_version_change_forces_keyframe() {
+        let mut y = matrix(30, 2, |r, c| (r + c) as f32);
+        let mut enc = FrameEncoder::new(1000);
+        enc.encode(1, &y, 0).unwrap();
+        y.row_mut(3)[1] += 2.0;
+        let bytes = enc.encode(2, &y, 1).unwrap();
+        assert!(decode(&bytes).unwrap().keyframe, "structural epoch bump must resync");
+    }
+
+    #[test]
+    fn keyframe_interval_is_honoured() {
+        let mut y = matrix(40, 2, |r, c| (r * 3 + c) as f32);
+        let mut enc = FrameEncoder::new(2);
+        enc.encode(0, &y, 0).unwrap();
+        let mut kinds = Vec::new();
+        for it in 1..=6u64 {
+            y.row_mut((it as usize) % 40)[0] += 5.0;
+            if let Some(bytes) = enc.encode(it, &y, 0) {
+                kinds.push(decode(&bytes).unwrap().keyframe);
+            }
+        }
+        // Two deltas, then a keyframe, repeating.
+        assert_eq!(kinds, vec![false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        let y = matrix(10, 2, |r, c| (r + c) as f32);
+        let mut enc = FrameEncoder::new(30);
+        let good = enc.encode(1, &y, 0).unwrap();
+        assert!(decode(&[]).is_err());
+        assert!(decode(&good[..10]).is_err(), "truncated header");
+        assert!(decode(&good[..good.len() - 1]).is_err(), "truncated payload");
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err(), "bad magic");
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(decode(&bad).is_err(), "future version");
+    }
+
+    #[test]
+    fn degenerate_axis_round_trips() {
+        // All points share x = 4: the axis is (near) degenerate but the
+        // epsilon pad keeps the reconstruction at the right value.
+        let y = matrix(8, 2, |r, c| if c == 0 { 4.0 } else { r as f32 });
+        let mut enc = FrameEncoder::new(30);
+        let frame = decode(&enc.encode(0, &y, 0).unwrap()).unwrap();
+        let mut dec = FrameDecoder::new();
+        dec.apply(&frame).unwrap();
+        for r in 0..8 {
+            assert!((dec.coords()[r * 2] - 4.0).abs() < 1e-3);
+        }
+    }
+}

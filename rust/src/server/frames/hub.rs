@@ -1,0 +1,450 @@
+//! Broadcast hub: fan frames out to subscribers with per-client
+//! backpressure.
+//!
+//! The stepper thread owns the hub and calls [`FrameHub::broadcast`]
+//! after each sweep; HTTP workers own [`StreamSubscription`]s and block
+//! on [`StreamSubscription::next`] while writing chunked responses.
+//! The two sides meet in a small `Mutex<VecDeque> + Condvar` pair per
+//! subscriber — the only state that crosses threads. Frames are
+//! encoded **once** per session per sweep into an `Arc<Vec<u8>>` and
+//! shared by every subscriber, so fan-out cost is queue pushes, not
+//! copies.
+//!
+//! # Backpressure
+//!
+//! Each subscriber has a bounded queue. When a slow client lets it
+//! fill, the hub clears the whole queue (counting every dropped frame),
+//! marks the subscriber *lagged*, and keeps dropping delta frames —
+//! a delta is useless without its predecessors. The next keyframe
+//! clears the lag and is enqueued, so every byte sequence a client
+//! actually receives is decodable from its first keyframe. After a
+//! broadcast leaves anyone lagged, the hub forces the session's encoder
+//! to emit a keyframe next sweep: resync is bounded by one sweep, not
+//! by the keyframe interval, and — because the keyframe goes to every
+//! subscriber — healthy clients still see the exact same byte sequence
+//! as each other.
+
+use super::codec::FrameEncoder;
+use crate::data::Matrix;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Tunables for the streaming subsystem (wired from the server config
+/// / CLI flags).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Max concurrent subscribers on one session.
+    pub max_per_session: usize,
+    /// Max concurrent subscribers across all sessions.
+    pub max_global: usize,
+    /// Per-subscriber queue bound, in frames.
+    pub queue_frames: usize,
+    /// Emit a keyframe after this many delta frames.
+    pub keyframe_every: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig { max_per_session: 8, max_global: 64, queue_frames: 8, keyframe_every: 30 }
+    }
+}
+
+/// Queue state shared between the hub (producer) and one subscriber
+/// (consumer).
+struct QueueState {
+    frames: VecFrames,
+    /// Subscriber overflowed and is waiting for a keyframe to resync.
+    lagged: bool,
+    /// Set by either side on teardown (client gone / session deleted /
+    /// server shutdown).
+    closed: bool,
+}
+
+type VecFrames = std::collections::VecDeque<Arc<Vec<u8>>>;
+
+struct Shared {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+/// What [`StreamSubscription::next`] yielded.
+pub enum NextFrame {
+    /// A frame to forward to the client.
+    Frame(Arc<Vec<u8>>),
+    /// Nothing arrived within the timeout; poll again (lets the HTTP
+    /// worker re-check server shutdown between waits).
+    Idle,
+    /// The stream is over: session deleted or hub dropped.
+    Closed,
+}
+
+/// The consumer half of one stream: lives on an HTTP worker thread and
+/// feeds a chunked response. Dropping it unsubscribes.
+pub struct StreamSubscription {
+    shared: Arc<Shared>,
+}
+
+impl StreamSubscription {
+    /// Block up to `timeout` for the next frame.
+    pub fn next(&mut self, timeout: Duration) -> NextFrame {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(frame) = st.frames.pop_front() {
+                return NextFrame::Frame(frame);
+            }
+            if st.closed {
+                return NextFrame::Closed;
+            }
+            let (next, res) = self
+                .shared
+                .ready
+                .wait_timeout(st, timeout)
+                .unwrap_or_else(|e| e.into_inner());
+            st = next;
+            if res.timed_out() && st.frames.is_empty() && !st.closed {
+                return NextFrame::Idle;
+            }
+        }
+    }
+}
+
+impl Drop for StreamSubscription {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.closed = true;
+        st.frames.clear();
+    }
+}
+
+/// A subscription *is* the byte source of a chunked HTTP response:
+/// one frame per chunk.
+impl crate::server::http::ChunkSource for StreamSubscription {
+    fn next(&mut self, timeout: Duration) -> crate::server::http::NextChunk {
+        match StreamSubscription::next(self, timeout) {
+            NextFrame::Frame(bytes) => crate::server::http::NextChunk::Data(bytes),
+            NextFrame::Idle => crate::server::http::NextChunk::Idle,
+            NextFrame::Closed => crate::server::http::NextChunk::Closed,
+        }
+    }
+}
+
+/// The producer's handle on one subscriber.
+struct SubscriberSlot {
+    shared: Arc<Shared>,
+}
+
+/// What one [`SubscriberSlot::push`] did.
+struct PushOutcome {
+    /// Frames this subscriber lost (queued frames cleared on overflow
+    /// plus the offered frame when it was skipped mid-lag).
+    dropped: u64,
+    /// The offered frame made it onto the queue.
+    enqueued: bool,
+    /// Subscriber is (still) waiting for a keyframe to resync.
+    lagged: bool,
+}
+
+impl SubscriberSlot {
+    fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap_or_else(|e| e.into_inner()).closed
+    }
+
+    fn close(&self) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.closed = true;
+        self.shared.ready.notify_all();
+    }
+
+    /// Push one frame onto this subscriber's queue, applying the
+    /// drop-oldest-then-resync policy.
+    fn push(&self, frame: &Arc<Vec<u8>>, keyframe: bool, queue_frames: usize) -> PushOutcome {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.closed {
+            return PushOutcome { dropped: 0, enqueued: false, lagged: false };
+        }
+        let mut dropped = 0u64;
+        if st.lagged {
+            if !keyframe {
+                // Deltas are useless mid-lag; count and skip.
+                return PushOutcome { dropped: 1, enqueued: false, lagged: true };
+            }
+            st.lagged = false;
+        }
+        if st.frames.len() >= queue_frames {
+            // Overflow: drop everything queued and require a keyframe
+            // to restart — a partial queue of deltas with a hole in the
+            // middle could never be decoded anyway.
+            dropped += st.frames.len() as u64;
+            st.frames.clear();
+            if !keyframe {
+                st.lagged = true;
+                self.shared.ready.notify_all();
+                return PushOutcome { dropped: dropped + 1, enqueued: false, lagged: true };
+            }
+        }
+        st.frames.push_back(Arc::clone(frame));
+        self.shared.ready.notify_all();
+        PushOutcome { dropped, enqueued: true, lagged: false }
+    }
+}
+
+/// Per-session streaming state: the shared encoder plus the fan-out
+/// list.
+struct SessionHub {
+    encoder: FrameEncoder,
+    subscribers: Vec<SubscriberSlot>,
+}
+
+/// Owns every session's encoder and subscriber list. Lives on the
+/// stepper thread; never crosses threads itself (only
+/// [`StreamSubscription`]s do).
+pub struct FrameHub {
+    cfg: StreamConfig,
+    sessions: BTreeMap<u64, SessionHub>,
+    frames_sent: u64,
+    frames_dropped: u64,
+}
+
+/// Why a subscribe was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubscribeError {
+    /// This session is at `max_per_session`.
+    SessionFull,
+    /// The whole server is at `max_global`.
+    GlobalFull,
+}
+
+impl FrameHub {
+    pub fn new(cfg: StreamConfig) -> FrameHub {
+        FrameHub { cfg, sessions: BTreeMap::new(), frames_sent: 0, frames_dropped: 0 }
+    }
+
+    /// Frames enqueued to subscribers, ever.
+    pub fn frames_sent(&self) -> u64 {
+        self.frames_sent
+    }
+
+    /// Frames dropped by backpressure, ever.
+    pub fn frames_dropped(&self) -> u64 {
+        self.frames_dropped
+    }
+
+    /// Live subscriber count for one session.
+    pub fn subscriber_count(&self, session: u64) -> usize {
+        self.sessions.get(&session).map_or(0, |s| s.subscribers.len())
+    }
+
+    /// Live subscriber count across all sessions.
+    pub fn total_subscribers(&self) -> usize {
+        self.sessions.values().map(|s| s.subscribers.len()).sum()
+    }
+
+    /// Per-session subscriber counts (for /metrics).
+    pub fn subscriber_counts(&self) -> Vec<(u64, usize)> {
+        self.sessions
+            .iter()
+            .filter(|(_, s)| !s.subscribers.is_empty())
+            .map(|(&id, s)| (id, s.subscribers.len()))
+            .collect()
+    }
+
+    /// Register a new subscriber on `session`. The caller must have
+    /// checked the session exists. The next broadcast emits a keyframe
+    /// so the new client can start decoding immediately.
+    pub fn subscribe(&mut self, session: u64) -> Result<StreamSubscription, SubscribeError> {
+        self.prune();
+        if self.total_subscribers() >= self.cfg.max_global {
+            return Err(SubscribeError::GlobalFull);
+        }
+        let hub = self.sessions.entry(session).or_insert_with(|| SessionHub {
+            encoder: FrameEncoder::new(self.cfg.keyframe_every),
+            subscribers: Vec::new(),
+        });
+        if hub.subscribers.len() >= self.cfg.max_per_session {
+            return Err(SubscribeError::SessionFull);
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                frames: VecFrames::new(),
+                lagged: false,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        });
+        hub.subscribers.push(SubscriberSlot { shared: Arc::clone(&shared) });
+        hub.encoder.force_keyframe();
+        Ok(StreamSubscription { shared })
+    }
+
+    /// Does this session have at least one live subscriber? (Cheap
+    /// check the stepper uses to skip encoding entirely.)
+    pub fn wants_frames(&self, session: u64) -> bool {
+        self.sessions
+            .get(&session)
+            .is_some_and(|s| s.subscribers.iter().any(|c| !c.is_closed()))
+    }
+
+    /// Encode the embedding at `iter` (if it changed) and fan the frame
+    /// out to this session's subscribers. Call after each sweep — and
+    /// once on subscribe, so paused sessions still deliver a first
+    /// keyframe.
+    pub fn broadcast(&mut self, session: u64, iter: u64, y: &Matrix, structure_version: u64) {
+        let queue_frames = self.cfg.queue_frames.max(1);
+        let Some(hub) = self.sessions.get_mut(&session) else { return };
+        hub.subscribers.retain(|c| !c.is_closed());
+        if hub.subscribers.is_empty() {
+            self.sessions.remove(&session);
+            return;
+        }
+        let Some(bytes) = hub.encoder.encode(iter, y, structure_version) else { return };
+        let keyframe = bytes.get(5).is_some_and(|f| f & super::codec::FLAG_KEYFRAME != 0);
+        let frame = Arc::new(bytes);
+        let mut any_lagged = false;
+        for sub in &hub.subscribers {
+            let out = sub.push(&frame, keyframe, queue_frames);
+            self.frames_dropped += out.dropped;
+            if out.enqueued {
+                self.frames_sent += 1;
+            }
+            any_lagged |= out.lagged;
+        }
+        if any_lagged {
+            // Bounded resync: the very next frame is a keyframe for
+            // everyone, so the lagged client recovers in one sweep and
+            // all clients keep seeing one shared byte sequence.
+            hub.encoder.force_keyframe();
+        }
+    }
+
+    /// Tear down a session's streams (session deleted): wake every
+    /// subscriber with `Closed`.
+    pub fn drop_session(&mut self, session: u64) {
+        if let Some(hub) = self.sessions.remove(&session) {
+            for sub in &hub.subscribers {
+                sub.close();
+            }
+        }
+    }
+
+    /// Tear down everything (server shutdown).
+    pub fn drop_all(&mut self) {
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        for id in ids {
+            self.drop_session(id);
+        }
+    }
+
+    fn prune(&mut self) {
+        self.sessions.retain(|_, hub| {
+            hub.subscribers.retain(|c| !c.is_closed());
+            !hub.subscribers.is_empty()
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::codec::{decode, FrameDecoder};
+    use super::*;
+    use std::time::Duration;
+
+    fn matrix(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.row_mut(r)[c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    fn small_cfg() -> StreamConfig {
+        StreamConfig { max_per_session: 2, max_global: 3, queue_frames: 2, keyframe_every: 10 }
+    }
+
+    #[test]
+    fn admission_control_enforces_caps() {
+        let mut hub = FrameHub::new(small_cfg());
+        let _a = hub.subscribe(1).unwrap();
+        let _b = hub.subscribe(1).unwrap();
+        assert_eq!(hub.subscribe(1).unwrap_err(), SubscribeError::SessionFull);
+        let _c = hub.subscribe(2).unwrap();
+        assert_eq!(hub.subscribe(3).unwrap_err(), SubscribeError::GlobalFull);
+        // Dropping a subscription frees its slot at the next subscribe.
+        drop(_c);
+        assert!(hub.subscribe(3).is_ok());
+    }
+
+    #[test]
+    fn two_subscribers_see_identical_sequences() {
+        let mut hub = FrameHub::new(small_cfg());
+        let mut y = matrix(30, 2, |r, c| (r * 2 + c) as f32);
+        let mut a = hub.subscribe(7).unwrap();
+        let mut b = hub.subscribe(7).unwrap();
+        for it in 0..4u64 {
+            y.row_mut((it as usize) % 30)[0] += 4.0;
+            hub.broadcast(7, it, &y, 0);
+            let fa = match a.next(Duration::from_millis(100)) {
+                NextFrame::Frame(f) => f,
+                _ => panic!("a expected frame at iter {it}"),
+            };
+            let fb = match b.next(Duration::from_millis(100)) {
+                NextFrame::Frame(f) => f,
+                _ => panic!("b expected frame at iter {it}"),
+            };
+            assert_eq!(*fa, *fb, "subscribers diverged at iter {it}");
+        }
+    }
+
+    #[test]
+    fn overflow_drops_then_resyncs_with_keyframe() {
+        let mut hub = FrameHub::new(small_cfg());
+        let mut y = matrix(30, 2, |r, c| (r * 2 + c) as f32);
+        let mut slow = hub.subscribe(9).unwrap();
+        // Never read: queue (bound 2) overflows on the third frame.
+        for it in 0..6u64 {
+            for r in 0..30 {
+                y.row_mut(r)[0] += 1.5;
+            }
+            hub.broadcast(9, it, &y, 0);
+        }
+        assert!(hub.frames_dropped() > 0, "stalled client must lose frames");
+        // Drain what's left: the first frame out must be a keyframe and
+        // the whole remainder must decode cleanly from it.
+        let mut dec = FrameDecoder::new();
+        let mut first = true;
+        loop {
+            match slow.next(Duration::from_millis(50)) {
+                NextFrame::Frame(f) => {
+                    let frame = decode(&f).unwrap();
+                    if first {
+                        assert!(frame.keyframe, "resync must start at a keyframe");
+                        first = false;
+                    }
+                    dec.apply(&frame).unwrap();
+                }
+                NextFrame::Idle | NextFrame::Closed => break,
+            }
+        }
+        assert!(dec.ready(), "slow client decoded a resynced stream");
+    }
+
+    #[test]
+    fn drop_session_closes_subscribers() {
+        let mut hub = FrameHub::new(small_cfg());
+        let mut sub = hub.subscribe(4).unwrap();
+        hub.drop_session(4);
+        assert!(matches!(sub.next(Duration::from_millis(10)), NextFrame::Closed));
+        assert_eq!(hub.total_subscribers(), 0);
+    }
+
+    #[test]
+    fn broadcast_without_subscribers_is_cheap_noop() {
+        let mut hub = FrameHub::new(small_cfg());
+        let y = matrix(5, 2, |r, c| (r + c) as f32);
+        assert!(!hub.wants_frames(1));
+        hub.broadcast(1, 0, &y, 0);
+        assert_eq!(hub.frames_sent(), 0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Streaming frame subsystem: compact binary embedding frames fanned
+//! out to many concurrent viewers.
+//!
+//! Polling `GET /sessions/:id/embedding` re-encodes the full embedding
+//! as JSON on every request — workable for one client, hopeless for
+//! many. This module replaces polling with push:
+//!
+//! * [`codec`] — a zero-dependency binary codec. **Keyframes**
+//!   quantize every LD coordinate to `u16` on a per-frame bounding
+//!   grid (~4 bytes/point in 2-D, any `d`); **delta frames** ship only
+//!   the points that moved by at least one grid cell. See
+//!   `docs/wire-format.md` for the byte-level spec.
+//! * [`hub`] — the broadcast side. Frames are encoded once per session
+//!   per sweep and shared (`Arc`) across subscribers; each subscriber
+//!   has a bounded queue with drop-oldest-then-resync-keyframe
+//!   backpressure so a slow client can never stall the stepper, plus
+//!   admission control (per-session and global subscriber caps).
+//!
+//! The stepper owns the [`hub::FrameHub`]; HTTP workers hold
+//! [`hub::StreamSubscription`]s and turn them into chunked HTTP/1.1
+//! responses (`GET /sessions/:id/stream`).
+
+pub mod codec;
+pub mod hub;
+
+pub use codec::{decode, Frame, FrameDecoder, FrameEncoder};
+pub use hub::{FrameHub, NextFrame, StreamConfig, StreamSubscription, SubscribeError};

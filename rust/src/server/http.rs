@@ -3,12 +3,19 @@
 //! one connection handler per [`WorkerPool`] slot.
 //!
 //! Scope: exactly what the embedding service needs. `Content-Length`
-//! bodies (no chunked transfer), a bounded header section, percent-
-//! decoded query strings, and keep-alive by default (HTTP/1.1
+//! bodies (no chunked *request* bodies), a bounded header section,
+//! percent-decoded query strings, and keep-alive by default (HTTP/1.1
 //! semantics; `Connection: close` honoured). The listener runs in
 //! non-blocking mode and workers poll it with a short sleep, so
 //! shutdown is a plain atomic flag — no self-connect tricks, no
 //! platform-specific socket teardown.
+//!
+//! Responses come in two shapes ([`Reply`]): ordinary
+//! `Content-Length`-framed [`Response`]s, and **streams** — a handler
+//! returns a [`ChunkSource`] and the connection switches to chunked
+//! transfer encoding, forwarding frames until the source closes. A
+//! streaming connection pins its worker for the stream's lifetime and
+//! always ends with `Connection: close`.
 
 use crate::runtime::WorkerPool;
 use anyhow::{bail, Context, Result};
@@ -37,6 +44,12 @@ const BODY_DEADLINE: Duration = Duration::from_secs(60);
 /// before the worker closes it and returns to the accept loop —
 /// without this, `threads` idle clients would pin every worker.
 const IDLE_CONN_TIMEOUT: Duration = Duration::from_secs(30);
+/// Write timeout while streaming chunks: a client that stops reading
+/// stalls its own stream (and gets torn down), never the producer.
+const STREAM_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long a [`ChunkSource`] blocks per wait before the worker
+/// re-checks server shutdown.
+const STREAM_POLL: Duration = Duration::from_millis(250);
 
 /// A parsed HTTP request.
 #[derive(Clone, Debug)]
@@ -82,6 +95,9 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra headers beyond the framing set (e.g. `ETag`). Names must
+    /// be valid header names; values must be single-line.
+    pub headers: Vec<(String, String)>,
 }
 
 impl Response {
@@ -91,12 +107,72 @@ impl Response {
             status,
             content_type: "application/json",
             body: value.encode().into_bytes(),
+            headers: Vec::new(),
         }
     }
 
     /// A plain-text response (e.g. Prometheus metrics).
     pub fn text(status: u16, body: String) -> Response {
-        Response { status, content_type: "text/plain; charset=utf-8", body: body.into_bytes() }
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into_bytes(),
+            headers: Vec::new(),
+        }
+    }
+
+    /// A bodyless response (e.g. `304 Not Modified`).
+    pub fn empty(status: u16) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: Vec::new(),
+            headers: Vec::new(),
+        }
+    }
+
+    /// Attach an extra header (builder-style).
+    pub fn header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.headers.push((name.to_string(), value.into()));
+        self
+    }
+}
+
+/// One step of a streamed response, as yielded by [`ChunkSource::next`].
+pub enum NextChunk {
+    /// Bytes to forward as one chunk.
+    Data(std::sync::Arc<Vec<u8>>),
+    /// Nothing yet — the worker re-checks shutdown and waits again.
+    Idle,
+    /// Stream over; send the terminating chunk and close.
+    Closed,
+}
+
+/// A pull-based byte stream driven by the connection worker. `Send`
+/// because the handler creates it on a worker thread that then owns it
+/// for the stream's lifetime.
+pub trait ChunkSource: Send {
+    /// Block up to `timeout` for the next chunk.
+    fn next(&mut self, timeout: Duration) -> NextChunk;
+}
+
+/// Header section of a streamed response.
+pub struct StreamStart {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub source: Box<dyn ChunkSource>,
+}
+
+/// What a [`Handler`] returns: a normal framed response or a chunked
+/// stream that takes over the connection.
+pub enum Reply {
+    Full(Response),
+    Stream(StreamStart),
+}
+
+impl From<Response> for Reply {
+    fn from(resp: Response) -> Reply {
+        Reply::Full(resp)
     }
 }
 
@@ -106,6 +182,7 @@ pub fn reason(status: u16) -> &'static str {
         200 => "OK",
         201 => "Created",
         202 => "Accepted",
+        304 => "Not Modified",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
@@ -122,7 +199,7 @@ pub fn reason(status: u16) -> &'static str {
 /// slot (handlers are `Send`, not `Sync` — each worker owns its own,
 /// so cheap per-worker state like channel senders needs no locking).
 pub trait Handler: Send {
-    fn handle(&mut self, req: &Request) -> Response;
+    fn handle(&mut self, req: &Request) -> Reply;
 }
 
 /// Run the accept loop until `shutdown` is set: one connection-handler
@@ -192,15 +269,67 @@ fn handle_connection<H: Handler>(
                 break;
             }
         };
-        let resp = handler.handle(&req);
-        let close = req.close || shutdown.load(Ordering::SeqCst);
-        write_response(&mut writer, &resp, close)?;
-        if close {
-            break;
+        match handler.handle(&req) {
+            Reply::Full(resp) => {
+                let close = req.close || shutdown.load(Ordering::SeqCst);
+                write_response(&mut writer, &resp, close)?;
+                if close {
+                    break;
+                }
+            }
+            Reply::Stream(start) => {
+                // The stream takes over the connection: chunked framing,
+                // Connection: close, and the worker is pinned until the
+                // source closes, the client goes away or shutdown.
+                let _ = stream_response(&mut writer, start, shutdown);
+                break;
+            }
         }
         idle_since = Instant::now();
     }
     Ok(())
+}
+
+/// Drive a chunked-transfer response: write the header section, then
+/// pull chunks from the source until it closes (or the client / server
+/// goes away). Dropping the source on exit is what unsubscribes it
+/// from its producer.
+fn stream_response(
+    w: &mut TcpStream,
+    mut start: StreamStart,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    w.set_write_timeout(Some(STREAM_WRITE_TIMEOUT))?;
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        start.status,
+        reason(start.status),
+        start.content_type,
+    );
+    w.write_all(head.as_bytes())?;
+    w.flush()?;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match start.source.next(STREAM_POLL) {
+            NextChunk::Data(bytes) => {
+                if bytes.is_empty() {
+                    // An empty chunk would read as the terminator.
+                    continue;
+                }
+                write!(w, "{:x}\r\n", bytes.len())?;
+                w.write_all(&bytes)?;
+                w.write_all(b"\r\n")?;
+                w.flush()?;
+            }
+            NextChunk::Idle => continue,
+            NextChunk::Closed => break,
+        }
+    }
+    // Best-effort terminator; the connection closes either way.
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
 }
 
 /// Read one request (request line, headers, `Content-Length` body) from
@@ -398,14 +527,21 @@ fn hex_val(b: Option<&u8>) -> Option<u8> {
 
 /// Serialise a response; `close` selects the `Connection` header.
 pub fn write_response(w: &mut impl Write, resp: &Response, close: bool) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         resp.status,
         reason(resp.status),
         resp.content_type,
         resp.body.len(),
         if close { "close" } else { "keep-alive" },
     );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     w.write_all(head.as_bytes())?;
     w.write_all(&resp.body)?;
     w.flush()
@@ -512,6 +648,17 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
         assert!(text.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn extra_headers_and_304_serialise() {
+        let resp = Response::empty(304).header("ETag", "\"abc\"");
+        let mut out = Vec::new();
+        write_response(&mut out, &resp, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 304 Not Modified\r\n"), "{text}");
+        assert!(text.contains("ETag: \"abc\"\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 0\r\n"), "{text}");
     }
 
     #[test]

@@ -19,8 +19,9 @@
 //!        ▼
 //!   http::serve ── Api (per worker) ──┐ mpsc commands / replies
 //!                                     ▼
-//!                        stepper thread: owns SessionManager,
-//!                        loops { drain requests; step_all }
+//!                        stepper thread: owns SessionManager + FrameHub,
+//!                        loops { drain requests; fair budgeted sweep;
+//!                                broadcast frames; park when idle }
 //! ```
 //!
 //! [`crate::session::Session`] is `!Send` by design, so sessions live
@@ -45,6 +46,8 @@
 //! # fetch the live embedding, or the nearest snapshot ≤ iteration 500
 //! curl -s localhost:7878/sessions/0/embedding
 //! curl -s 'localhost:7878/sessions/0/embedding?iter=500'
+//! # push: a chunked stream of compact binary frames (docs/wire-format.md)
+//! curl -sN localhost:7878/sessions/0/stream -o frames.bin
 //! curl -s localhost:7878/sessions/0/stats
 //! curl -s localhost:7878/healthz
 //! curl -s localhost:7878/metrics     # Prometheus text format
@@ -52,11 +55,13 @@
 //! ```
 
 pub mod api;
+pub mod frames;
 pub mod http;
 pub mod json;
 pub mod stepper;
 
 pub use api::Api;
+pub use frames::StreamConfig;
 pub use http::{Request, Response};
 pub use json::Json;
 pub use stepper::{ServiceError, Stepper, StepperRequest};
@@ -80,15 +85,31 @@ pub struct ServerConfig {
     /// Default snapshot stride for sessions that don't specify one
     /// (how often `GET ...?iter=` history is recorded).
     pub snapshot_every: usize,
+    /// Maximum concurrent stream subscribers across all sessions;
+    /// subscribes beyond it get HTTP 429. Note each streaming client
+    /// also pins one HTTP worker slot for the stream's lifetime.
+    pub max_streams: usize,
+    /// Maximum concurrent stream subscribers on one session.
+    pub max_streams_per_session: usize,
+    /// Per-subscriber frame queue bound (frames beyond it are dropped
+    /// and the client resyncs via keyframe).
+    pub stream_queue: usize,
+    /// Emit a stream keyframe after this many delta frames.
+    pub keyframe_every: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
+        let streams = StreamConfig::default();
         ServerConfig {
             addr: "127.0.0.1:7878".to_string(),
             threads: 4,
             max_sessions: 64,
             snapshot_every: 25,
+            max_streams: streams.max_global,
+            max_streams_per_session: streams.max_per_session,
+            stream_queue: streams.queue_frames,
+            keyframe_every: streams.keyframe_every,
         }
     }
 }
@@ -116,7 +137,13 @@ impl Server {
         // accepted streams are switched back to blocking mode.
         listener.set_nonblocking(true).context("set_nonblocking")?;
         let local_addr = listener.local_addr().context("local_addr")?;
-        let stepper = Stepper::spawn(cfg.max_sessions.max(1));
+        let streams = StreamConfig {
+            max_per_session: cfg.max_streams_per_session.max(1),
+            max_global: cfg.max_streams.max(1),
+            queue_frames: cfg.stream_queue.max(1),
+            keyframe_every: cfg.keyframe_every.max(1),
+        };
+        let stepper = Stepper::spawn_with(cfg.max_sessions.max(1), streams);
         Ok(Server {
             listener,
             local_addr,

@@ -1,7 +1,7 @@
 //! The stepping thread: a dedicated background thread that owns the
-//! [`SessionManager`] and continuously sweeps
-//! [`SessionManager::step_all_detailed`], while HTTP handlers talk to
-//! it through a command/reply channel.
+//! [`SessionManager`] and the streaming [`FrameHub`], continuously
+//! sweeping sessions while HTTP handlers talk to it through a
+//! command/reply channel.
 //!
 //! [`crate::session::Session`] is deliberately `!Send`, so sessions
 //! are created *on* this thread (the [`SessionBuilder`] spec crosses
@@ -10,6 +10,28 @@
 //! request drains before each sweep — so a slow client can never
 //! back-pressure the optimisation, and stepping never blocks on
 //! socket I/O.
+//!
+//! # Fair scheduling
+//!
+//! A sweep is no longer one-step-per-session round-robin: each session
+//! gets a **step budget** for the sweep, computed from its share of a
+//! fixed per-sweep time budget. Shares are weighted by subscriber
+//! count (watched sessions feel interactive) and divided by the
+//! session's recent per-step cost (an EWMA over the engine's own
+//! `phase_micros` clock), so a million-point session burning 50 ms per
+//! step gets one step per sweep while a toy session next to it gets
+//! many — neither starves the other, and request latency stays bounded
+//! by roughly [`SWEEP_BUDGET_MICROS`].
+//!
+//! When nothing stepped at all (no sessions, or all paused/failed),
+//! the loop **parks** in a blocking `recv` instead of spinning over
+//! empty queues; any request — including a stream subscribe — wakes
+//! it.
+//!
+//! After each sweep the loop broadcasts one encoded frame per watched
+//! session through the [`FrameHub`]; subscribers consume them from
+//! bounded queues on the HTTP workers, so a stalled viewer drops
+//! frames rather than stalling this thread.
 //!
 //! Known trade-off: `POST /sessions` builds the session (KNN tables,
 //! calibration, optional PCA) on this thread, so a very large create
@@ -21,14 +43,25 @@
 
 use crate::engine::PhaseMicros;
 use crate::metrics::probe::QualityReport;
+use crate::server::frames::{FrameHub, StreamConfig, StreamSubscription, SubscribeError};
 use crate::session::{Command, Session, SessionBuilder, SessionId, SessionManager};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
-use std::time::Duration;
 
-/// How long the loop naps when no session is actively stepping.
-const IDLE_WAIT: Duration = Duration::from_millis(25);
+/// Per-sweep stepping time budget, µs: the fair scheduler hands each
+/// session a slice of this, so a full sweep (and therefore request
+/// latency) stays near this bound no matter how many cheap sessions
+/// want to run.
+const SWEEP_BUDGET_MICROS: f64 = 20_000.0;
+/// Hard cap on steps one session may take in one sweep, whatever its
+/// budget works out to (keeps a mis-measured tiny session from
+/// monopolising a sweep).
+const MAX_STEPS_PER_SWEEP: u32 = 64;
+/// EWMA weight of the newest per-step cost sample.
+const COST_EWMA_NEW: f64 = 0.3;
+/// Assumed per-step cost before the first measurement, µs.
+const DEFAULT_STEP_COST_US: f64 = 500.0;
 
 /// A service-level failure, carrying the HTTP status it maps to.
 #[derive(Clone, Debug)]
@@ -37,7 +70,8 @@ pub enum ServiceError {
     NotFound(String),
     /// Malformed or semantically invalid request payload.
     Invalid(String),
-    /// The `--max-sessions` capacity limit was hit.
+    /// The `--max-sessions` capacity limit was hit, or a stream
+    /// subscriber cap.
     Full(String),
     /// The stepper thread is gone or unresponsive.
     Unavailable(String),
@@ -79,6 +113,11 @@ pub struct EmbeddingFrame {
     pub data: Vec<f32>,
     /// `"live"` (current embedding) or `"snapshot"` (ring buffer).
     pub source: &'static str,
+    /// The engine's structural epoch for live frames (0 for
+    /// snapshots, whose identity is already pinned by `iter`). Feeds
+    /// the `ETag` so a same-iter poll after an insert/remove still
+    /// misses the cache.
+    pub version: u64,
 }
 
 /// Per-session state surfaced by `GET /sessions/:id/stats`.
@@ -124,12 +163,22 @@ pub struct ServiceMetrics {
     pub commands_queued: u64,
     pub sessions_created: u64,
     pub sessions_deleted: u64,
+    /// Live stream subscribers across all sessions.
+    pub stream_subscribers_total: usize,
+    /// `(id, live subscriber count)` per session with subscribers.
+    pub stream_subscribers: Vec<(u64, usize)>,
+    /// Frames enqueued to subscribers, ever.
+    pub frames_sent: u64,
+    /// Frames dropped by stream backpressure, ever.
+    pub frames_dropped: u64,
     /// `(id, iteration)` per live session.
     pub session_iters: Vec<(u64, usize)>,
     /// `(id, latest probe report)` per live session that has one.
     pub session_quality: Vec<(u64, QualityReport)>,
     /// `(id, cumulative phase split)` per live session.
     pub session_phase: Vec<(u64, PhaseMicros)>,
+    /// `(id, last scheduler step budget)` per live session.
+    pub session_budget: Vec<(u64, u32)>,
 }
 
 /// Everything needed to create a session on the stepper thread.
@@ -149,6 +198,9 @@ pub enum StepperRequest {
     List(Sender<Vec<SessionView>>),
     Delete(u64, Sender<ServiceResult<()>>),
     Metrics(Sender<ServiceMetrics>),
+    /// Open a frame stream on a session: the reply carries the
+    /// consumer half of a bounded broadcast queue.
+    Subscribe(u64, Sender<ServiceResult<StreamSubscription>>),
     Shutdown,
 }
 
@@ -160,6 +212,7 @@ const _: () = {
     assert_send::<StepperRequest>();
     assert_send::<SessionBuilder>();
     assert_send::<Command>();
+    assert_send::<StreamSubscription>();
 };
 
 /// Handle to a running stepper thread. Dropping it (or calling
@@ -170,14 +223,19 @@ pub struct Stepper {
 }
 
 impl Stepper {
-    /// Spawn the stepping thread. `max_sessions` bounds concurrent
-    /// sessions (creates beyond it are refused with
-    /// [`ServiceError::Full`]).
+    /// Spawn the stepping thread with default stream settings.
+    /// `max_sessions` bounds concurrent sessions (creates beyond it
+    /// are refused with [`ServiceError::Full`]).
     pub fn spawn(max_sessions: usize) -> Stepper {
+        Stepper::spawn_with(max_sessions, StreamConfig::default())
+    }
+
+    /// [`Stepper::spawn`] with explicit streaming limits.
+    pub fn spawn_with(max_sessions: usize, streams: StreamConfig) -> Stepper {
         let (tx, rx) = mpsc::channel();
         let join = std::thread::Builder::new()
             .name("funcsne-stepper".to_string())
-            .spawn(move || run_loop(rx, max_sessions))
+            .spawn(move || run_loop(rx, max_sessions, streams))
             .expect("spawn stepper thread");
         Stepper { tx, join: Some(join) }
     }
@@ -210,11 +268,17 @@ struct SessionMeta {
     /// (otherwise resume would be silently re-paused every sweep).
     budget_fired: bool,
     last_error: Option<String>,
+    /// EWMA of per-step cost in µs, measured from the engine's own
+    /// `phase_micros` clock (0 until the first measured step).
+    cost_ewma_us: f64,
+    /// The step budget the scheduler granted last sweep (gauge).
+    budget: u32,
 }
 
 struct Service {
     mgr: SessionManager,
     meta: BTreeMap<u64, SessionMeta>,
+    hub: FrameHub,
     max_sessions: usize,
     sweeps: u64,
     steps: u64,
@@ -224,10 +288,11 @@ struct Service {
     sessions_deleted: u64,
 }
 
-fn run_loop(rx: Receiver<StepperRequest>, max_sessions: usize) {
+fn run_loop(rx: Receiver<StepperRequest>, max_sessions: usize, streams: StreamConfig) {
     let mut svc = Service {
         mgr: SessionManager::new(),
         meta: BTreeMap::new(),
+        hub: FrameHub::new(streams),
         max_sessions,
         sweeps: 0,
         steps: 0,
@@ -241,42 +306,27 @@ fn run_loop(rx: Receiver<StepperRequest>, max_sessions: usize) {
         //    one sweep, and bursts don't queue behind stepping.
         loop {
             match rx.try_recv() {
-                Ok(StepperRequest::Shutdown) => return,
+                Ok(StepperRequest::Shutdown) => return svc.hub.drop_all(),
                 Ok(req) => svc.handle(req),
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return,
+                Err(TryRecvError::Disconnected) => return svc.hub.drop_all(),
             }
         }
-        // 2. One fair sweep over every live session.
-        let outcome = svc.mgr.step_all_detailed();
-        svc.sweeps += 1;
-        svc.steps += outcome.stepped as u64;
-        for (id, err) in &outcome.failed {
-            svc.step_failures += 1;
-            if let Some(meta) = svc.meta.get_mut(&id.0) {
-                meta.last_error = Some(err.clone());
-            }
-        }
-        // A session that is unpaused and absent from `failed` stepped
-        // cleanly this sweep — a recorded error is stale, clear it
-        // (e.g. the client fixed the cause and sent `resume`).
-        for (id, meta) in svc.meta.iter_mut() {
-            if meta.last_error.is_some()
-                && !outcome.failed.iter().any(|(fid, _)| fid.0 == *id)
-                && svc.mgr.get(SessionId(*id)).is_some_and(|s| !s.is_paused())
-            {
-                meta.last_error = None;
-            }
-        }
+        // 2. One fair, budgeted sweep over every live session.
+        let stepped = svc.sweep();
         // 3. Enforce per-session iteration budgets.
         svc.enforce_budgets();
-        // 4. Nothing running? Block briefly instead of spinning.
-        if outcome.stepped == 0 {
-            match rx.recv_timeout(IDLE_WAIT) {
-                Ok(StepperRequest::Shutdown) => return,
+        // 4. Push one frame per watched session.
+        svc.broadcast_frames();
+        // 5. Fully idle (no session stepped — none exist, or all are
+        //    paused/failed)? Park until a request arrives instead of
+        //    spinning over empty queues. Any request wakes the loop,
+        //    including Subscribe and Enqueue(resume).
+        if stepped == 0 {
+            match rx.recv() {
+                Ok(StepperRequest::Shutdown) => return svc.hub.drop_all(),
                 Ok(req) => svc.handle(req),
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                Err(_) => return svc.hub.drop_all(),
             }
         }
     }
@@ -321,6 +371,7 @@ impl Service {
                 let result = match self.mgr.remove(SessionId(id)) {
                     Some(_) => {
                         self.meta.remove(&id);
+                        self.hub.drop_session(id);
                         self.sessions_deleted += 1;
                         Ok(())
                     }
@@ -330,6 +381,9 @@ impl Service {
             }
             StepperRequest::Metrics(reply) => {
                 let _ = reply.send(self.metrics());
+            }
+            StepperRequest::Subscribe(id, reply) => {
+                let _ = reply.send(self.subscribe(id));
             }
             StepperRequest::Shutdown => unreachable!("handled by the loop"),
         }
@@ -348,8 +402,13 @@ impl Service {
             .build()
             .map_err(|e| ServiceError::Invalid(format!("session build failed: {e:?}")))?;
         let sid = self.mgr.add(session);
-        let meta =
-            SessionMeta { max_iters: spec.max_iters, budget_fired: false, last_error: None };
+        let meta = SessionMeta {
+            max_iters: spec.max_iters,
+            budget_fired: false,
+            last_error: None,
+            cost_ewma_us: 0.0,
+            budget: 0,
+        };
         self.meta.insert(sid.0, meta);
         self.sessions_created += 1;
         let session = self.mgr.get(sid).expect("just inserted");
@@ -360,13 +419,14 @@ impl Service {
         let session = self.mgr.get(SessionId(id)).ok_or_else(|| not_found(id))?;
         match iter {
             None => {
-                let y = session.embedding();
+                let (at, version, y) = session.frame_source();
                 Ok(EmbeddingFrame {
-                    iter: session.iterations(),
+                    iter: at,
                     n: y.n(),
                     d: y.d(),
                     data: y.data().to_vec(),
                     source: "live",
+                    version,
                 })
             }
             Some(at) => match session.snapshots().at_or_before(at) {
@@ -376,6 +436,7 @@ impl Service {
                     d: snap.y.d(),
                     data: snap.y.data().to_vec(),
                     source: "snapshot",
+                    version: 0,
                 }),
                 None => Err(ServiceError::NotFound(format!(
                     "no snapshot at or before iteration {at} for session {id} \
@@ -383,6 +444,125 @@ impl Service {
                     session.snapshots().len()
                 ))),
             },
+        }
+    }
+
+    fn subscribe(&mut self, id: u64) -> ServiceResult<StreamSubscription> {
+        if self.mgr.get(SessionId(id)).is_none() {
+            return Err(not_found(id));
+        }
+        let sub = self.hub.subscribe(id).map_err(|e| match e {
+            SubscribeError::SessionFull => {
+                ServiceError::Full(format!("session {id} is at its stream subscriber limit"))
+            }
+            SubscribeError::GlobalFull => {
+                ServiceError::Full("server-wide stream subscriber limit reached".to_string())
+            }
+        })?;
+        // Broadcast right away so the new subscriber's first frame (a
+        // keyframe — subscribe forces one) arrives even if the session
+        // is paused and the sweep loop is parked.
+        if let Some(session) = self.mgr.get(SessionId(id)) {
+            let (iter, version, y) = session.frame_source();
+            self.hub.broadcast(id, iter as u64, y, version);
+        }
+        Ok(sub)
+    }
+
+    /// One fair sweep: grant each session a step budget proportional
+    /// to `(1 + subscribers) / recent step cost` and bounded so the
+    /// whole sweep stays near [`SWEEP_BUDGET_MICROS`]. Every session
+    /// gets at least one `step()` call per sweep, so paused sessions
+    /// still drain queued commands. Returns total steps taken.
+    fn sweep(&mut self) -> u64 {
+        self.sweeps += 1;
+        let ids = self.mgr.ids();
+        if ids.is_empty() {
+            return 0;
+        }
+        // Plan first (immutable pass): weights need the hub, budgets
+        // need the cost EWMAs.
+        let mut plan: Vec<(u64, f64)> = Vec::with_capacity(ids.len());
+        let mut total_weight = 0.0f64;
+        for sid in &ids {
+            let weight = 1.0 + self.hub.subscriber_count(sid.0) as f64;
+            plan.push((sid.0, weight));
+            total_weight += weight;
+        }
+        let mut total_steps = 0u64;
+        for (id, weight) in plan {
+            let cost = self
+                .meta
+                .get(&id)
+                .map(|m| m.cost_ewma_us)
+                .filter(|&c| c > 0.0)
+                .unwrap_or(DEFAULT_STEP_COST_US)
+                .max(1.0);
+            let share = SWEEP_BUDGET_MICROS * weight / total_weight;
+            let budget = ((share / cost).round() as i64).clamp(1, i64::from(MAX_STEPS_PER_SWEEP))
+                as u32;
+            // One-shot iteration budget: stop *at* max_iters so
+            // `enforce_budgets` pauses exactly there (a multi-step
+            // sweep must not overshoot the way one-step-per-sweep
+            // never could).
+            let iter_cap = self
+                .meta
+                .get(&id)
+                .filter(|m| !m.budget_fired)
+                .map_or(0, |m| m.max_iters);
+            let Some(session) = self.mgr.get_mut(SessionId(id)) else { continue };
+            let before_us = session.stats().phase_micros.total();
+            let mut steps_here = 0u64;
+            let mut failure: Option<String> = None;
+            for _ in 0..budget {
+                if iter_cap > 0 && session.iterations() >= iter_cap {
+                    break;
+                }
+                match session.step() {
+                    Ok(true) => steps_here += 1,
+                    Ok(false) => break, // paused: queue drained, nothing to run
+                    Err(e) => {
+                        session.force_pause();
+                        failure = Some(e.to_string());
+                        break;
+                    }
+                }
+            }
+            let after_us = session.stats().phase_micros.total();
+            if let Some(meta) = self.meta.get_mut(&id) {
+                meta.budget = budget;
+                if steps_here > 0 {
+                    let per_step = after_us.saturating_sub(before_us) as f64 / steps_here as f64;
+                    meta.cost_ewma_us = if meta.cost_ewma_us > 0.0 {
+                        meta.cost_ewma_us * (1.0 - COST_EWMA_NEW) + per_step * COST_EWMA_NEW
+                    } else {
+                        per_step
+                    };
+                    // A clean step means any recorded error is stale
+                    // (e.g. the client fixed the cause and resumed).
+                    meta.last_error = None;
+                }
+                if let Some(err) = failure {
+                    self.step_failures += 1;
+                    meta.last_error = Some(err);
+                }
+            }
+            total_steps += steps_here;
+        }
+        self.steps += total_steps;
+        total_steps
+    }
+
+    /// Encode and fan out one frame per session that has subscribers.
+    fn broadcast_frames(&mut self) {
+        for sid in self.mgr.ids() {
+            if !self.hub.wants_frames(sid.0) {
+                continue;
+            }
+            if let Some(session) = self.mgr.get(sid) {
+                let (iter, version, y) = session.frame_source();
+                self.hub.broadcast(sid.0, iter as u64, y, version);
+            }
         }
     }
 
@@ -423,6 +603,10 @@ impl Service {
             commands_queued: self.commands_queued,
             sessions_created: self.sessions_created,
             sessions_deleted: self.sessions_deleted,
+            stream_subscribers_total: self.hub.total_subscribers(),
+            stream_subscribers: self.hub.subscriber_counts(),
+            frames_sent: self.hub.frames_sent(),
+            frames_dropped: self.hub.frames_dropped(),
             session_iters: self
                 .mgr
                 .ids()
@@ -444,6 +628,12 @@ impl Service {
                 .filter_map(|sid| {
                     self.mgr.get(sid).map(|s| (sid.0, s.stats().phase_micros))
                 })
+                .collect(),
+            session_budget: self
+                .mgr
+                .ids()
+                .into_iter()
+                .filter_map(|sid| self.meta.get(&sid.0).map(|m| (sid.0, m.budget)))
                 .collect(),
         }
     }
@@ -471,8 +661,9 @@ fn not_found(id: u64) -> ServiceError {
 mod tests {
     use super::*;
     use crate::data::datasets;
+    use crate::server::frames::{decode, FrameDecoder, NextFrame};
     use crate::session::Session;
-    use std::time::Instant;
+    use std::time::{Duration, Instant};
 
     fn spec(seed: u64, max_iters: usize) -> Box<CreateSpec> {
         let ds = datasets::blobs(80, 5, 3, 0.5, 8.0, seed);
@@ -563,7 +754,9 @@ mod tests {
         let v = ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap();
         assert!((6..=7).contains(&v.iter), "stopped at the budget, got {}", v.iter);
         // A budget-paused session still drains queued commands, so it
-        // stays steerable (and resumable) — never deadlocked.
+        // stays steerable (and resumable) — never deadlocked. This also
+        // exercises the idle park: with its only session paused the
+        // loop is blocked in `recv`, and the Enqueue must wake it.
         ask(&tx, |r| StepperRequest::Enqueue(id, Command::SetRepulsion(1.5), r)).unwrap();
         wait_until(
             || ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap().repulsion == 1.5,
@@ -597,6 +790,74 @@ mod tests {
         tx.send(StepperRequest::Metrics(mtx)).unwrap();
         let m = mrx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(m.sessions, 0);
+        stepper.shutdown();
+    }
+
+    #[test]
+    fn subscribe_unknown_session_is_404() {
+        let stepper = Stepper::spawn(4);
+        let tx = stepper.sender();
+        let err = ask(&tx, |r| StepperRequest::Subscribe(99, r)).unwrap_err();
+        assert_eq!(err.status(), 404);
+        stepper.shutdown();
+    }
+
+    #[test]
+    fn paused_session_still_delivers_first_keyframe() {
+        let stepper = Stepper::spawn(4);
+        let tx = stepper.sender();
+        // max_iters 3: the session pauses almost immediately, after
+        // which the loop parks. Subscribe must still yield a keyframe.
+        let id = ask(&tx, |r| StepperRequest::Create(spec(5, 3), r)).unwrap().id;
+        wait_until(
+            || ask(&tx, |r| StepperRequest::Stats(id, r)).unwrap().paused,
+            "budget pause",
+        );
+        let mut sub = ask(&tx, |r| StepperRequest::Subscribe(id, r)).unwrap();
+        let frame = match sub.next(Duration::from_secs(10)) {
+            NextFrame::Frame(bytes) => decode(&bytes).unwrap(),
+            _ => panic!("expected an immediate keyframe"),
+        };
+        assert!(frame.keyframe);
+        assert_eq!((frame.n, frame.d), (80, 2));
+        let mut dec = FrameDecoder::new();
+        dec.apply(&frame).unwrap();
+        assert_eq!(dec.coords().len(), 160);
+        stepper.shutdown();
+    }
+
+    #[test]
+    fn stream_follows_a_stepping_session() {
+        let stepper = Stepper::spawn(4);
+        let tx = stepper.sender();
+        let id = ask(&tx, |r| StepperRequest::Create(spec(6, 0), r)).unwrap().id;
+        let mut sub = ask(&tx, |r| StepperRequest::Subscribe(id, r)).unwrap();
+        let mut dec = FrameDecoder::new();
+        let mut frames = 0usize;
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while frames < 5 {
+            assert!(Instant::now() < deadline, "timed out collecting frames");
+            match sub.next(Duration::from_millis(250)) {
+                NextFrame::Frame(bytes) => {
+                    dec.apply(&decode(&bytes).unwrap()).unwrap();
+                    frames += 1;
+                }
+                NextFrame::Idle => {}
+                NextFrame::Closed => panic!("stream closed early"),
+            }
+        }
+        assert!(dec.ready());
+        assert!(dec.iter() > 0, "frames track live iterations");
+        // Deleting the session closes the stream.
+        ask(&tx, |r| StepperRequest::Delete(id, r)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            assert!(Instant::now() < deadline, "timed out waiting for close");
+            match sub.next(Duration::from_millis(250)) {
+                NextFrame::Closed => break,
+                NextFrame::Frame(_) | NextFrame::Idle => {}
+            }
+        }
         stepper.shutdown();
     }
 }

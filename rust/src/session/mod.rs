@@ -396,6 +396,16 @@ impl Session {
         self.backend.name()
     }
 
+    /// Everything a frame producer needs in one borrow: the current
+    /// iteration, the engine's structural epoch (bumped by insert /
+    /// remove / implode — see [`FuncSne::structure_version`]) and the
+    /// live embedding. Used by the server's streaming-frame subsystem
+    /// ([`crate::server::frames`]) to encode keyframe/delta frames
+    /// without copying the coordinates first.
+    pub fn frame_source(&self) -> (usize, u64, &Matrix) {
+        (self.engine.iter, self.engine.structure_version(), &self.engine.y)
+    }
+
     /// The PCA basis fitted by the builder's pre-reduction, if any
     /// (incoming dynamic rows are projected through it).
     pub fn pca(&self) -> Option<&Pca> {

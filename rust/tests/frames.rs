@@ -1,0 +1,214 @@
+//! Property-style tests for the binary streaming frame codec: random
+//! shapes and grids round-trip within half a quantization cell, delta
+//! chains survive quiet iterations and resync late joiners via
+//! keyframes, corrupt or truncated buffers are rejected, and the
+//! n=100k keyframe stays inside the size budget.
+
+use funcsne::data::Matrix;
+use funcsne::server::frames::codec::FIXED_HEADER;
+use funcsne::server::frames::{decode, FrameDecoder, FrameEncoder};
+
+/// Deterministic 64-bit LCG so every run explores the same shapes.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform in [0, 1).
+    fn unit(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) / ((1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in lo..=hi.
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + ((self.next_u64() >> 33) as usize) % (hi - lo + 1)
+    }
+}
+
+fn random_matrix(rng: &mut Lcg, n: usize, d: usize, scale: f32, offset: f32) -> Matrix {
+    let mut m = Matrix::zeros(n, d);
+    for r in 0..n {
+        for c in 0..d {
+            m.row_mut(r)[c] = offset + (rng.unit() - 0.5) * scale;
+        }
+    }
+    m
+}
+
+#[test]
+fn keyframes_round_trip_over_random_shapes_and_grids() {
+    let mut rng = Lcg(0xFEED_5EED);
+    for trial in 0..25 {
+        let n = rng.range(1, 300);
+        let d = rng.range(1, 6);
+        let scale = [0.05_f32, 1.0, 40.0, 1000.0][rng.range(0, 3)];
+        let offset = (rng.unit() - 0.5) * 1000.0;
+        let y = random_matrix(&mut rng, n, d, scale, offset);
+
+        let mut enc = FrameEncoder::new(30);
+        let bytes = enc.encode(trial as u64, &y, 0).expect("first frame is a keyframe");
+        let frame = decode(&bytes).expect("well-formed keyframe");
+        assert!(frame.keyframe);
+        assert_eq!((frame.n, frame.d), (n, d));
+        assert_eq!(bytes.len(), FIXED_HEADER + 8 * d + n * d * 2, "exact wire size");
+
+        let mut dec = FrameDecoder::new();
+        dec.apply(&frame).expect("keyframe applies to a fresh decoder");
+        let coords = dec.coords();
+        for r in 0..n {
+            for c in 0..d {
+                let truth = y.row(r)[c];
+                let got = coords[r * d + c];
+                let ax = frame.bbox[c];
+                // Half a grid cell, plus f32 slack proportional to the
+                // grid's magnitude (dequantize does ~3 rounded ops).
+                let tol = 0.5 * ax.cell() + ax.min.abs().max(ax.max.abs()) * 5e-6 + 1e-6;
+                assert!(
+                    (got - truth).abs() <= tol,
+                    "trial {trial} point ({r},{c}): |{got} - {truth}| > {tol}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn evolving_stream_resyncs_a_late_joiner_at_the_next_keyframe() {
+    let mut rng = Lcg(0xA11CE);
+    let n = 120;
+    let mut y = random_matrix(&mut rng, n, 2, 20.0, 0.0);
+    let mut enc = FrameEncoder::new(4);
+    let mut full = FrameDecoder::new();
+    let mut late = FrameDecoder::new();
+    let mut late_synced = false;
+    let mut frames_seen = 0usize;
+    let mut keyframes_seen = 0usize;
+
+    for iter in 0..40u64 {
+        // Random-walk a random subset; some iterations move nothing at
+        // all, which must not break the delta chain.
+        if iter % 7 != 3 {
+            for _ in 0..rng.range(1, 12) {
+                let p = rng.range(0, n - 1);
+                y.row_mut(p)[rng.range(0, 1)] += (rng.unit() - 0.5) * 0.8;
+            }
+        }
+        let Some(bytes) = enc.encode(iter, &y, 0) else { continue };
+        let frame = decode(&bytes).expect("encoder output decodes");
+        frames_seen += 1;
+        keyframes_seen += usize::from(frame.keyframe);
+        full.apply(&frame).expect("uninterrupted stream always chains");
+
+        // The late joiner tunes in from iteration 9: it must discard
+        // deltas (they don't chain from nothing) until a keyframe, then
+        // track the full decoder exactly.
+        if iter >= 9 {
+            if !late_synced && frame.keyframe {
+                late_synced = true;
+            }
+            if late_synced {
+                late.apply(&frame).expect("post-resync frames chain");
+                assert_eq!(late.iter(), full.iter());
+                assert_eq!(late.coords(), full.coords(), "late joiner diverged at iter {iter}");
+            } else {
+                assert!(!frame.keyframe);
+                assert!(late.apply(&frame).is_err(), "orphan delta must be rejected");
+            }
+        }
+    }
+    assert!(frames_seen >= 10, "expected a real stream, saw {frames_seen} frames");
+    assert!(keyframes_seen >= 2, "keyframe_every=4 must yield periodic resyncs");
+    assert!(late_synced, "a keyframe must have arrived after iteration 9");
+    assert_eq!(full.n(), n);
+}
+
+#[test]
+fn quiet_iterations_do_not_break_the_delta_chain() {
+    let mut rng = Lcg(77);
+    let mut y = random_matrix(&mut rng, 50, 3, 10.0, 0.0);
+    let mut enc = FrameEncoder::new(100);
+    let mut dec = FrameDecoder::new();
+
+    let key = enc.encode(1, &y, 0).expect("keyframe");
+    dec.apply(&decode(&key).unwrap()).unwrap();
+
+    // Iterations 2..=4 move nothing: the encoder emits no frames.
+    for iter in 2..=4u64 {
+        assert!(enc.encode(iter, &y, 0).is_none(), "no motion → no frame at iter {iter}");
+    }
+
+    // The next real delta must chain from the last *emitted* frame
+    // (iter 1), not from the silently skipped iterations. The move is
+    // many grid cells but stays inside the padded bbox.
+    y.row_mut(13)[0] += 0.05;
+    let delta = decode(&enc.encode(5, &y, 0).expect("motion → delta")).unwrap();
+    assert!(!delta.keyframe);
+    assert_eq!(delta.base_iter, 1);
+    dec.apply(&delta).expect("delta after quiet iterations still chains");
+    assert_eq!(dec.iter(), 5);
+}
+
+#[test]
+fn truncated_and_corrupt_frames_are_rejected() {
+    let mut rng = Lcg(0xBAD);
+    let mut y = random_matrix(&mut rng, 40, 2, 8.0, 0.0);
+    let mut enc = FrameEncoder::new(30);
+    let key = enc.encode(1, &y, 0).expect("keyframe");
+    y.row_mut(7)[1] += 0.05;
+    let delta = enc.encode(2, &y, 0).expect("delta");
+    assert!(!decode(&delta).unwrap().keyframe);
+
+    for frame in [&key, &delta] {
+        // Every strict prefix must fail: payload lengths are exact.
+        for cut in 0..frame.len() {
+            assert!(decode(&frame[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        // Trailing garbage also breaks the exact-length contract.
+        let mut padded = frame.clone();
+        padded.extend_from_slice(&[0, 1, 2]);
+        assert!(decode(&padded).is_err(), "oversized frame accepted");
+    }
+
+    let corrupt = |at: usize, val: &[u8]| {
+        let mut bad = key.clone();
+        bad[at..at + val.len()].copy_from_slice(val);
+        bad
+    };
+    assert!(decode(&corrupt(0, b"XSNE")).is_err(), "bad magic");
+    assert!(decode(&corrupt(4, &[9])).is_err(), "future version");
+    assert!(decode(&corrupt(6, &0u16.to_le_bytes())).is_err(), "d = 0");
+    assert!(decode(&corrupt(8, &9999u32.to_le_bytes())).is_err(), "inflated n");
+    assert!(decode(&corrupt(12, &39u32.to_le_bytes())).is_err(), "keyframe changed != n");
+    assert!(decode(&corrupt(24, &77u64.to_le_bytes())).is_err(), "keyframe base_iter != iter");
+    assert!(
+        decode(&corrupt(FIXED_HEADER, &f32::NAN.to_le_bytes())).is_err(),
+        "NaN bbox min"
+    );
+    assert!(
+        decode(&corrupt(FIXED_HEADER, &1.0e9f32.to_le_bytes())).is_err(),
+        "inverted bbox (min > max)"
+    );
+
+    // A delta whose first changed index is out of 0..n.
+    let d = 2usize;
+    let payload_at = FIXED_HEADER + 8 * d;
+    let mut bad = delta.clone();
+    bad[payload_at..payload_at + 4].copy_from_slice(&1_000u32.to_le_bytes());
+    assert!(decode(&bad).is_err(), "delta index out of range");
+}
+
+#[test]
+fn keyframe_for_100k_points_fits_the_size_budget() {
+    let mut rng = Lcg(0x100_000);
+    let y = random_matrix(&mut rng, 100_000, 2, 50.0, 0.0);
+    let mut enc = FrameEncoder::new(30);
+    let bytes = enc.encode(0, &y, 0).expect("keyframe");
+    // 32-byte header + 2 axes × 8 bytes + 100k × 2 × u16 = 400 048.
+    assert_eq!(bytes.len(), FIXED_HEADER + 16 + 100_000 * 2 * 2);
+    assert!(bytes.len() <= 500 * 1024, "keyframe {} bytes blows the ~500 KB budget", bytes.len());
+    let frame = decode(&bytes).expect("decodes");
+    assert_eq!((frame.n, frame.d), (100_000, 2));
+}

@@ -4,6 +4,7 @@
 //! background, change hyperparameters mid-run, fetch embeddings and
 //! stats, and tear everything down.
 
+use funcsne::server::frames::{decode, FrameDecoder};
 use funcsne::server::json::{self, Json};
 use funcsne::server::{Server, ServerConfig, ServerHandle};
 use std::io::{Read, Write};
@@ -19,12 +20,24 @@ struct TestServer {
 
 impl TestServer {
     fn start(max_sessions: usize) -> TestServer {
-        let cfg = ServerConfig {
-            addr: "127.0.0.1:0".to_string(),
+        Self::start_cfg(ServerConfig {
             threads: 2,
             max_sessions,
+            ..Self::base_cfg()
+        })
+    }
+
+    /// Defaults shared by every test server: ephemeral port, fast
+    /// snapshot stride so history assertions don't wait long.
+    fn base_cfg() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
             snapshot_every: 4,
-        };
+            ..ServerConfig::default()
+        }
+    }
+
+    fn start_cfg(cfg: ServerConfig) -> TestServer {
         let server = Server::bind(cfg).expect("bind ephemeral port");
         let addr = server.local_addr();
         let handle = server.handle();
@@ -389,6 +402,330 @@ fn session_capacity_and_error_handling() {
     );
     let v = get_stats(addr, id as u64);
     assert_eq!(v.get("iter").and_then(Json::as_usize), Some(3));
+}
+
+/// One HTTP exchange with extra request headers; returns the raw
+/// header block alongside the status and body so callers can inspect
+/// response headers (ETag, Content-Type, ...).
+fn http_with_headers(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    extra: &[(&str, &str)],
+) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout");
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: funcsne\r\nConnection: close\r\n");
+    for (name, value) in extra {
+        req.push_str(&format!("{name}: {value}\r\n"));
+    }
+    req.push_str("Content-Length: 0\r\n\r\n");
+    stream.write_all(req.as_bytes()).expect("send request");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8_lossy(&raw);
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    let status: u16 =
+        head.split_whitespace().nth(1).expect("status code").parse().expect("numeric status");
+    (status, head.to_string(), body.to_string())
+}
+
+/// A chunked-transfer binary frame stream from `GET /sessions/:id/stream`.
+/// The server writes exactly one frame per HTTP chunk, so reading one
+/// chunk yields one codec frame.
+struct FrameStream {
+    stream: TcpStream,
+}
+
+impl FrameStream {
+    fn open(addr: SocketAddr, id: u64) -> FrameStream {
+        match Self::try_open(addr, id) {
+            (200, Some(fs)) => fs,
+            (status, _) => panic!("stream subscribe failed with status {status}"),
+        }
+    }
+
+    fn try_open(addr: SocketAddr, id: u64) -> (u16, Option<FrameStream>) {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(60))).expect("read timeout");
+        let req = format!(
+            "GET /sessions/{id}/stream HTTP/1.1\r\nHost: funcsne\r\nConnection: close\r\n\r\n"
+        );
+        stream.write_all(req.as_bytes()).expect("send request");
+        let mut raw = Vec::new();
+        let mut byte = [0u8; 1];
+        while !raw.ends_with(b"\r\n\r\n") {
+            stream.read_exact(&mut byte).expect("read header byte");
+            raw.push(byte[0]);
+        }
+        let head = String::from_utf8_lossy(&raw);
+        let status: u16 =
+            head.split_whitespace().nth(1).expect("status code").parse().expect("numeric status");
+        if status != 200 {
+            // Error replies are ordinary Content-Length responses.
+            let mut rest = Vec::new();
+            stream.read_to_end(&mut rest).ok();
+            return (status, None);
+        }
+        assert!(head.contains("Transfer-Encoding: chunked"), "{head}");
+        assert!(head.contains("Content-Type: application/octet-stream"), "{head}");
+        (200, Some(FrameStream { stream }))
+    }
+
+    /// Read one chunk (= one frame); `None` at the terminating
+    /// zero-length chunk (stream closed by the server).
+    fn next_frame(&mut self) -> Option<Vec<u8>> {
+        let mut line = Vec::new();
+        let mut byte = [0u8; 1];
+        while !line.ends_with(b"\r\n") {
+            self.stream.read_exact(&mut byte).expect("read chunk-size byte");
+            line.push(byte[0]);
+        }
+        let text = String::from_utf8_lossy(&line);
+        let len = usize::from_str_radix(text.trim(), 16).expect("hex chunk size");
+        let mut payload = vec![0u8; len + 2]; // chunk body + trailing CRLF
+        self.stream.read_exact(&mut payload).expect("read chunk body");
+        assert_eq!(&payload[len..], b"\r\n", "chunk must end with CRLF");
+        payload.truncate(len);
+        if len == 0 {
+            None
+        } else {
+            Some(payload)
+        }
+    }
+
+    fn collect(&mut self, n: usize) -> Vec<Vec<u8>> {
+        let mut frames = Vec::with_capacity(n);
+        while frames.len() < n {
+            match self.next_frame() {
+                Some(f) => frames.push(f),
+                None => break,
+            }
+        }
+        frames
+    }
+}
+
+/// Extract the value of an unlabelled Prometheus sample line.
+fn metric_value(metrics: &str, name: &str) -> f64 {
+    metrics
+        .lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse::<f64>().ok()))
+        .unwrap_or_else(|| panic!("metric {name} not found in:\n{metrics}"))
+}
+
+#[test]
+fn stream_two_subscribers_receive_identical_frames() {
+    // Two pinned stream workers + free slots for JSON polling.
+    let server = TestServer::start_cfg(ServerConfig {
+        threads: 4,
+        max_sessions: 4,
+        stream_queue: 64,
+        ..TestServer::base_cfg()
+    });
+    let addr = server.addr;
+
+    let spec = format!(
+        "{{\"rows\": {}, \"k_hd\": 10, \"k_ld\": 6, \"perplexity\": 6, \
+          \"jumpstart_iters\": 2, \"seed\": 11}}",
+        rows_json(60, 4)
+    );
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "create failed: {created}");
+    let id = created.get("id").and_then(Json::as_usize).expect("id") as u64;
+
+    // Subscribe A, then B; drain both concurrently so neither lags.
+    // The streams are returned from the reader threads and kept open
+    // so the subscriber gauge below still sees both clients.
+    let mut sub_a = FrameStream::open(addr, id);
+    let mut sub_b = FrameStream::open(addr, id);
+    let reader_a = std::thread::spawn(move || {
+        let frames = sub_a.collect(12);
+        (sub_a, frames)
+    });
+    let reader_b = std::thread::spawn(move || {
+        let frames = sub_b.collect(8);
+        (sub_b, frames)
+    });
+    let (_keep_a, a_frames) = reader_a.join().expect("reader A");
+    let (_keep_b, b_frames) = reader_b.join().expect("reader B");
+    assert_eq!(a_frames.len(), 12);
+    assert_eq!(b_frames.len(), 8);
+
+    // B's first frame is a keyframe (forced on subscribe) that A also
+    // received; from that point the byte sequences are identical.
+    let first_b = decode(&b_frames[0]).expect("decode B's first frame");
+    assert!(first_b.keyframe, "a new subscriber must start on a keyframe");
+    assert_eq!(first_b.n, 60);
+    assert_eq!(first_b.d, 2);
+    let start = a_frames
+        .iter()
+        .rposition(|f| f == &b_frames[0])
+        .expect("B's first keyframe must appear in A's stream");
+    let overlap = (a_frames.len() - start).min(b_frames.len());
+    assert!(overlap >= 3, "need overlapping frames to compare, got {overlap}");
+    for i in 0..overlap {
+        assert_eq!(a_frames[start + i], b_frames[i], "frame {i} after resync diverged");
+    }
+
+    // Every frame in each stream decodes and chains cleanly.
+    let mut dec = FrameDecoder::new();
+    for f in &b_frames {
+        let frame = decode(f).expect("decode frame");
+        dec.apply(&frame).expect("frames chain from the initial keyframe");
+    }
+    assert!(dec.ready());
+    assert_eq!(dec.n(), 60);
+    assert!(dec.coords().iter().all(|c| c.is_finite()));
+
+    // Streaming observability: both subscribers and traffic visible.
+    let (status, metrics) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(metric_value(&metrics, "funcsne_stream_subscribers ") >= 2.0, "{metrics}");
+    assert!(metric_value(&metrics, "funcsne_frames_sent_total ") > 0.0, "{metrics}");
+    assert!(
+        metrics.contains(&format!("funcsne_stream_session_subscribers{{id=\"{id}\"}}")),
+        "{metrics}"
+    );
+    assert!(metrics.contains(&format!("funcsne_step_budget{{id=\"{id}\"}}")), "{metrics}");
+}
+
+#[test]
+fn stream_stalled_subscriber_drops_frames_and_resyncs() {
+    // A tiny per-subscriber queue so a stalled client overflows fast.
+    let server = TestServer::start_cfg(ServerConfig {
+        threads: 3,
+        max_sessions: 4,
+        stream_queue: 2,
+        keyframe_every: 5,
+        ..TestServer::base_cfg()
+    });
+    let addr = server.addr;
+
+    // Enough points that frames (~8 KB keyframes) fill the OS socket
+    // buffers quickly once the client stops reading.
+    let spec = format!(
+        "{{\"rows\": {}, \"k_hd\": 10, \"k_ld\": 6, \"perplexity\": 6, \
+          \"jumpstart_iters\": 2, \"seed\": 13}}",
+        rows_json(2000, 4)
+    );
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "create failed: {created}");
+    let id = created.get("id").and_then(Json::as_usize).expect("id") as u64;
+
+    // Subscribe but never read: the worker stalls once the socket
+    // buffer fills, the bounded queue overflows, frames get dropped.
+    let mut stalled = FrameStream::open(addr, id);
+    wait_until(
+        || {
+            let (_, metrics) = http(addr, "GET", "/metrics", None);
+            metric_value(&metrics, "funcsne_frames_dropped_total ") > 0.0
+        },
+        "stalled subscriber to overflow its queue",
+    );
+
+    // The optimisation is unaffected by the stalled client.
+    let before = get_stats(addr, id).get("iter").and_then(Json::as_usize).unwrap();
+    wait_until(
+        || get_stats(addr, id).get("iter").and_then(Json::as_usize).unwrap() > before,
+        "stepping to continue despite a stalled subscriber",
+    );
+
+    // Resume reading: within a bounded number of frames a keyframe
+    // arrives (lag forces keyframes) and decodes standalone.
+    let mut resynced = false;
+    for _ in 0..20_000 {
+        let Some(bytes) = stalled.next_frame() else { break };
+        let frame = decode(&bytes).expect("every delivered frame is well-formed");
+        if frame.keyframe {
+            let mut dec = FrameDecoder::new();
+            dec.apply(&frame).expect("keyframe decodes standalone");
+            assert_eq!(dec.n(), 2000);
+            resynced = true;
+            break;
+        }
+    }
+    assert!(resynced, "no keyframe arrived after queue overflow");
+}
+
+#[test]
+fn stream_admission_control_limits_subscribers() {
+    let server = TestServer::start_cfg(ServerConfig {
+        threads: 3,
+        max_sessions: 4,
+        max_streams_per_session: 1,
+        ..TestServer::base_cfg()
+    });
+    let addr = server.addr;
+
+    let spec =
+        format!("{{\"rows\": {}, \"k_hd\": 8, \"perplexity\": 5}}", rows_json(40, 3));
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "{created}");
+    let id = created.get("id").and_then(Json::as_usize).expect("id") as u64;
+
+    // Unknown sessions are a 404, not an admission failure.
+    let (status, none) = FrameStream::try_open(addr, 999);
+    assert_eq!(status, 404);
+    assert!(none.is_none());
+
+    let _first = FrameStream::open(addr, id);
+    let (status, none) = FrameStream::try_open(addr, id);
+    assert_eq!(status, 429, "second subscriber must hit the per-session cap");
+    assert!(none.is_none());
+}
+
+#[test]
+fn stream_etag_revalidation_returns_304() {
+    let server = TestServer::start(4);
+    let addr = server.addr;
+
+    // A session that pauses itself so the embedding stops changing.
+    let spec = format!(
+        "{{\"rows\": {}, \"k_hd\": 8, \"perplexity\": 5, \"max_iters\": 3}}",
+        rows_json(40, 3)
+    );
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "{created}");
+    let id = created.get("id").and_then(Json::as_usize).expect("id") as u64;
+    wait_until(
+        || get_stats(addr, id).get("paused").and_then(Json::as_bool) == Some(true),
+        "max_iters pause",
+    );
+
+    let path = format!("/sessions/{id}/embedding");
+    let (status, head, body) = http_with_headers(addr, "GET", &path, &[]);
+    assert_eq!(status, 200, "{body}");
+    let etag = head
+        .lines()
+        .find_map(|l| l.strip_prefix("ETag: "))
+        .expect("embedding response must carry an ETag")
+        .trim()
+        .to_string();
+    assert!(etag.starts_with('"') && etag.ends_with('"'), "strong quoted ETag: {etag}");
+
+    // Same iteration, matching validator: 304 with an empty body.
+    let (status, head, body) =
+        http_with_headers(addr, "GET", &path, &[("If-None-Match", &etag)]);
+    assert_eq!(status, 304, "{head}");
+    assert!(body.is_empty(), "304 must not carry a body: {body:?}");
+    assert!(head.contains(&format!("ETag: {etag}")), "304 repeats the validator: {head}");
+
+    // Weak-compare and list forms also match.
+    let weak = format!("W/{etag}");
+    let (status, _, _) = http_with_headers(addr, "GET", &path, &[("If-None-Match", &weak)]);
+    assert_eq!(status, 304);
+    let list = format!("\"nope\", {etag}");
+    let (status, _, _) = http_with_headers(addr, "GET", &path, &[("If-None-Match", &list)]);
+    assert_eq!(status, 304);
+    let (status, _, _) = http_with_headers(addr, "GET", &path, &[("If-None-Match", "*")]);
+    assert_eq!(status, 304);
+
+    // A stale validator misses and the body comes back.
+    let (status, _, body) =
+        http_with_headers(addr, "GET", &path, &[("If-None-Match", "\"stale\"")]);
+    assert_eq!(status, 200);
+    assert!(!body.is_empty());
 }
 
 #[test]
