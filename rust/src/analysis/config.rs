@@ -1,0 +1,130 @@
+//! `lint.toml`: per-rule allowlists with mandatory justifications.
+//!
+//! The format rides on [`crate::config::toml_lite`] — one section per
+//! rule, one key per waived file, and the value is the human reason
+//! the waiver exists (empty justifications are rejected, so every
+//! waiver is documented at the point it is granted):
+//!
+//! ```toml
+//! [allow.hash_collections]
+//! util/rng.rs = "membership-only HashSet; never iterated"
+//! ```
+//!
+//! Paths are relative to the scanned source root (`rust/src`), with
+//! `/` separators. Unknown rule names are a hard error — a typo must
+//! not silently waive nothing.
+
+use crate::config::toml_lite;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::rules::RULE_NAMES;
+
+/// Parsed allowlists: `(rule, path) → justification`.
+#[derive(Clone, Debug, Default)]
+pub struct LintConfig {
+    allow: BTreeMap<(String, String), String>,
+}
+
+impl LintConfig {
+    /// A config that waives nothing.
+    pub fn empty() -> LintConfig {
+        LintConfig::default()
+    }
+
+    /// Load and validate a `lint.toml` file.
+    pub fn load(path: &Path) -> Result<LintConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read lint config {path:?}"))?;
+        LintConfig::from_text(&text).with_context(|| format!("parse lint config {path:?}"))
+    }
+
+    /// Parse config text. Every key must be `allow.<rule>.<path>` with
+    /// a known rule and a non-empty justification string.
+    pub fn from_text(text: &str) -> Result<LintConfig> {
+        let map = toml_lite::parse(text)?;
+        let mut allow = BTreeMap::new();
+        for (key, value) in &map {
+            let Some(rest) = key.strip_prefix("allow.") else {
+                bail!("unknown lint.toml key {key:?} (expected [allow.<rule>] sections)");
+            };
+            // Rule names contain no '.', so the first dot separates the
+            // rule from the path (paths may contain dots: `rng.rs`).
+            let Some((rule, path)) = rest.split_once('.') else {
+                bail!("malformed lint.toml key {key:?} (expected allow.<rule>.<path>)");
+            };
+            if !RULE_NAMES.contains(&rule) {
+                bail!("unknown lint rule {rule:?} in lint.toml (known: {RULE_NAMES:?})");
+            }
+            let why = match value {
+                toml_lite::Value::Str(s) => s.trim().to_string(),
+                other => bail!("waiver {key:?} must be a string justification, got {other:?}"),
+            };
+            if why.is_empty() {
+                bail!("waiver {key:?} has an empty justification; say why it is safe");
+            }
+            allow.insert((rule.to_string(), path.trim().to_string()), why);
+        }
+        Ok(LintConfig { allow })
+    }
+
+    /// The justification waiving `rule` for `path`, if one exists.
+    pub fn waiver(&self, rule: &str, path: &str) -> Option<&str> {
+        self.allow.get(&(rule.to_string(), path.to_string())).map(String::as_str)
+    }
+
+    /// Number of waiver entries.
+    pub fn len(&self) -> usize {
+        self.allow.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.allow.is_empty()
+    }
+
+    /// All waivers as `(rule, path, justification)`, sorted.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &str)> {
+        self.allow.iter().map(|((r, p), w)| (r.as_str(), p.as_str(), w.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_waivers_with_justifications() {
+        let cfg = LintConfig::from_text(
+            "[allow.hash_collections]\nutil/rng.rs = \"membership-only; never iterated\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.len(), 1);
+        assert!(cfg.waiver("hash_collections", "util/rng.rs").is_some());
+        assert!(cfg.waiver("hash_collections", "util/other.rs").is_none());
+        assert!(cfg.waiver("wall_clock", "util/rng.rs").is_none());
+    }
+
+    #[test]
+    fn unknown_rule_is_rejected() {
+        let err = LintConfig::from_text("[allow.no_such_rule]\na.rs = \"x\"\n").unwrap_err();
+        assert!(format!("{err:?}").contains("no_such_rule"));
+    }
+
+    #[test]
+    fn empty_justification_is_rejected() {
+        assert!(LintConfig::from_text("[allow.wall_clock]\na.rs = \"\"\n").is_err());
+        assert!(LintConfig::from_text("[allow.wall_clock]\na.rs = \"  \"\n").is_err());
+    }
+
+    #[test]
+    fn non_allow_sections_are_rejected() {
+        assert!(LintConfig::from_text("[general]\nstrict = true\n").is_err());
+    }
+
+    #[test]
+    fn empty_text_is_empty_config() {
+        let cfg = LintConfig::from_text("").unwrap();
+        assert!(cfg.is_empty());
+    }
+}

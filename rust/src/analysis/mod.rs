@@ -1,0 +1,168 @@
+//! Self-hosted static analysis: the determinism & concurrency linter
+//! behind the `funcsne lint` subcommand and the CI `lint` gate.
+//!
+//! The crate's central correctness claim — bitwise thread-count-
+//! invariant trajectories, which every golden parity test relies on —
+//! is easy to break silently: one `Instant::now()` in the engine, one
+//! iterated `HashMap` in a sharded pass, one unranked `Mutex` next to
+//! the FrameHub. This module machine-checks those conventions on every
+//! CI run instead of leaving them to review.
+//!
+//! Pipeline: [`scanner`] tokenizes each `.rs` file (comment-, string-
+//! and raw-string-aware, with a `#[cfg(test)]` mask), [`rules`] runs
+//! six token-level rules over the scan, and [`config`] applies
+//! per-rule waivers from the repo-root `lint.toml`. Everything is
+//! `std`-only and deterministic: files walk in sorted order and
+//! findings sort by (path, line, rule).
+//!
+//! The rules (see `docs/determinism.md` for the full rationale):
+//!
+//! 1. `wall_clock` — no `Instant`/`SystemTime` in deterministic modules
+//! 2. `hash_collections` — no `HashMap`/`HashSet` in deterministic modules
+//! 3. `safety_comment` — every `unsafe` carries a `// SAFETY:` line
+//! 4. `raw_sync` — no raw `std::sync` locks outside `runtime/sync.rs`
+//! 5. `server_panics` — no `.unwrap()`/`.expect("...")` on request paths
+//! 6. `f32_reduction` — no f32 `.sum()`/unordered `.fold()` in sharded code
+
+pub mod config;
+pub mod rules;
+pub mod scanner;
+
+pub use config::LintConfig;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub path: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Rule name (one of [`rules::RULE_NAMES`]).
+    pub rule: &'static str,
+    /// Human-readable explanation with the suggested fix.
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// The result of linting a tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Violations that survived the allowlist, sorted by
+    /// (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Findings suppressed by `lint.toml` waivers.
+    pub waived: usize,
+}
+
+/// Lint one source text as if it lived at `rel_path` under the root.
+/// Returns surviving findings plus the number waived by `cfg`.
+pub fn lint_source(rel_path: &str, text: &str, cfg: &LintConfig) -> (Vec<Finding>, usize) {
+    let scan = scanner::scan(text);
+    let raw = rules::check(rel_path, &scan);
+    let before = raw.len();
+    let kept: Vec<Finding> =
+        raw.into_iter().filter(|f| cfg.waiver(f.rule, &f.path).is_none()).collect();
+    let waived = before - kept.len();
+    (kept, waived)
+}
+
+/// Lint every `.rs` file under `src_root` (recursively, sorted order).
+pub fn lint_tree(src_root: &Path, cfg: &LintConfig) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)
+        .with_context(|| format!("walk source tree {src_root:?}"))?;
+    files.sort();
+    let mut report = LintReport::default();
+    for file in &files {
+        let rel = file
+            .strip_prefix(src_root)
+            .unwrap_or(file)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text =
+            std::fs::read_to_string(file).with_context(|| format!("read source {file:?}"))?;
+        let (mut findings, waived) = lint_source(&rel, &text, cfg);
+        report.findings.append(&mut findings);
+        report.waived += waived;
+        report.files_scanned += 1;
+    }
+    report.findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("read_dir {dir:?}"))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_flagged_only_in_deterministic_scope() {
+        let src = "use std::time::Instant;\nfn f() { let t = Instant::now(); }\n";
+        let cfg = LintConfig::empty();
+        let (in_engine, _) = lint_source("engine/funcsne.rs", src, &cfg);
+        assert_eq!(in_engine.len(), 2, "{in_engine:?}");
+        assert!(in_engine.iter().all(|f| f.rule == rules::WALL_CLOCK));
+        let (in_bench, _) = lint_source("util/timer.rs", src, &cfg);
+        assert!(in_bench.is_empty(), "timer shim may read the clock");
+    }
+
+    #[test]
+    fn waiver_suppresses_and_counts() {
+        let src = "fn f() { let s = std::collections::HashSet::new(); }\n";
+        let cfg = LintConfig::from_text(
+            "[allow.hash_collections]\nknn/a.rs = \"membership only\"\n",
+        )
+        .unwrap();
+        let (kept, waived) = lint_source("knn/a.rs", src, &cfg);
+        assert!(kept.is_empty());
+        assert_eq!(waived, 1);
+        let (kept_other, _) = lint_source("knn/b.rs", src, &cfg);
+        assert_eq!(kept_other.len(), 1, "waiver is per-path");
+    }
+
+    #[test]
+    fn findings_name_file_line_and_rule() {
+        let src = "fn f() {\n    let m = Mutex::new(0);\n}\n";
+        let (findings, _) = lint_source("server/x.rs", src, &LintConfig::empty());
+        assert_eq!(findings.len(), 1);
+        let text = findings[0].to_string();
+        assert!(text.contains("server/x.rs:2"), "{text}");
+        assert!(text.contains("raw_sync"), "{text}");
+    }
+
+    #[test]
+    fn test_code_is_exempt_from_production_rules() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let x: f32 = v.iter().sum(); }\n}\n";
+        let (findings, _) = lint_source("ld/a.rs", src, &LintConfig::empty());
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

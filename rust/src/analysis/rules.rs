@@ -1,0 +1,335 @@
+//! The six determinism/concurrency rules, run over a [`Scan`].
+//!
+//! Scopes are path prefixes relative to the source root (`rust/src`):
+//!
+//! * **deterministic** (`engine/`, `knn/`, `ld/`, `hd/`, `metrics/`,
+//!   `util/rng.rs`) — code whose outputs must be a pure function of
+//!   (seed, iteration, input), bitwise-invariant to thread count;
+//! * **sharded** (the same prefixes minus `util/rng.rs`) — code whose
+//!   reductions run per-shard and must combine in a fixed order;
+//! * **server** (`server/`) — request-handling code that must answer
+//!   with HTTP statuses, never by panicking a worker.
+//!
+//! Every rule reports identifiers from the token stream only, so
+//! strings, comments and fixture text can mention `Instant` or
+//! `HashMap` freely. Rules 1, 2, 5 and 6 skip `#[cfg(test)]` items;
+//! rules 3 and 4 apply to tests too (an unsound `unsafe` block or an
+//! unranked lock is no better for living in a test).
+
+use super::scanner::{Scan, Token, TokenKind};
+use super::Finding;
+
+/// Rule identifiers, as spelled in findings and `lint.toml` sections.
+pub const WALL_CLOCK: &str = "wall_clock";
+pub const HASH_COLLECTIONS: &str = "hash_collections";
+pub const SAFETY_COMMENT: &str = "safety_comment";
+pub const RAW_SYNC: &str = "raw_sync";
+pub const SERVER_PANICS: &str = "server_panics";
+pub const F32_REDUCTION: &str = "f32_reduction";
+
+/// Every rule name, for config validation and reporting.
+pub const RULE_NAMES: [&str; 6] =
+    [WALL_CLOCK, HASH_COLLECTIONS, SAFETY_COMMENT, RAW_SYNC, SERVER_PANICS, F32_REDUCTION];
+
+/// Module prefixes whose outputs must be thread-count-invariant.
+const DETERMINISTIC_PREFIXES: [&str; 5] = ["engine/", "knn/", "ld/", "hd/", "metrics/"];
+
+fn is_deterministic(rel: &str) -> bool {
+    rel == "util/rng.rs" || DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))
+}
+
+fn is_sharded(rel: &str) -> bool {
+    DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))
+}
+
+fn is_server(rel: &str) -> bool {
+    rel.starts_with("server/")
+}
+
+/// Run every rule over one scanned file. `rel` is the path relative to
+/// the source root, `/`-separated.
+pub fn check(rel: &str, scan: &Scan) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if is_deterministic(rel) {
+        wall_clock(rel, scan, &mut out);
+        hash_collections(rel, scan, &mut out);
+    }
+    safety_comment(rel, scan, &mut out);
+    if rel != "runtime/sync.rs" {
+        raw_sync(rel, scan, &mut out);
+    }
+    if is_server(rel) {
+        server_panics(rel, scan, &mut out);
+    }
+    if is_sharded(rel) {
+        f32_reduction(rel, scan, &mut out);
+    }
+    out
+}
+
+fn push(out: &mut Vec<Finding>, rel: &str, line: u32, rule: &'static str, message: String) {
+    out.push(Finding { path: rel.to_string(), line, rule, message });
+}
+
+fn is_word(tokens: &[Token], i: usize, word: &str) -> bool {
+    tokens.get(i).is_some_and(|t| t.kind == TokenKind::Ident && t.text == word)
+}
+
+fn is_punct(tokens: &[Token], i: usize, c: char) -> bool {
+    tokens
+        .get(i)
+        .is_some_and(|t| t.kind == TokenKind::Punct && t.text.len() == 1 && t.text.starts_with(c))
+}
+
+/// Rule 1: no wall-clock reads in deterministic modules.
+fn wall_clock(rel: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    for (i, t) in scan.tokens.iter().enumerate() {
+        if scan.in_test[i] || t.kind != TokenKind::Ident {
+            continue;
+        }
+        if t.text == "Instant" || t.text == "SystemTime" {
+            push(
+                out,
+                rel,
+                t.line,
+                WALL_CLOCK,
+                format!(
+                    "wall-clock `{}` in a deterministic module; route timing through the \
+                     `util::timer::PhaseClock` shim so engine outputs stay a pure function \
+                     of (seed, iteration)",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 2: no `HashMap`/`HashSet` in deterministic modules — their
+/// iteration order is randomized per process. Membership-only uses can
+/// be waived in `lint.toml` with a justification.
+fn hash_collections(rel: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    for (i, t) in scan.tokens.iter().enumerate() {
+        if scan.in_test[i] || t.kind != TokenKind::Ident {
+            continue;
+        }
+        if t.text == "HashMap" || t.text == "HashSet" {
+            push(
+                out,
+                rel,
+                t.line,
+                HASH_COLLECTIONS,
+                format!(
+                    "`{}` in a deterministic module risks iteration-order nondeterminism; \
+                     use `BTreeMap`/`BTreeSet`/`Vec`, or waive a membership-only use in \
+                     lint.toml",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 3: every `unsafe` must carry a `// SAFETY:` justification on
+/// the same line or in the contiguous comment block directly above.
+fn safety_comment(rel: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    for t in &scan.tokens {
+        if t.kind == TokenKind::Ident && t.text == "unsafe" && !has_safety_comment(scan, t.line) {
+            push(
+                out,
+                rel,
+                t.line,
+                SAFETY_COMMENT,
+                "`unsafe` without a `// SAFETY:` justification on the preceding line"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn has_safety_comment(scan: &Scan, line: u32) -> bool {
+    if scan.comment_on(line).is_some_and(|c| c.contains("SAFETY:")) {
+        return true;
+    }
+    // Walk the contiguous comment block directly above; code or blank
+    // lines end it (a code line's trailing comment still counts).
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        if scan.comment_on(l).is_some_and(|c| c.contains("SAFETY:")) {
+            return true;
+        }
+        let comment_only =
+            scan.comment_lines.contains_key(&l) && !scan.code_lines.contains(&l);
+        if !comment_only {
+            return false;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// Rule 4: no raw `std::sync` locks outside `runtime/sync.rs` — the
+/// wrappers there rank locks, detect order cycles and recover poison.
+fn raw_sync(rel: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    for t in &scan.tokens {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        if t.text == "Mutex" || t.text == "Condvar" || t.text == "RwLock" {
+            push(
+                out,
+                rel,
+                t.line,
+                RAW_SYNC,
+                format!(
+                    "raw `std::sync::{}`; use the checked wrappers in `runtime::sync` \
+                     (`DebugMutex`/`DebugCondvar`) so lock-order checking and poison \
+                     recovery stay centralized",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 5: no `.unwrap()` / `.expect("...")` on server request paths —
+/// failures must map to HTTP statuses, not worker panics. `.expect(`
+/// counts only when its argument is a string literal, which excludes
+/// same-named parser methods taking byte arguments.
+fn server_panics(rel: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    let toks = &scan.tokens;
+    for i in 0..toks.len() {
+        if scan.in_test[i] || !is_punct(toks, i, '.') {
+            continue;
+        }
+        if is_word(toks, i + 1, "unwrap") && is_punct(toks, i + 2, '(') && is_punct(toks, i + 3, ')')
+        {
+            push(
+                out,
+                rel,
+                toks[i + 1].line,
+                SERVER_PANICS,
+                "`.unwrap()` on a server request path; map the failure to a `ServiceError` \
+                 (HTTP 4xx/5xx) instead of panicking the worker"
+                    .to_string(),
+            );
+        } else if is_word(toks, i + 1, "expect")
+            && is_punct(toks, i + 2, '(')
+            && toks.get(i + 3).is_some_and(|t| t.kind == TokenKind::Str)
+        {
+            push(
+                out,
+                rel,
+                toks[i + 1].line,
+                SERVER_PANICS,
+                "`.expect(\"...\")` on a server request path; map the failure to a \
+                 `ServiceError` (HTTP 4xx/5xx) instead of panicking the worker"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Rule 6: no f32 `.sum()` / unordered `.fold()` reductions in sharded
+/// modules — float addition is non-associative, so an unordered
+/// combine varies with shard count. Folds whose combiner is `min`/
+/// `max` (associative and commutative) are exempt.
+fn f32_reduction(rel: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    let toks = &scan.tokens;
+    for i in 0..toks.len() {
+        if scan.in_test[i] || !is_punct(toks, i, '.') {
+            continue;
+        }
+        if is_word(toks, i + 1, "sum") {
+            if f32_near_call(toks, i) && !statement_has_minmax(toks, i) {
+                push(out, rel, toks[i + 1].line, F32_REDUCTION, f32_message("sum"));
+            }
+        } else if is_word(toks, i + 1, "fold") && is_punct(toks, i + 2, '(') {
+            let close = match_paren(toks, i + 2);
+            let args = &toks[(i + 3).min(close)..close.min(toks.len())];
+            let args_f32 = args.iter().any(is_f32_token);
+            let minmax = args
+                .iter()
+                .any(|t| t.kind == TokenKind::Ident && (t.text == "min" || t.text == "max"));
+            if (args_f32 || f32_near_call(toks, i)) && !minmax {
+                push(out, rel, toks[i + 1].line, F32_REDUCTION, f32_message("fold"));
+            }
+        }
+    }
+}
+
+fn f32_message(what: &str) -> String {
+    format!(
+        "f32 `.{what}()` reduction in a sharded module; combine per-shard f64 subtotals \
+         in a fixed order instead (see docs/determinism.md) or waive in lint.toml"
+    )
+}
+
+fn is_f32_token(t: &Token) -> bool {
+    (t.kind == TokenKind::Ident && t.text == "f32")
+        || (t.kind == TokenKind::Num && t.text.ends_with("f32"))
+}
+
+/// Is this reduction f32-typed as far as tokens can tell? Checks a
+/// turbofish (`.sum::<f32>()`) ahead of the call and the statement
+/// text behind it (`let s: f32 = ...`), bounded to one statement.
+fn f32_near_call(toks: &[Token], dot: usize) -> bool {
+    // Forward: between the method name and its `(` (turbofish).
+    let mut j = dot + 2;
+    while j < toks.len() && j < dot + 12 && !is_punct(toks, j, '(') {
+        if is_f32_token(&toks[j]) {
+            return true;
+        }
+        j += 1;
+    }
+    // Backward to the statement start.
+    let mut j = dot;
+    let mut budget = 256usize;
+    while j > 0 && budget > 0 {
+        j -= 1;
+        budget -= 1;
+        if is_punct(toks, j, ';') || is_punct(toks, j, '{') || is_punct(toks, j, '}') {
+            break;
+        }
+        if is_f32_token(&toks[j]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Does the statement around `dot` mention `min`/`max`? Covers
+/// `fold(f32::INFINITY, f32::min)` spelled via `.sum`-adjacent
+/// helpers; kept narrow on purpose.
+fn statement_has_minmax(toks: &[Token], dot: usize) -> bool {
+    let mut j = dot;
+    let mut budget = 64usize;
+    while j > 0 && budget > 0 {
+        j -= 1;
+        budget -= 1;
+        if is_punct(toks, j, ';') || is_punct(toks, j, '{') || is_punct(toks, j, '}') {
+            return false;
+        }
+        if toks[j].kind == TokenKind::Ident && (toks[j].text == "min" || toks[j].text == "max") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Index of the `)` matching the `(` at `open`, or `toks.len()`.
+fn match_paren(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        if is_punct(toks, i, '(') {
+            depth += 1;
+        } else if is_punct(toks, i, ')') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}

@@ -1,0 +1,484 @@
+//! A comment/string/raw-string-aware token scanner over Rust source.
+//!
+//! The lint rules need exactly three views of a file, all cheap to
+//! build in one pass and none requiring a real parser:
+//!
+//! * the **token stream** (identifiers, literals, punctuation) with
+//!   comments and string/char contents stripped, so `"Instant"` inside
+//!   a string literal or a doc comment never trips a rule;
+//! * the **comment map** (line → comment text), so the `SAFETY:` rule
+//!   can look at the prose immediately above an `unsafe` token;
+//! * the **test mask** (per-token: is this inside a `#[cfg(test)]`
+//!   item?), so rules that only police production code can skip test
+//!   modules without path heuristics.
+//!
+//! Handled literal forms: `//` and nested `/* */` comments, `"…"`
+//! strings with escapes (including multi-line), raw strings
+//! `r"…"`/`r#"…"#` with any hash depth, byte strings `b"…"`/`br#"…"#`,
+//! char and byte-char literals (`'a'`, `'\n'`, `b'{'`), and lifetimes
+//! (`'a`, `'static`), which look like unterminated chars to a naive
+//! scanner.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// What kind of lexeme a [`Token`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal, suffix included (`1.5e-3`, `0u64`, `1.0f32`).
+    Num,
+    /// String literal of any flavour (contents discarded).
+    Str,
+    /// Char or byte-char literal (contents discarded).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Single punctuation character.
+    Punct,
+}
+
+/// One lexeme with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub line: u32,
+    pub kind: TokenKind,
+    pub text: String,
+}
+
+/// The scanner's output: tokens plus the comment/code line indexes the
+/// rules consult.
+pub struct Scan {
+    pub tokens: Vec<Token>,
+    /// 1-based line → concatenated comment text appearing on it.
+    pub comment_lines: BTreeMap<u32, String>,
+    /// 1-based lines that carry at least one token (code lines).
+    pub code_lines: BTreeSet<u32>,
+    /// Per-token: lies inside an item annotated `#[cfg(test)]` (or any
+    /// `cfg(...)` whose argument list mentions `test`).
+    pub in_test: Vec<bool>,
+}
+
+impl Scan {
+    /// Comment text on `line`, if any.
+    pub fn comment_on(&self, line: u32) -> Option<&str> {
+        self.comment_lines.get(&line).map(String::as_str)
+    }
+}
+
+/// Tokenize `text` and build the comment/code indexes plus the
+/// `#[cfg(test)]` mask.
+pub fn scan(text: &str) -> Scan {
+    let cs: Vec<char> = text.chars().collect();
+    let mut tokens = Vec::new();
+    let mut comment_lines: BTreeMap<u32, String> = BTreeMap::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers /// and //! doc comments).
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < cs.len() && cs[i] != '\n' {
+                i += 1;
+            }
+            let text: String = cs[start..i].iter().collect();
+            comment_lines.entry(line).or_default().push_str(&text);
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            let mut buf = String::new();
+            i += 2;
+            while i < cs.len() && depth > 0 {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    buf.push_str("/*");
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else if cs[i] == '\n' {
+                    comment_lines.entry(line).or_default().push_str(&buf);
+                    buf.clear();
+                    line += 1;
+                    i += 1;
+                } else {
+                    buf.push(cs[i]);
+                    i += 1;
+                }
+            }
+            comment_lines.entry(line).or_default().push_str(&buf);
+            continue;
+        }
+        // Plain string literal (may span lines).
+        if c == '"' {
+            i += 1;
+            skip_string_body(&cs, &mut i, &mut line);
+            tokens.push(Token { line, kind: TokenKind::Str, text: String::new() });
+            continue;
+        }
+        // Identifier, keyword, or a prefixed literal (r"", br#""#, b"", b'').
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < cs.len() && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            let word: String = cs[start..i].iter().collect();
+            let next = cs.get(i).copied();
+            if (word == "r" || word == "br") && matches!(next, Some('"') | Some('#')) {
+                if skip_raw_string(&cs, &mut i, &mut line) {
+                    tokens.push(Token { line, kind: TokenKind::Str, text: String::new() });
+                } else {
+                    // `r#ident` raw identifier, not a raw string.
+                    tokens.push(Token { line, kind: TokenKind::Ident, text: word });
+                }
+                continue;
+            }
+            if word == "b" && next == Some('"') {
+                i += 1;
+                skip_string_body(&cs, &mut i, &mut line);
+                tokens.push(Token { line, kind: TokenKind::Str, text: String::new() });
+                continue;
+            }
+            if word == "b" && next == Some('\'') {
+                i += 1;
+                skip_char_body(&cs, &mut i);
+                tokens.push(Token { line, kind: TokenKind::Char, text: String::new() });
+                continue;
+            }
+            tokens.push(Token { line, kind: TokenKind::Ident, text: word });
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            let is_lifetime = cs
+                .get(i + 1)
+                .is_some_and(|&n| n.is_alphabetic() || n == '_')
+                && cs.get(i + 2) != Some(&'\'');
+            if is_lifetime {
+                let start = i + 1;
+                i += 1;
+                while i < cs.len() && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                    i += 1;
+                }
+                let text: String = cs[start..i].iter().collect();
+                tokens.push(Token { line, kind: TokenKind::Lifetime, text });
+            } else {
+                i += 1;
+                skip_char_body(&cs, &mut i);
+                tokens.push(Token { line, kind: TokenKind::Char, text: String::new() });
+            }
+            continue;
+        }
+        // Numeric literal, suffix included.
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < cs.len() {
+                let d = cs[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' && cs.get(i + 1).is_some_and(|n| n.is_ascii_digit()) {
+                    i += 1;
+                } else if (d == '+' || d == '-')
+                    && matches!(cs.get(i.wrapping_sub(1)), Some('e') | Some('E'))
+                    && cs.get(i + 1).is_some_and(|n| n.is_ascii_digit())
+                {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            let text: String = cs[start..i].iter().collect();
+            tokens.push(Token { line, kind: TokenKind::Num, text });
+            continue;
+        }
+        tokens.push(Token { line, kind: TokenKind::Punct, text: c.to_string() });
+        i += 1;
+    }
+    let code_lines: BTreeSet<u32> = tokens.iter().map(|t| t.line).collect();
+    let in_test = test_mask(&tokens);
+    Scan { tokens, comment_lines, code_lines, in_test }
+}
+
+/// Consume a (possibly multi-line) string body; `i` starts just past
+/// the opening quote and ends just past the closing one.
+fn skip_string_body(cs: &[char], i: &mut usize, line: &mut u32) {
+    while *i < cs.len() {
+        match cs[*i] {
+            '\\' => *i += 2,
+            '"' => {
+                *i += 1;
+                return;
+            }
+            '\n' => {
+                *line += 1;
+                *i += 1;
+            }
+            _ => *i += 1,
+        }
+    }
+}
+
+/// Consume a char/byte-char body; `i` starts just past the opening
+/// quote. Escapes (`'\n'`, `'\u{1F600}'`, `'\''`) are handled.
+fn skip_char_body(cs: &[char], i: &mut usize) {
+    while *i < cs.len() {
+        match cs[*i] {
+            '\\' => *i += 2,
+            '\'' => {
+                *i += 1;
+                return;
+            }
+            _ => *i += 1,
+        }
+    }
+}
+
+/// Consume a raw (byte) string starting at `i` (positioned on the `"`
+/// or first `#` after the `r`/`br` prefix). Returns false — consuming
+/// nothing — when this is a raw identifier (`r#match`) rather than a
+/// raw string.
+fn skip_raw_string(cs: &[char], i: &mut usize, line: &mut u32) -> bool {
+    let mut j = *i;
+    let mut hashes = 0usize;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if cs.get(j) != Some(&'"') {
+        return false;
+    }
+    j += 1;
+    while j < cs.len() {
+        if cs[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if cs[j] == '"' && cs[j + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes
+        {
+            *i = j + 1 + hashes;
+            return true;
+        }
+        j += 1;
+    }
+    *i = j;
+    true
+}
+
+fn is_punct(tokens: &[Token], i: usize, c: char) -> bool {
+    tokens
+        .get(i)
+        .is_some_and(|t| t.kind == TokenKind::Punct && t.text.len() == 1 && t.text.starts_with(c))
+}
+
+fn is_ident(tokens: &[Token], i: usize, word: &str) -> bool {
+    tokens.get(i).is_some_and(|t| t.kind == TokenKind::Ident && t.text == word)
+}
+
+/// Index of the punct closing the group opened at `open` (which must
+/// hold `open_c`), or `tokens.len()` when unbalanced.
+fn match_group(tokens: &[Token], open: usize, open_c: char, close_c: char) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < tokens.len() {
+        if is_punct(tokens, i, open_c) {
+            depth += 1;
+        } else if is_punct(tokens, i, close_c) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    tokens.len()
+}
+
+/// Mark every token belonging to an item annotated with a `cfg`
+/// attribute that mentions `test` — `#[cfg(test)]` and compositions
+/// like `#[cfg(all(test, unix))]` alike. The item body is found by
+/// brace/semicolon matching, which tokenized input makes reliable
+/// (braces inside strings or comments were already discarded).
+fn test_mask(tokens: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if is_punct(tokens, i, '#')
+            && is_punct(tokens, i + 1, '[')
+            && is_ident(tokens, i + 2, "cfg")
+            && is_punct(tokens, i + 3, '(')
+        {
+            let close = match_group(tokens, i + 3, '(', ')');
+            let mentions_test = tokens[(i + 4).min(close)..close.min(tokens.len())]
+                .iter()
+                .any(|t| t.kind == TokenKind::Ident && t.text == "test");
+            if mentions_test && is_punct(tokens, close + 1, ']') {
+                // Skip any further attributes between the cfg and the
+                // item it gates (`#[cfg(test)] #[allow(...)] mod t {}`).
+                let mut j = close + 2;
+                while is_punct(tokens, j, '#') && is_punct(tokens, j + 1, '[') {
+                    j = match_group(tokens, j + 1, '[', ']') + 1;
+                }
+                let end = item_end(tokens, j);
+                let last = end.min(tokens.len().saturating_sub(1));
+                for m in &mut mask[i..=last] {
+                    *m = true;
+                }
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Find where the item starting at `from` ends: the matching `}` of its
+/// body, or the `;` of a body-less item, skipping balanced `(`/`[`
+/// groups in the signature on the way.
+fn item_end(tokens: &[Token], from: usize) -> usize {
+    let mut depth = 0i64;
+    let mut i = from;
+    while i < tokens.len() {
+        if is_punct(tokens, i, '(') || is_punct(tokens, i, '[') {
+            depth += 1;
+        } else if is_punct(tokens, i, ')') || is_punct(tokens, i, ']') {
+            depth -= 1;
+        } else if is_punct(tokens, i, '{') && depth == 0 {
+            return match_group(tokens, i, '{', '}');
+        } else if is_punct(tokens, i, '{') {
+            depth += 1;
+        } else if is_punct(tokens, i, '}') {
+            depth -= 1;
+        } else if is_punct(tokens, i, ';') && depth == 0 {
+            return i;
+        }
+        i += 1;
+    }
+    tokens.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(scan: &Scan) -> Vec<&str> {
+        scan.tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_identifiers() {
+        let src = "let a = \"Instant::now()\"; // Instant here too\nlet b = 1;";
+        let s = scan(src);
+        assert!(!idents(&s).contains(&"Instant"));
+        assert!(s.comment_on(1).is_some_and(|c| c.contains("Instant")));
+        assert!(s.code_lines.contains(&1) && s.code_lines.contains(&2));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let src = "let a = r#\"quote \" inside HashMap\"#; let b = r\"x\"; let c = br##\"y\"##;";
+        let s = scan(src);
+        assert!(!idents(&s).contains(&"HashMap"));
+        assert_eq!(s.tokens.iter().filter(|t| t.kind == TokenKind::Str).count(), 3);
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_string() {
+        let s = scan("let r#type = 1;");
+        assert!(idents(&s).contains(&"r"));
+        assert!(idents(&s).contains(&"type"));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }\nlet nl = '\\n'; let q = b'\"';";
+        let s = scan(src);
+        let lifetimes: Vec<_> =
+            s.tokens.iter().filter(|t| t.kind == TokenKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(s.tokens.iter().filter(|t| t.kind == TokenKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* Mutex */ still comment */ let x = 1;";
+        let s = scan(src);
+        assert!(!idents(&s).contains(&"Mutex"));
+        assert!(idents(&s).contains(&"x"));
+    }
+
+    #[test]
+    fn multiline_string_tracks_lines() {
+        let src = "let a = \"line one\nline two\";\nlet b = 2;";
+        let s = scan(src);
+        let b = s.tokens.iter().find(|t| t.text == "b").expect("b token");
+        assert_eq!(b.line, 3);
+    }
+
+    #[test]
+    fn numeric_suffixes_and_exponents_stay_single_tokens() {
+        let s = scan("let a = 1.5e-3f32; let b = 0..10; let c = 0xFFu64;");
+        let nums: Vec<&str> = s
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5e-3f32", "0", "10", "0xFFu64"]);
+    }
+
+    #[test]
+    fn cfg_test_mod_is_masked() {
+        let src = "fn live() { a(); }\n#[cfg(test)]\nmod tests {\n  fn t() { b(); }\n}\nfn live2() { c(); }";
+        let s = scan(src);
+        let masked: Vec<&str> = s
+            .tokens
+            .iter()
+            .zip(&s.in_test)
+            .filter(|(_, &m)| m)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(masked.contains(&"b"));
+        assert!(!masked.contains(&"a"));
+        assert!(!masked.contains(&"c"));
+    }
+
+    #[test]
+    fn cfg_all_test_and_stacked_attributes_are_masked() {
+        let src = "#[cfg(all(test, unix))]\n#[allow(dead_code)]\nfn helper() { x(); }\nfn live() { y(); }";
+        let s = scan(src);
+        let masked: Vec<&str> = s
+            .tokens
+            .iter()
+            .zip(&s.in_test)
+            .filter(|(_, &m)| m)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(masked.contains(&"x"));
+        assert!(!masked.contains(&"y"));
+    }
+
+    #[test]
+    fn cfg_not_test_feature_is_not_masked() {
+        let src = "#[cfg(feature = \"extra\")]\nfn gated() { x(); }";
+        let s = scan(src);
+        assert!(s.in_test.iter().all(|&m| !m));
+    }
+}

@@ -86,7 +86,10 @@ pub fn fuzzy_graph(x: &Matrix, k: usize, seed: u64, exact_below: usize) -> Vec<(
         }
     }
     // Symmetrise with the probabilistic t-conorm: w = a + b − a·b.
-    let mut map = std::collections::HashMap::<(u32, u32), (f32, f32)>::new();
+    // BTreeMap so the edge list comes out in (i, j) order — edge order
+    // decides SGD update order, so hash order would make the baseline
+    // nondeterministic across runs.
+    let mut map = std::collections::BTreeMap::<(u32, u32), (f32, f32)>::new();
     for i in 0..n {
         for s in 0..k {
             let j = ids[i * k + s];

@@ -143,6 +143,9 @@ SUBCOMMANDS
              GET /sessions/:id/embedding[?iter=N], GET /sessions/:id/stats,
              GET /sessions/:id/stream (chunked binary frames),
              DELETE /sessions/:id, GET /healthz, GET /metrics
+  lint       run the determinism/concurrency lint over the crate source
+             [--root rust/src] [--config lint.toml]  exit non-zero on
+             any finding not waived in lint.toml (the CI hard gate)
   info       show artifact menu / platform
 
 Datasets: scurve scurve_unbalanced blobs blobs_overlap blobs_disjoint coil
@@ -159,6 +162,7 @@ pub fn run(args: &Args) -> Result<()> {
         "figure" | "figures" => cmd_figure(args),
         "hierarchy" => cmd_hierarchy(args),
         "serve" => cmd_serve(args),
+        "lint" => cmd_lint(args),
         "info" => cmd_info(),
         "" | "help" => {
             print!("{HELP}");
@@ -440,6 +444,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  stream:  curl -sN {addr}/sessions/0/stream -o frames.bin");
     println!("  health:  curl -s {addr}/healthz   ·   metrics: curl -s {addr}/metrics");
     server.run()
+}
+
+/// `lint`: the self-hosted determinism/concurrency checks of
+/// [`crate::analysis`], run over the crate's own source tree. Exit
+/// status is the contract (CI gates on it): 0 when every finding is
+/// waived or absent, non-zero otherwise, with one `path:line: [rule]`
+/// line per finding.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use crate::analysis::{lint_tree, LintConfig};
+    use std::path::{Path, PathBuf};
+    // Default root: the in-repo crate source, whether invoked from the
+    // repo checkout (cwd) or via `cargo run` from elsewhere.
+    let manifest_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root_arg = args.get_str("root", "");
+    let root: PathBuf = if !root_arg.is_empty() {
+        PathBuf::from(root_arg)
+    } else if Path::new("rust/src").is_dir() {
+        PathBuf::from("rust/src")
+    } else {
+        manifest_root.join("rust/src")
+    };
+    let cfg_arg = args.get_str("config", "");
+    let cfg = if !cfg_arg.is_empty() {
+        LintConfig::load(Path::new(&cfg_arg))?
+    } else if Path::new("lint.toml").is_file() {
+        LintConfig::load(Path::new("lint.toml"))?
+    } else if manifest_root.join("lint.toml").is_file() {
+        LintConfig::load(&manifest_root.join("lint.toml"))?
+    } else {
+        LintConfig::empty()
+    };
+    let report = lint_tree(&root, &cfg)?;
+    for f in &report.findings {
+        // Re-anchor the relative path on the scanned root so the line
+        // is clickable / feedable to an editor from wherever we ran.
+        println!("{}/{}", root.display(), f);
+    }
+    println!(
+        "lint: {} file(s) scanned, {} finding(s), {} waived",
+        report.files_scanned,
+        report.findings.len(),
+        report.waived
+    );
+    if !report.findings.is_empty() {
+        bail!("lint failed with {} finding(s)", report.findings.len());
+    }
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {

@@ -130,7 +130,8 @@ pub fn build_graph(mut levels: Vec<Vec<HierNode>>) -> HierarchyGraph {
                 }
             }
             for &cid in &cur_ids {
-                let mut counts = std::collections::HashMap::<usize, usize>::new();
+                // BTreeMap: `counts` iteration below fixes edge order.
+                let mut counts = std::collections::BTreeMap::<usize, usize>::new();
                 for m in &graph.nodes[cid].members {
                     let p = membership[*m as usize];
                     if p >= 0 {
@@ -197,7 +198,8 @@ pub fn tree_agreement(
     let majority: Vec<usize> = leaves
         .iter()
         .map(|&id| {
-            let mut counts = std::collections::HashMap::new();
+            // BTreeMap: deterministic tie-break in max_by_key below.
+            let mut counts = std::collections::BTreeMap::new();
             for m in &graph.nodes[id].members {
                 *counts.entry(point_leaf_labels[*m as usize]).or_insert(0usize) += 1;
             }

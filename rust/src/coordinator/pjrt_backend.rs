@@ -63,7 +63,9 @@ impl PjrtBackend {
         self.rt.warmup(k_hd, k_ld, n_neg, d, m)
     }
 
-    pub fn exec_counts(&self) -> &std::collections::HashMap<String, u64> {
+    /// Per-artifact execution counts, sorted by artifact name so any
+    /// serialization of them is byte-deterministic.
+    pub fn exec_counts(&self) -> &std::collections::BTreeMap<String, u64> {
         &self.rt.exec_counts
     }
 

@@ -115,14 +115,17 @@ pub fn run(scale: Scale) -> Result<String> {
     // --- 3b/3c: histogram along the axis between two same-digit clusters.
     if let Some((_, clusters)) = &last_clusters {
         // Find two clusters dominated by the same digit.
+        // BTreeMaps: both the majority-digit tie-break and the digit
+        // iteration below must not depend on hash order, or the figure
+        // picks different cluster pairs run to run.
         let digit_of = |members: &Vec<u32>| -> usize {
-            let mut counts = std::collections::HashMap::new();
+            let mut counts = std::collections::BTreeMap::new();
             for &i in members {
                 *counts.entry(digits[i as usize]).or_insert(0usize) += 1;
             }
             counts.into_iter().max_by_key(|&(_, c)| c).map(|(d, _)| d).unwrap_or(0)
         };
-        let mut by_digit = std::collections::HashMap::<usize, Vec<usize>>::new();
+        let mut by_digit = std::collections::BTreeMap::<usize, Vec<usize>>::new();
         for (c, m) in clusters.iter().enumerate() {
             if m.len() >= 15 {
                 by_digit.entry(digit_of(m)).or_default().push(c);

@@ -106,6 +106,7 @@
 
 pub mod util;
 pub mod config;
+pub mod analysis;
 pub mod cli;
 pub mod data;
 pub mod linalg;

@@ -1,10 +1,13 @@
 //! Run-time substrates: the PJRT loader for AOT-lowered HLO artifacts
-//! (never touching Python at run time) and the zero-dependency worker
-//! pool the sharded native backend runs on.
+//! (never touching Python at run time), the zero-dependency worker
+//! pool the sharded native backend runs on, and the checked
+//! synchronization primitives every lock in the crate must go through.
 
 pub mod artifacts;
 pub mod pjrt;
 pub mod pool;
+pub mod sync;
 
 pub use artifacts::Manifest;
 pub use pool::WorkerPool;
+pub use sync::{DebugCondvar, DebugMutex};

@@ -8,20 +8,26 @@
 
 use super::artifacts::{ArtifactKind, ArtifactSpec, Manifest};
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Runtime state: client + compiled executables.
+///
+/// Both maps are `BTreeMap` on purpose: `exec_counts` feeds telemetry
+/// output, and sorted iteration keeps that output byte-identical run
+/// over run (a `HashMap` would shuffle it per process).
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
     /// Telemetry: executions per artifact (perf accounting).
-    pub exec_counts: HashMap<String, u64>,
+    pub exec_counts: BTreeMap<String, u64>,
 }
 
 fn f32s_as_bytes(xs: &[f32]) -> &[u8] {
-    // Safe: f32 has no padding / invalid bit patterns as bytes.
+    // SAFETY: any &[f32] is valid to view as bytes — f32 has no
+    // padding and every bit pattern is a valid u8; the pointer and
+    // length describe exactly the slice's own allocation.
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 
@@ -49,8 +55,8 @@ impl PjrtRuntime {
         Ok(PjrtRuntime {
             client,
             manifest,
-            exes: HashMap::new(),
-            exec_counts: HashMap::new(),
+            exes: BTreeMap::new(),
+            exec_counts: BTreeMap::new(),
         })
     }
 

@@ -1,0 +1,388 @@
+//! Checked synchronization primitives: the only place in the crate
+//! allowed to touch `std::sync::Mutex`/`Condvar` directly (lint rule
+//! `raw_sync` enforces this).
+//!
+//! [`DebugMutex`] and [`DebugCondvar`] behave like their `std`
+//! counterparts with two differences:
+//!
+//! * **Poison recovery is centralized.** A thread panicking while
+//!   holding a lock poisons it; every caller here recovers with
+//!   [`PoisonError::into_inner`] instead of sprinkling
+//!   `unwrap_or_else` at each call site. That matches the server's
+//!   needs: queue state stays usable (a closed/lagged flag is always
+//!   consistent on its own), and a poisoned subscriber queue must not
+//!   take the whole stepper down.
+//!
+//! * **Lock-order checking under `cfg(debug_assertions)`.** Every
+//!   mutex belongs to a named **class** (the `name` passed to
+//!   [`DebugMutex::new`]; instances sharing a name share a class). A
+//!   global graph records, per class pair, the nesting order actually
+//!   observed at runtime; an acquisition that would close a cycle —
+//!   the classic A→B / B→A deadlock — **panics immediately with both
+//!   lock names and the established path**, instead of deadlocking
+//!   some future run that happens to interleave badly. Acquiring two
+//!   locks of the *same* class on one thread also panics: class-level
+//!   ranking cannot order them, so such nesting must be redesigned
+//!   (the FrameHub, for instance, locks one subscriber queue at a
+//!   time, never two).
+//!
+//! In release builds the order bookkeeping compiles out entirely;
+//! what remains is `std::sync` plus one niche-optimized `Option`
+//! around the guard (same size as the raw guard). Waiting on a
+//! condvar keeps the class marked held: the region is still logically
+//! owned, so no new ordering edges can form mid-wait.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// A named, order-checked, poison-recovering mutex.
+pub struct DebugMutex<T> {
+    inner: Mutex<T>,
+    #[cfg(debug_assertions)]
+    class: usize,
+}
+
+impl<T> DebugMutex<T> {
+    /// Wrap `value` in a mutex belonging to the lock class `name`.
+    /// Instances sharing a name share ordering constraints.
+    pub fn new(name: &'static str, value: T) -> DebugMutex<T> {
+        #[cfg(not(debug_assertions))]
+        let _ = name;
+        DebugMutex {
+            inner: Mutex::new(value),
+            #[cfg(debug_assertions)]
+            class: order::register(name),
+        }
+    }
+
+    /// Acquire the lock, recovering from poison. Under
+    /// `debug_assertions`, panics if this acquisition would close a
+    /// lock-order cycle (see module docs).
+    pub fn lock(&self) -> DebugMutexGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        order::acquire(self.class);
+        let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        DebugMutexGuard {
+            guard: Some(guard),
+            #[cfg(debug_assertions)]
+            class: self.class,
+        }
+    }
+}
+
+/// RAII guard for a [`DebugMutex`]; releases the lock (and its
+/// order-tracking entry) on drop.
+pub struct DebugMutexGuard<'a, T> {
+    /// `None` only transiently, while surrendered to a condvar wait.
+    guard: Option<MutexGuard<'a, T>>,
+    #[cfg(debug_assertions)]
+    class: usize,
+}
+
+impl<T> DebugMutexGuard<'_, T> {
+    #[cfg(debug_assertions)]
+    fn note_release(&self) {
+        order::release(self.class);
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn note_release(&self) {}
+}
+
+impl<T> std::ops::Deref for DebugMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard surrendered to a condvar wait")
+    }
+}
+
+impl<T> std::ops::DerefMut for DebugMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard surrendered to a condvar wait")
+    }
+}
+
+impl<T> Drop for DebugMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.guard.take().is_some() {
+            self.note_release();
+        }
+    }
+}
+
+/// Condition variable paired with [`DebugMutex`]; recovers from
+/// poison on wake.
+pub struct DebugCondvar {
+    inner: Condvar,
+}
+
+impl DebugCondvar {
+    pub fn new() -> DebugCondvar {
+        DebugCondvar { inner: Condvar::new() }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+
+    /// Release `guard`'s lock, wait up to `timeout` for a
+    /// notification, and reacquire. The guard's lock class stays
+    /// marked held across the wait: the caller still logically owns
+    /// the region, so no ordering edges can form mid-wait.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: DebugMutexGuard<'a, T>,
+        timeout: Duration,
+    ) -> (DebugMutexGuard<'a, T>, WaitTimeoutResult) {
+        let inner = guard.guard.take().expect("guard already surrendered");
+        let (restored, res) =
+            self.inner.wait_timeout(inner, timeout).unwrap_or_else(PoisonError::into_inner);
+        guard.guard = Some(restored);
+        (guard, res)
+    }
+}
+
+impl Default for DebugCondvar {
+    fn default() -> DebugCondvar {
+        DebugCondvar::new()
+    }
+}
+
+/// The global lock-order registry: class names, and the directed
+/// graph of observed nesting (edge a→b = "b was acquired while a was
+/// held"). Debug builds only.
+#[cfg(debug_assertions)]
+mod order {
+    use std::cell::RefCell;
+    use std::collections::{BTreeMap, BTreeSet};
+    use std::sync::{Mutex, OnceLock};
+
+    struct Registry {
+        ids: BTreeMap<&'static str, usize>,
+        names: Vec<&'static str>,
+        edges: Vec<BTreeSet<usize>>,
+    }
+
+    fn registry() -> &'static Mutex<Registry> {
+        static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+        REG.get_or_init(|| {
+            Mutex::new(Registry { ids: BTreeMap::new(), names: Vec::new(), edges: Vec::new() })
+        })
+    }
+
+    thread_local! {
+        /// Classes this thread currently holds, in acquisition order.
+        static HELD: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Intern `name` as a lock class id.
+    pub fn register(name: &'static str) -> usize {
+        let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(&id) = reg.ids.get(name) {
+            return id;
+        }
+        let id = reg.names.len();
+        reg.names.push(name);
+        reg.edges.push(BTreeSet::new());
+        reg.ids.insert(name, id);
+        id
+    }
+
+    /// Record that the current thread is about to acquire `class`.
+    /// Panics — *before* blocking on the real lock — when the
+    /// acquisition closes an order cycle or nests a class inside
+    /// itself.
+    pub fn acquire(class: usize) {
+        let held: Vec<usize> = HELD.with(|h| h.borrow().clone());
+        let mut violation: Option<String> = None;
+        if !held.is_empty() {
+            let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+            if held.contains(&class) {
+                violation = Some(format!(
+                    "lock-order violation: acquiring a second \"{}\" while this thread \
+                     already holds one; class-level ranking cannot order instances of \
+                     one class, so redesign to lock them one at a time",
+                    reg.names[class]
+                ));
+            } else if let Some((outer, path)) = cycle_path(&reg, class, &held) {
+                let chain: Vec<&str> = path.iter().map(|&c| reg.names[c]).collect();
+                violation = Some(format!(
+                    "lock-order cycle: acquiring \"{}\" while holding \"{}\", but the \
+                     reverse order {} is already established elsewhere — this \
+                     interleaving can deadlock",
+                    reg.names[class],
+                    reg.names[outer],
+                    chain.join(" -> "),
+                ));
+            } else {
+                for &h in &held {
+                    reg.edges[h].insert(class);
+                }
+            }
+        }
+        if let Some(msg) = violation {
+            panic!("{msg}");
+        }
+        HELD.with(|h| h.borrow_mut().push(class));
+    }
+
+    /// Record that the current thread released `class`.
+    pub fn release(class: usize) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(pos) = held.iter().rposition(|&c| c == class) {
+                held.remove(pos);
+            }
+        });
+    }
+
+    /// If `from` already reaches any held class in the order graph,
+    /// return that class and the established path `from → … → held`.
+    fn cycle_path(reg: &Registry, from: usize, held: &[usize]) -> Option<(usize, Vec<usize>)> {
+        for &h in held {
+            if let Some(path) = path_between(reg, from, h) {
+                return Some((h, path));
+            }
+        }
+        None
+    }
+
+    fn path_between(reg: &Registry, from: usize, to: usize) -> Option<Vec<usize>> {
+        let mut parent: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut seen = BTreeSet::new();
+        seen.insert(from);
+        let mut stack = vec![from];
+        while let Some(u) = stack.pop() {
+            for &v in &reg.edges[u] {
+                if seen.insert(v) {
+                    parent.insert(v, u);
+                    if v == to {
+                        let mut path = vec![to];
+                        let mut cur = to;
+                        while let Some(&p) = parent.get(&cur) {
+                            path.push(p);
+                            cur = p;
+                        }
+                        path.reverse();
+                        return Some(path);
+                    }
+                    stack.push(v);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_round_trip_and_mutation() {
+        let m = DebugMutex::new("sync_test_round_trip", 1i32);
+        *m.lock() += 41;
+        assert_eq!(*m.lock(), 42);
+    }
+
+    #[test]
+    fn consistent_nesting_is_allowed() {
+        let outer = DebugMutex::new("sync_test_nest_outer", 0u32);
+        let inner = DebugMutex::new("sync_test_nest_inner", 0u32);
+        for _ in 0..3 {
+            let _go = outer.lock();
+            let _gi = inner.lock();
+        }
+        let _gi = inner.lock();
+    }
+
+    #[test]
+    fn condvar_times_out_then_sees_notification() {
+        let pair = Arc::new((DebugMutex::new("sync_test_cv", false), DebugCondvar::new()));
+        let g = pair.0.lock();
+        let (g, res) = pair.1.wait_timeout(g, Duration::from_millis(10));
+        assert!(res.timed_out());
+        assert!(!*g);
+        drop(g);
+        let waker = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            *waker.0.lock() = true;
+            waker.1.notify_all();
+        });
+        let mut g = pair.0.lock();
+        while !*g {
+            let (next, _) = pair.1.wait_timeout(g, Duration::from_millis(50));
+            g = next;
+        }
+        drop(g);
+        t.join().expect("waker thread");
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_with_last_write() {
+        let m = Arc::new(DebugMutex::new("sync_test_poison", 7i32));
+        let writer = Arc::clone(&m);
+        let res = std::thread::spawn(move || {
+            let mut g = writer.lock();
+            *g = 9;
+            panic!("poison on purpose");
+        })
+        .join();
+        assert!(res.is_err(), "thread must have panicked");
+        assert_eq!(*m.lock(), 9, "poison recovered; last write visible");
+    }
+
+    #[cfg(debug_assertions)]
+    fn panic_message(err: &(dyn std::any::Any + Send)) -> String {
+        if let Some(s) = err.downcast_ref::<String>() {
+            s.clone()
+        } else if let Some(s) = err.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else {
+            String::new()
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn cycle_forming_acquisition_panics_with_both_names() {
+        let a = DebugMutex::new("sync_test_cycle_a", ());
+        let b = DebugMutex::new("sync_test_cycle_b", ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock(); // establishes a → b
+        }
+        let gb = b.lock();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ga = a.lock(); // b → a would close the cycle
+        }))
+        .expect_err("cycle must panic");
+        drop(gb);
+        let msg = panic_message(err.as_ref());
+        assert!(
+            msg.contains("sync_test_cycle_a") && msg.contains("sync_test_cycle_b"),
+            "panic must name both locks: {msg}"
+        );
+        assert!(msg.contains("cycle"), "panic must say why: {msg}");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn same_class_nesting_panics() {
+        let a = DebugMutex::new("sync_test_reentrant", 0u8);
+        let b = DebugMutex::new("sync_test_reentrant", 0u8);
+        let ga = a.lock();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _gb = b.lock();
+        }))
+        .expect_err("same-class nesting must panic");
+        drop(ga);
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("sync_test_reentrant"), "panic names the class: {msg}");
+    }
+}

@@ -4,8 +4,12 @@
 //! The stepper thread owns the hub and calls [`FrameHub::broadcast`]
 //! after each sweep; HTTP workers own [`StreamSubscription`]s and block
 //! on [`StreamSubscription::next`] while writing chunked responses.
-//! The two sides meet in a small `Mutex<VecDeque> + Condvar` pair per
-//! subscriber — the only state that crosses threads. Frames are
+//! The two sides meet in a small `DebugMutex<VecDeque> + DebugCondvar`
+//! pair per subscriber (the checked wrappers from
+//! [`crate::runtime::sync`]: lock-order tracking in debug builds,
+//! centralized poison recovery) — the only state that crosses
+//! threads. All subscriber queues share one lock class, which the
+//! order checker enforces is never nested. Frames are
 //! encoded **once** per session per sweep into an `Arc<Vec<u8>>` and
 //! shared by every subscriber, so fan-out cost is queue pushes, not
 //! copies.
@@ -26,8 +30,9 @@
 
 use super::codec::FrameEncoder;
 use crate::data::Matrix;
+use crate::runtime::sync::{DebugCondvar, DebugMutex};
 use std::collections::BTreeMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Tunables for the streaming subsystem (wired from the server config
@@ -64,9 +69,15 @@ struct QueueState {
 type VecFrames = std::collections::VecDeque<Arc<Vec<u8>>>;
 
 struct Shared {
-    state: Mutex<QueueState>,
-    ready: Condvar,
+    state: DebugMutex<QueueState>,
+    ready: DebugCondvar,
 }
+
+/// Lock class for every subscriber queue. One shared class is
+/// deliberate: the order checker then guarantees no code path ever
+/// holds two subscriber queues at once (the hub pushes to them
+/// strictly one at a time).
+const QUEUE_LOCK_CLASS: &str = "frames.subscriber_queue";
 
 /// What [`StreamSubscription::next`] yielded.
 pub enum NextFrame {
@@ -88,7 +99,7 @@ pub struct StreamSubscription {
 impl StreamSubscription {
     /// Block up to `timeout` for the next frame.
     pub fn next(&mut self, timeout: Duration) -> NextFrame {
-        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut st = self.shared.state.lock();
         loop {
             if let Some(frame) = st.frames.pop_front() {
                 return NextFrame::Frame(frame);
@@ -96,11 +107,7 @@ impl StreamSubscription {
             if st.closed {
                 return NextFrame::Closed;
             }
-            let (next, res) = self
-                .shared
-                .ready
-                .wait_timeout(st, timeout)
-                .unwrap_or_else(|e| e.into_inner());
+            let (next, res) = self.shared.ready.wait_timeout(st, timeout);
             st = next;
             if res.timed_out() && st.frames.is_empty() && !st.closed {
                 return NextFrame::Idle;
@@ -111,7 +118,7 @@ impl StreamSubscription {
 
 impl Drop for StreamSubscription {
     fn drop(&mut self) {
-        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut st = self.shared.state.lock();
         st.closed = true;
         st.frames.clear();
     }
@@ -147,11 +154,11 @@ struct PushOutcome {
 
 impl SubscriberSlot {
     fn is_closed(&self) -> bool {
-        self.shared.state.lock().unwrap_or_else(|e| e.into_inner()).closed
+        self.shared.state.lock().closed
     }
 
     fn close(&self) {
-        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut st = self.shared.state.lock();
         st.closed = true;
         self.shared.ready.notify_all();
     }
@@ -159,7 +166,7 @@ impl SubscriberSlot {
     /// Push one frame onto this subscriber's queue, applying the
     /// drop-oldest-then-resync policy.
     fn push(&self, frame: &Arc<Vec<u8>>, keyframe: bool, queue_frames: usize) -> PushOutcome {
-        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut st = self.shared.state.lock();
         if st.closed {
             return PushOutcome { dropped: 0, enqueued: false, lagged: false };
         }
@@ -265,12 +272,11 @@ impl FrameHub {
             return Err(SubscribeError::SessionFull);
         }
         let shared = Arc::new(Shared {
-            state: Mutex::new(QueueState {
-                frames: VecFrames::new(),
-                lagged: false,
-                closed: false,
-            }),
-            ready: Condvar::new(),
+            state: DebugMutex::new(
+                QUEUE_LOCK_CLASS,
+                QueueState { frames: VecFrames::new(), lagged: false, closed: false },
+            ),
+            ready: DebugCondvar::new(),
         });
         hub.subscribers.push(SubscriberSlot { shared: Arc::clone(&shared) });
         hub.encoder.force_keyframe();

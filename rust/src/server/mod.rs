@@ -143,7 +143,8 @@ impl Server {
             queue_frames: cfg.stream_queue.max(1),
             keyframe_every: cfg.keyframe_every.max(1),
         };
-        let stepper = Stepper::spawn_with(cfg.max_sessions.max(1), streams);
+        let stepper =
+            Stepper::spawn_with(cfg.max_sessions.max(1), streams).context("spawn stepper")?;
         Ok(Server {
             listener,
             local_addr,

@@ -45,6 +45,7 @@ use crate::engine::PhaseMicros;
 use crate::metrics::probe::QualityReport;
 use crate::server::frames::{FrameHub, StreamConfig, StreamSubscription, SubscribeError};
 use crate::session::{Command, Session, SessionBuilder, SessionId, SessionManager};
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -225,19 +226,20 @@ pub struct Stepper {
 impl Stepper {
     /// Spawn the stepping thread with default stream settings.
     /// `max_sessions` bounds concurrent sessions (creates beyond it
-    /// are refused with [`ServiceError::Full`]).
-    pub fn spawn(max_sessions: usize) -> Stepper {
+    /// are refused with [`ServiceError::Full`]). Errs only if the OS
+    /// refuses to create the thread.
+    pub fn spawn(max_sessions: usize) -> Result<Stepper> {
         Stepper::spawn_with(max_sessions, StreamConfig::default())
     }
 
     /// [`Stepper::spawn`] with explicit streaming limits.
-    pub fn spawn_with(max_sessions: usize, streams: StreamConfig) -> Stepper {
+    pub fn spawn_with(max_sessions: usize, streams: StreamConfig) -> Result<Stepper> {
         let (tx, rx) = mpsc::channel();
         let join = std::thread::Builder::new()
             .name("funcsne-stepper".to_string())
             .spawn(move || run_loop(rx, max_sessions, streams))
-            .expect("spawn stepper thread");
-        Stepper { tx, join: Some(join) }
+            .context("spawn stepper thread")?;
+        Ok(Stepper { tx, join: Some(join) })
     }
 
     /// A cloneable sender for request handlers (one per HTTP worker).
@@ -411,7 +413,15 @@ impl Service {
         };
         self.meta.insert(sid.0, meta);
         self.sessions_created += 1;
-        let session = self.mgr.get(sid).expect("just inserted");
+        // The session was inserted two statements ago on this same
+        // thread; a miss here is a manager bug, but a 5xx beats a
+        // poisoned stepper loop.
+        let session = self
+            .mgr
+            .get(sid)
+            .ok_or_else(|| {
+                ServiceError::Unavailable("session vanished immediately after insert".to_string())
+            })?;
         Ok(self.view(sid.0, session))
     }
 
@@ -698,7 +708,7 @@ mod tests {
 
     #[test]
     fn stepper_steps_in_background_and_applies_commands() {
-        let stepper = Stepper::spawn(8);
+        let stepper = Stepper::spawn(8).unwrap();
         let tx = stepper.sender();
         let view = ask(&tx, |r| StepperRequest::Create(spec(1, 0), r)).unwrap();
         assert_eq!(view.n, 80);
@@ -744,7 +754,7 @@ mod tests {
 
     #[test]
     fn max_iters_budget_auto_pauses() {
-        let stepper = Stepper::spawn(8);
+        let stepper = Stepper::spawn(8).unwrap();
         let tx = stepper.sender();
         let id = ask(&tx, |r| StepperRequest::Create(spec(2, 6), r)).unwrap().id;
         wait_until(
@@ -767,7 +777,7 @@ mod tests {
 
     #[test]
     fn session_capacity_is_enforced() {
-        let stepper = Stepper::spawn(1);
+        let stepper = Stepper::spawn(1).unwrap();
         let tx = stepper.sender();
         ask(&tx, |r| StepperRequest::Create(spec(3, 0), r)).unwrap();
         let err = ask(&tx, |r| StepperRequest::Create(spec(4, 0), r)).unwrap_err();
@@ -777,7 +787,7 @@ mod tests {
 
     #[test]
     fn invalid_spec_is_rejected_not_fatal() {
-        let stepper = Stepper::spawn(4);
+        let stepper = Stepper::spawn(4).unwrap();
         let tx = stepper.sender();
         let bad = Box::new(CreateSpec {
             builder: Session::builder(), // no dataset
@@ -795,7 +805,7 @@ mod tests {
 
     #[test]
     fn subscribe_unknown_session_is_404() {
-        let stepper = Stepper::spawn(4);
+        let stepper = Stepper::spawn(4).unwrap();
         let tx = stepper.sender();
         let err = ask(&tx, |r| StepperRequest::Subscribe(99, r)).unwrap_err();
         assert_eq!(err.status(), 404);
@@ -804,7 +814,7 @@ mod tests {
 
     #[test]
     fn paused_session_still_delivers_first_keyframe() {
-        let stepper = Stepper::spawn(4);
+        let stepper = Stepper::spawn(4).unwrap();
         let tx = stepper.sender();
         // max_iters 3: the session pauses almost immediately, after
         // which the loop parks. Subscribe must still yield a keyframe.
@@ -828,7 +838,7 @@ mod tests {
 
     #[test]
     fn stream_follows_a_stepping_session() {
-        let stepper = Stepper::spawn(4);
+        let stepper = Stepper::spawn(4).unwrap();
         let tx = stepper.sender();
         let id = ask(&tx, |r| StepperRequest::Create(spec(6, 0), r)).unwrap().id;
         let mut sub = ask(&tx, |r| StepperRequest::Subscribe(id, r)).unwrap();

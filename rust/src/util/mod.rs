@@ -15,4 +15,4 @@ pub mod proptest;
 pub mod stats;
 
 pub use rng::{lane, RandomSource, Rng, StreamRng};
-pub use timer::Stopwatch;
+pub use timer::{PhaseClock, Stopwatch};

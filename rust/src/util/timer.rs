@@ -1,10 +1,38 @@
-//! Wall-clock timing helpers for the bench harnesses.
+//! Wall-clock timing helpers for the bench harnesses, and the
+//! [`PhaseClock`] shim — the only clock deterministic modules may
+//! touch.
 //!
 //! `criterion` is unavailable offline, so the figure/bench drivers use
 //! this small stopwatch plus `bench_fn` for repeated timed runs with
 //! basic robust statistics (median, min, mean).
 
 use std::time::{Duration, Instant};
+
+/// The telemetry clock for deterministic modules (`engine/`, `knn/`,
+/// …), where the `wall_clock` lint rule bans `Instant`/`SystemTime`
+/// directly. Centralizing the reads here keeps the constraint
+/// auditable: timing is observational only — it feeds phase
+/// accounting and scheduling telemetry, never the computation — and
+/// one shim is much easier to check than N call sites. (It also gives
+/// a single seam if a platform ever needs a different monotonic
+/// source.)
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseClock {
+    start: Instant,
+}
+
+impl PhaseClock {
+    /// Start timing a phase.
+    pub fn start() -> PhaseClock {
+        PhaseClock { start: Instant::now() }
+    }
+
+    /// Nanoseconds since [`PhaseClock::start`], saturating at
+    /// `u64::MAX` (584 years — effectively never).
+    pub fn elapsed_ns(&self) -> u64 {
+        u64::try_from(self.start.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
 
 /// A resettable stopwatch accumulating named phases.
 #[derive(Debug)]
@@ -95,6 +123,14 @@ pub fn fmt_duration(d: Duration) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn phase_clock_monotonic() {
+        let pc = PhaseClock::start();
+        let a = pc.elapsed_ns();
+        let b = pc.elapsed_ns();
+        assert!(b >= a);
+    }
 
     #[test]
     fn stopwatch_monotonic() {

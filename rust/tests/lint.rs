@@ -1,0 +1,141 @@
+//! The lint gate, as a test: the repo's own source tree must come out
+//! clean under `lint.toml`, and every rule must fire on its violating
+//! fixture and stay quiet on its conforming one.
+//!
+//! Fixtures live in `rust/tests/lint_fixtures/` and are plain text to
+//! the linter — they are never compiled, so each pins rule behaviour
+//! (including the shapes a rule must NOT flag) without having to build.
+
+use funcsne::analysis::rules;
+use funcsne::analysis::{lint_source, lint_tree, LintConfig};
+use std::path::Path;
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> String {
+    let path = repo_root().join("rust/tests/lint_fixtures").join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read fixture {path:?}: {e}"))
+}
+
+/// Lint a fixture pair at a virtual path inside the rule's scope:
+/// the violation file must yield ≥ 1 finding, all of `rule`; the clean
+/// file must yield none.
+fn check_pair(rule: &'static str, virtual_path: &str) {
+    let cfg = LintConfig::empty();
+    let bad = fixture(&format!("{rule}_violation.rs"));
+    let (findings, _) = lint_source(virtual_path, &bad, &cfg);
+    assert!(!findings.is_empty(), "{rule}: violation fixture produced no findings");
+    for f in &findings {
+        assert_eq!(f.rule, rule, "unexpected rule in {rule} fixture: {f}");
+        assert_eq!(f.path, virtual_path);
+        assert!(f.line >= 1);
+        let text = f.to_string();
+        assert!(
+            text.starts_with(&format!("{}:{}:", virtual_path, f.line)),
+            "finding must lead with file:line, got {text:?}"
+        );
+    }
+    let good = fixture(&format!("{rule}_clean.rs"));
+    let (clean, _) = lint_source(virtual_path, &good, &cfg);
+    assert!(clean.is_empty(), "{rule}: clean fixture flagged: {clean:?}");
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let src = repo_root().join("rust/src");
+    let cfg = LintConfig::load(&repo_root().join("lint.toml")).expect("parse lint.toml");
+    let report = lint_tree(&src, &cfg).expect("lint the source tree");
+    assert!(
+        report.findings.is_empty(),
+        "the crate's own tree must pass its lint:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files_scanned > 40, "walked the real tree, got {}", report.files_scanned);
+    assert!(report.waived >= 1, "the rng.rs HashSet waiver should have been exercised");
+}
+
+#[test]
+fn wall_clock_fixtures() {
+    check_pair(rules::WALL_CLOCK, "engine/fixture.rs");
+}
+
+#[test]
+fn hash_collections_fixtures() {
+    check_pair(rules::HASH_COLLECTIONS, "knn/fixture.rs");
+}
+
+#[test]
+fn safety_comment_fixtures() {
+    check_pair(rules::SAFETY_COMMENT, "runtime/fixture.rs");
+}
+
+#[test]
+fn raw_sync_fixtures() {
+    check_pair(rules::RAW_SYNC, "server/frames/fixture.rs");
+}
+
+#[test]
+fn server_panics_fixtures() {
+    check_pair(rules::SERVER_PANICS, "server/fixture.rs");
+}
+
+#[test]
+fn f32_reduction_fixtures() {
+    check_pair(rules::F32_REDUCTION, "ld/fixture.rs");
+}
+
+#[test]
+fn deterministic_rules_do_not_fire_outside_their_scope() {
+    let cfg = LintConfig::empty();
+    for rule in [rules::WALL_CLOCK, rules::HASH_COLLECTIONS, rules::F32_REDUCTION] {
+        let bad = fixture(&format!("{rule}_violation.rs"));
+        let (findings, _) = lint_source("figures/fixture.rs", &bad, &cfg);
+        assert!(findings.is_empty(), "{rule} must not apply to figures/: {findings:?}");
+    }
+    let bad = fixture("server_panics_violation.rs");
+    let (findings, _) = lint_source("cli/fixture.rs", &bad, &cfg);
+    assert!(findings.is_empty(), "server_panics must not apply to cli/: {findings:?}");
+}
+
+#[test]
+fn runtime_sync_is_exempt_from_raw_sync() {
+    let bad = fixture("raw_sync_violation.rs");
+    let (findings, _) = lint_source("runtime/sync.rs", &bad, &LintConfig::empty());
+    assert!(
+        findings.iter().all(|f| f.rule != rules::RAW_SYNC),
+        "runtime/sync.rs is where the raw primitives live: {findings:?}"
+    );
+}
+
+#[test]
+fn waiver_round_trip_suppresses_and_counts() {
+    let bad = fixture("hash_collections_violation.rs");
+    let cfg = LintConfig::from_text(
+        "[allow.hash_collections]\nknn/fixture.rs = \"fixture waiver for the round-trip test\"\n",
+    )
+    .expect("valid waiver config");
+    let (findings, waived) = lint_source("knn/fixture.rs", &bad, &cfg);
+    assert!(findings.is_empty(), "waived findings must not surface: {findings:?}");
+    assert!(waived >= 1, "suppressions must be counted");
+    // The same waiver must not leak onto other files.
+    let (other, _) = lint_source("knn/other.rs", &bad, &cfg);
+    assert!(!other.is_empty());
+}
+
+#[test]
+fn repo_lint_toml_justifications_are_present() {
+    let cfg = LintConfig::load(&repo_root().join("lint.toml")).expect("parse lint.toml");
+    for (rule, path, why) in cfg.entries() {
+        assert!(
+            why.trim().len() >= 10,
+            "waiver ({rule}, {path}) needs a real justification, got {why:?}"
+        );
+    }
+}

@@ -1,0 +1,19 @@
+// Lint fixture (never compiled): the conforming reduction shapes — an
+// ordered f64 accumulation, an integer sum, and a min/max fold (which
+// is associative and commutative, so shard order cannot matter).
+
+pub fn norm(xs: &[f32]) -> f64 {
+    let mut total = 0.0f64;
+    for &v in xs {
+        total += (v as f64) * (v as f64);
+    }
+    total.sqrt()
+}
+
+pub fn count(xs: &[usize]) -> usize {
+    xs.iter().sum()
+}
+
+pub fn lo(xs: &[f32]) -> f32 {
+    xs.iter().copied().fold(f32::INFINITY, f32::min)
+}

@@ -1,0 +1,7 @@
+// Lint fixture (never compiled): an f32 `.sum()` in a sharded module —
+// float addition is non-associative, so shard order changes the bits.
+
+pub fn norm(xs: &[f32]) -> f32 {
+    let total: f32 = xs.iter().map(|v| v * v).sum();
+    total.sqrt()
+}

@@ -1,0 +1,20 @@
+// Lint fixture (never compiled): ordered collections, plus a test-only
+// HashSet that the cfg(test) mask must exempt.
+use std::collections::BTreeMap;
+
+pub fn count(xs: &[u32]) -> usize {
+    let mut m = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0usize) += 1;
+    }
+    m.len()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn distinct() {
+        let s: std::collections::HashSet<u32> = [1, 2, 2].into_iter().collect();
+        assert_eq!(s.len(), 2);
+    }
+}

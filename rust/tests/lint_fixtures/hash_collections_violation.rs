@@ -1,0 +1,11 @@
+// Lint fixture (never compiled): hash collections in a deterministic
+// module — iteration order is randomized per process.
+use std::collections::HashMap;
+
+pub fn count(xs: &[u32]) -> usize {
+    let mut m = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0usize) += 1;
+    }
+    m.len()
+}

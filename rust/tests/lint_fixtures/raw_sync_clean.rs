@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): the checked wrappers from
+// runtime::sync, which rank locks and centralize poison recovery.
+use crate::runtime::sync::{DebugCondvar, DebugMutex};
+
+pub struct Queue {
+    state: DebugMutex<Vec<u8>>,
+    ready: DebugCondvar,
+}

@@ -1,0 +1,9 @@
+// Lint fixture (never compiled): raw std::sync primitives outside
+// runtime/sync.rs — no lock ranking, no poison recovery.
+use std::sync::{Condvar, Mutex, RwLock};
+
+pub struct Queue {
+    state: Mutex<Vec<u8>>,
+    ready: Condvar,
+    index: RwLock<u64>,
+}

@@ -1,0 +1,12 @@
+// Lint fixture (never compiled): both accepted SAFETY placements — a
+// multi-line comment block directly above, and a same-line comment.
+
+pub fn as_bytes(xs: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding and every bit pattern is a valid u8;
+    // the pointer and length describe the slice's own allocation.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+pub fn first(xs: &[u32]) -> u32 {
+    unsafe { *xs.get_unchecked(0) } // SAFETY: caller guarantees non-empty
+}

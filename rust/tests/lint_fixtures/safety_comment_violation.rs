@@ -1,0 +1,6 @@
+// Lint fixture (never compiled): an unsafe block with no SAFETY
+// justification anywhere near it.
+
+pub fn as_bytes(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}

@@ -1,0 +1,30 @@
+// Lint fixture (never compiled): failures map to errors, and the two
+// shapes the rule must NOT flag — `.expect(` with a non-string
+// argument (a parser method, not Option::expect) and unwrap_or_else.
+
+pub fn handle(body: Option<&str>) -> Result<String, String> {
+    let text = body.ok_or_else(|| "missing body".to_string())?;
+    let n: usize = text.parse().map_err(|_| "non-numeric body".to_string())?;
+    Ok(format!("{n}"))
+}
+
+pub fn parse_open(p: &mut Parser) -> Result<(), String> {
+    p.expect(b'{')
+}
+
+pub struct Parser;
+
+impl Parser {
+    pub fn expect(&mut self, _b: u8) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): panicking extractors on a request
+// path — a bad request would kill the worker instead of returning 4xx.
+
+pub fn handle(body: Option<&str>) -> String {
+    let text = body.unwrap();
+    let n: usize = text.parse().expect("numeric body");
+    format!("{n}")
+}

@@ -1,0 +1,10 @@
+// Lint fixture (never compiled): timing routed through the PhaseClock
+// shim, as the wall_clock rule requires. Mentioning Instant in this
+// comment or in a "Instant::now()" string must not trip the rule.
+use crate::util::timer::PhaseClock;
+
+pub fn timed_step() -> u64 {
+    let t = PhaseClock::start();
+    let _label = "Instant::now()";
+    t.elapsed_ns()
+}

@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): reads the wall clock directly inside
+// what the test presents as a deterministic module.
+use std::time::Instant;
+
+pub fn timed_step() -> u64 {
+    let t = Instant::now();
+    t.elapsed().as_nanos() as u64
+}
