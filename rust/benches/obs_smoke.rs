@@ -1,0 +1,157 @@
+//! Observability smoke: run the real server with tracing on, drive it
+//! over the wire, and report latency-histogram snapshots.
+//!
+//! Boots an in-process [`Server`] with `trace: true` on an ephemeral
+//! port, creates a blobs n=8000 session via `POST /sessions`, lets the
+//! stepper advance it for a window of iterations while hammering the
+//! JSON endpoints, then snapshots `GET /debug/trace` to trace_obs.json
+//! (Perfetto-loadable) and the step/sweep/HTTP histograms to
+//! BENCH_obs.json for the CI artifact trail (the obs-smoke job).
+
+use funcsne::data::datasets;
+use funcsne::obs::HistSnapshot;
+use funcsne::server::json::{self, Json};
+use funcsne::server::{Server, ServerConfig};
+use funcsne::util::{io, Stopwatch};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// One HTTP exchange on a fresh connection (`Connection: close`).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).expect("read timeout");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: funcsne\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send request");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8_lossy(&raw);
+    let (head, payload) = text.split_once("\r\n\r\n").expect("header/body split");
+    let status: u16 =
+        head.split_whitespace().nth(1).expect("status code").parse().expect("numeric status");
+    (status, payload.to_string())
+}
+
+/// Histogram snapshot as a JSON object for the bench payload.
+fn hist_json(s: &HistSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", s.count().into()),
+        ("sum", s.sum.into()),
+        ("p50", s.quantile(0.5).into()),
+        ("p95", s.quantile(0.95).into()),
+        ("p99", s.quantile(0.99).into()),
+    ])
+}
+
+fn main() {
+    let full = std::env::var("FUNCSNE_FULL").map(|v| v == "1").unwrap_or(false);
+    let n = 8000usize;
+    let iter_target = if full { 120 } else { 40 };
+    println!("=== obs_smoke (blobs n={n}, {iter_target} traced iterations) ===");
+
+    // The dataset goes to the server by path: 8000×32 rows inline
+    // would be a multi-megabyte POST body for no extra coverage.
+    let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 7);
+    let mut npy = std::env::temp_dir();
+    npy.push(format!("funcsne_obs_smoke_{}.npy", std::process::id()));
+    io::write_npy_f32(&npy, ds.x.data(), &[ds.x.n(), ds.x.d()]).expect("write dataset");
+
+    let server = Server::bind(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 2,
+        trace: true,
+        ..ServerConfig::default()
+    })
+    .expect("bind ephemeral port");
+    let addr = server.local_addr();
+    let obs = server.obs();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run().expect("server run"));
+
+    let spec = format!(
+        "{{\"path\": {:?}, \"k_hd\": 16, \"perplexity\": 10, \"seed\": 7}}",
+        npy.to_str().expect("utf8 temp path")
+    );
+    let (status, created) = http(addr, "POST", "/sessions", &spec);
+    assert_eq!(status, 201, "create failed: {created}");
+    let id = json::parse(&created)
+        .expect("create reply parses")
+        .get("id")
+        .and_then(Json::as_usize)
+        .expect("id");
+
+    // Let the stepper trace real sweeps; poll stats (which also feeds
+    // the HTTP histograms) until the iteration window has passed.
+    let sw = Stopwatch::new();
+    loop {
+        let (status, stats) = http(addr, "GET", &format!("/sessions/{id}/stats"), "");
+        assert_eq!(status, 200, "stats failed: {stats}");
+        let iter = json::parse(&stats)
+            .expect("stats parse")
+            .get("iter")
+            .and_then(Json::as_usize)
+            .expect("iter");
+        if iter >= iter_target {
+            break;
+        }
+        assert!(sw.elapsed_s() < 300.0, "stuck at iter {iter}/{iter_target}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for _ in 0..25 {
+        assert_eq!(http(addr, "GET", "/healthz", "").0, 200);
+        assert_eq!(http(addr, "GET", "/metrics", "").0, 200);
+    }
+
+    let (status, trace) = http(addr, "GET", "/debug/trace", "");
+    assert_eq!(status, 200, "debug/trace failed");
+    // Round-trip through the in-repo codec before anything lands on
+    // disk: the artifact is guaranteed-parseable JSON.
+    let doc = json::parse(&trace).expect("trace JSON parses");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).map_or(0, <[Json]>::len);
+    match std::fs::write("trace_obs.json", doc.encode()) {
+        Ok(()) => println!("(wrote trace_obs.json, {events} events)"),
+        Err(e) => println!("(could not write trace_obs.json: {e})"),
+    }
+
+    let step = obs.step.snapshot();
+    let sweep = obs.sweep.snapshot();
+    let http_total = obs.http_total();
+    println!(
+        "steps {} (p50 {:.0} µs, p99 {:.0} µs) | sweeps {} (p50 {:.0} µs) | \
+         http {} requests (p50 {:.0} µs, p99 {:.0} µs) | {events} trace events",
+        step.count(),
+        step.quantile(0.5),
+        step.quantile(0.99),
+        sweep.count(),
+        sweep.quantile(0.5),
+        http_total.count(),
+        http_total.quantile(0.5),
+        http_total.quantile(0.99),
+    );
+    assert!(step.count() > 0, "traced run must record step latency");
+    assert!(http_total.count() > 0, "traced run must record HTTP latency");
+
+    let payload = Json::obj(vec![
+        ("bench", "obs_smoke".into()),
+        ("dataset", "blobs".into()),
+        ("n", n.into()),
+        ("iters", iter_target.into()),
+        ("step_us", hist_json(&step)),
+        ("sweep_us", hist_json(&sweep)),
+        ("http_us", hist_json(&http_total)),
+        ("frame_encode_us", hist_json(&obs.frame_encode.snapshot())),
+        ("trace_events", events.into()),
+    ]);
+    match std::fs::write("BENCH_obs.json", payload.encode() + "\n") {
+        Ok(()) => println!("(wrote BENCH_obs.json)"),
+        Err(e) => println!("(could not write BENCH_obs.json: {e})"),
+    }
+
+    handle.shutdown();
+    join.join().expect("server thread");
+    std::fs::remove_file(&npy).ok();
+}

@@ -3,8 +3,10 @@
 //! Scopes are path prefixes relative to the source root (`rust/src`):
 //!
 //! * **deterministic** (`engine/`, `knn/`, `ld/`, `hd/`, `metrics/`,
-//!   `util/rng.rs`) — code whose outputs must be a pure function of
-//!   (seed, iteration, input), bitwise-invariant to thread count;
+//!   `obs/`, `util/rng.rs`) — code whose outputs must be a pure
+//!   function of (seed, iteration, input), bitwise-invariant to
+//!   thread count (for `obs/`: a pure function of the samples fed in,
+//!   with all timing through `util::timer::PhaseClock`);
 //! * **sharded** (the same prefixes minus `util/rng.rs`) — code whose
 //!   reductions run per-shard and must combine in a fixed order;
 //! * **server** (`server/`) — request-handling code that must answer
@@ -32,7 +34,10 @@ pub const RULE_NAMES: [&str; 6] =
     [WALL_CLOCK, HASH_COLLECTIONS, SAFETY_COMMENT, RAW_SYNC, SERVER_PANICS, F32_REDUCTION];
 
 /// Module prefixes whose outputs must be thread-count-invariant.
-const DETERMINISTIC_PREFIXES: [&str; 5] = ["engine/", "knn/", "ld/", "hd/", "metrics/"];
+/// `obs/` is here so observability can never smuggle a raw clock or a
+/// hash map into timing-adjacent code: everything it measures goes
+/// through `util::timer::PhaseClock` and ordered collections.
+const DETERMINISTIC_PREFIXES: [&str; 6] = ["engine/", "knn/", "ld/", "hd/", "metrics/", "obs/"];
 
 fn is_deterministic(rel: &str) -> bool {
     rel == "util/rng.rs" || DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))

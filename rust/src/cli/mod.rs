@@ -139,10 +139,17 @@ SUBCOMMANDS
              [--max-sessions N] [--snapshot-every I]
              [--max-streams N] [--max-streams-per-session N]
              [--stream-queue FRAMES] [--keyframe-every K]
+             [--trace]  enable latency histograms + span tracing
+                        (default env FUNCSNE_TRACE)
              REST surface: POST /sessions, POST /sessions/:id/commands,
              GET /sessions/:id/embedding[?iter=N], GET /sessions/:id/stats,
              GET /sessions/:id/stream (chunked binary frames),
-             DELETE /sessions/:id, GET /healthz, GET /metrics
+             DELETE /sessions/:id, GET /healthz, GET /metrics,
+             GET /debug/trace (Chrome trace-event JSON)
+  trace      capture spans from a running server (started with --trace)
+             [--addr 127.0.0.1:7878] [--sweeps N] [--out trace.json]
+             [--timeout SECONDS]  waits until N sweeps elapse, then
+             saves GET /debug/trace for Perfetto / chrome://tracing
   lint       run the determinism/concurrency lint over the crate source
              [--root rust/src] [--config lint.toml]  exit non-zero on
              any finding not waived in lint.toml (the CI hard gate)
@@ -162,6 +169,7 @@ pub fn run(args: &Args) -> Result<()> {
         "figure" | "figures" => cmd_figure(args),
         "hierarchy" => cmd_hierarchy(args),
         "serve" => cmd_serve(args),
+        "trace" => cmd_trace(args),
         "lint" => cmd_lint(args),
         "info" => cmd_info(),
         "" | "help" => {
@@ -433,6 +441,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .get_usize("max_streams_per_session", defaults.max_streams_per_session)?,
         stream_queue: args.get_usize("stream_queue", defaults.stream_queue)?,
         keyframe_every: args.get_usize("keyframe_every", defaults.keyframe_every)?,
+        // `--trace` turns observability on; absent, the FUNCSNE_TRACE
+        // env default (already folded into `defaults`) decides.
+        trace: args.get_flag("trace") || defaults.trace,
     };
     let server = Server::bind(cfg)?;
     let addr = server.local_addr();
@@ -444,6 +455,95 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  stream:  curl -sN {addr}/sessions/0/stream -o frames.bin");
     println!("  health:  curl -s {addr}/healthz   ·   metrics: curl -s {addr}/metrics");
     server.run()
+}
+
+/// Minimal one-shot HTTP GET for [`cmd_trace`]: one request per
+/// connection (`Connection: close`), so the whole response is "read
+/// to EOF". Returns (status, body).
+fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    use anyhow::Context;
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+        .with_context(|| format!("send request to {addr}"))?;
+    let mut raw = Vec::new();
+    stream
+        .read_to_end(&mut raw)
+        .with_context(|| format!("read response from {addr}"))?;
+    let text = String::from_utf8_lossy(&raw);
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed HTTP response from {addr}"))?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("missing status line in response from {addr}"))?;
+    Ok((status, body.to_string()))
+}
+
+/// `trace`: capture span data covering N sweeps from a running server
+/// and write it as Chrome trace-event JSON (loadable in Perfetto or
+/// chrome://tracing). The server must have tracing enabled
+/// (`serve --trace` or FUNCSNE_TRACE=1); we poll `/healthz` until the
+/// sweep counter advances by `--sweeps`, then snapshot `/debug/trace`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let sweeps = args.get_usize("sweeps", 50)? as u64;
+    let out = args.get_str("out", "trace.json");
+    let timeout_s = args.get_f64("timeout", 30.0)?;
+    let sweeps_now = |body: &str| -> Result<u64> {
+        let j = crate::server::json::parse(body)?;
+        j.get("sweeps")
+            .and_then(Json::as_usize)
+            .map(|s| s as u64)
+            .ok_or_else(|| anyhow::anyhow!("/healthz reply has no \"sweeps\" counter"))
+    };
+    let (status, body) = http_get(&addr, "/healthz")?;
+    if status != 200 {
+        bail!("GET {addr}/healthz returned {status}");
+    }
+    let start_sweeps = sweeps_now(&body)?;
+    eprintln!("connected to {addr} (sweep {start_sweeps}); capturing {sweeps} sweep(s)...");
+    // cli is not wall_clock-lint scope, but PhaseClock keeps every
+    // timing read in the repo on the one sanctioned shim.
+    let clock = crate::util::timer::PhaseClock::start();
+    loop {
+        let (status, body) = http_get(&addr, "/healthz")?;
+        if status != 200 {
+            bail!("GET {addr}/healthz returned {status}");
+        }
+        if sweeps_now(&body)? >= start_sweeps + sweeps {
+            break;
+        }
+        if clock.elapsed_ns() as f64 / 1e9 > timeout_s {
+            bail!(
+                "timed out after {timeout_s}s waiting for {sweeps} sweep(s); \
+                 is a session running? (POST {addr}/sessions)"
+            );
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let (status, body) = http_get(&addr, "/debug/trace")?;
+    if status != 200 {
+        bail!("GET {addr}/debug/trace returned {status}");
+    }
+    // Round-trip through the in-repo codec: validates the payload and
+    // re-encodes it canonically before it lands on disk.
+    let doc = crate::server::json::parse(&body)?;
+    let enabled = doc
+        .get("otherData")
+        .and_then(|o| o.get("enabled"))
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    if !enabled {
+        eprintln!("note: server tracing is OFF (start it with `serve --trace` or FUNCSNE_TRACE=1)");
+    }
+    let events = doc.get("traceEvents").and_then(Json::as_arr).map_or(0, <[Json]>::len);
+    std::fs::write(&out, doc.encode())?;
+    println!("wrote {out} ({events} events); open it at https://ui.perfetto.dev");
+    Ok(())
 }
 
 /// `lint`: the self-hosted determinism/concurrency checks of

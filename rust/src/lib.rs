@@ -114,6 +114,7 @@ pub mod knn;
 pub mod hd;
 pub mod ld;
 pub mod engine;
+pub mod obs;
 pub mod session;
 pub mod server;
 pub mod baselines;

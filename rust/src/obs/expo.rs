@@ -1,0 +1,434 @@
+//! A Prometheus text-exposition-format checker.
+//!
+//! `/metrics` is hand-rendered (`server/api.rs`), so nothing enforced
+//! its grammar until now. [`check_exposition`] validates every line of
+//! a scrape body: metric-name and label syntax, label-value escaping,
+//! `# HELP` / `# TYPE` preceding their samples, sample names matching
+//! the declared family (histograms may only emit `_bucket`/`_sum`/
+//! `_count`), and histogram completeness — cumulative, non-decreasing
+//! buckets ending in `le="+Inf"` whose value equals `_count`. Tests
+//! run it over both the unit-rendered and the live end-to-end scrape.
+
+use std::collections::BTreeMap;
+
+/// Escape a label value per the exposition format (`\\`, `\"`, `\n`).
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+#[derive(Default)]
+struct Family {
+    help_seen: bool,
+    type_seen: bool,
+    typ: String,
+    samples_seen: bool,
+}
+
+/// One parsed `_bucket`/`_sum`/`_count` sample of a histogram family,
+/// keyed by its label set minus `le`.
+#[derive(Default)]
+struct HistogramSeries {
+    /// `(le, cumulative count)` in emission order.
+    buckets: Vec<(f64, f64)>,
+    count: Option<f64>,
+    sum_seen: bool,
+}
+
+/// Validate a full text-format exposition. Returns every problem found
+/// (with 1-based line numbers), or `Ok(())` for a clean scrape.
+pub fn check_exposition(text: &str) -> Result<(), Vec<String>> {
+    let mut errors = Vec::new();
+    let mut families: BTreeMap<String, Family> = BTreeMap::new();
+    let mut series: BTreeMap<(String, String), HistogramSeries> = BTreeMap::new();
+
+    for (idx, line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            check_comment(rest, lineno, &mut families, &mut errors);
+            continue;
+        }
+        if line.starts_with('#') {
+            // Any other comment form is tolerated by scrapers.
+            continue;
+        }
+        check_sample(line, lineno, &mut families, &mut series, &mut errors);
+    }
+
+    for ((family, labels), s) in &series {
+        let what = if labels.is_empty() {
+            family.clone()
+        } else {
+            format!("{family}{{{labels}}}")
+        };
+        match s.buckets.last() {
+            None => errors.push(format!("histogram {what} has no _bucket samples")),
+            Some(&(le, last)) => {
+                if le.is_finite() {
+                    errors.push(format!("histogram {what} is missing the le=\"+Inf\" bucket"));
+                }
+                if let Some(count) = s.count {
+                    if count != last {
+                        errors.push(format!(
+                            "histogram {what}: _count {count} != +Inf bucket {last}"
+                        ));
+                    }
+                }
+            }
+        }
+        let mut prev = f64::NEG_INFINITY;
+        let mut prev_cum = -1.0f64;
+        for &(le, cum) in &s.buckets {
+            if le <= prev {
+                errors.push(format!("histogram {what}: le buckets not strictly increasing"));
+            }
+            if cum < prev_cum {
+                errors.push(format!("histogram {what}: bucket counts decrease at le={le}"));
+            }
+            prev = le;
+            prev_cum = cum;
+        }
+        if s.count.is_none() {
+            errors.push(format!("histogram {what} has no _count sample"));
+        }
+        if !s.sum_seen {
+            errors.push(format!("histogram {what} has no _sum sample"));
+        }
+    }
+
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        Err(errors)
+    }
+}
+
+fn check_comment(
+    rest: &str,
+    lineno: usize,
+    families: &mut BTreeMap<String, Family>,
+    errors: &mut Vec<String>,
+) {
+    let mut parts = rest.splitn(3, ' ');
+    let keyword = parts.next().unwrap_or("");
+    if keyword != "HELP" && keyword != "TYPE" {
+        return; // free-form comment
+    }
+    let Some(name) = parts.next() else {
+        errors.push(format!("line {lineno}: # {keyword} without a metric name"));
+        return;
+    };
+    if !valid_metric_name(name) {
+        errors.push(format!("line {lineno}: invalid metric name {name:?} in # {keyword}"));
+        return;
+    }
+    let fam = families.entry(name.to_string()).or_default();
+    if fam.samples_seen {
+        errors.push(format!("line {lineno}: # {keyword} for {name} after its samples"));
+    }
+    if keyword == "HELP" {
+        fam.help_seen = true;
+    } else {
+        let typ = parts.next().unwrap_or("").trim();
+        if !matches!(typ, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+            errors.push(format!("line {lineno}: unknown metric type {typ:?} for {name}"));
+        }
+        if fam.type_seen {
+            errors.push(format!("line {lineno}: duplicate # TYPE for {name}"));
+        }
+        fam.type_seen = true;
+        fam.typ = typ.to_string();
+    }
+}
+
+fn check_sample(
+    line: &str,
+    lineno: usize,
+    families: &mut BTreeMap<String, Family>,
+    series: &mut BTreeMap<(String, String), HistogramSeries>,
+    errors: &mut Vec<String>,
+) {
+    let (name, rest) = split_name(line);
+    if !valid_metric_name(name) {
+        errors.push(format!("line {lineno}: invalid sample name in {line:?}"));
+        return;
+    }
+    let (labels, value_text) = match parse_labels(rest) {
+        Ok(pair) => pair,
+        Err(e) => {
+            errors.push(format!("line {lineno}: {e}"));
+            return;
+        }
+    };
+    let value_text = value_text.trim();
+    // A trailing timestamp is legal; the value is the first field.
+    let value_field = value_text.split_whitespace().next().unwrap_or("");
+    let Some(value) = parse_value(value_field) else {
+        errors.push(format!("line {lineno}: unparseable sample value {value_field:?}"));
+        return;
+    };
+
+    // Resolve the family: histogram children map to their base name.
+    let (family_name, suffix) = match_family(name, families);
+    let Some(fam) = families.get_mut(&family_name) else {
+        errors.push(format!("line {lineno}: sample {name} has no # HELP/# TYPE"));
+        return;
+    };
+    if !fam.help_seen || !fam.type_seen {
+        errors.push(format!(
+            "line {lineno}: sample {name} must be preceded by both # HELP and # TYPE"
+        ));
+    }
+    fam.samples_seen = true;
+    let is_histogram = fam.typ == "histogram";
+    if is_histogram && suffix.is_none() {
+        errors.push(format!(
+            "line {lineno}: histogram {family_name} may only emit _bucket/_sum/_count"
+        ));
+        return;
+    }
+    if !is_histogram && suffix.is_some() {
+        // `match_family` only strips suffixes for declared histograms,
+        // so this cannot happen; keep the invariant explicit.
+        errors.push(format!("line {lineno}: unexpected suffixed sample {name}"));
+        return;
+    }
+
+    let mut le: Option<f64> = None;
+    let mut bare: Vec<String> = Vec::new();
+    for (k, v) in &labels {
+        if k == "le" {
+            le = parse_value(v);
+            if le.is_none() {
+                errors.push(format!("line {lineno}: unparseable le value {v:?}"));
+            }
+        } else {
+            bare.push(format!("{k}=\"{}\"", escape_label(v)));
+        }
+    }
+    let key = (family_name.clone(), bare.join(","));
+    match suffix {
+        Some("_bucket") => match le {
+            Some(le) => series.entry(key).or_default().buckets.push((le, value)),
+            None => errors.push(format!("line {lineno}: _bucket sample without an le label")),
+        },
+        Some("_count") => series.entry(key).or_default().count = Some(value),
+        Some("_sum") => series.entry(key).or_default().sum_seen = true,
+        _ => {}
+    }
+}
+
+/// Split a sample line at the end of the metric name.
+fn split_name(line: &str) -> (&str, &str) {
+    let end = line
+        .char_indices()
+        .find(|&(_, c)| !(c.is_ascii_alphanumeric() || c == '_' || c == ':'))
+        .map_or(line.len(), |(i, _)| i);
+    (&line[..end], &line[end..])
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse an optional `{k="v",...}` block; returns the labels and the
+/// remainder of the line (the value).
+#[allow(clippy::type_complexity)]
+fn parse_labels(rest: &str) -> Result<(Vec<(String, String)>, &str), String> {
+    let mut labels = Vec::new();
+    let Some(body) = rest.strip_prefix('{') else {
+        return Ok((labels, rest));
+    };
+    let bytes = body.as_bytes();
+    let mut i = 0usize;
+    loop {
+        // Label name.
+        let start = i;
+        while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+            i += 1;
+        }
+        let name = &body[start..i];
+        if !valid_label_name(name) {
+            return Err(format!("invalid label name {name:?}"));
+        }
+        if bytes.get(i) != Some(&b'=') || bytes.get(i + 1) != Some(&b'"') {
+            return Err(format!("label {name} is not followed by =\"...\""));
+        }
+        i += 2;
+        // Quoted value with escapes.
+        let mut value = String::new();
+        loop {
+            match bytes.get(i) {
+                None => return Err(format!("unterminated value for label {name}")),
+                Some(b'"') => {
+                    i += 1;
+                    break;
+                }
+                Some(b'\\') => {
+                    match bytes.get(i + 1) {
+                        Some(b'\\') => value.push('\\'),
+                        Some(b'"') => value.push('"'),
+                        Some(b'n') => value.push('\n'),
+                        other => {
+                            return Err(format!(
+                                "bad escape {:?} in label {name}",
+                                other.map(|&b| b as char)
+                            ))
+                        }
+                    }
+                    i += 2;
+                }
+                Some(_) => {
+                    // Multi-byte UTF-8 is legal in label values; step
+                    // one char, not one byte.
+                    let c = body[i..].chars().next().ok_or("label value is not UTF-8")?;
+                    value.push(c);
+                    i += c.len_utf8();
+                }
+            }
+        }
+        if labels.iter().any(|(n, _)| n == name) {
+            return Err(format!("duplicate label {name}"));
+        }
+        labels.push((name.to_string(), value));
+        match bytes.get(i) {
+            Some(b',') => i += 1,
+            Some(b'}') => {
+                i += 1;
+                break;
+            }
+            other => {
+                return Err(format!(
+                    "expected ',' or '}}' after label {name}, got {:?}",
+                    other.map(|&b| b as char)
+                ))
+            }
+        }
+    }
+    Ok((labels, &body[i..]))
+}
+
+fn parse_value(text: &str) -> Option<f64> {
+    match text {
+        "+Inf" => Some(f64::INFINITY),
+        "-Inf" => Some(f64::NEG_INFINITY),
+        "NaN" => Some(f64::NAN),
+        _ => text.parse::<f64>().ok(),
+    }
+}
+
+/// Map a sample name to its declared family. Histogram child suffixes
+/// are stripped only when the stripped base is a declared histogram.
+fn match_family(name: &str, families: &BTreeMap<String, Family>) -> (String, Option<&'static str>) {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if families.get(base).is_some_and(|f| f.typ == "histogram") {
+                return (base.to_string(), Some(suffix));
+            }
+        }
+    }
+    (name.to_string(), None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn errs(text: &str) -> Vec<String> {
+        check_exposition(text).expect_err("should be rejected")
+    }
+
+    #[test]
+    fn accepts_a_well_formed_exposition() {
+        let text = "\
+# HELP x_total Things.\n\
+# TYPE x_total counter\n\
+x_total 5\n\
+# HELP lat_us Latency.\n\
+# TYPE lat_us histogram\n\
+lat_us_bucket{route=\"GET /a\",le=\"1\"} 1\n\
+lat_us_bucket{route=\"GET /a\",le=\"+Inf\"} 3\n\
+lat_us_sum{route=\"GET /a\"} 40\n\
+lat_us_count{route=\"GET /a\"} 3\n\
+# HELP g A gauge.\n\
+# TYPE g gauge\n\
+g{id=\"1\",state=\"running\"} 1\n";
+        assert_eq!(check_exposition(text), Ok(()));
+    }
+
+    #[test]
+    fn rejects_samples_before_help_and_type() {
+        let text = "x_total 5\n# HELP x_total Things.\n# TYPE x_total counter\n";
+        let es = errs(text);
+        assert!(es.iter().any(|e| e.contains("no # HELP")), "{es:?}");
+        assert!(es.iter().any(|e| e.contains("after its samples")), "{es:?}");
+    }
+
+    #[test]
+    fn rejects_bad_names_labels_and_values() {
+        assert!(errs("# HELP 9bad x\n# TYPE 9bad gauge\n").iter().any(|e| e.contains("invalid")));
+        let text = "# HELP g x\n# TYPE g gauge\ng{id=\"1\" 2\n";
+        assert!(errs(text).iter().any(|e| e.contains("expected ',' or '}'")));
+        let text = "# HELP g x\n# TYPE g gauge\ng{id=\"a\\q\"} 2\n";
+        assert!(errs(text).iter().any(|e| e.contains("bad escape")));
+        let text = "# HELP g x\n# TYPE g gauge\ng nope\n";
+        assert!(errs(text).iter().any(|e| e.contains("unparseable sample value")));
+        let text = "# HELP g x\n# TYPE g gauge\ng{id=\"1\",id=\"2\"} 2\n";
+        assert!(errs(text).iter().any(|e| e.contains("duplicate label")));
+    }
+
+    #[test]
+    fn escaped_label_values_round_trip() {
+        let text = format!(
+            "# HELP g x\n# TYPE g gauge\ng{{path=\"{}\"}} 1\n",
+            escape_label("a\\b\"c\nd")
+        );
+        assert_eq!(check_exposition(&text), Ok(()));
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+    }
+
+    #[test]
+    fn histogram_must_be_complete_and_cumulative() {
+        let head = "# HELP h x\n# TYPE h histogram\n";
+        let text = format!("{head}h_bucket{{le=\"1\"}} 1\nh_sum 1\nh_count 1\n");
+        assert!(errs(&text).iter().any(|e| e.contains("+Inf")), "missing +Inf");
+        let text = format!(
+            "{head}h_bucket{{le=\"1\"}} 5\nh_bucket{{le=\"+Inf\"}} 3\nh_sum 1\nh_count 3\n"
+        );
+        assert!(errs(&text).iter().any(|e| e.contains("decrease")), "non-cumulative");
+        let text = format!("{head}h_bucket{{le=\"1\"}} 1\nh_bucket{{le=\"+Inf\"}} 2\nh_sum 3\n");
+        assert!(errs(&text).iter().any(|e| e.contains("no _count")), "missing count");
+        let text = format!(
+            "{head}h_bucket{{le=\"1\"}} 1\nh_bucket{{le=\"+Inf\"}} 2\nh_sum 3\nh_count 9\n"
+        );
+        assert!(errs(&text).iter().any(|e| e.contains("!= +Inf")), "count mismatch");
+        let text = format!("{head}h 3\n");
+        assert!(errs(&text).iter().any(|e| e.contains("only emit")), "bare histogram sample");
+    }
+}

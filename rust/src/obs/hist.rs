@@ -1,0 +1,262 @@
+//! A log-linear fixed-bucket latency histogram with lock-free
+//! recording.
+//!
+//! Buckets follow the classic 1-2-5 decade ladder from 1 to 10⁹
+//! (microseconds in practice, but the histogram is unit-agnostic), so
+//! boundaries are **deterministic**: every process, thread and run
+//! agrees on them, snapshots from different servers merge bucket-by-
+//! bucket, and Prometheus `le` labels are stable across restarts.
+//! Recording is two relaxed `fetch_add`s — no locks, no allocation —
+//! cheap enough to sit on the step hot path when observability is on
+//! and to cost exactly one branch when it is off (the caller gates on
+//! [`super::Obs::enabled`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Upper bucket bounds (inclusive), 1-2-5 per decade over 1..=10⁹.
+/// Values above the last bound land in the implicit `+Inf` bucket.
+pub const BOUNDS: [u64; 28] = [
+    1,
+    2,
+    5,
+    10,
+    20,
+    50,
+    100,
+    200,
+    500,
+    1_000,
+    2_000,
+    5_000,
+    10_000,
+    20_000,
+    50_000,
+    100_000,
+    200_000,
+    500_000,
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+    20_000_000,
+    50_000_000,
+    100_000_000,
+    200_000_000,
+    500_000_000,
+    1_000_000_000,
+];
+
+/// Bucket count including the `+Inf` overflow slot.
+const SLOTS: usize = BOUNDS.len() + 1;
+
+/// Fixed-bucket histogram: one atomic counter per bucket plus a sum.
+/// Readers take [`Hist::snapshot`]; writers call [`Hist::record`] from
+/// any thread.
+pub struct Hist {
+    counts: [AtomicU64; SLOTS],
+    sum: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist { counts: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+
+    /// Record one observation. Relaxed ordering is enough: counters are
+    /// monotonic telemetry, never synchronisation.
+    pub fn record(&self, v: u64) {
+        let idx = BOUNDS.partition_point(|&b| b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the counters. Individual loads are
+    /// relaxed, so a snapshot taken mid-record may be off by one
+    /// in-flight observation — fine for telemetry.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        HistSnapshot { counts, sum: self.sum.load(Ordering::Relaxed) }
+    }
+}
+
+/// An owned copy of a [`Hist`]'s counters, with quantile estimation and
+/// Prometheus rendering.
+#[derive(Clone, Debug, Default)]
+pub struct HistSnapshot {
+    /// Per-bucket (non-cumulative) counts; the last slot is `+Inf`.
+    pub counts: Vec<u64>,
+    /// Sum of every recorded value.
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Merge another snapshot into this one (deterministic bounds mean
+    /// buckets align by construction).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Quantile estimate: the upper bound of the bucket holding the
+    /// sample at [`quantile_position`]. Saturates at the last finite
+    /// bound for observations in the `+Inf` bucket; 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = quantile_position(total as usize, q).floor() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > target {
+                let bound = if i < BOUNDS.len() { BOUNDS[i] } else { BOUNDS[BOUNDS.len() - 1] };
+                return bound as f64;
+            }
+        }
+        BOUNDS[BOUNDS.len() - 1] as f64
+    }
+
+    /// Prometheus text-format sample lines for one histogram label set:
+    /// cumulative `_bucket{le=...}` lines ending with `le="+Inf"`, then
+    /// `_sum` and `_count`. `labels` is a pre-escaped `k="v",...`
+    /// fragment (empty for an unlabelled family).
+    pub fn prometheus_lines(&self, name: &str, labels: &str) -> String {
+        let mut out = String::new();
+        let mut cum = 0u64;
+        for i in 0..self.counts.len().max(SLOTS) {
+            cum += self.counts.get(i).copied().unwrap_or(0);
+            let le = if i < BOUNDS.len() { BOUNDS[i].to_string() } else { "+Inf".to_string() };
+            if labels.is_empty() {
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            } else {
+                out.push_str(&format!("{name}_bucket{{{labels},le=\"{le}\"}} {cum}\n"));
+            }
+        }
+        let sel = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        out.push_str(&format!("{name}_sum{sel} {}\n", self.sum));
+        out.push_str(&format!("{name}_count{sel} {cum}\n"));
+        out
+    }
+}
+
+/// 0-based position of quantile `q` among `count` ordered samples —
+/// the single definition shared by [`HistSnapshot::quantile`] and
+/// [`quantile_sorted`] (which `util::timer::bench_fn` uses), so a
+/// bench median and a histogram p50 mean the same thing.
+pub fn quantile_position(count: usize, q: f64) -> f64 {
+    q.clamp(0.0, 1.0) * count.saturating_sub(1) as f64
+}
+
+/// Linear-interpolation quantile over an ascending-sorted slice:
+/// `q=0.5` on an even-length input averages the two middle elements.
+/// Returns 0 for empty input.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = quantile_position(sorted.len(), q);
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi.min(sorted.len() - 1)] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_strictly_increasing() {
+        for w in BOUNDS.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+        assert_eq!(BOUNDS[0], 1);
+        assert_eq!(BOUNDS[BOUNDS.len() - 1], 1_000_000_000);
+    }
+
+    #[test]
+    fn record_lands_in_the_right_bucket() {
+        let h = Hist::new();
+        h.record(1); // le="1"
+        h.record(3); // le="5"
+        h.record(1_000_000_001); // +Inf
+        let s = h.snapshot();
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.sum, 1_000_000_005);
+        assert_eq!(s.counts[0], 1);
+        assert_eq!(s.counts[2], 1);
+        assert_eq!(s.counts[BOUNDS.len()], 1, "+Inf bucket");
+    }
+
+    #[test]
+    fn quantiles_track_bucket_bounds() {
+        let h = Hist::new();
+        for _ in 0..90 {
+            h.record(40); // le="50"
+        }
+        for _ in 0..10 {
+            h.record(9_000); // le="10000"
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 50.0);
+        assert_eq!(s.quantile(0.99), 10_000.0);
+        assert_eq!(HistSnapshot::default().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_sorted_interpolates_median() {
+        // Even length: the old bench_fn bug took 3.0 here.
+        assert_eq!(quantile_sorted(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.5);
+        assert_eq!(quantile_sorted(&[1.0, 2.0, 3.0], 0.5), 2.0);
+        assert_eq!(quantile_sorted(&[7.0], 0.95), 7.0);
+        assert_eq!(quantile_sorted(&[], 0.5), 0.0);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((quantile_sorted(&xs, 0.95) - 95.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_lines_are_cumulative_with_inf() {
+        let h = Hist::new();
+        h.record(1);
+        h.record(3);
+        let text = h.snapshot().prometheus_lines("x_micros", "phase=\"forces\"");
+        assert!(text.contains("x_micros_bucket{phase=\"forces\",le=\"1\"} 1\n"), "{text}");
+        assert!(text.contains("x_micros_bucket{phase=\"forces\",le=\"5\"} 2\n"), "{text}");
+        assert!(text.contains("x_micros_bucket{phase=\"forces\",le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("x_micros_sum{phase=\"forces\"} 4\n"), "{text}");
+        assert!(text.contains("x_micros_count{phase=\"forces\"} 2\n"), "{text}");
+        let bare = h.snapshot().prometheus_lines("y", "");
+        assert!(bare.contains("y_bucket{le=\"+Inf\"} 2\n"), "{bare}");
+        assert!(bare.contains("y_sum 4\n"), "{bare}");
+    }
+
+    #[test]
+    fn merge_adds_bucketwise() {
+        let a = Hist::new();
+        let b = Hist::new();
+        a.record(10);
+        b.record(10);
+        b.record(2_000_000_000);
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.counts[3], 2, "both le=10 observations");
+    }
+}

@@ -1,0 +1,482 @@
+//! Zero-dependency observability: latency histograms + span tracing.
+//!
+//! The [`Obs`] registry is one shared [`std::sync::Arc`] holding every
+//! [`hist::Hist`] family and the bounded [`trace::Tracer`] ring. The
+//! server creates it once ([`crate::server::Server::bind`]) and hands
+//! clones to the stepper thread, the [`crate::server::frames::FrameHub`]
+//! and each HTTP worker, so all recording lands in one place and both
+//! export surfaces — `/metrics` histogram families and `GET
+//! /debug/trace` Chrome trace JSON — read a consistent view.
+//!
+//! Everything is **off by default** and gated on a single `enabled`
+//! bool fixed at construction (config `trace` / env `FUNCSNE_TRACE`):
+//! every record method early-returns when disabled, so the deterministic
+//! hot path pays one predictable branch and no clock reads. All timing
+//! goes through [`crate::util::timer::PhaseClock`] — the `wall_clock`
+//! lint rule gates this module like the engine.
+
+pub mod expo;
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot};
+pub use trace::{TraceEvent, Tracer};
+
+use crate::engine::PhaseMicros;
+use crate::util::timer::PhaseClock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use trace::{HTTP_TID_BASE, STEPPER_TID};
+
+/// HTTP route families for per-route latency histograms. Fixed at
+/// compile time so label cardinality is bounded; unmatched paths land
+/// in `other`.
+pub const ROUTES: [&str; 12] = [
+    "GET /healthz",
+    "GET /metrics",
+    "GET /debug/trace",
+    "POST /sessions",
+    "GET /sessions",
+    "GET /sessions/:id",
+    "GET /sessions/:id/stats",
+    "GET /sessions/:id/embedding",
+    "GET /sessions/:id/stream",
+    "POST /sessions/:id/commands",
+    "DELETE /sessions/:id",
+    "other",
+];
+
+/// Status-class labels for HTTP latency histograms.
+pub const STATUS_CLASSES: [&str; 4] = ["2xx", "3xx", "4xx", "5xx"];
+
+/// Map `(method, path)` to an index into [`ROUTES`].
+pub fn route_index(method: &str, path: &str) -> usize {
+    let segments: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    let idx = match (method, segments.as_slice()) {
+        ("GET", ["healthz"]) => 0,
+        ("GET", ["metrics"]) => 1,
+        ("GET", ["debug", "trace"]) => 2,
+        ("POST", ["sessions"]) => 3,
+        ("GET", ["sessions"]) => 4,
+        ("GET", ["sessions", _]) => 5,
+        ("GET", ["sessions", _, "stats"]) => 6,
+        ("GET", ["sessions", _, "embedding"]) => 7,
+        ("GET", ["sessions", _, "stream"]) => 8,
+        ("POST", ["sessions", _, "commands"]) => 9,
+        ("DELETE", ["sessions", _]) => 10,
+        _ => 11,
+    };
+    debug_assert!(idx < ROUTES.len());
+    idx
+}
+
+/// Map an HTTP status code to an index into [`STATUS_CLASSES`].
+pub fn status_class(status: u16) -> usize {
+    match status {
+        200..=299 => 0,
+        300..=399 => 1,
+        400..=499 => 2,
+        _ => 3,
+    }
+}
+
+/// Per-step timing sample handed from the stepper's sweep loop to
+/// [`Obs::record_step`] and [`SessionLatency::record`].
+#[derive(Clone, Copy, Debug)]
+pub struct StepTrace {
+    /// Engine iteration number after the step.
+    pub iter: usize,
+    /// Step start, µs on the [`Obs`] epoch clock.
+    pub ts_us: u64,
+    /// Wall time of the whole step, µs.
+    pub wall_us: u64,
+    /// Per-phase engine-side split of this step (delta, not
+    /// cumulative).
+    pub phases: PhaseMicros,
+}
+
+/// p50/p95/p99 for one phase of one session, as reported in
+/// `GET /sessions/:id/stats`.
+#[derive(Clone, Debug)]
+pub struct PhaseQuantiles {
+    pub phase: &'static str,
+    pub samples: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// Per-session step-latency histograms backing the stats-JSON
+/// `latency` object: whole-step wall time plus one histogram per
+/// engine phase. Lives in the stepper's `SessionMeta`, dropped with
+/// the session.
+#[derive(Default)]
+pub struct SessionLatency {
+    step: Hist,
+    phases: [Hist; 5],
+}
+
+impl SessionLatency {
+    pub fn record(&self, st: &StepTrace) {
+        self.step.record(st.wall_us);
+        for (i, (_, us)) in st.phases.named().iter().enumerate() {
+            self.phases[i].record(*us);
+        }
+    }
+
+    /// Quantiles per phase (whole-step `step` first), skipping phases
+    /// with no samples. Empty when nothing was recorded.
+    pub fn quantiles(&self) -> Vec<PhaseQuantiles> {
+        let mut out = Vec::with_capacity(1 + self.phases.len());
+        let mut push = |phase: &'static str, s: HistSnapshot| {
+            let samples = s.count();
+            if samples > 0 {
+                out.push(PhaseQuantiles {
+                    phase,
+                    samples,
+                    p50_us: s.quantile(0.5),
+                    p95_us: s.quantile(0.95),
+                    p99_us: s.quantile(0.99),
+                });
+            }
+        };
+        push("step", self.step.snapshot());
+        for (i, name) in PhaseMicros::NAMES.iter().enumerate() {
+            push(name, self.phases[i].snapshot());
+        }
+        out
+    }
+}
+
+/// The shared observability registry. All fields are atomics or
+/// internally locked, so recording needs only `&Obs` from any thread.
+pub struct Obs {
+    enabled: bool,
+    /// Epoch for every trace timestamp: one clock started at
+    /// construction, shared by stepper and HTTP workers.
+    epoch: PhaseClock,
+    next_request: AtomicU64,
+    /// Whole-step wall time, µs (all sessions).
+    pub step: Hist,
+    /// Engine-phase split of step time, µs; indexed like
+    /// [`PhaseMicros::NAMES`].
+    pub step_phase: [Hist; 5],
+    /// Sweep duration, µs.
+    pub sweep: Hist,
+    /// Frame encode time, µs.
+    pub frame_encode: Hist,
+    /// Encoded frame size, bytes.
+    pub frame_bytes: Hist,
+    /// Subscriber queue depth after a successful enqueue.
+    pub queue_depth: Hist,
+    /// HTTP request latency, µs, by `[route][status_class]`.
+    http: Box<[[Hist; 4]; 12]>,
+    tracer: Tracer,
+}
+
+impl Obs {
+    pub fn new(enabled: bool) -> Obs {
+        Obs {
+            enabled,
+            epoch: PhaseClock::start(),
+            next_request: AtomicU64::new(1),
+            step: Hist::new(),
+            step_phase: Default::default(),
+            sweep: Hist::new(),
+            frame_encode: Hist::new(),
+            frame_bytes: Hist::new(),
+            queue_depth: Hist::new(),
+            http: Box::new(std::array::from_fn(|_| Default::default())),
+            tracer: Tracer::new(),
+        }
+    }
+
+    /// `FUNCSNE_TRACE` truthiness: `1`/`true`/`yes`/`on`,
+    /// case-insensitive.
+    pub fn env_enabled() -> bool {
+        std::env::var("FUNCSNE_TRACE")
+            .map(|v| {
+                let v = v.trim().to_ascii_lowercase();
+                matches!(v.as_str(), "1" | "true" | "yes" | "on")
+            })
+            .unwrap_or(false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Microseconds since this registry was created — the trace
+    /// timeline.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed_ns() / 1_000
+    }
+
+    /// Record one finished HTTP request: latency histogram by
+    /// route/status class plus an `http` trace span on the worker's
+    /// tid. `micros` is the handler wall time; the span is backdated
+    /// so it ends "now".
+    pub fn observe_http(&self, method: &str, path: &str, status: u16, micros: u64, worker: usize) {
+        if !self.enabled {
+            return;
+        }
+        let route = route_index(method, path);
+        self.http[route][status_class(status)].record(micros);
+        let request = self.next_request.fetch_add(1, Ordering::Relaxed);
+        // `/sessions/:id/...` — tag the span with the session when the
+        // id segment parses.
+        let session = path
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .nth(1)
+            .and_then(|s| s.parse::<u64>().ok());
+        self.tracer.record(TraceEvent {
+            name: "http",
+            cat: "http",
+            ph: 'X',
+            ts_us: self.now_us().saturating_sub(micros),
+            dur_us: micros,
+            tid: HTTP_TID_BASE + worker as u32,
+            session,
+            sweep: None,
+            request: Some(request),
+            detail: format!("{} -> {status}", ROUTES[route]),
+        });
+    }
+
+    /// Record one stepper sweep: duration histogram plus a `sweep`
+    /// span enclosing the sweep's `session_step` spans.
+    pub fn record_sweep(&self, sweep_no: u64, steps: u64, ts_us: u64, dur_us: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.sweep.record(dur_us);
+        self.tracer.record(TraceEvent {
+            name: "sweep",
+            cat: "stepper",
+            ph: 'X',
+            ts_us,
+            dur_us,
+            tid: STEPPER_TID,
+            session: None,
+            sweep: Some(sweep_no),
+            request: None,
+            detail: format!("{steps} steps"),
+        });
+    }
+
+    /// Record one engine step: global step + per-phase histograms, a
+    /// `session_step` span, and per-phase child spans laid out
+    /// sequentially in execution order (the engine reports per-phase
+    /// durations, not timestamps; phases do run in this order inside
+    /// the step, so containment is faithful).
+    pub fn record_step(&self, session: u64, sweep_no: u64, st: &StepTrace) {
+        if !self.enabled {
+            return;
+        }
+        self.step.record(st.wall_us);
+        let named = st.phases.named();
+        for (i, (_, us)) in named.iter().enumerate() {
+            self.step_phase[i].record(*us);
+        }
+        self.tracer.record(TraceEvent {
+            name: "session_step",
+            cat: "stepper",
+            ph: 'X',
+            ts_us: st.ts_us,
+            dur_us: st.wall_us,
+            tid: STEPPER_TID,
+            session: Some(session),
+            sweep: Some(sweep_no),
+            request: None,
+            detail: format!("iter {}", st.iter),
+        });
+        let mut cursor = st.ts_us;
+        for (name, us) in named {
+            if us == 0 {
+                continue;
+            }
+            self.tracer.record(TraceEvent {
+                name,
+                cat: "engine",
+                ph: 'X',
+                ts_us: cursor,
+                dur_us: us,
+                tid: STEPPER_TID,
+                session: Some(session),
+                sweep: Some(sweep_no),
+                request: None,
+                detail: String::new(),
+            });
+            cursor = cursor.saturating_add(us);
+        }
+    }
+
+    /// Record one encoded frame (encode wall time + wire size).
+    pub fn record_frame(&self, encode_us: u64, bytes: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.frame_encode.record(encode_us);
+        self.frame_bytes.record(bytes);
+    }
+
+    /// Record a subscriber's queue depth after an enqueue.
+    pub fn record_queue_depth(&self, depth: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.queue_depth.record(depth);
+    }
+
+    /// Non-empty HTTP latency snapshots as
+    /// `(route, status_class, snapshot)`.
+    pub fn http_snapshots(&self) -> Vec<(&'static str, &'static str, HistSnapshot)> {
+        let mut out = Vec::new();
+        for (r, route) in ROUTES.iter().enumerate() {
+            for (c, class) in STATUS_CLASSES.iter().enumerate() {
+                let snap = self.http[r][c].snapshot();
+                if snap.count() > 0 {
+                    out.push((*route, *class, snap));
+                }
+            }
+        }
+        out
+    }
+
+    /// All HTTP latency merged into one snapshot (bench summaries).
+    pub fn http_total(&self) -> HistSnapshot {
+        let mut total = HistSnapshot::default();
+        for row in self.http.iter() {
+            for h in row {
+                total.merge(&h.snapshot());
+            }
+        }
+        total
+    }
+
+    /// Copy out the trace ring: `(events oldest-first, dropped)`.
+    pub fn tracer_snapshot(&self) -> (Vec<TraceEvent>, u64) {
+        self.tracer.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_table_covers_the_api() {
+        assert_eq!(route_index("GET", "/healthz"), 0);
+        assert_eq!(route_index("GET", "/metrics"), 1);
+        assert_eq!(route_index("GET", "/debug/trace"), 2);
+        assert_eq!(route_index("POST", "/sessions"), 3);
+        assert_eq!(route_index("GET", "/sessions"), 4);
+        assert_eq!(route_index("GET", "/sessions/17"), 5);
+        assert_eq!(route_index("GET", "/sessions/17/stats"), 6);
+        assert_eq!(route_index("GET", "/sessions/17/embedding"), 7);
+        assert_eq!(route_index("GET", "/sessions/17/stream"), 8);
+        assert_eq!(route_index("POST", "/sessions/17/commands"), 9);
+        assert_eq!(route_index("DELETE", "/sessions/17"), 10);
+        assert_eq!(route_index("PUT", "/sessions/17"), 11);
+        assert_eq!(route_index("GET", "/nope"), 11);
+        assert_eq!(ROUTES[11], "other");
+    }
+
+    #[test]
+    fn status_classes_partition_codes() {
+        assert_eq!(STATUS_CLASSES[status_class(200)], "2xx");
+        assert_eq!(STATUS_CLASSES[status_class(301)], "3xx");
+        assert_eq!(STATUS_CLASSES[status_class(404)], "4xx");
+        assert_eq!(STATUS_CLASSES[status_class(500)], "5xx");
+        assert_eq!(STATUS_CLASSES[status_class(101)], "5xx", "odd codes land in 5xx");
+    }
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let obs = Obs::new(false);
+        obs.observe_http("GET", "/healthz", 200, 42, 0);
+        obs.record_sweep(1, 3, 0, 100);
+        let st = StepTrace { iter: 1, ts_us: 0, wall_us: 9, phases: PhaseMicros::default() };
+        obs.record_step(1, 1, &st);
+        obs.record_frame(5, 400);
+        obs.record_queue_depth(2);
+        assert!(!obs.enabled());
+        assert_eq!(obs.step.snapshot().count(), 0);
+        assert_eq!(obs.sweep.snapshot().count(), 0);
+        assert_eq!(obs.http_total().count(), 0);
+        assert!(obs.http_snapshots().is_empty());
+        assert_eq!(obs.tracer_snapshot().0.len(), 0);
+    }
+
+    #[test]
+    fn enabled_obs_builds_nested_spans() {
+        let obs = Obs::new(true);
+        let phases = PhaseMicros { forces: 30, update: 10, ..Default::default() };
+        let st = StepTrace { iter: 4, ts_us: 100, wall_us: 50, phases };
+        obs.record_step(7, 2, &st);
+        obs.record_sweep(2, 1, 90, 80);
+        let (events, dropped) = obs.tracer_snapshot();
+        assert_eq!(dropped, 0);
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["session_step", "forces", "update", "sweep"]);
+        let step = &events[0];
+        let forces = &events[1];
+        let update = &events[2];
+        let sweep = &events[3];
+        // Time containment: sweep ⊇ step ⊇ phases, phases sequential.
+        assert!(sweep.ts_us <= step.ts_us);
+        assert!(step.ts_us + step.dur_us <= sweep.ts_us + sweep.dur_us);
+        assert_eq!(forces.ts_us, step.ts_us);
+        assert_eq!(update.ts_us, forces.ts_us + forces.dur_us);
+        assert!(update.ts_us + update.dur_us <= step.ts_us + step.dur_us);
+        assert_eq!(step.session, Some(7));
+        assert_eq!(step.sweep, Some(2));
+        assert_eq!(obs.step.snapshot().count(), 1);
+        assert_eq!(obs.step_phase[3].snapshot().count(), 1, "forces phase hist");
+    }
+
+    #[test]
+    fn http_observation_tags_route_status_and_session() {
+        let obs = Obs::new(true);
+        obs.observe_http("GET", "/sessions/5/stats", 200, 120, 2);
+        obs.observe_http("GET", "/sessions/5/stats", 404, 10, 2);
+        obs.observe_http("GET", "/metrics", 200, 50, 0);
+        let snaps = obs.http_snapshots();
+        assert_eq!(snaps.len(), 3);
+        assert!(snaps
+            .iter()
+            .any(|(r, c, s)| *r == "GET /sessions/:id/stats" && *c == "2xx" && s.count() == 1));
+        assert!(snaps.iter().any(|(r, c, _)| *r == "GET /sessions/:id/stats" && *c == "4xx"));
+        assert_eq!(obs.http_total().count(), 3);
+        let (events, _) = obs.tracer_snapshot();
+        assert_eq!(events[0].session, Some(5));
+        assert_eq!(events[0].tid, trace::HTTP_TID_BASE + 2);
+        assert_eq!(events[2].session, None);
+        assert_eq!(events[0].request, Some(1));
+        assert_eq!(events[1].request, Some(2));
+        assert!(events[0].detail.contains("-> 200"), "{}", events[0].detail);
+    }
+
+    #[test]
+    fn session_latency_reports_phase_quantiles() {
+        let lat = SessionLatency::default();
+        let phases = PhaseMicros { forces: 40, ..Default::default() };
+        for _ in 0..10 {
+            lat.record(&StepTrace { iter: 0, ts_us: 0, wall_us: 90, phases });
+        }
+        let qs = lat.quantiles();
+        let names: Vec<&str> = qs.iter().map(|q| q.phase).collect();
+        // Zero-duration phases are recorded (le="1" bucket) so every
+        // phase reports once any step ran.
+        assert_eq!(
+            names,
+            vec!["step", "refine_ld", "refine_hd", "recalibrate", "forces", "update"]
+        );
+        let step = &qs[0];
+        assert_eq!(step.samples, 10);
+        assert_eq!(step.p50_us, 100.0, "90µs lands in the le=100 bucket");
+        let forces = qs.iter().find(|q| q.phase == "forces").expect("forces");
+        assert_eq!(forces.p95_us, 50.0);
+        assert!(SessionLatency::default().quantiles().is_empty());
+    }
+}

@@ -1,0 +1,201 @@
+//! A bounded span tracer with Chrome trace-event export.
+//!
+//! Events are recorded into a fixed-capacity ring buffer behind a
+//! [`DebugMutex`] (its own lock class; never held while taking any
+//! other lock) and exported as Chrome trace-event JSON — the
+//! `{"traceEvents": [...]}` format Perfetto and `chrome://tracing`
+//! load directly. Timestamps are microseconds on a single epoch
+//! [`crate::util::timer::PhaseClock`] owned by the [`super::Obs`]
+//! registry, so spans recorded by the stepper thread and the HTTP
+//! workers share one timeline.
+//!
+//! Nesting is by time containment per `tid`, the Chrome model for
+//! `"ph":"X"` complete events: the stepper thread emits `sweep` spans
+//! containing `session_step` spans containing per-phase spans, and
+//! each HTTP worker emits one `http` span per request on its own tid.
+
+use crate::runtime::sync::DebugMutex;
+use crate::server::json::Json;
+use std::collections::VecDeque;
+
+/// `tid` of the stepper thread in exported traces.
+pub const STEPPER_TID: u32 = 1;
+/// `tid` base for HTTP workers (worker `i` exports as `HTTP_TID_BASE + i`).
+pub const HTTP_TID_BASE: u32 = 100;
+/// Ring capacity: ~1 MB of events; old events are dropped (and
+/// counted) once full, so tracing can stay on indefinitely.
+const TRACE_CAPACITY: usize = 16_384;
+
+/// One trace event. `ph` is the Chrome phase: `'X'` for a complete
+/// span (`ts` + `dur`), `'i'` for an instant.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Category: `stepper`, `engine` or `http`.
+    pub cat: &'static str,
+    pub ph: char,
+    /// Microseconds since the tracer epoch.
+    pub ts_us: u64,
+    /// Span duration, µs (0 for instants).
+    pub dur_us: u64,
+    pub tid: u32,
+    /// Session id tag, when the event belongs to one.
+    pub session: Option<u64>,
+    /// Sweep number tag (stepper-side events).
+    pub sweep: Option<u64>,
+    /// Request id tag (HTTP events).
+    pub request: Option<u64>,
+    /// Free-form detail (route, status, iteration, step count).
+    pub detail: String,
+}
+
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// The bounded event sink. Callers gate on [`super::Obs::enabled`]
+/// before building an event, so a disabled tracer is never touched.
+pub struct Tracer {
+    ring: DebugMutex<Ring>,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            ring: DebugMutex::new(
+                "obs.trace_ring",
+                Ring { events: VecDeque::new(), dropped: 0 },
+            ),
+        }
+    }
+
+    /// Append one event, evicting the oldest when full.
+    pub fn record(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock();
+        if ring.events.len() >= TRACE_CAPACITY {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(ev);
+    }
+
+    /// Copy out the buffered events (oldest first) and the count of
+    /// events evicted by the ring bound.
+    pub fn snapshot(&self) -> (Vec<TraceEvent>, u64) {
+        let ring = self.ring.lock();
+        (ring.events.iter().cloned().collect(), ring.dropped)
+    }
+}
+
+/// Render events as a Chrome trace-event JSON document (the "JSON
+/// object format": a `traceEvents` array plus metadata). Load it in
+/// Perfetto (ui.perfetto.dev) or `chrome://tracing` as-is.
+pub fn chrome_trace_json(events: &[TraceEvent], enabled: bool, dropped: u64) -> Json {
+    let items: Vec<Json> = events.iter().map(event_json).collect();
+    Json::obj(vec![
+        ("traceEvents", items.into()),
+        ("displayTimeUnit", "ms".into()),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("tool", "funcsne".into()),
+                ("enabled", enabled.into()),
+                ("dropped", dropped.into()),
+            ]),
+        ),
+    ])
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut args: Vec<(&str, Json)> = Vec::new();
+    if let Some(s) = ev.session {
+        args.push(("session", s.into()));
+    }
+    if let Some(s) = ev.sweep {
+        args.push(("sweep", s.into()));
+    }
+    if let Some(r) = ev.request {
+        args.push(("request", r.into()));
+    }
+    if !ev.detail.is_empty() {
+        args.push(("detail", ev.detail.as_str().into()));
+    }
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", ev.name.into()),
+        ("cat", ev.cat.into()),
+        ("ph", ev.ph.to_string().into()),
+        ("ts", (ev.ts_us as f64).into()),
+        ("dur", (ev.dur_us as f64).into()),
+        ("pid", 1u64.into()),
+        ("tid", u64::from(ev.tid).into()),
+        ("args", Json::obj(args)),
+    ];
+    if ev.ph == 'i' {
+        // Instant scope: thread-local, the narrowest marker.
+        fields.push(("s", "t".into()));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::json;
+
+    fn ev(name: &'static str, ts: u64) -> TraceEvent {
+        TraceEvent {
+            name,
+            cat: "stepper",
+            ph: 'X',
+            ts_us: ts,
+            dur_us: 5,
+            tid: STEPPER_TID,
+            session: Some(3),
+            sweep: Some(9),
+            request: None,
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::new();
+        for i in 0..(TRACE_CAPACITY as u64 + 10) {
+            t.record(ev("sweep", i));
+        }
+        let (events, dropped) = t.snapshot();
+        assert_eq!(events.len(), TRACE_CAPACITY);
+        assert_eq!(dropped, 10);
+        assert_eq!(events[0].ts_us, 10, "oldest events evicted first");
+    }
+
+    #[test]
+    fn chrome_json_round_trips_through_the_codec() {
+        let t = Tracer::new();
+        t.record(ev("sweep", 100));
+        t.record(TraceEvent { request: Some(7), cat: "http", ..ev("http", 120) });
+        let (events, dropped) = t.snapshot();
+        let doc = chrome_trace_json(&events, true, dropped);
+        let text = doc.encode();
+        let parsed = json::parse(&text).expect("self-encoded trace must parse");
+        let items = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(items.len(), 2);
+        let first = &items[0];
+        assert_eq!(first.get("name").and_then(Json::as_str), Some("sweep"));
+        assert_eq!(first.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(first.get("ts").and_then(Json::as_f64), Some(100.0));
+        let session = first.get("args").and_then(|a| a.get("session"));
+        assert_eq!(session.and_then(Json::as_usize), Some(3));
+        let request = items[1].get("args").and_then(|a| a.get("request"));
+        assert_eq!(request.and_then(Json::as_usize), Some(7));
+        let dropped = parsed.get("otherData").and_then(|o| o.get("dropped"));
+        assert_eq!(dropped.and_then(Json::as_usize), Some(0));
+    }
+}

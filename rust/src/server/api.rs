@@ -5,6 +5,7 @@
 //! |-------------------------------------|-------------------------------------------|
 //! | `GET  /healthz`                     | liveness (round-trips the stepper)        |
 //! | `GET  /metrics`                     | Prometheus text-format counters           |
+//! | `GET  /debug/trace`                 | Chrome trace-event JSON (Perfetto)        |
 //! | `POST /sessions`                    | create from inline `rows` or a `path`     |
 //! | `GET  /sessions`                    | list live sessions                        |
 //! | `GET  /sessions/:id`                | the session resource (same view as stats) |
@@ -36,6 +37,7 @@ use crate::data::Matrix;
 use crate::engine::PhaseMicros;
 use crate::knn::iterative::CandidateRoutes;
 use crate::metrics::probe::QualityReport;
+use crate::obs::{expo, trace, Obs, PhaseQuantiles};
 use crate::session::{Command, Session};
 use crate::util::io;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -58,6 +60,11 @@ pub struct Api {
     /// Default `snapshot_stride` for sessions that don't specify one
     /// (the CLI's `--snapshot-every`).
     default_snapshot_stride: usize,
+    /// Shared observability registry (HTTP latency histograms, trace
+    /// spans, `/debug/trace` export).
+    obs: Arc<Obs>,
+    /// This handler's worker-slot index — its trace `tid`.
+    worker: usize,
 }
 
 impl Api {
@@ -65,8 +72,10 @@ impl Api {
         tx: Sender<StepperRequest>,
         http_requests: Arc<AtomicU64>,
         default_snapshot_stride: usize,
+        obs: Arc<Obs>,
+        worker: usize,
     ) -> Api {
-        Api { tx, http_requests, started: Instant::now(), default_snapshot_stride }
+        Api { tx, http_requests, started: Instant::now(), default_snapshot_stride, obs, worker }
     }
 
     /// Send one request to the stepper and wait for its typed reply.
@@ -103,6 +112,7 @@ impl Api {
         match (req.method.as_str(), segments.as_slice()) {
             ("GET", ["healthz"]) => self.healthz().map(Into::into),
             ("GET", ["metrics"]) => self.metrics().map(Into::into),
+            ("GET", ["debug", "trace"]) => self.debug_trace().map(Into::into),
             ("POST", ["sessions"]) => self.create_session(req).map(Into::into),
             ("GET", ["sessions"]) => self.list_sessions().map(Into::into),
             // The session resource itself (the url `POST /sessions`
@@ -159,6 +169,7 @@ impl Api {
             // Known paths with the wrong method get 405; anything else
             // (including typo'd subresources) is a plain 404.
             (_, ["healthz" | "metrics"])
+            | (_, ["debug", "trace"])
             | (_, ["sessions"])
             | (_, ["sessions", _])
             | (_, ["sessions", _, "stats" | "embedding" | "commands" | "stream"]) => {
@@ -192,7 +203,17 @@ impl Api {
 
     fn metrics(&self) -> ServiceResult<Response> {
         let m = self.ask_infallible(StepperRequest::Metrics)?;
-        Ok(Response::text(200, render_prometheus(&m, &self.http_requests, self.started)))
+        let text = render_prometheus(&m, &self.http_requests, self.started, &self.obs);
+        Ok(Response::text(200, text))
+    }
+
+    /// The buffered trace ring as Chrome trace-event JSON. Always 200:
+    /// with observability off the document is empty but well-formed
+    /// (`otherData.enabled` says why), so tooling can probe safely.
+    fn debug_trace(&self) -> ServiceResult<Response> {
+        let (events, dropped) = self.obs.tracer_snapshot();
+        let doc = trace::chrome_trace_json(&events, self.obs.enabled(), dropped);
+        Ok(Response::json(200, &doc))
     }
 
     fn create_session(&self, req: &Request) -> ServiceResult<Response> {
@@ -223,6 +244,10 @@ impl Handler for Api {
                 Response::json(e.status(), &Json::obj(vec![("error", e.message().into())])).into()
             }
         }
+    }
+
+    fn observe(&mut self, req: &Request, status: u16, micros: u64) {
+        self.obs.observe_http(&req.method, &req.path, status, micros, self.worker);
     }
 }
 
@@ -510,7 +535,32 @@ fn view_json(v: &SessionView) -> Json {
         ),
         ("quality", v.quality.as_ref().map_or(Json::Null, quality_json)),
         ("phase_micros", phase_json(&v.phase_micros)),
+        ("latency", latency_json(&v.latency)),
     ])
+}
+
+/// The per-phase step-latency quantiles object, `null` until
+/// observability is on and the session has stepped:
+/// `{"step": {"samples": .., "p50_us": .., "p95_us": .., "p99_us": ..},
+///   "refine_ld": {...}, ...}`.
+fn latency_json(latency: &[PhaseQuantiles]) -> Json {
+    if latency.is_empty() {
+        return Json::Null;
+    }
+    Json::obj(
+        latency
+            .iter()
+            .map(|q| {
+                let obj = Json::obj(vec![
+                    ("samples", q.samples.into()),
+                    ("p50_us", q.p50_us.into()),
+                    ("p95_us", q.p95_us.into()),
+                    ("p99_us", q.p99_us.into()),
+                ]);
+                (q.phase, obj)
+            })
+            .collect(),
+    )
 }
 
 fn quality_json(q: &QualityReport) -> Json {
@@ -549,6 +599,7 @@ fn render_prometheus(
     m: &ServiceMetrics,
     http_requests: &AtomicU64,
     started: Instant,
+    obs: &Obs,
 ) -> String {
     let mut out = String::new();
     let mut metric = |name: &str, kind: &str, help: &str, value: String| {
@@ -718,6 +769,76 @@ fn render_prometheus(
             lines.join("\n"),
         );
     }
+    if !m.session_states.is_empty() {
+        let lines: Vec<String> = m
+            .session_states
+            .iter()
+            .map(|(id, state)| {
+                format!("funcsne_session_state{{id=\"{id}\",state=\"{state}\"}} 1")
+            })
+            .collect();
+        metric(
+            "funcsne_session_state",
+            "gauge",
+            "Session state (running/paused/failed), one labelled sample per session.",
+            lines.join("\n"),
+        );
+    }
+    if obs.enabled() {
+        // Histogram families — only while observability is on, so the
+        // default scrape stays byte-compatible with earlier releases.
+        let mut hist = |name: &str, help: &str, body: String| {
+            if !body.is_empty() {
+                metric(name, "histogram", help, body.trim_end().to_string());
+            }
+        };
+        let mut phase_lines = String::new();
+        for (i, phase) in PhaseMicros::NAMES.iter().enumerate() {
+            let labels = format!("phase=\"{phase}\"");
+            let snap = obs.step_phase[i].snapshot();
+            phase_lines.push_str(&snap.prometheus_lines("funcsne_step_phase_micros", &labels));
+        }
+        hist(
+            "funcsne_step_phase_micros",
+            "Engine step time by phase (microseconds).",
+            phase_lines,
+        );
+        hist(
+            "funcsne_step_micros",
+            "Whole engine step wall time (microseconds).",
+            obs.step.snapshot().prometheus_lines("funcsne_step_micros", ""),
+        );
+        hist(
+            "funcsne_sweep_micros",
+            "Stepper sweep duration (microseconds).",
+            obs.sweep.snapshot().prometheus_lines("funcsne_sweep_micros", ""),
+        );
+        let mut http_lines = String::new();
+        for (route, class, snap) in obs.http_snapshots() {
+            let labels = format!("route=\"{}\",status=\"{class}\"", expo::escape_label(route));
+            http_lines.push_str(&snap.prometheus_lines("funcsne_http_request_micros", &labels));
+        }
+        hist(
+            "funcsne_http_request_micros",
+            "HTTP request latency by route and status class (microseconds).",
+            http_lines,
+        );
+        hist(
+            "funcsne_frame_encode_micros",
+            "Stream frame encode time (microseconds).",
+            obs.frame_encode.snapshot().prometheus_lines("funcsne_frame_encode_micros", ""),
+        );
+        hist(
+            "funcsne_frame_bytes",
+            "Encoded stream frame size (bytes).",
+            obs.frame_bytes.snapshot().prometheus_lines("funcsne_frame_bytes", ""),
+        );
+        hist(
+            "funcsne_stream_queue_depth",
+            "Subscriber queue depth after each enqueued frame.",
+            obs.queue_depth.snapshot().prometheus_lines("funcsne_stream_queue_depth", ""),
+        );
+    }
     out
 }
 
@@ -840,9 +961,10 @@ mod tests {
                     update: 50,
                 },
             )],
+            session_states: vec![(0, "running"), (1, "failed")],
         };
         let reqs = AtomicU64::new(5);
-        let text = render_prometheus(&m, &reqs, Instant::now());
+        let text = render_prometheus(&m, &reqs, Instant::now(), &Obs::new(false));
         assert!(text.contains("# TYPE funcsne_sessions gauge"), "{text}");
         assert!(text.contains("funcsne_sessions 2"));
         assert!(text.contains("funcsne_steps_total 17"));
@@ -872,6 +994,45 @@ mod tests {
         assert!(text.contains("funcsne_frames_dropped_total 4"), "{text}");
         assert!(text.contains("funcsne_stream_session_subscribers{id=\"1\"} 3"), "{text}");
         assert!(text.contains("funcsne_step_budget{id=\"0\"} 12"), "{text}");
+        assert!(
+            text.contains("funcsne_session_state{id=\"0\",state=\"running\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("funcsne_session_state{id=\"1\",state=\"failed\"} 1"),
+            "{text}"
+        );
+        assert!(!text.contains("funcsne_step_micros"), "no histograms while disabled");
+        expo::check_exposition(&text).expect("well-formed exposition");
+    }
+
+    #[test]
+    fn prometheus_renders_histogram_families_when_observing() {
+        let obs = Obs::new(true);
+        obs.step.record(120);
+        obs.step_phase[3].record(80); // forces
+        obs.sweep.record(900);
+        obs.observe_http("GET", "/sessions/1/stats", 200, 65, 0);
+        obs.record_frame(12, 4_000);
+        obs.record_queue_depth(2);
+        let m = ServiceMetrics::default();
+        let reqs = AtomicU64::new(1);
+        let text = render_prometheus(&m, &reqs, Instant::now(), &obs);
+        expo::check_exposition(&text).expect("well-formed exposition with histograms");
+        assert!(text.contains("# TYPE funcsne_step_micros histogram"), "{text}");
+        assert!(text.contains("funcsne_step_micros_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("funcsne_step_micros_sum 120"), "{text}");
+        assert!(text.contains("funcsne_step_micros_count 1"), "{text}");
+        assert!(
+            text.contains("funcsne_step_phase_micros_bucket{phase=\"forces\",le=\"100\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE funcsne_sweep_micros histogram"), "{text}");
+        let http = "funcsne_http_request_micros_bucket\
+                    {route=\"GET /sessions/:id/stats\",status=\"2xx\",le=\"100\"} 1";
+        assert!(text.contains(http), "{text}");
+        assert!(text.contains("funcsne_frame_bytes_sum 4000"), "{text}");
+        assert!(text.contains("funcsne_stream_queue_depth_count 1"), "{text}");
     }
 
     #[test]
@@ -900,8 +1061,24 @@ mod tests {
     fn prometheus_omits_quality_when_no_session_has_reports() {
         let m = ServiceMetrics { sessions: 1, session_iters: vec![(0, 3)], ..Default::default() };
         let reqs = AtomicU64::new(0);
-        let text = render_prometheus(&m, &reqs, Instant::now());
+        let text = render_prometheus(&m, &reqs, Instant::now(), &Obs::new(false));
         assert!(!text.contains("funcsne_quality_recall"), "{text}");
+    }
+
+    #[test]
+    fn latency_json_reports_quantiles_per_phase() {
+        let qs = vec![PhaseQuantiles {
+            phase: "step",
+            samples: 12,
+            p50_us: 100.0,
+            p95_us: 200.0,
+            p99_us: 500.0,
+        }];
+        let j = latency_json(&qs);
+        let step = j.get("step").expect("step object");
+        assert_eq!(step.get("samples").and_then(Json::as_usize), Some(12));
+        assert_eq!(step.get("p50_us").and_then(Json::as_f64), Some(100.0));
+        assert_eq!(step.get("p99_us").and_then(Json::as_f64), Some(500.0));
     }
 
     #[test]
@@ -941,8 +1118,10 @@ mod tests {
                 forces: 44,
                 update: 5,
             },
+            latency: Vec::new(),
         };
         let j = view_json(&view);
+        assert_eq!(j.get("latency"), Some(&Json::Null), "no samples yet");
         let q = j.get("quality").expect("quality present");
         assert_eq!(q.get("iter").and_then(Json::as_usize), Some(40));
         assert_eq!(q.get("knn_recall").and_then(Json::as_f64), Some(0.625));

@@ -30,7 +30,9 @@
 
 use super::codec::FrameEncoder;
 use crate::data::Matrix;
+use crate::obs::Obs;
 use crate::runtime::sync::{DebugCondvar, DebugMutex};
+use crate::util::timer::PhaseClock;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -150,6 +152,9 @@ struct PushOutcome {
     enqueued: bool,
     /// Subscriber is (still) waiting for a keyframe to resync.
     lagged: bool,
+    /// Queue length right after the push (0 unless `enqueued`) — the
+    /// depth signal behind the `funcsne_stream_queue_depth` histogram.
+    depth: u64,
 }
 
 impl SubscriberSlot {
@@ -168,13 +173,13 @@ impl SubscriberSlot {
     fn push(&self, frame: &Arc<Vec<u8>>, keyframe: bool, queue_frames: usize) -> PushOutcome {
         let mut st = self.shared.state.lock();
         if st.closed {
-            return PushOutcome { dropped: 0, enqueued: false, lagged: false };
+            return PushOutcome { dropped: 0, enqueued: false, lagged: false, depth: 0 };
         }
         let mut dropped = 0u64;
         if st.lagged {
             if !keyframe {
                 // Deltas are useless mid-lag; count and skip.
-                return PushOutcome { dropped: 1, enqueued: false, lagged: true };
+                return PushOutcome { dropped: 1, enqueued: false, lagged: true, depth: 0 };
             }
             st.lagged = false;
         }
@@ -187,12 +192,17 @@ impl SubscriberSlot {
             if !keyframe {
                 st.lagged = true;
                 self.shared.ready.notify_all();
-                return PushOutcome { dropped: dropped + 1, enqueued: false, lagged: true };
+                return PushOutcome {
+                    dropped: dropped + 1,
+                    enqueued: false,
+                    lagged: true,
+                    depth: 0,
+                };
             }
         }
         st.frames.push_back(Arc::clone(frame));
         self.shared.ready.notify_all();
-        PushOutcome { dropped, enqueued: true, lagged: false }
+        PushOutcome { dropped, enqueued: true, lagged: false, depth: st.frames.len() as u64 }
     }
 }
 
@@ -209,6 +219,7 @@ struct SessionHub {
 pub struct FrameHub {
     cfg: StreamConfig,
     sessions: BTreeMap<u64, SessionHub>,
+    obs: Arc<Obs>,
     frames_sent: u64,
     frames_dropped: u64,
 }
@@ -223,8 +234,11 @@ pub enum SubscribeError {
 }
 
 impl FrameHub {
-    pub fn new(cfg: StreamConfig) -> FrameHub {
-        FrameHub { cfg, sessions: BTreeMap::new(), frames_sent: 0, frames_dropped: 0 }
+    /// `obs` receives frame encode time/size and subscriber queue
+    /// depth (histogram-only — the hub never touches the trace ring,
+    /// so recording is lock-free and safe under the queue mutex).
+    pub fn new(cfg: StreamConfig, obs: Arc<Obs>) -> FrameHub {
+        FrameHub { cfg, sessions: BTreeMap::new(), obs, frames_sent: 0, frames_dropped: 0 }
     }
 
     /// Frames enqueued to subscribers, ever.
@@ -303,7 +317,11 @@ impl FrameHub {
             self.sessions.remove(&session);
             return;
         }
+        let encode_clock = self.obs.enabled().then(PhaseClock::start);
         let Some(bytes) = hub.encoder.encode(iter, y, structure_version) else { return };
+        if let Some(clock) = encode_clock {
+            self.obs.record_frame(clock.elapsed_ns() / 1_000, bytes.len() as u64);
+        }
         let keyframe = bytes.get(5).is_some_and(|f| f & super::codec::FLAG_KEYFRAME != 0);
         let frame = Arc::new(bytes);
         let mut any_lagged = false;
@@ -312,6 +330,7 @@ impl FrameHub {
             self.frames_dropped += out.dropped;
             if out.enqueued {
                 self.frames_sent += 1;
+                self.obs.record_queue_depth(out.depth);
             }
             any_lagged |= out.lagged;
         }
@@ -369,9 +388,13 @@ mod tests {
         StreamConfig { max_per_session: 2, max_global: 3, queue_frames: 2, keyframe_every: 10 }
     }
 
+    fn small_hub() -> FrameHub {
+        FrameHub::new(small_cfg(), Arc::new(Obs::new(false)))
+    }
+
     #[test]
     fn admission_control_enforces_caps() {
-        let mut hub = FrameHub::new(small_cfg());
+        let mut hub = small_hub();
         let _a = hub.subscribe(1).unwrap();
         let _b = hub.subscribe(1).unwrap();
         assert_eq!(hub.subscribe(1).unwrap_err(), SubscribeError::SessionFull);
@@ -384,7 +407,7 @@ mod tests {
 
     #[test]
     fn two_subscribers_see_identical_sequences() {
-        let mut hub = FrameHub::new(small_cfg());
+        let mut hub = small_hub();
         let mut y = matrix(30, 2, |r, c| (r * 2 + c) as f32);
         let mut a = hub.subscribe(7).unwrap();
         let mut b = hub.subscribe(7).unwrap();
@@ -405,7 +428,7 @@ mod tests {
 
     #[test]
     fn overflow_drops_then_resyncs_with_keyframe() {
-        let mut hub = FrameHub::new(small_cfg());
+        let mut hub = small_hub();
         let mut y = matrix(30, 2, |r, c| (r * 2 + c) as f32);
         let mut slow = hub.subscribe(9).unwrap();
         // Never read: queue (bound 2) overflows on the third frame.
@@ -438,7 +461,7 @@ mod tests {
 
     #[test]
     fn drop_session_closes_subscribers() {
-        let mut hub = FrameHub::new(small_cfg());
+        let mut hub = small_hub();
         let mut sub = hub.subscribe(4).unwrap();
         hub.drop_session(4);
         assert!(matches!(sub.next(Duration::from_millis(10)), NextFrame::Closed));
@@ -447,7 +470,7 @@ mod tests {
 
     #[test]
     fn broadcast_without_subscribers_is_cheap_noop() {
-        let mut hub = FrameHub::new(small_cfg());
+        let mut hub = small_hub();
         let y = matrix(5, 2, |r, c| (r + c) as f32);
         assert!(!hub.wants_frames(1));
         hub.broadcast(1, 0, &y, 0);

@@ -200,6 +200,12 @@ pub fn reason(status: u16) -> &'static str {
 /// so cheap per-worker state like channel senders needs no locking).
 pub trait Handler: Send {
     fn handle(&mut self, req: &Request) -> Reply;
+
+    /// Called after [`Handler::handle`] returns with the response
+    /// status and the handler wall time in microseconds (for a
+    /// stream, the time to *start* it — the connection takeover that
+    /// follows is client-paced). Default: ignore.
+    fn observe(&mut self, _req: &Request, _status: u16, _micros: u64) {}
 }
 
 /// Run the accept loop until `shutdown` is set: one connection-handler
@@ -269,7 +275,17 @@ fn handle_connection<H: Handler>(
                 break;
             }
         };
-        match handler.handle(&req) {
+        let clock = crate::util::timer::PhaseClock::start();
+        let reply = handler.handle(&req);
+        handler.observe(
+            &req,
+            match &reply {
+                Reply::Full(resp) => resp.status,
+                Reply::Stream(start) => start.status,
+            },
+            clock.elapsed_ns() / 1_000,
+        );
+        match reply {
             Reply::Full(resp) => {
                 let close = req.close || shutdown.load(Ordering::SeqCst);
                 write_response(&mut writer, &resp, close)?;

@@ -66,6 +66,7 @@ pub use http::{Request, Response};
 pub use json::Json;
 pub use stepper::{ServiceError, Stepper, StepperRequest};
 
+use crate::obs::Obs;
 use crate::runtime::WorkerPool;
 use anyhow::{Context, Result};
 use std::net::{SocketAddr, TcpListener};
@@ -96,6 +97,11 @@ pub struct ServerConfig {
     pub stream_queue: usize,
     /// Emit a stream keyframe after this many delta frames.
     pub keyframe_every: usize,
+    /// Enable observability: latency histograms on `/metrics`, span
+    /// tracing on `GET /debug/trace`, per-phase latency quantiles in
+    /// stats JSON. Defaults to the `FUNCSNE_TRACE` env var; off keeps
+    /// the hot path free of clock reads.
+    pub trace: bool,
 }
 
 impl Default for ServerConfig {
@@ -110,6 +116,7 @@ impl Default for ServerConfig {
             max_streams_per_session: streams.max_per_session,
             stream_queue: streams.queue_frames,
             keyframe_every: streams.keyframe_every,
+            trace: Obs::env_enabled(),
         }
     }
 }
@@ -126,6 +133,7 @@ pub struct Server {
     cfg: ServerConfig,
     shutdown: Arc<AtomicBool>,
     http_requests: Arc<AtomicU64>,
+    obs: Arc<Obs>,
 }
 
 impl Server {
@@ -143,8 +151,10 @@ impl Server {
             queue_frames: cfg.stream_queue.max(1),
             keyframe_every: cfg.keyframe_every.max(1),
         };
+        let obs = Arc::new(Obs::new(cfg.trace));
         let stepper =
-            Stepper::spawn_with(cfg.max_sessions.max(1), streams).context("spawn stepper")?;
+            Stepper::spawn_with(cfg.max_sessions.max(1), streams, Arc::clone(&obs))
+                .context("spawn stepper")?;
         Ok(Server {
             listener,
             local_addr,
@@ -152,7 +162,14 @@ impl Server {
             cfg,
             shutdown: Arc::new(AtomicBool::new(false)),
             http_requests: Arc::new(AtomicU64::new(0)),
+            obs,
         })
+    }
+
+    /// The shared observability registry (for embedders and benches
+    /// that want histogram snapshots without scraping `/metrics`).
+    pub fn obs(&self) -> Arc<Obs> {
+        Arc::clone(&self.obs)
     }
 
     /// The bound address (resolves `:0` ephemeral ports).
@@ -171,11 +188,13 @@ impl Server {
     pub fn run(self) -> Result<()> {
         let slots = WorkerPool::with_auto(self.cfg.threads).threads();
         let handlers: Vec<Api> = (0..slots)
-            .map(|_| {
+            .map(|worker| {
                 Api::new(
                     self.stepper.sender(),
                     Arc::clone(&self.http_requests),
                     self.cfg.snapshot_every,
+                    Arc::clone(&self.obs),
+                    worker,
                 )
             })
             .collect();

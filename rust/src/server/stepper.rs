@@ -43,11 +43,15 @@
 
 use crate::engine::PhaseMicros;
 use crate::metrics::probe::QualityReport;
+use crate::obs::{Obs, PhaseQuantiles, SessionLatency, StepTrace};
 use crate::server::frames::{FrameHub, StreamConfig, StreamSubscription, SubscribeError};
 use crate::session::{Command, Session, SessionBuilder, SessionId, SessionManager};
+use crate::util::stats::Ewma;
+use crate::util::timer::PhaseClock;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Per-sweep stepping time budget, µs: the fair scheduler hands each
@@ -152,6 +156,9 @@ pub struct SessionView {
     /// Cumulative per-phase wall-clock split of the engine's `step`
     /// (refine_ld / refine_hd / recalibrate / forces / update), µs.
     pub phase_micros: PhaseMicros,
+    /// Step-latency p50/p95/p99 per phase (whole-step `step` first).
+    /// Empty until observability is enabled and a step has run.
+    pub latency: Vec<PhaseQuantiles>,
 }
 
 /// Service-wide counters surfaced by `GET /metrics`.
@@ -180,6 +187,10 @@ pub struct ServiceMetrics {
     pub session_phase: Vec<(u64, PhaseMicros)>,
     /// `(id, last scheduler step budget)` per live session.
     pub session_budget: Vec<(u64, u32)>,
+    /// `(id, "running" | "paused" | "failed")` per live session —
+    /// failed means the last step errored (and force-paused the
+    /// session) with no clean step since.
+    pub session_states: Vec<(u64, &'static str)>,
 }
 
 /// Everything needed to create a session on the stepper thread.
@@ -224,20 +235,26 @@ pub struct Stepper {
 }
 
 impl Stepper {
-    /// Spawn the stepping thread with default stream settings.
-    /// `max_sessions` bounds concurrent sessions (creates beyond it
-    /// are refused with [`ServiceError::Full`]). Errs only if the OS
-    /// refuses to create the thread.
+    /// Spawn the stepping thread with default stream settings and
+    /// observability off. `max_sessions` bounds concurrent sessions
+    /// (creates beyond it are refused with [`ServiceError::Full`]).
+    /// Errs only if the OS refuses to create the thread.
     pub fn spawn(max_sessions: usize) -> Result<Stepper> {
-        Stepper::spawn_with(max_sessions, StreamConfig::default())
+        Stepper::spawn_with(max_sessions, StreamConfig::default(), Arc::new(Obs::new(false)))
     }
 
-    /// [`Stepper::spawn`] with explicit streaming limits.
-    pub fn spawn_with(max_sessions: usize, streams: StreamConfig) -> Result<Stepper> {
+    /// [`Stepper::spawn`] with explicit streaming limits and a shared
+    /// observability registry (sweep/step histograms + trace spans
+    /// land there when it is enabled).
+    pub fn spawn_with(
+        max_sessions: usize,
+        streams: StreamConfig,
+        obs: Arc<Obs>,
+    ) -> Result<Stepper> {
         let (tx, rx) = mpsc::channel();
         let join = std::thread::Builder::new()
             .name("funcsne-stepper".to_string())
-            .spawn(move || run_loop(rx, max_sessions, streams))
+            .spawn(move || run_loop(rx, max_sessions, streams, obs))
             .context("spawn stepper thread")?;
         Ok(Stepper { tx, join: Some(join) })
     }
@@ -271,16 +288,22 @@ struct SessionMeta {
     budget_fired: bool,
     last_error: Option<String>,
     /// EWMA of per-step cost in µs, measured from the engine's own
-    /// `phase_micros` clock (0 until the first measured step).
-    cost_ewma_us: f64,
+    /// `phase_micros` clock (0 until the first measured step). Shares
+    /// [`Ewma`] with the engine's telemetry; retention is
+    /// `1 - COST_EWMA_NEW`.
+    cost_ewma: Ewma,
     /// The step budget the scheduler granted last sweep (gauge).
     budget: u32,
+    /// Per-phase step-latency histograms behind the stats-JSON
+    /// `latency` object (only fed while observability is enabled).
+    latency: SessionLatency,
 }
 
 struct Service {
     mgr: SessionManager,
     meta: BTreeMap<u64, SessionMeta>,
     hub: FrameHub,
+    obs: Arc<Obs>,
     max_sessions: usize,
     sweeps: u64,
     steps: u64,
@@ -290,11 +313,17 @@ struct Service {
     sessions_deleted: u64,
 }
 
-fn run_loop(rx: Receiver<StepperRequest>, max_sessions: usize, streams: StreamConfig) {
+fn run_loop(
+    rx: Receiver<StepperRequest>,
+    max_sessions: usize,
+    streams: StreamConfig,
+    obs: Arc<Obs>,
+) {
     let mut svc = Service {
         mgr: SessionManager::new(),
         meta: BTreeMap::new(),
-        hub: FrameHub::new(streams),
+        hub: FrameHub::new(streams, Arc::clone(&obs)),
+        obs,
         max_sessions,
         sweeps: 0,
         steps: 0,
@@ -408,8 +437,9 @@ impl Service {
             max_iters: spec.max_iters,
             budget_fired: false,
             last_error: None,
-            cost_ewma_us: 0.0,
+            cost_ewma: Ewma::new(1.0 - COST_EWMA_NEW),
             budget: 0,
+            latency: SessionLatency::default(),
         };
         self.meta.insert(sid.0, meta);
         self.sessions_created += 1;
@@ -490,6 +520,10 @@ impl Service {
         if ids.is_empty() {
             return 0;
         }
+        // One branch when observability is off; timestamps + clocks
+        // only exist when it is on.
+        let observing = self.obs.enabled();
+        let sweep_clock = observing.then(|| (self.obs.now_us(), PhaseClock::start()));
         // Plan first (immutable pass): weights need the hub, budgets
         // need the cost EWMAs.
         let mut plan: Vec<(u64, f64)> = Vec::with_capacity(ids.len());
@@ -504,7 +538,7 @@ impl Service {
             let cost = self
                 .meta
                 .get(&id)
-                .map(|m| m.cost_ewma_us)
+                .map(|m| m.cost_ewma.get())
                 .filter(|&c| c > 0.0)
                 .unwrap_or(DEFAULT_STEP_COST_US)
                 .max(1.0);
@@ -524,12 +558,26 @@ impl Service {
             let before_us = session.stats().phase_micros.total();
             let mut steps_here = 0u64;
             let mut failure: Option<String> = None;
+            let mut traces: Vec<StepTrace> = Vec::new();
             for _ in 0..budget {
                 if iter_cap > 0 && session.iterations() >= iter_cap {
                     break;
                 }
+                let step_clock = observing.then(|| {
+                    (session.stats().phase_micros, self.obs.now_us(), PhaseClock::start())
+                });
                 match session.step() {
-                    Ok(true) => steps_here += 1,
+                    Ok(true) => {
+                        steps_here += 1;
+                        if let Some((phase0, ts_us, clock)) = step_clock {
+                            traces.push(StepTrace {
+                                iter: session.iterations(),
+                                ts_us,
+                                wall_us: clock.elapsed_ns() / 1_000,
+                                phases: session.stats().phase_micros.delta(&phase0),
+                            });
+                        }
+                    }
                     Ok(false) => break, // paused: queue drained, nothing to run
                     Err(e) => {
                         session.force_pause();
@@ -543,11 +591,7 @@ impl Service {
                 meta.budget = budget;
                 if steps_here > 0 {
                     let per_step = after_us.saturating_sub(before_us) as f64 / steps_here as f64;
-                    meta.cost_ewma_us = if meta.cost_ewma_us > 0.0 {
-                        meta.cost_ewma_us * (1.0 - COST_EWMA_NEW) + per_step * COST_EWMA_NEW
-                    } else {
-                        per_step
-                    };
+                    meta.cost_ewma.update(per_step);
                     // A clean step means any recorded error is stale
                     // (e.g. the client fixed the cause and resumed).
                     meta.last_error = None;
@@ -556,10 +600,17 @@ impl Service {
                     self.step_failures += 1;
                     meta.last_error = Some(err);
                 }
+                for st in &traces {
+                    self.obs.record_step(id, self.sweeps, st);
+                    meta.latency.record(st);
+                }
             }
             total_steps += steps_here;
         }
         self.steps += total_steps;
+        if let Some((ts_us, clock)) = sweep_clock {
+            self.obs.record_sweep(self.sweeps, total_steps, ts_us, clock.elapsed_ns() / 1_000);
+        }
         total_steps
     }
 
@@ -601,6 +652,7 @@ impl Service {
             last_error: meta.and_then(|m| m.last_error.clone()),
             quality: session.quality().copied(),
             phase_micros: session.stats().phase_micros,
+            latency: meta.map_or_else(Vec::new, |m| m.latency.quantiles()),
         }
     }
 
@@ -644,6 +696,23 @@ impl Service {
                 .ids()
                 .into_iter()
                 .filter_map(|sid| self.meta.get(&sid.0).map(|m| (sid.0, m.budget)))
+                .collect(),
+            session_states: self
+                .mgr
+                .ids()
+                .into_iter()
+                .filter_map(|sid| {
+                    let session = self.mgr.get(sid)?;
+                    let failed = self.meta.get(&sid.0).is_some_and(|m| m.last_error.is_some());
+                    let state = if failed {
+                        "failed"
+                    } else if session.is_paused() {
+                        "paused"
+                    } else {
+                        "running"
+                    };
+                    Some((sid.0, state))
+                })
                 .collect(),
         }
     }

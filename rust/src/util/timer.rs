@@ -71,15 +71,17 @@ pub struct BenchStats {
     pub iters: usize,
     pub min_s: f64,
     pub median_s: f64,
+    pub p95_s: f64,
     pub mean_s: f64,
 }
 
 impl BenchStats {
     pub fn summary(&self, label: &str) -> String {
         format!(
-            "{label}: min {:.3} ms | median {:.3} ms | mean {:.3} ms ({} iters)",
+            "{label}: min {:.3} ms | median {:.3} ms | p95 {:.3} ms | mean {:.3} ms ({} iters)",
             self.min_s * 1e3,
             self.median_s * 1e3,
+            self.p95_s * 1e3,
             self.mean_s * 1e3,
             self.iters
         )
@@ -101,9 +103,13 @@ pub fn bench_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Ben
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let min_s = times[0];
-    let median_s = times[times.len() / 2];
+    // Interpolated quantiles — the same helper the obs histograms use,
+    // so (unlike the old upper-of-two pick) an even `iters` count
+    // yields the true median.
+    let median_s = crate::obs::hist::quantile_sorted(&times, 0.5);
+    let p95_s = crate::obs::hist::quantile_sorted(&times, 0.95);
     let mean_s = times.iter().sum::<f64>() / times.len() as f64;
-    BenchStats { iters, min_s, median_s, mean_s }
+    BenchStats { iters, min_s, median_s, p95_s, mean_s }
 }
 
 /// Format a duration human-readably for progress logs.
@@ -146,7 +152,9 @@ mod tests {
         let stats = bench_fn(1, 5, || 1 + 1);
         assert_eq!(stats.iters, 5);
         assert!(stats.min_s <= stats.median_s);
+        assert!(stats.median_s <= stats.p95_s);
         assert!(stats.min_s <= stats.mean_s);
+        assert!(stats.summary("x").contains("p95"));
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! background, change hyperparameters mid-run, fetch embeddings and
 //! stats, and tear everything down.
 
+use funcsne::obs::expo;
 use funcsne::server::frames::{decode, FrameDecoder};
 use funcsne::server::json::{self, Json};
 use funcsne::server::{Server, ServerConfig, ServerHandle};
@@ -28,11 +29,14 @@ impl TestServer {
     }
 
     /// Defaults shared by every test server: ephemeral port, fast
-    /// snapshot stride so history assertions don't wait long.
+    /// snapshot stride so history assertions don't wait long, and
+    /// observability pinned off regardless of the ambient
+    /// `FUNCSNE_TRACE` env (the dedicated e2e turns it on explicitly).
     fn base_cfg() -> ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:0".to_string(),
             snapshot_every: 4,
+            trace: false,
             ..ServerConfig::default()
         }
     }
@@ -163,6 +167,15 @@ fn http_round_trip_create_steer_fetch_delete() {
         metrics.contains(&format!("funcsne_phase_micros{{id=\"{id}\",phase=\"refine_ld\"}}")),
         "{metrics}"
     );
+    // Per-session lifecycle gauge: one stepping session, state running.
+    assert!(
+        metrics.contains(&format!("funcsne_session_state{{id=\"{id}\",state=\"running\"}} 1")),
+        "{metrics}"
+    );
+    // The whole exposition stays machine-valid (labels escaped, HELP/
+    // TYPE before samples, histograms complete) even with obs off.
+    expo::check_exposition(&metrics)
+        .unwrap_or_else(|errs| panic!("invalid exposition: {errs:?}\n{metrics}"));
 
     // --- per-phase timing telemetry in the stats view ------------------
     let v = get_stats(addr, id);
@@ -402,6 +415,13 @@ fn session_capacity_and_error_handling() {
     );
     let v = get_stats(addr, id as u64);
     assert_eq!(v.get("iter").and_then(Json::as_usize), Some(3));
+
+    // The lifecycle gauge follows the session into the paused state.
+    let (_, metrics) = http(addr, "GET", "/metrics", None);
+    assert!(
+        metrics.contains(&format!("funcsne_session_state{{id=\"{id}\",state=\"paused\"}} 1")),
+        "{metrics}"
+    );
 }
 
 /// One HTTP exchange with extra request headers; returns the raw
@@ -764,4 +784,137 @@ fn create_from_csv_path() {
         http_json(addr, "POST", "/sessions", Some("{\"path\": \"/no/such/file.csv\"}"));
     assert_eq!(status, 400, "{err}");
     std::fs::remove_file(path).ok();
+}
+
+/// `(start, end)` of a Chrome `"ph":"X"` complete event, µs.
+fn span(e: &Json) -> (f64, f64) {
+    let ts = e.get("ts").and_then(Json::as_f64).expect("ts");
+    let dur = e.get("dur").and_then(Json::as_f64).expect("dur");
+    (ts, ts + dur)
+}
+
+/// Events with the given `name` field.
+fn by_name<'a>(events: &'a [Json], name: &str) -> Vec<&'a Json> {
+    events.iter().filter(|e| e.get("name").and_then(Json::as_str) == Some(name)).collect()
+}
+
+/// A numeric tag from an event's `args` object.
+fn arg(e: &Json, key: &str) -> Option<usize> {
+    e.get("args").and_then(|a| a.get(key)).and_then(Json::as_usize)
+}
+
+#[test]
+fn observability_histograms_quantiles_and_trace() {
+    let server = TestServer::start_cfg(ServerConfig {
+        threads: 2,
+        max_sessions: 4,
+        trace: true,
+        ..TestServer::base_cfg()
+    });
+    let addr = server.addr;
+
+    let spec = format!(
+        "{{\"rows\": {}, \"k_hd\": 10, \"k_ld\": 6, \"perplexity\": 6, \
+          \"jumpstart_iters\": 2, \"seed\": 19}}",
+        rows_json(60, 4)
+    );
+    let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+    assert_eq!(status, 201, "create failed: {created}");
+    let id = created.get("id").and_then(Json::as_usize).expect("id") as u64;
+    wait_until(
+        || get_stats(addr, id).get("iter").and_then(Json::as_usize).unwrap() >= 5,
+        "background stepping",
+    );
+
+    // --- stats JSON: per-phase latency quantiles -----------------------
+    let v = get_stats(addr, id);
+    let latency = v.get("latency").expect("stats must carry latency");
+    for phase in ["step", "refine_ld", "refine_hd", "recalibrate", "forces", "update"] {
+        let q = latency
+            .get(phase)
+            .unwrap_or_else(|| panic!("latency missing {phase}: {latency}"));
+        assert!(q.get("samples").and_then(Json::as_usize).unwrap() >= 5, "{q}");
+        let p50 = q.get("p50_us").and_then(Json::as_f64).unwrap();
+        let p95 = q.get("p95_us").and_then(Json::as_f64).unwrap();
+        let p99 = q.get("p99_us").and_then(Json::as_f64).unwrap();
+        assert!(p50.is_finite() && p50 >= 0.0, "{phase}: p50 {p50}");
+        assert!(p50 <= p95 && p95 <= p99, "{phase}: {p50} {p95} {p99}");
+    }
+
+    // --- /metrics: histogram families, +Inf buckets, valid exposition --
+    let (status, metrics) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    expo::check_exposition(&metrics)
+        .unwrap_or_else(|errs| panic!("invalid exposition: {errs:?}\n{metrics}"));
+    for fam in [
+        "funcsne_step_micros",
+        "funcsne_step_phase_micros",
+        "funcsne_sweep_micros",
+        "funcsne_http_request_micros",
+    ] {
+        assert!(
+            metrics.contains(&format!("# TYPE {fam} histogram")),
+            "missing histogram TYPE for {fam}:\n{metrics}"
+        );
+        assert!(
+            metrics
+                .lines()
+                .any(|l| l.starts_with(&format!("{fam}_bucket{{")) && l.contains("le=\"+Inf\"")),
+            "missing +Inf bucket for {fam}:\n{metrics}"
+        );
+        assert!(metrics.contains(&format!("{fam}_sum")), "missing {fam}_sum:\n{metrics}");
+        assert!(metrics.contains(&format!("{fam}_count")), "missing {fam}_count:\n{metrics}");
+    }
+    assert!(
+        metrics.contains("funcsne_http_request_micros_bucket{route=\"GET /sessions/:id/stats\""),
+        "per-route labels missing:\n{metrics}"
+    );
+
+    // --- /debug/trace: Chrome trace JSON with nested spans -------------
+    let (status, body) = http(addr, "GET", "/debug/trace", None);
+    assert_eq!(status, 200, "{body}");
+    let doc = json::parse(&body).unwrap_or_else(|e| panic!("trace must parse: {e}\n{body}"));
+    assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let other = doc.get("otherData").expect("otherData");
+    assert_eq!(other.get("enabled").and_then(Json::as_bool), Some(true));
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    assert!(!events.is_empty(), "no trace events after 5+ iterations");
+
+    let steps = by_name(events, "session_step");
+    let sweeps = by_name(events, "sweep");
+    let https = by_name(events, "http");
+    assert!(!steps.is_empty(), "no session_step spans");
+    assert!(!sweeps.is_empty(), "no sweep spans");
+    assert!(!https.is_empty(), "no http spans");
+
+    // A session_step nests inside the sweep span of the same number.
+    let nested = steps.iter().any(|step| {
+        sweeps.iter().any(|sw| {
+            arg(sw, "sweep") == arg(step, "sweep")
+                && span(sw).0 <= span(step).0
+                && span(step).1 <= span(sw).1
+        })
+    });
+    assert!(nested, "no session_step contained in its sweep");
+
+    // An engine phase span nests inside a session_step of its sweep.
+    let phase_nested = events
+        .iter()
+        .filter(|e| e.get("cat").and_then(Json::as_str) == Some("engine"))
+        .any(|ph| {
+            steps.iter().any(|step| {
+                arg(step, "sweep") == arg(ph, "sweep")
+                    && arg(step, "session") == arg(ph, "session")
+                    && span(step).0 <= span(ph).0
+                    && span(ph).1 <= span(step).1
+            })
+        });
+    assert!(phase_nested, "no engine phase span inside a session_step");
+
+    // HTTP spans carry request ids and the session where the path has one.
+    assert!(https.iter().any(|e| arg(e, "request").is_some()));
+    assert!(
+        https.iter().any(|e| arg(e, "session") == Some(id as usize)),
+        "no http span tagged with session {id}"
+    );
 }
