@@ -2,13 +2,18 @@
 //!
 //! Reports (median of repeated runs):
 //!   * force pass per iteration — native vs parallel (1/2/4/8 shards)
-//!     vs PJRT, at several (N, d), with speedup over sequential native;
-//!   * sqdist candidate scoring — native vs parallel vs PJRT;
+//!     vs SIMD (1/4 threads) vs PJRT, at several (N, d), with speedup
+//!     over sequential native;
+//!   * sqdist candidate scoring — native vs parallel vs SIMD vs PJRT;
 //!   * full engine iteration breakdown (refine LD / refine HD / forces /
-//!     update) on the native path;
+//!     update) across native_t1 / simd_t1 / parallel_t4 / simd_t4;
 //!   * point-updates per second (the headline interactivity number).
 //!
-//! The EXPERIMENTS.md §Perf table is filled from this output.
+//! The EXPERIMENTS.md §Perf table is filled from this output, and the
+//! step breakdown lands in `BENCH_step_blobs.json`. With
+//! `FUNCSNE_PERF_GATE=1` the run compares its fresh medians against the
+//! **committed** `BENCH_step_blobs.json` at the repo root and exits
+//! non-zero on a >20% regression — the CI perf-smoke ratchet.
 
 use funcsne::config::EmbedConfig;
 use funcsne::coordinator::driver::default_artifact_dir;
@@ -18,9 +23,11 @@ use funcsne::engine::{ComputeBackend, FuncSne, NegSamples};
 use funcsne::hd::Affinities;
 use funcsne::knn::brute::brute_knn;
 use funcsne::knn::iterative::IterativeKnn;
-use funcsne::ld::{NativeBackend, ParallelBackend};
+use funcsne::ld::{NativeBackend, ParallelBackend, SimdBackend};
+use funcsne::server::json;
 use funcsne::util::timer::bench_fn;
 use funcsne::util::{Rng, Stopwatch};
+use std::path::Path;
 
 fn state(n: usize, d_ld: usize, k_hd: usize, k_ld: usize, seed: u64) -> (Matrix, Matrix, IterativeKnn, Affinities) {
     let ds = datasets::blobs(n, 16, 8, 1.0, 16.0, seed);
@@ -81,6 +88,22 @@ fn main() {
                     native_median / stats.median_s
                 );
             }
+            // Lane-vectorized kernels, same sharding: approximate vs
+            // native (lane-fold tolerance), bitwise at any width.
+            for &threads in &[1usize, 4] {
+                let mut simd = SimdBackend::new(threads);
+                let stats = bench_fn(1, if full { 7 } else { 5 }, || {
+                    simd.forces(&y, &knn, &aff, &neg, 1.0, far_scale, &mut attr, &mut rep)
+                        .unwrap()
+                });
+                println!(
+                    "forces simd x{threads} n={n:>6} d={d}: {:>9.3} ms/pass  \
+                     ({:.2e} point-updates/s, {:.2}x vs native)",
+                    stats.median_s * 1e3,
+                    n as f64 / stats.median_s,
+                    native_median / stats.median_s
+                );
+            }
             if have_pjrt {
                 let mut pjrt = PjrtBackend::new(&default_artifact_dir()).unwrap();
                 pjrt.warmup(32, 16, 8, d, 16).unwrap();
@@ -129,6 +152,17 @@ fn main() {
                 native_median / s.median_s
             );
         }
+        let mut simd = SimdBackend::new(1);
+        let s = bench_fn(1, 7, || {
+            simd.sqdist_batch(&ds.x, &owners, &cands, &mut out).unwrap()
+        });
+        println!(
+            "sqdist simd x1 T={pairs} M={m:>4}: {:>9.3} ms  \
+             ({:.2e} pairs/s, {:.2}x vs native)",
+            s.median_s * 1e3,
+            pairs as f64 / s.median_s,
+            native_median / s.median_s
+        );
         if have_pjrt {
             let mut pjrt = PjrtBackend::new(&default_artifact_dir()).unwrap();
             let s = bench_fn(1, 7, || {
@@ -142,18 +176,22 @@ fn main() {
         }
     }
 
-    // ---- full-step breakdown + BENCH artifact (threads 1 vs 4) ----------
-    // The Amdahl acceptance check for the stream-RNG sharding: at
-    // threads=4 on blobs n=8000 the FULL step() wall time — refinement,
-    // negative sampling, recalibration, forces AND update, not just the
-    // force pass — should improve ≥ 2× over threads=1. The per-phase
-    // split comes from EngineStats::phase_micros; the numbers land in
-    // BENCH_step_blobs.json for the CI perf-smoke artifact trail.
+    // ---- full-step breakdown + BENCH artifact (4 backend configs) -------
+    // Two acceptance checks on blobs n=8000, over the FULL step() wall
+    // time — refinement, negative sampling, recalibration, forces AND
+    // update, not just the force pass:
+    //   * Amdahl (stream-RNG sharding): parallel_t4 ≥ 2× over native_t1;
+    //   * SIMD (lane kernels): simd_t1 ≥ 2× over native_t1, and
+    //     simd_t4 shows that lane and thread scaling compose.
+    // The per-phase split comes from EngineStats::phase_micros; the
+    // numbers land in BENCH_step_blobs.json, and under
+    // FUNCSNE_PERF_GATE=1 they are checked against the committed
+    // baseline at the repo root (exit 2 on a >20% median regression).
     {
         let n = 8000usize;
         let iters = if full { 100 } else { 40 };
         struct StepRun {
-            threads: usize,
+            key: &'static str,
             median_ms: f64,
             mean_ms: f64,
             /// (phase, µs per iteration) in execution order.
@@ -163,7 +201,7 @@ fn main() {
             hd_refines: usize,
             iters_total: usize,
         }
-        let run = |threads: usize| -> StepRun {
+        let run = |key: &'static str, threads: usize, simd: bool| -> StepRun {
             let ds = datasets::blobs(n, 32, 10, 1.0, 20.0, 5);
             let cfg = EmbedConfig {
                 n_iters: 0,
@@ -173,7 +211,9 @@ fn main() {
                 ..EmbedConfig::default()
             };
             let mut engine = FuncSne::new(ds.x, cfg).unwrap();
-            let mut backend: Box<dyn ComputeBackend> = if threads > 1 {
+            let mut backend: Box<dyn ComputeBackend> = if simd {
+                Box::new(SimdBackend::new(threads))
+            } else if threads > 1 {
                 Box::new(ParallelBackend::new(threads))
             } else {
                 Box::new(NativeBackend::new())
@@ -199,7 +239,7 @@ fn main() {
                 })
                 .collect();
             StepRun {
-                threads,
+                key,
                 median_ms,
                 mean_ms,
                 phase_per_iter,
@@ -207,7 +247,12 @@ fn main() {
                 iters_total: engine.stats.iters,
             }
         };
-        let runs = [run(1), run(4)];
+        let runs = [
+            run("native_t1", 1, false),
+            run("simd_t1", 1, true),
+            run("parallel_t4", 4, false),
+            run("simd_t4", 4, true),
+        ];
         for r in &runs {
             let split: Vec<String> = r
                 .phase_per_iter
@@ -215,9 +260,9 @@ fn main() {
                 .map(|(name, us)| format!("{name} {:.0}us", us))
                 .collect();
             println!(
-                "step blobs x{} n={n}: median {:>8.3} ms | mean {:>8.3} ms \
+                "step blobs {:<11} n={n}: median {:>8.3} ms | mean {:>8.3} ms \
                  ({:.2e} point-updates/s; hd_refines {}/{}) | {}",
-                r.threads,
+                r.key,
                 r.median_ms,
                 r.mean_ms,
                 n as f64 / (r.median_ms * 1e-3),
@@ -226,10 +271,13 @@ fn main() {
                 split.join(" | ")
             );
         }
+        let native_t1 = runs[0].median_ms;
         println!(
-            "step blobs speedup x4 vs x1: {:.2}x (median), {:.2}x (mean)",
-            runs[0].median_ms / runs[1].median_ms,
-            runs[0].mean_ms / runs[1].mean_ms
+            "step blobs speedups vs native_t1: simd_t1 {:.2}x | parallel_t4 {:.2}x | \
+             simd_t4 {:.2}x (medians)",
+            native_t1 / runs[1].median_ms,
+            native_t1 / runs[2].median_ms,
+            native_t1 / runs[3].median_ms
         );
         // Minimal hand-rolled JSON (the repo is zero-dependency).
         let run_json = |r: &StepRun| -> String {
@@ -239,24 +287,74 @@ fn main() {
                 .map(|(name, us)| format!("\"{name}\":{:.3}", us))
                 .collect();
             format!(
-                "{{\"median_step_ms\":{:.4},\"mean_step_ms\":{:.4},\
+                "\"{}\":{{\"median_step_ms\":{:.4},\"mean_step_ms\":{:.4},\
                  \"phase_micros_per_iter\":{{{}}}}}",
+                r.key,
                 r.median_ms,
                 r.mean_ms,
                 phases.join(",")
             )
         };
+        let backends: Vec<String> = runs.iter().map(run_json).collect();
         let payload = format!(
             "{{\"bench\":\"step_blobs\",\"dataset\":\"blobs\",\"n\":{n},\
-             \"iters\":{iters},\"threads\":{{\"1\":{},\"4\":{}}},\
-             \"speedup_median_4_vs_1\":{:.3}}}\n",
-            run_json(&runs[0]),
-            run_json(&runs[1]),
-            runs[0].median_ms / runs[1].median_ms
+             \"iters\":{iters},\"backends\":{{{}}},\
+             \"speedup_simd_vs_native_t1\":{:.3},\
+             \"speedup_parallel_t4_vs_native_t1\":{:.3}}}\n",
+            backends.join(","),
+            native_t1 / runs[1].median_ms,
+            native_t1 / runs[2].median_ms
         );
+
+        // Regression ratchet: compare fresh medians against the
+        // committed baseline BEFORE overwriting it. Enforced only under
+        // FUNCSNE_PERF_GATE=1 (CI perf-smoke); local runs just report.
+        let gate = std::env::var("FUNCSNE_PERF_GATE").map(|v| v == "1").unwrap_or(false);
+        let baseline_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_step_blobs.json");
+        let mut regressed = Vec::new();
+        match std::fs::read_to_string(&baseline_path) {
+            Ok(text) => match json::parse(&text) {
+                Ok(doc) => {
+                    for r in &runs {
+                        // Missing keys (older schema) are not a regression.
+                        let Some(base) = doc
+                            .get("backends")
+                            .and_then(|b| b.get(r.key))
+                            .and_then(|e| e.get("median_step_ms"))
+                            .and_then(|v| v.as_f64())
+                        else {
+                            continue;
+                        };
+                        let ratio = r.median_ms / base;
+                        println!(
+                            "perf gate {:<11}: {:.3} ms vs baseline {:.3} ms ({:.2}x)",
+                            r.key, r.median_ms, base, ratio
+                        );
+                        if ratio > 1.2 {
+                            regressed.push(format!(
+                                "{}: {:.3} ms > 1.2x baseline {:.3} ms",
+                                r.key, r.median_ms, base
+                            ));
+                        }
+                    }
+                }
+                Err(e) => println!("(baseline BENCH_step_blobs.json unparsable, skipping gate: {e})"),
+            },
+            Err(e) => println!("(no committed baseline at {}: {e})", baseline_path.display()),
+        }
         match std::fs::write("BENCH_step_blobs.json", &payload) {
             Ok(()) => println!("(wrote BENCH_step_blobs.json)"),
             Err(e) => println!("(could not write BENCH_step_blobs.json: {e})"),
+        }
+        if !regressed.is_empty() {
+            if gate {
+                eprintln!("PERF GATE FAILED (>20% median step regression):");
+                for r in &regressed {
+                    eprintln!("  {r}");
+                }
+                std::process::exit(2);
+            }
+            println!("(regressions vs baseline, gate off: {})", regressed.join("; "));
         }
     }
 

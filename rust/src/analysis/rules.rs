@@ -3,12 +3,16 @@
 //! Scopes are path prefixes relative to the source root (`rust/src`):
 //!
 //! * **deterministic** (`engine/`, `knn/`, `ld/`, `hd/`, `metrics/`,
-//!   `obs/`, `util/rng.rs`) — code whose outputs must be a pure
-//!   function of (seed, iteration, input), bitwise-invariant to
-//!   thread count (for `obs/`: a pure function of the samples fed in,
-//!   with all timing through `util::timer::PhaseClock`);
-//! * **sharded** (the same prefixes minus `util/rng.rs`) — code whose
-//!   reductions run per-shard and must combine in a fixed order;
+//!   `obs/`, `util/rng.rs`, `util/simd.rs`) — code whose outputs must
+//!   be a pure function of (seed, iteration, input), bitwise-invariant
+//!   to thread count (for `obs/`: a pure function of the samples fed
+//!   in, with all timing through `util::timer::PhaseClock`);
+//! * **sharded** (the same prefixes minus `util/rng.rs`, plus
+//!   `util/simd.rs`) — code whose reductions run per-shard and must
+//!   combine in a fixed order. The SIMD lane module lives here because
+//!   its horizontal folds are exactly the reductions rule 6 exists to
+//!   police: they stay legal only while spelled as the fixed-order
+//!   pairwise tree in `F32x8::hsum`, never as `.sum()`/`.fold()`;
 //! * **server** (`server/`) — request-handling code that must answer
 //!   with HTTP statuses, never by panicking a worker.
 //!
@@ -40,11 +44,13 @@ pub const RULE_NAMES: [&str; 6] =
 const DETERMINISTIC_PREFIXES: [&str; 6] = ["engine/", "knn/", "ld/", "hd/", "metrics/", "obs/"];
 
 fn is_deterministic(rel: &str) -> bool {
-    rel == "util/rng.rs" || DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))
+    rel == "util/rng.rs"
+        || rel == "util/simd.rs"
+        || DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))
 }
 
 fn is_sharded(rel: &str) -> bool {
-    DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))
+    rel == "util/simd.rs" || DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))
 }
 
 fn is_server(rel: &str) -> bool {

@@ -120,11 +120,13 @@ USAGE: funcsne <subcommand> [--key value]...
 
 SUBCOMMANDS
   embed      run an embedding           --dataset NAME --n N [--alpha A]
-             [--ld-dim D] [--n-iters I] [--perplexity P] [--backend native|pjrt]
+             [--ld-dim D] [--n-iters I] [--perplexity P]
+             [--backend native|simd|pjrt]  force kernels (default env
+                            FUNCSNE_BACKEND or native; simd = lane-vectorized,
+                            bitwise-reproducible at any thread count)
              [--threads T]  compute-backend worker threads (0 = auto-detect;
-                            T > 1 shards the native force/scoring passes with
-                            bitwise-identical results; default env
-                            FUNCSNE_THREADS or 1)
+                            T > 1 shards the native/simd force and scoring
+                            passes; default env FUNCSNE_THREADS or 1)
              [--attraction X] [--repulsion X] [--seed S] [--out results/embed]
   knn        compare KNN finders        --dataset NAME --n N [--k K] [--iters I]
   eval       run to convergence and print the sampled quality trajectory
@@ -208,9 +210,13 @@ fn cmd_embed(args: &Args) -> Result<()> {
         ld_dim: args.get_usize("ld_dim", 2)?,
         n_iters: args.get_usize("n_iters", 1000)?,
         seed: args.get_usize("seed", 42)? as u64,
-        backend: args.get_str("backend", "native").parse()?,
         ..EmbedConfig::default()
     };
+    // An explicit --backend wins; otherwise the EmbedConfig default
+    // stands (which itself honours FUNCSNE_BACKEND, then "native").
+    if args.options.contains_key("backend") {
+        cfg.backend = args.get_str("backend", "native").parse()?;
+    }
     cfg.perplexity = args.get_f64("perplexity", cfg.perplexity)?;
     cfg.attraction = args.get_f64("attraction", cfg.attraction)?;
     cfg.repulsion = args.get_f64("repulsion", cfg.repulsion)?;
@@ -607,7 +613,7 @@ fn cmd_info() -> Result<()> {
                 Err(e) => println!("PJRT CPU client: FAILED ({e})"),
             }
         }
-        Err(e) => println!("no artifacts ({e}); only --backend native available"),
+        Err(e) => println!("no artifacts ({e}); only --backend native|simd available"),
     }
     Ok(())
 }

@@ -13,8 +13,12 @@ use std::path::Path;
 /// Which force-computation backend the coordinator dispatches to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
-    /// Pure-Rust forces (reference + performance baseline).
+    /// Pure-Rust scalar forces (reference + performance baseline).
     Native,
+    /// Lane-vectorized pure-Rust forces ([`crate::ld::SimdBackend`]):
+    /// bitwise-reproducible at any thread count, approximate (not
+    /// bitwise) vs `Native` because lane folds reorder f32 sums.
+    Simd,
     /// AOT-compiled XLA executables via PJRT (the three-layer hot path).
     Pjrt,
 }
@@ -25,8 +29,9 @@ impl std::str::FromStr for Backend {
     fn from_str(s: &str) -> Result<Self> {
         match s {
             "native" => Ok(Backend::Native),
+            "simd" => Ok(Backend::Simd),
             "pjrt" => Ok(Backend::Pjrt),
-            other => bail!("unknown backend {other:?} (native|pjrt)"),
+            other => bail!("unknown backend {other:?} (native|simd|pjrt)"),
         }
     }
 }
@@ -85,7 +90,11 @@ pub struct EmbedConfig {
     pub implosion_factor: f64,
     /// Initialisation strategy.
     pub init: Init,
-    /// Force backend.
+    /// Force backend. The default honours the `FUNCSNE_BACKEND`
+    /// environment variable (`native` / `simd` / `pjrt`, falling back
+    /// to `native`), mirroring `FUNCSNE_THREADS` so CI and ad-hoc runs
+    /// can flip the whole binary onto the SIMD kernels without code
+    /// changes.
     pub backend: Backend,
     /// RNG seed.
     pub seed: u64,
@@ -124,6 +133,12 @@ fn default_probe_every() -> usize {
     std::env::var("FUNCSNE_PROBE").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
 }
 
+/// Default force backend: `FUNCSNE_BACKEND` if set and parseable, else
+/// [`Backend::Native`].
+fn default_backend() -> Backend {
+    std::env::var("FUNCSNE_BACKEND").ok().and_then(|v| v.parse().ok()).unwrap_or(Backend::Native)
+}
+
 impl Default for EmbedConfig {
     fn default() -> Self {
         EmbedConfig {
@@ -147,7 +162,7 @@ impl Default for EmbedConfig {
             implosion_radius: 50.0,
             implosion_factor: 0.25,
             init: Init::Random,
-            backend: Backend::Native,
+            backend: default_backend(),
             seed: 42,
             recalibrate_every: 10,
             threads: default_threads(),
@@ -425,7 +440,17 @@ mod tests {
     #[test]
     fn backend_parses() {
         assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("simd".parse::<Backend>().unwrap(), Backend::Simd);
         assert_eq!("pjrt".parse::<Backend>().unwrap(), Backend::Pjrt);
         assert!("cuda".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn simd_backend_applies_from_map() {
+        let map = toml_lite::parse("[embed]\nbackend = \"simd\"\n").unwrap();
+        let mut cfg = EmbedConfig::default();
+        cfg.apply(&map, "embed").unwrap();
+        assert_eq!(cfg.backend, Backend::Simd);
+        cfg.validate().unwrap();
     }
 }

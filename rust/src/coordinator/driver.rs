@@ -6,7 +6,7 @@ use crate::config::{Backend, EmbedConfig};
 use crate::data::datasets::{self, Dataset};
 use crate::data::Matrix;
 use crate::engine::ComputeBackend;
-use crate::ld::{NativeBackend, ParallelBackend};
+use crate::ld::{NativeBackend, ParallelBackend, SimdBackend};
 use crate::linalg::Pca;
 use crate::session::Session;
 use crate::util::Stopwatch;
@@ -50,7 +50,10 @@ pub fn dataset_by_name(name: &str, n: usize, seed: u64) -> Result<Dataset> {
 /// run needs are compiled up front (`warmup`). On the native path the
 /// `threads` knob selects between the sequential reference backend and
 /// the sharded [`ParallelBackend`] (bitwise-identical results, so the
-/// choice never changes an embedding — only its wall-clock).
+/// choice never changes an embedding — only its wall-clock). The SIMD
+/// backend composes the lane-vectorized kernels with the same sharding
+/// at any `threads` setting (bitwise thread-count-invariant, close to
+/// native within lane-fold tolerance).
 pub fn make_backend(
     cfg: &EmbedConfig,
     data_dim: usize,
@@ -65,6 +68,7 @@ pub fn make_backend(
                 Ok(Box::new(NativeBackend::new()))
             }
         }
+        Backend::Simd => Ok(Box::new(SimdBackend::new(cfg.resolved_threads()))),
         Backend::Pjrt => {
             let mut b = super::PjrtBackend::new(artifact_dir)
                 .context("PJRT backend init (run `make artifacts`?)")?;
@@ -155,11 +159,23 @@ mod tests {
 
     #[test]
     fn make_backend_honours_threads_knob() {
+        // Backend pinned explicitly: the default honours the ambient
+        // FUNCSNE_BACKEND variable, which this test must not depend on.
         let dir = default_artifact_dir();
-        let cfg = EmbedConfig { threads: 1, ..EmbedConfig::default() };
+        let base = EmbedConfig { backend: Backend::Native, ..EmbedConfig::default() };
+        let cfg = EmbedConfig { threads: 1, ..base.clone() };
         assert_eq!(make_backend(&cfg, 8, &dir).unwrap().name(), "native");
-        let cfg = EmbedConfig { threads: 4, ..EmbedConfig::default() };
+        let cfg = EmbedConfig { threads: 4, ..base };
         assert_eq!(make_backend(&cfg, 8, &dir).unwrap().name(), "parallel");
+    }
+
+    #[test]
+    fn make_backend_selects_simd_at_any_thread_count() {
+        let dir = default_artifact_dir();
+        for threads in [1usize, 4] {
+            let cfg = EmbedConfig { backend: Backend::Simd, threads, ..EmbedConfig::default() };
+            assert_eq!(make_backend(&cfg, 8, &dir).unwrap().name(), "simd");
+        }
     }
 
     #[test]

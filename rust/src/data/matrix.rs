@@ -4,6 +4,7 @@
 //! contiguous row-major storage so that a point's coordinates are one
 //! cache line run, which the KNN and force hot loops rely on.
 
+use crate::util::simd::{F32x8, LANES};
 use anyhow::{bail, Result};
 
 /// Row-major (n, d) matrix of f32.
@@ -112,6 +113,27 @@ impl Matrix {
             Some(last)
         } else {
             None
+        }
+    }
+
+    /// Transpose-gather eight rows into a structure-of-arrays lane
+    /// tile: after the call, `tile[k].0[l] == self.row(idx[l])[k]` for
+    /// every coordinate `k < d` and lane `l`.
+    ///
+    /// This is the SoA view the SIMD force kernels run on: the
+    /// row-major `Matrix` stays the storage of record (the scalar
+    /// backends and the rest of the system are untouched), and a
+    /// ~`d * 32`-byte register-friendly tile is materialized per
+    /// 8-neighbour group right before the lane math. Callers with
+    /// fewer than 8 live neighbours pad `idx` with a self-index so the
+    /// padded lanes compute a zero delta; `tile` must have at least
+    /// `d` slots.
+    #[inline(always)]
+    pub fn gather_lanes(&self, idx: &[u32; LANES], tile: &mut [F32x8]) {
+        for (l, &i) in idx.iter().enumerate() {
+            for (k, &v) in self.row(i as usize).iter().enumerate() {
+                tile[k].0[l] = v;
+            }
         }
     }
 
@@ -241,6 +263,23 @@ mod tests {
         // Remove last: nothing moves.
         assert_eq!(m.swap_remove_row(1), None);
         assert_eq!(m.n(), 1);
+    }
+
+    #[test]
+    fn gather_lanes_transposes_rows() {
+        let mut rng = Rng::new(7);
+        let d = 5;
+        let m = Matrix::from_vec(pt::gauss_mat(&mut rng, 12, d, 2.0), 12, d).unwrap();
+        let idx: [u32; 8] = [3, 0, 11, 7, 7, 2, 9, 1];
+        let mut tile = [F32x8::ZERO; 8];
+        m.gather_lanes(&idx, &mut tile[..d]);
+        for (l, &i) in idx.iter().enumerate() {
+            for k in 0..d {
+                assert_eq!(tile[k].0[l].to_bits(), m.row(i as usize)[k].to_bits());
+            }
+        }
+        // Slots past d are untouched.
+        assert_eq!(tile[d].0, [0.0; 8]);
     }
 
     #[test]

@@ -147,6 +147,13 @@ impl NegSamples {
 
 /// The numeric services the engine needs per iteration: candidate
 /// scoring, the force pass, and the gradient/momentum update.
+///
+/// This seam is where the SIMD layout restructuring lives: the engine
+/// hands over whole batches/ranges, so a backend is free to regroup
+/// the work into 8-wide lane tiles ([`crate::ld::SimdBackend`]), shard
+/// it over threads ([`crate::ld::ParallelBackend`]), or ship it to an
+/// AOT accelerator — without the engine's slot semantics or RNG
+/// streams noticing.
 pub trait ComputeBackend {
     /// Squared HD distances for candidate pairs: `out[t] = ||x[owners[t]]
     /// - x[cands[t]]||²`. Batches may be any length; implementations tile
@@ -196,7 +203,9 @@ pub trait ComputeBackend {
     /// [`crate::ld::forces::update_range`], so the fold (and therefore
     /// the implosion decision) is bitwise-identical at any thread
     /// count. The default runs sequentially on the calling thread;
-    /// [`crate::ld::ParallelBackend`] shards it by point ranges.
+    /// [`crate::ld::ParallelBackend`] shards it by point ranges, and
+    /// the SIMD lane kernel keeps this exact scalar-sequential Σy² fold
+    /// so even its update stays bitwise-equal to the reference.
     #[allow(clippy::too_many_arguments)]
     fn update(
         &mut self,

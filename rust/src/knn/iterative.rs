@@ -356,8 +356,12 @@ impl IterativeKnn {
     /// flat pair arrays, in shard-then-point order. Read-only on the
     /// tables. The caller scores the pairs (engine: one batched
     /// [`ComputeBackend::sqdist_batch`](crate::engine::ComputeBackend::sqdist_batch)
-    /// call; standalone: [`score_pairs_native`]) and then applies them
-    /// with [`IterativeKnn::apply_hd_scored`].
+    /// call, so a SIMD/PJRT backend vectorizes refinement scoring with
+    /// no change here; standalone: [`score_pairs_native`]) and then
+    /// applies them with [`IterativeKnn::apply_hd_scored`].
+    /// LD refinement scores inline with scalar [`sqdist`] on purpose —
+    /// routing it through a backend whose distances differ in the last
+    /// bits (SIMD lane folds) would perturb native trajectories.
     #[allow(clippy::too_many_arguments)]
     pub fn gen_hd_candidates(
         &self,

@@ -1,10 +1,14 @@
 //! Low-dimensional side: the heavy-tailed similarity kernel and the
-//! native force accumulation backends (sequential reference + the
-//! sharded multi-threaded variant, bitwise-identical to it).
+//! native force accumulation backends — the sequential scalar
+//! reference, the sharded multi-threaded variant (bitwise-identical to
+//! it), and the lane-vectorized SIMD variant (bitwise-invariant across
+//! thread counts, approximate vs the scalar pair).
 
 pub mod kernel;
 pub mod forces;
 pub mod parallel;
+pub mod simd;
 
 pub use forces::NativeBackend;
 pub use parallel::ParallelBackend;
+pub use simd::SimdBackend;

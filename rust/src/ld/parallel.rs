@@ -38,8 +38,24 @@ use crate::engine::backend::{ComputeBackend, NegSamples, NegStats};
 use crate::hd::Affinities;
 use crate::knn::iterative::IterativeKnn;
 use crate::ld::forces::{ensure_supported_dim, forces_range, update_range};
+use crate::ld::simd::{forces_range_simd, sqdist_lanes, update_range_simd};
 use crate::runtime::pool::{self, shard_ranges, WorkerPool};
 use anyhow::Result;
+
+/// Which per-point range kernel the shard tasks run. Both variants
+/// share the exact same sharding, disjoint-write and point-order-fold
+/// plumbing; the choice only swaps the inner math, so each variant is
+/// bitwise thread-count-invariant on its own (scalar additionally
+/// matches [`NativeBackend`] bit-for-bit; SIMD matches it within
+/// lane-reassociation tolerance — see `crate::ld::simd`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum RangeKernel {
+    /// The scalar reference kernels ([`forces_range`] /
+    /// [`update_range`] / [`sqdist`]).
+    Scalar,
+    /// The lane-vectorized kernels from [`crate::ld::simd`].
+    Simd,
+}
 
 /// Default minimum points per shard in `forces` (a point costs roughly
 /// a microsecond at typical k_hd + k_ld + n_neg slot counts).
@@ -60,6 +76,9 @@ pub struct ParallelBackend {
     /// Per-point Σ y² subtotals for the sharded `update` pass, reduced
     /// in point order after the join (same discipline as `wsub`).
     ssub: Vec<f64>,
+    /// Which inner kernel the shard tasks run (scalar reference vs
+    /// lane-vectorized); see [`RangeKernel`].
+    kernel: RangeKernel,
 }
 
 impl ParallelBackend {
@@ -72,7 +91,16 @@ impl ParallelBackend {
             min_pairs_per_shard: MIN_PAIRS_PER_SHARD,
             wsub: Vec::new(),
             ssub: Vec::new(),
+            kernel: RangeKernel::Scalar,
         }
+    }
+
+    /// A backend whose shard tasks run `kernel` instead of the scalar
+    /// default — the constructor [`crate::ld::SimdBackend`] wraps.
+    pub(crate) fn with_kernel(threads: usize, kernel: RangeKernel) -> ParallelBackend {
+        let mut backend = ParallelBackend::new(threads);
+        backend.kernel = kernel;
+        backend
     }
 
     /// Override the minimum work per shard (`forces` points /
@@ -110,6 +138,7 @@ impl ComputeBackend for ParallelBackend {
         out.clear();
         out.resize(len, 0.0);
         let shards = self.effective_shards(len, self.min_pairs_per_shard);
+        let kernel = self.kernel;
         let mut tasks = Vec::new();
         let mut rest: &mut [f32] = out.as_mut_slice();
         for range in shard_ranges(len, shards) {
@@ -118,8 +147,11 @@ impl ComputeBackend for ParallelBackend {
             tasks.push(move || {
                 let start = range.start;
                 for t in range {
-                    chunk[t - start] =
-                        sqdist(x.row(owners[t] as usize), x.row(cands[t] as usize));
+                    let (a, b) = (x.row(owners[t] as usize), x.row(cands[t] as usize));
+                    chunk[t - start] = match kernel {
+                        RangeKernel::Scalar => sqdist(a, b),
+                        RangeKernel::Simd => sqdist_lanes(a, b),
+                    };
                 }
             });
         }
@@ -153,6 +185,7 @@ impl ComputeBackend for ParallelBackend {
             self.wsub.resize(n, 0.0);
         }
         let shards = self.effective_shards(n, self.min_points_per_shard);
+        let kernel = self.kernel;
         let mut tasks = Vec::new();
         let mut attr_rest: &mut [f32] = attr.data_mut();
         let mut rep_rest: &mut [f32] = rep.data_mut();
@@ -167,18 +200,15 @@ impl ComputeBackend for ParallelBackend {
             wsub_rest = tail;
             tasks.push(move || {
                 let start = range.start;
-                forces_range(
-                    y,
-                    knn,
-                    aff,
-                    neg,
-                    alpha,
-                    far_scale,
-                    range,
-                    attr_chunk,
-                    rep_chunk,
-                    |i, wsub| wsub_chunk[i - start] = wsub,
-                )
+                let on_wsub = |i: usize, wsub: f64| wsub_chunk[i - start] = wsub;
+                match kernel {
+                    RangeKernel::Scalar => forces_range(
+                        y, knn, aff, neg, alpha, far_scale, range, attr_chunk, rep_chunk, on_wsub,
+                    ),
+                    RangeKernel::Simd => forces_range_simd(
+                        y, knn, aff, neg, alpha, far_scale, range, attr_chunk, rep_chunk, on_wsub,
+                    ),
+                }
             });
         }
         let mut stats = NegStats::default();
@@ -218,6 +248,7 @@ impl ComputeBackend for ParallelBackend {
             self.ssub.resize(n, 0.0);
         }
         let shards = self.effective_shards(n, self.min_points_per_shard);
+        let kernel = self.kernel;
         let mut tasks = Vec::new();
         let mut y_rest: &mut [f32] = y.data_mut();
         let mut v_rest: &mut [f32] = vel.data_mut();
@@ -236,19 +267,17 @@ impl ComputeBackend for ParallelBackend {
             let r_chunk = &rep_all[range.start * d..range.end * d];
             let start = range.start;
             tasks.push(move || {
-                update_range(
-                    range,
-                    d,
-                    y_chunk,
-                    v_chunk,
-                    a_chunk,
-                    r_chunk,
-                    a_mult,
-                    r_mult,
-                    lr,
-                    mom,
-                    |i, ss| s_chunk[i - start] = ss,
-                )
+                let on_ss = |i: usize, ss: f64| s_chunk[i - start] = ss;
+                match kernel {
+                    RangeKernel::Scalar => update_range(
+                        range, d, y_chunk, v_chunk, a_chunk, r_chunk, a_mult, r_mult, lr, mom,
+                        on_ss,
+                    ),
+                    RangeKernel::Simd => update_range_simd(
+                        range, d, y_chunk, v_chunk, a_chunk, r_chunk, a_mult, r_mult, lr, mom,
+                        on_ss,
+                    ),
+                }
             });
         }
         self.pool.run_tasks(tasks);

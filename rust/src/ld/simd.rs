@@ -1,0 +1,667 @@
+//! Lane-vectorized (SIMD) force kernels and the [`SimdBackend`].
+//!
+//! Same Eq. 5/6 decomposition as [`crate::ld::forces`], restructured
+//! from scalar row loops onto [`F32x8`] lane arithmetic:
+//!
+//! * Neighbour slots stream through a **transposed 8-row tile**
+//!   (structure-of-arrays view of up to eight `y` rows, gathered by
+//!   [`Matrix::gather_lanes`]) so the per-coordinate inner loop is one
+//!   lane subtract/multiply instead of eight strided scalar passes.
+//! * Squared distances, the heavy-tailed kernel `g = 1/(1 + d²/α)` and
+//!   the weight `w = g^α` are evaluated for eight neighbours at once.
+//! * Per-coordinate attraction/repulsion accumulate in **lane
+//!   accumulators** (`[F32x8; 64]`) and are folded once per point with
+//!   the fixed-order [`F32x8::hsum`].
+//!
+//! Determinism contract (docs/determinism.md):
+//!
+//! * Every per-point result is a pure function of that point's slot
+//!   lists — groups of 8 are formed from the slot order alone, padded
+//!   lanes use the point's own index (zero delta) with their
+//!   coefficients zeroed, and all folds have a fixed association. The
+//!   kernels are therefore **bitwise thread-count-invariant**: the
+//!   shard partition can never change a lane grouping.
+//! * Lane folds associate f32 additions differently from the scalar
+//!   kernels, so SIMD results are **approximate, not bitwise**, vs
+//!   [`crate::ld::NativeBackend`] (`rust/tests/parity.rs` pins the
+//!   tolerance). The one exception is [`update_range_simd`]: the
+//!   momentum update is purely elementwise and its Σy² fold is kept
+//!   scalar-sequential, so the update pass — and the implosion
+//!   decision — stays bitwise-identical to the scalar backends.
+//!
+//! [`SimdBackend`] composes with the existing [`ParallelBackend`]
+//! sharding (thread-scaling × lane-scaling): it is a `ParallelBackend`
+//! whose shard tasks dispatch to these kernels instead of the scalar
+//! ones.
+
+use crate::data::matrix::Matrix;
+use crate::engine::backend::{ComputeBackend, NegSamples, NegStats};
+use crate::hd::Affinities;
+use crate::knn::iterative::IterativeKnn;
+use crate::ld::parallel::{ParallelBackend, RangeKernel};
+use crate::util::simd::{F32x8, LANES};
+use anyhow::Result;
+use std::ops::Range;
+
+/// Pad the tail lanes of a neighbour-index group with the owning
+/// point's index: the gathered row equals `y_i`, the delta is exactly
+/// zero, and the flush helpers zero the padded coefficient lanes — so
+/// padding never contributes to any accumulator and depends only on
+/// the point itself, never on the shard partition.
+#[inline(always)]
+fn pad(idx: &mut [u32; LANES], fill: usize, i: usize) {
+    for slot in idx.iter_mut().skip(fill) {
+        *slot = i as u32;
+    }
+}
+
+/// Gather the 8 neighbour rows of `idx` into `tile` as deltas
+/// (`tile[k] = y_j[k] − y_i[k]` per lane) and evaluate the
+/// heavy-tailed kernel for all lanes: returns `(w, g)` with
+/// `g = 1/(1 + d²/α)` and `w = g^α` (α = 1 fast path, exactly like
+/// [`crate::ld::kernel::kernel_pair`]).
+#[inline(always)]
+fn lane_deltas_kernel(
+    y: &Matrix,
+    d: usize,
+    yi: &[f32; 64],
+    idx: &[u32; LANES],
+    alpha: f32,
+    tile: &mut [F32x8; 64],
+) -> (F32x8, F32x8) {
+    y.gather_lanes(idx, &mut tile[..d]);
+    let mut d2 = F32x8::ZERO;
+    for (k, lane) in tile.iter_mut().enumerate().take(d) {
+        let delta = lane.sub(F32x8::splat(yi[k]));
+        *lane = delta;
+        d2 = d2.add(delta.mul(delta));
+    }
+    let one = F32x8::splat(1.0);
+    let g = one.div(one.add(d2.div(F32x8::splat(alpha))));
+    let w = if alpha == 1.0 {
+        g
+    } else {
+        let mut o = g.0;
+        for v in o.iter_mut() {
+            *v = v.powf(alpha);
+        }
+        F32x8(o)
+    };
+    (w, g)
+}
+
+/// Flush one HD group: attraction `+= p·g·Δ` and close repulsion
+/// `−= w·g·Δ` into the lane accumulators (Δ = y_j − y_i).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn flush_hd(
+    y: &Matrix,
+    d: usize,
+    yi: &[f32; 64],
+    idx: &[u32; LANES],
+    p: &[f32; LANES],
+    fill: usize,
+    alpha: f32,
+    tile: &mut [F32x8; 64],
+    acc_a: &mut [F32x8; 64],
+    acc_r: &mut [F32x8; 64],
+) {
+    let (w, g) = lane_deltas_kernel(y, d, yi, idx, alpha, tile);
+    let mut ag = F32x8(*p).mul(g);
+    let mut rg = w.mul(g);
+    for l in fill..LANES {
+        ag.0[l] = 0.0;
+        rg.0[l] = 0.0;
+    }
+    for k in 0..d {
+        acc_a[k] = acc_a[k].add(ag.mul(tile[k]));
+        acc_r[k] = acc_r[k].sub(rg.mul(tile[k]));
+    }
+}
+
+/// Flush one repulsion-only group (LD slots with `scale = 1`, negative
+/// samples with `scale = far_scale`): `rep += scale·w·g·(y_i − y_j)`,
+/// i.e. `−= scale·w·g·Δ`. Returns the lane weights so the negative
+/// pass can fold its wsum subtotal (padded lanes must be skipped by
+/// the caller).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn flush_rep(
+    y: &Matrix,
+    d: usize,
+    yi: &[f32; 64],
+    idx: &[u32; LANES],
+    fill: usize,
+    alpha: f32,
+    scale: f32,
+    tile: &mut [F32x8; 64],
+    acc_r: &mut [F32x8; 64],
+) -> F32x8 {
+    let (w, g) = lane_deltas_kernel(y, d, yi, idx, alpha, tile);
+    let mut rg = w.mul(g).mul(F32x8::splat(scale));
+    for l in fill..LANES {
+        rg.0[l] = 0.0;
+    }
+    for k in 0..d {
+        acc_r[k] = acc_r[k].sub(rg.mul(tile[k]));
+    }
+    w
+}
+
+/// Lane-vectorized twin of [`crate::ld::forces::forces_range`]: same
+/// signature, same output layout, same `(count, covered)` /
+/// `on_wsub` point-order reporting — shard-composable through the
+/// same [`ParallelBackend`] plumbing. Callers must check
+/// [`crate::ld::forces::ensure_supported_dim`] first (the tiles and
+/// accumulators are 64-wide).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forces_range_simd(
+    y: &Matrix,
+    knn: &IterativeKnn,
+    aff: &Affinities,
+    neg: &NegSamples,
+    alpha: f32,
+    far_scale: f32,
+    range: Range<usize>,
+    attr_out: &mut [f32],
+    rep_out: &mut [f32],
+    mut on_wsub: impl FnMut(usize, f64),
+) -> (usize, usize) {
+    let d = y.d();
+    debug_assert!(d <= 64, "call ensure_supported_dim first");
+    let start = range.start;
+    debug_assert!(attr_out.len() >= range.len() * d);
+    debug_assert!(rep_out.len() >= range.len() * d);
+    let mut count = 0usize;
+    let mut covered = 0usize;
+    let mut yi_buf = [0.0f32; 64];
+    let mut tile = [F32x8::ZERO; 64];
+    let mut acc_a = [F32x8::ZERO; 64];
+    let mut acc_r = [F32x8::ZERO; 64];
+    let mut idx = [0u32; LANES];
+    let mut pbuf = [0.0f32; LANES];
+    for i in range {
+        let yi_start = i * d;
+        yi_buf[..d].copy_from_slice(&y.data()[yi_start..yi_start + d]);
+        acc_a[..d].iter_mut().for_each(|v| *v = F32x8::ZERO);
+        acc_r[..d].iter_mut().for_each(|v| *v = F32x8::ZERO);
+        // --- 1. HD slots: attraction + close repulsion ------------
+        let mut fill = 0usize;
+        for (s, (j, _hd_dist)) in knn.hd.entries(i).enumerate() {
+            idx[fill] = j;
+            pbuf[fill] = aff.p_slot(i, s);
+            fill += 1;
+            covered += 1;
+            if fill == LANES {
+                flush_hd(
+                    y, d, &yi_buf, &idx, &pbuf, LANES, alpha, &mut tile, &mut acc_a, &mut acc_r,
+                );
+                fill = 0;
+            }
+        }
+        if fill > 0 {
+            pad(&mut idx, fill, i);
+            flush_hd(y, d, &yi_buf, &idx, &pbuf, fill, alpha, &mut tile, &mut acc_a, &mut acc_r);
+        }
+        // --- 2. LD slots not in the HD set: close repulsion -------
+        fill = 0;
+        for (j, _stale) in knn.ld.entries(i) {
+            if knn.hd.contains(i, j) {
+                continue; // already covered by term 1 (not re-counted)
+            }
+            idx[fill] = j;
+            fill += 1;
+            covered += 1;
+            if fill == LANES {
+                flush_rep(y, d, &yi_buf, &idx, LANES, alpha, 1.0, &mut tile, &mut acc_r);
+                fill = 0;
+            }
+        }
+        if fill > 0 {
+            pad(&mut idx, fill, i);
+            flush_rep(y, d, &yi_buf, &idx, fill, alpha, 1.0, &mut tile, &mut acc_r);
+        }
+        // --- 3. Negative samples: far field ------------------------
+        // One f64 subtotal per point in lane (= slot) order, reported
+        // in point order — the same fold discipline as the scalar
+        // kernel, so wsum stays shard-partition-independent.
+        let mut wsub = 0.0f64;
+        fill = 0;
+        for &j in neg.row(i) {
+            idx[fill] = j;
+            fill += 1;
+            count += 1;
+            if fill == LANES {
+                let w =
+                    flush_rep(y, d, &yi_buf, &idx, LANES, alpha, far_scale, &mut tile, &mut acc_r);
+                for &wl in &w.0 {
+                    wsub += wl as f64;
+                }
+                fill = 0;
+            }
+        }
+        if fill > 0 {
+            pad(&mut idx, fill, i);
+            let w = flush_rep(y, d, &yi_buf, &idx, fill, alpha, far_scale, &mut tile, &mut acc_r);
+            for &wl in w.0.iter().take(fill) {
+                wsub += wl as f64;
+            }
+        }
+        on_wsub(i, wsub);
+        // One fixed-order horizontal fold per coordinate per point.
+        let off = (i - start) * d;
+        for k in 0..d {
+            attr_out[off + k] = acc_a[k].hsum();
+            rep_out[off + k] = acc_r[k].hsum();
+        }
+    }
+    (count, covered)
+}
+
+/// Lane-vectorized twin of [`crate::ld::forces::update_range`].
+///
+/// The gradient/momentum update is purely elementwise (no horizontal
+/// fold touches f32), and the implosion Σy² subtotal is folded
+/// scalar-sequentially over each row exactly like the scalar kernel —
+/// so this pass is **bitwise-identical** to `update_range`, not merely
+/// within tolerance (pinned by a `to_bits` test below).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn update_range_simd(
+    range: Range<usize>,
+    d: usize,
+    y_out: &mut [f32],
+    vel_out: &mut [f32],
+    attr: &[f32],
+    rep: &[f32],
+    a_mult: f32,
+    r_mult: f32,
+    lr: f32,
+    mom: f32,
+    mut on_ss: impl FnMut(usize, f64),
+) {
+    let start = range.start;
+    debug_assert!(y_out.len() >= range.len() * d);
+    debug_assert!(vel_out.len() >= range.len() * d);
+    debug_assert!(attr.len() >= range.len() * d);
+    debug_assert!(rep.len() >= range.len() * d);
+    let am = F32x8::splat(a_mult);
+    let rm = F32x8::splat(r_mult);
+    let lrv = F32x8::splat(lr);
+    let momv = F32x8::splat(mom);
+    for i in range {
+        let off = (i - start) * d;
+        let chunks = d / LANES;
+        for c in 0..chunks {
+            let t = off + c * LANES;
+            let grad = am.mul(F32x8::load(&attr[t..])).add(rm.mul(F32x8::load(&rep[t..])));
+            let v = momv.mul(F32x8::load(&vel_out[t..])).add(lrv.mul(grad));
+            v.store(&mut vel_out[t..]);
+            let ynew = F32x8::load(&y_out[t..]).add(v);
+            ynew.store(&mut y_out[t..]);
+        }
+        for t in off + chunks * LANES..off + d {
+            let grad = a_mult * attr[t] + r_mult * rep[t];
+            vel_out[t] = mom * vel_out[t] + lr * grad;
+            y_out[t] += vel_out[t];
+        }
+        let mut ss = 0.0f64;
+        for t in off..off + d {
+            ss += (y_out[t] as f64) * (y_out[t] as f64);
+        }
+        on_ss(i, ss);
+    }
+}
+
+/// Lane-vectorized squared Euclidean distance: one lane accumulator
+/// over 8-wide chunks, one fixed-order [`F32x8::hsum`], then a scalar
+/// sequential tail. Deterministic, but associated differently from
+/// the scalar [`crate::data::matrix::sqdist`] (4-way unroll), so the
+/// two agree within f32 rounding, not bitwise.
+#[inline(always)]
+pub(crate) fn sqdist_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut acc = F32x8::ZERO;
+    for c in 0..chunks {
+        let t = c * LANES;
+        let delta = F32x8::load(&a[t..]).sub(F32x8::load(&b[t..]));
+        acc = acc.add(delta.mul(delta));
+    }
+    let mut s = acc.hsum();
+    for t in chunks * LANES..n {
+        let delta = a[t] - b[t];
+        s += delta * delta;
+    }
+    s
+}
+
+/// The lane-vectorized [`ComputeBackend`]: a [`ParallelBackend`] whose
+/// shard tasks run the SIMD kernels, so thread-scaling and
+/// lane-scaling multiply. `threads = 1` (the default single-thread
+/// config) runs the kernels inline on the calling thread.
+///
+/// Selected with `--backend simd`, `EmbedConfig { backend:
+/// Backend::Simd, .. }`, or `FUNCSNE_BACKEND=simd`.
+pub struct SimdBackend {
+    inner: ParallelBackend,
+}
+
+impl SimdBackend {
+    /// A SIMD backend with `threads` workers (`0` = auto-detect).
+    pub fn new(threads: usize) -> SimdBackend {
+        SimdBackend { inner: ParallelBackend::with_kernel(threads, RangeKernel::Simd) }
+    }
+
+    /// See [`ParallelBackend::with_shard_floors`].
+    pub fn with_shard_floors(mut self, min_points: usize, min_pairs: usize) -> SimdBackend {
+        self.inner = self.inner.with_shard_floors(min_points, min_pairs);
+        self
+    }
+
+    /// The resolved worker count.
+    pub fn threads(&self) -> usize {
+        self.inner.threads()
+    }
+}
+
+impl ComputeBackend for SimdBackend {
+    fn sqdist_batch(
+        &mut self,
+        x: &Matrix,
+        owners: &[u32],
+        cands: &[u32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.inner.sqdist_batch(x, owners, cands, out)
+    }
+
+    fn forces(
+        &mut self,
+        y: &Matrix,
+        knn: &IterativeKnn,
+        aff: &Affinities,
+        neg: &NegSamples,
+        alpha: f32,
+        far_scale: f32,
+        attr: &mut Matrix,
+        rep: &mut Matrix,
+    ) -> Result<NegStats> {
+        self.inner.forces(y, knn, aff, neg, alpha, far_scale, attr, rep)
+    }
+
+    fn update(
+        &mut self,
+        y: &mut Matrix,
+        vel: &mut Matrix,
+        attr: &Matrix,
+        rep: &Matrix,
+        a_mult: f32,
+        r_mult: f32,
+        lr: f32,
+        mom: f32,
+    ) -> Result<f64> {
+        self.inner.update(y, vel, attr, rep, a_mult, r_mult, lr, mom)
+    }
+
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::knn::brute::brute_knn;
+    use crate::ld::forces::NativeBackend;
+    use crate::ld::kernel::kernel_pair;
+    use crate::util::Rng;
+
+    /// Remainder-lane sweep: below/at/above one lane group, the 7-of-8
+    /// and full-64 edges.
+    const DIMS: [usize; 7] = [1, 2, 3, 8, 16, 63, 64];
+
+    fn setup(n: usize, d_ld: usize, seed: u64) -> (Matrix, IterativeKnn, Affinities) {
+        let ds = datasets::blobs(n, 5, 3, 0.6, 8.0, seed);
+        let mut rng = Rng::new(seed ^ 1);
+        let mut yv = Vec::with_capacity(n * d_ld);
+        for _ in 0..n * d_ld {
+            yv.push(rng.gauss_ms(0.0, 1.0) as f32);
+        }
+        let y = Matrix::from_vec(yv, n, d_ld).unwrap();
+        let k = 8.min(n - 1);
+        let exact = brute_knn(&ds.x, k);
+        let mut knn = IterativeKnn::new(n, k, k);
+        for i in 0..n {
+            for (j, dd) in exact.entries(i) {
+                knn.hd.insert(i, j, dd);
+            }
+        }
+        let exact_ld = brute_knn(&y, k);
+        for i in 0..n {
+            for (j, dd) in exact_ld.entries(i) {
+                knn.ld.insert(i, j, dd);
+            }
+        }
+        let mut aff = Affinities::new(n, k);
+        aff.recalibrate_all(&mut knn, 5.0);
+        (y, knn, aff)
+    }
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-3 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// Exhaustive scalar oracle of the Eq. 6 decomposition — the same
+    /// reference the native backend is tested against, now applied to
+    /// the lane kernels (within lane-reassociation tolerance).
+    fn oracle(
+        y: &Matrix,
+        knn: &IterativeKnn,
+        aff: &Affinities,
+        neg: &NegSamples,
+        alpha: f32,
+        far_scale: f32,
+    ) -> (Matrix, Matrix, NegStats) {
+        let n = y.n();
+        let d = y.d();
+        let mut attr = Matrix::zeros(n, d);
+        let mut rep = Matrix::zeros(n, d);
+        let mut stats = NegStats::default();
+        for i in 0..n {
+            for (s, (j, _)) in knn.hd.entries(i).enumerate() {
+                let p = aff.p_slot(i, s);
+                let (w, g) = kernel_pair(y.sqdist(i, j as usize), alpha);
+                for k in 0..d {
+                    let delta = y.row(j as usize)[k] - y.row(i)[k];
+                    attr.data_mut()[i * d + k] += p * g * delta;
+                    rep.data_mut()[i * d + k] -= w * g * delta;
+                }
+                stats.covered += 1;
+            }
+            for (j, _) in knn.ld.entries(i) {
+                if knn.hd.contains(i, j) {
+                    continue;
+                }
+                stats.covered += 1;
+                let (w, g) = kernel_pair(y.sqdist(i, j as usize), alpha);
+                for k in 0..d {
+                    rep.data_mut()[i * d + k] +=
+                        w * g * (y.row(i)[k] - y.row(j as usize)[k]);
+                }
+            }
+            for &j in neg.row(i) {
+                let (w, g) = kernel_pair(y.sqdist(i, j as usize), alpha);
+                stats.wsum += w as f64;
+                stats.count += 1;
+                for k in 0..d {
+                    rep.data_mut()[i * d + k] +=
+                        w * g * far_scale * (y.row(i)[k] - y.row(j as usize)[k]);
+                }
+            }
+        }
+        (attr, rep, stats)
+    }
+
+    #[test]
+    fn simd_forces_match_oracle_across_dims_and_alphas() {
+        let n = 130usize;
+        for &d in &DIMS {
+            for &alpha in &[0.5f32, 1.0, 2.0] {
+                let (y, knn, aff) = setup(n, d, 11 + d as u64);
+                let mut rng = Rng::new(42);
+                let neg = NegSamples::draw(n, 6, &mut rng);
+                let (eattr, erep, estats) = oracle(&y, &knn, &aff, &neg, alpha, 9.5);
+                let mut simd = SimdBackend::new(1);
+                let (mut a, mut r) = (Matrix::zeros(n, d), Matrix::zeros(n, d));
+                let s = simd.forces(&y, &knn, &aff, &neg, alpha, 9.5, &mut a, &mut r).unwrap();
+                for (got, want) in a.data().iter().zip(eattr.data()) {
+                    assert!(close(*got, *want), "attr {got} vs {want} (d={d} alpha={alpha})");
+                }
+                for (got, want) in r.data().iter().zip(erep.data()) {
+                    assert!(close(*got, *want), "rep {got} vs {want} (d={d} alpha={alpha})");
+                }
+                assert!(
+                    (s.wsum - estats.wsum).abs() <= 1e-4 * (1.0 + estats.wsum.abs()),
+                    "wsum {} vs {} (d={d} alpha={alpha})",
+                    s.wsum,
+                    estats.wsum
+                );
+                assert_eq!(s.count, estats.count, "count (d={d})");
+                assert_eq!(s.covered, estats.covered, "covered (d={d})");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_forces_bitwise_thread_invariant() {
+        // d = 3 and 63 keep partially-filled lane groups and the
+        // remainder coordinates in play; floors (1, 1) force real
+        // fan-out at n = 130.
+        for &d in &[3usize, 63] {
+            let n = 130usize;
+            let (y, knn, aff) = setup(n, d, 23);
+            let mut rng = Rng::new(5);
+            let neg = NegSamples::draw(n, 6, &mut rng);
+            let mut base: Option<(Matrix, Matrix, NegStats)> = None;
+            for &threads in &[1usize, 2, 4] {
+                let mut simd = SimdBackend::new(threads).with_shard_floors(1, 1);
+                let (mut a, mut r) = (Matrix::zeros(n, d), Matrix::zeros(n, d));
+                let s = simd.forces(&y, &knn, &aff, &neg, 0.7, 9.5, &mut a, &mut r).unwrap();
+                match &base {
+                    None => base = Some((a, r, s)),
+                    Some((a0, r0, s0)) => {
+                        for (u, v) in a0.data().iter().zip(a.data()) {
+                            assert_eq!(u.to_bits(), v.to_bits(), "attr at {threads} threads");
+                        }
+                        for (u, v) in r0.data().iter().zip(r.data()) {
+                            assert_eq!(u.to_bits(), v.to_bits(), "rep at {threads} threads");
+                        }
+                        assert_eq!(s0.wsum.to_bits(), s.wsum.to_bits(), "wsum");
+                        assert_eq!(s0.count, s.count);
+                        assert_eq!(s0.covered, s.covered);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_update_is_bitwise_identical_to_native() {
+        // The update pass has no f32 reassociation, so SIMD vs scalar
+        // must agree exactly — across the remainder-dim sweep.
+        for &d in &DIMS {
+            let n = 97usize;
+            let mut rng = Rng::new(19 + d as u64);
+            let mk = |rng: &mut Rng| -> Matrix {
+                let v: Vec<f32> = (0..n * d).map(|_| rng.gauss_ms(0.0, 1.0) as f32).collect();
+                Matrix::from_vec(v, n, d).unwrap()
+            };
+            let y0 = mk(&mut rng);
+            let v0 = mk(&mut rng);
+            let attr = mk(&mut rng);
+            let rep = mk(&mut rng);
+            let (a_mult, r_mult, lr, mom) = (2.0f32, 0.03f32, 0.1f32, 0.8f32);
+            let mut native = NativeBackend::new();
+            let (mut y1, mut v1) = (y0.clone(), v0.clone());
+            let ss1 =
+                native.update(&mut y1, &mut v1, &attr, &rep, a_mult, r_mult, lr, mom).unwrap();
+            for &threads in &[1usize, 2, 4] {
+                let mut simd = SimdBackend::new(threads).with_shard_floors(1, 1);
+                let (mut y2, mut v2) = (y0.clone(), v0.clone());
+                let ss2 =
+                    simd.update(&mut y2, &mut v2, &attr, &rep, a_mult, r_mult, lr, mom).unwrap();
+                assert_eq!(ss1.to_bits(), ss2.to_bits(), "Σy² (d={d}, {threads} threads)");
+                for (a, b) in y1.data().iter().zip(y2.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "y (d={d}, {threads} threads)");
+                }
+                for (a, b) in v1.data().iter().zip(v2.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "vel (d={d}, {threads} threads)");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_sqdist_close_to_native_and_thread_invariant() {
+        for &dim in &[3usize, 8, 31, 32, 63, 64, 127] {
+            let ds = datasets::blobs(60, dim, 2, 1.0, 5.0, 9);
+            let owners: Vec<u32> = (0..47).collect();
+            let cands: Vec<u32> = (10..57).collect();
+            let mut native = NativeBackend::new();
+            let mut o0 = Vec::new();
+            native.sqdist_batch(&ds.x, &owners, &cands, &mut o0).unwrap();
+            let mut base: Option<Vec<f32>> = None;
+            for &threads in &[1usize, 2, 4] {
+                let mut simd = SimdBackend::new(threads).with_shard_floors(1, 1);
+                let mut o1 = Vec::new();
+                simd.sqdist_batch(&ds.x, &owners, &cands, &mut o1).unwrap();
+                for (u, v) in o0.iter().zip(&o1) {
+                    assert!(close(*u, *v), "sqdist {u} vs {v} (dim={dim})");
+                }
+                match &base {
+                    None => base = Some(o1),
+                    Some(b) => {
+                        for (u, v) in b.iter().zip(&o1) {
+                            assert_eq!(u.to_bits(), v.to_bits(), "sqdist at {threads} threads");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sqdist_lanes_matches_naive() {
+        let mut rng = Rng::new(3);
+        for &n in &[1usize, 7, 8, 9, 16, 40, 129] {
+            let a: Vec<f32> = (0..n).map(|_| rng.gauss_ms(0.0, 2.0) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gauss_ms(0.0, 2.0) as f32).collect();
+            let naive: f64 =
+                a.iter().zip(&b).map(|(x, y)| ((x - y) as f64) * ((x - y) as f64)).sum();
+            let fast = sqdist_lanes(&a, &b) as f64;
+            assert!((naive - fast).abs() <= 1e-4 * (1.0 + naive.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn too_wide_ld_dim_is_a_checked_error() {
+        let y = Matrix::zeros(4, 65);
+        let knn = IterativeKnn::new(4, 2, 2);
+        let aff = Affinities::new(4, 2);
+        let neg = NegSamples { m: 0, idx: vec![] };
+        let mut simd = SimdBackend::new(2);
+        let (mut attr, mut rep) = (Matrix::zeros(4, 65), Matrix::zeros(4, 65));
+        let err = simd.forces(&y, &knn, &aff, &neg, 1.0, 1.0, &mut attr, &mut rep).unwrap_err();
+        assert!(format!("{err:?}").contains("64"), "{err:?}");
+    }
+
+    #[test]
+    fn backend_name_and_threads() {
+        let simd = SimdBackend::new(3);
+        assert_eq!(simd.threads(), 3);
+        assert_eq!(SimdBackend::new(1).name(), "simd");
+        assert!(SimdBackend::new(0).threads() >= 1);
+    }
+}

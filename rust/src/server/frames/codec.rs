@@ -62,6 +62,15 @@ pub struct Axis {
 impl Axis {
     /// f32 → u16 on this axis. Degenerate axes (max ≤ min) collapse to
     /// cell 0 so a constant coordinate round-trips to its own value.
+    ///
+    /// Non-finite input clamps deterministically: NaN and −Inf map to
+    /// cell 0 (the bbox minimum after [`Axis::dequantize`]), +Inf to
+    /// cell 65535 (the bbox maximum). Together with `fit_bbox` fitting
+    /// over finite values only and `any_outside_bbox` ignoring
+    /// non-finite values, this is the codec's whole non-finite policy:
+    /// a blown-up point pins to a bbox edge, every finite point keeps
+    /// its precision, and the decoder can trust any frame the encoder
+    /// produced.
     pub fn quantize(&self, v: f32) -> u16 {
         let span = self.max - self.min;
         if !(span > 0.0) {
@@ -329,7 +338,18 @@ impl FrameEncoder {
         for row in 0..y.n() {
             let p = y.row(row);
             for (axis, &v) in self.bbox.iter().zip(p) {
-                if !v.is_finite() || v < axis.min || v > axis.max {
+                if !v.is_finite() {
+                    // Non-finite coordinates quantize to a deterministic
+                    // clamp (NaN/−Inf → cell 0, +Inf → cell 65535) inside
+                    // *any* grid, so they can never justify a reframe —
+                    // and `fit_bbox` ignores them anyway, so reframing
+                    // would produce the same bbox. Treating them as
+                    // "outside" here used to force a keyframe on every
+                    // frame while a single NaN point existed, silently
+                    // killing delta compression for the whole stream.
+                    continue;
+                }
+                if v < axis.min || v > axis.max {
                     return true;
                 }
             }
@@ -621,6 +641,96 @@ mod tests {
         let mut bad = good.clone();
         bad[4] = 99;
         assert!(decode(&bad).is_err(), "future version");
+    }
+
+    #[test]
+    fn nan_point_does_not_poison_finite_points() {
+        // One NaN coordinate: the bbox must fit the finite data, the
+        // finite points must keep full precision, and the NaN pins
+        // deterministically to the axis minimum.
+        let mut y = matrix(50, 2, |r, c| (r as f32) * 0.5 + c as f32);
+        y.row_mut(13)[0] = f32::NAN;
+        let mut enc = FrameEncoder::new(30);
+        let frame = decode(&enc.encode(0, &y, 0).unwrap()).unwrap();
+        assert!(frame.keyframe);
+        for axis in &frame.bbox {
+            assert!(axis.min.is_finite() && axis.max.is_finite() && axis.min < axis.max);
+        }
+        let mut dec = FrameDecoder::new();
+        dec.apply(&frame).unwrap();
+        let coords = dec.coords();
+        for r in 0..50 {
+            for c in 0..2 {
+                if r == 13 && c == 0 {
+                    assert_eq!(coords[r * 2 + c], frame.bbox[0].min, "NaN must pin to bbox min");
+                    continue;
+                }
+                let err = (coords[r * 2 + c] - y.row(r)[c]).abs();
+                assert!(err <= frame.bbox[c].cell() * 0.5 + 1e-6, "poisoned at ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_nan_still_allows_delta_frames() {
+        // Regression: a point stuck at NaN used to read as "outside the
+        // bbox" and force a keyframe on *every* encode, silently
+        // disabling delta compression for the whole stream.
+        let mut y = matrix(100, 2, |r, c| (r * 2 + c) as f32);
+        y.row_mut(4)[1] = f32::NAN;
+        let mut enc = FrameEncoder::new(30);
+        assert!(decode(&enc.encode(0, &y, 0).unwrap()).unwrap().keyframe);
+        y.row_mut(7)[0] += 3.0; // one finite point moves
+        let frame = decode(&enc.encode(1, &y, 0).unwrap()).unwrap();
+        assert!(!frame.keyframe, "a persistent NaN must not force keyframes");
+        assert_eq!(frame.indices, vec![7]);
+        // And a NaN that merely sits still emits nothing at all.
+        assert!(enc.encode(2, &y, 0).is_none());
+    }
+
+    #[test]
+    fn infinities_clamp_to_bbox_edges() {
+        let mut y = matrix(20, 2, |r, c| (r + c) as f32);
+        y.row_mut(3)[0] = f32::INFINITY;
+        y.row_mut(5)[1] = f32::NEG_INFINITY;
+        let mut enc = FrameEncoder::new(30);
+        let frame = decode(&enc.encode(0, &y, 0).unwrap()).unwrap();
+        let mut dec = FrameDecoder::new();
+        dec.apply(&frame).unwrap();
+        let coords = dec.coords();
+        // +Inf lands in cell 65535, whose reconstruction is min + span —
+        // within one rounding step of the axis max.
+        let top = frame.bbox[0];
+        assert!((coords[3 * 2] - top.max).abs() <= top.cell(), "+Inf pins to bbox max");
+        assert!(coords[3 * 2].is_finite());
+        assert_eq!(coords[5 * 2 + 1], frame.bbox[1].min, "−Inf pins to bbox min");
+        // Neighbouring finite values stay accurate.
+        let err = (coords[3 * 2 + 1] - y.row(3)[1]).abs();
+        assert!(err <= frame.bbox[1].cell() * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn all_non_finite_frame_encodes_and_decodes() {
+        // Every coordinate non-finite: fit_bbox falls back to the unit
+        // axis, everything pins to an edge, and decode still trusts the
+        // frame instead of erroring out mid-stream.
+        let y = matrix(6, 2, |r, c| {
+            if (r + c) % 2 == 0 {
+                f32::NAN
+            } else {
+                f32::INFINITY
+            }
+        });
+        let mut enc = FrameEncoder::new(30);
+        let frame = decode(&enc.encode(0, &y, 0).unwrap()).unwrap();
+        assert!(frame.keyframe);
+        let mut dec = FrameDecoder::new();
+        dec.apply(&frame).unwrap();
+        for (t, &v) in dec.coords().iter().enumerate() {
+            assert!(v.is_finite(), "decoded coord {t} must be finite");
+            let axis = &frame.bbox[t % 2];
+            assert!(v == axis.min || v == axis.max, "coord {t} must pin to a bbox edge");
+        }
     }
 
     #[test]

@@ -151,8 +151,8 @@ impl SessionBuilder {
         self
     }
 
-    /// Force backend by name (`"native"` / `"pjrt"`); unknown names
-    /// fail at [`SessionBuilder::build`].
+    /// Force backend by name (`"native"` / `"simd"` / `"pjrt"`);
+    /// unknown names fail at [`SessionBuilder::build`].
     pub fn backend_name(mut self, name: &str) -> Self {
         self.backend_name = Some(name.to_string());
         self
@@ -274,6 +274,19 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(format!("{err:?}").contains("backend"), "{err:?}");
+    }
+
+    #[test]
+    fn builder_selects_simd_backend() {
+        let ds = datasets::blobs(100, 6, 2, 0.5, 8.0, 1);
+        let s = Session::builder()
+            .dataset(ds.x)
+            .backend_name("simd")
+            .k_hd(12)
+            .perplexity(8.0)
+            .build()
+            .unwrap();
+        assert_eq!(s.backend_name(), "simd");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! property-testing harness.
 
 pub mod rng;
+pub mod simd;
 pub mod timer;
 pub mod plot;
 pub mod io;
@@ -15,4 +16,5 @@ pub mod proptest;
 pub mod stats;
 
 pub use rng::{lane, RandomSource, Rng, StreamRng};
+pub use simd::F32x8;
 pub use timer::{PhaseClock, Stopwatch};

@@ -1,0 +1,162 @@
+//! Portable fixed-width f32 lane arithmetic for the SIMD backend.
+//!
+//! `F32x8` is an array-of-8-lanes value type with elementwise
+//! arithmetic written as straight-line per-lane loops — the shape LLVM
+//! auto-vectorizes to a pair of SSE registers or one AVX register on
+//! x86-64 and to NEON pairs on aarch64, with a well-defined scalar
+//! fallback everywhere else. No intrinsics, no `unsafe`, no feature
+//! detection: the portability contract of the crate is preserved and
+//! the numeric results are identical on every target because each lane
+//! is an ordinary IEEE-754 f32 operation.
+//!
+//! Determinism contract (see docs/determinism.md):
+//!
+//! * Elementwise ops (`add`/`sub`/`mul`/`div`) are per-lane scalar
+//!   f32 ops — bitwise reproducible by construction.
+//! * Horizontal folds never use `.sum()`/`.fold()`; [`F32x8::hsum`]
+//!   reduces in one **fixed** association,
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, so a lane total is a
+//!   pure function of the lane values and never of shard count,
+//!   thread count, or iteration order.
+//! * There is deliberately no fused multiply-add: `mul_add` contracts
+//!   rounding steps and would make results target-dependent.
+//!
+//! This module is inside the deterministic lint scope (`funcsne lint`
+//! rule 6 applies here), so an accidental f32 `.sum()` creeping into a
+//! fold is a CI failure, not a review hope.
+
+/// Number of lanes in one [`F32x8`].
+pub const LANES: usize = 8;
+
+/// Eight f32 lanes with elementwise arithmetic and a fixed-order
+/// horizontal sum.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    /// All lanes zero.
+    pub const ZERO: F32x8 = F32x8([0.0; LANES]);
+
+    /// Broadcast one value to all lanes.
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    /// Load the first 8 values of `src` (`src.len() >= 8`).
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> F32x8 {
+        let mut out = [0.0f32; LANES];
+        out.copy_from_slice(&src[..LANES]);
+        F32x8(out)
+    }
+
+    /// Store the lanes into the first 8 slots of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Elementwise `self + rhs`.
+    #[inline(always)]
+    pub fn add(self, rhs: F32x8) -> F32x8 {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = self.0[l] + rhs.0[l];
+        }
+        F32x8(out)
+    }
+
+    /// Elementwise `self - rhs`.
+    #[inline(always)]
+    pub fn sub(self, rhs: F32x8) -> F32x8 {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = self.0[l] - rhs.0[l];
+        }
+        F32x8(out)
+    }
+
+    /// Elementwise `self * rhs`. Kept separate from `add` on purpose:
+    /// `a.mul(b).add(c)` is two rounding steps, exactly like the
+    /// scalar kernels — never a contracted fma.
+    #[inline(always)]
+    pub fn mul(self, rhs: F32x8) -> F32x8 {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = self.0[l] * rhs.0[l];
+        }
+        F32x8(out)
+    }
+
+    /// Elementwise `self / rhs`.
+    #[inline(always)]
+    pub fn div(self, rhs: F32x8) -> F32x8 {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = self.0[l] / rhs.0[l];
+        }
+        F32x8(out)
+    }
+
+    /// Horizontal sum in a single fixed association:
+    /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+    ///
+    /// This is the only reduction the SIMD kernels use for f32 lane
+    /// totals; because the association is explicit, the result is a
+    /// deterministic function of the lane values alone. It is *not*
+    /// the left-to-right order a scalar loop would use, which is why
+    /// SIMD-vs-native comparisons are approximate, not bitwise.
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let a = self.0;
+        ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe() -> (F32x8, F32x8) {
+        let a = F32x8([1.5, -2.25, 3.0e-3, 4.0e4, -5.5, 0.0625, 7.75, -8.125]);
+        let b = F32x8([0.5, 2.0, -1.25e-3, 3.5e2, 5.0, -0.5, 1.5, 2.5]);
+        (a, b)
+    }
+
+    #[test]
+    fn elementwise_ops_match_scalar_bitwise() {
+        let (a, b) = probe();
+        for l in 0..LANES {
+            assert_eq!(a.add(b).0[l].to_bits(), (a.0[l] + b.0[l]).to_bits());
+            assert_eq!(a.sub(b).0[l].to_bits(), (a.0[l] - b.0[l]).to_bits());
+            assert_eq!(a.mul(b).0[l].to_bits(), (a.0[l] * b.0[l]).to_bits());
+            assert_eq!(a.div(b).0[l].to_bits(), (a.0[l] / b.0[l]).to_bits());
+        }
+    }
+
+    #[test]
+    fn hsum_uses_the_documented_fixed_association() {
+        let (a, _) = probe();
+        let v = a.0;
+        let expect = ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]));
+        assert_eq!(a.hsum().to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn load_store_round_trip() {
+        let src = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 99.0];
+        let v = F32x8::load(&src);
+        let mut dst = [0.0f32; 9];
+        dst[8] = -1.0;
+        v.store(&mut dst);
+        assert_eq!(&dst[..8], &src[..8]);
+        assert_eq!(dst[8], -1.0, "store must only touch the first 8 slots");
+    }
+
+    #[test]
+    fn splat_and_zero() {
+        assert_eq!(F32x8::splat(3.5).0, [3.5; LANES]);
+        assert_eq!(F32x8::ZERO.0, [0.0; LANES]);
+    }
+}

@@ -91,6 +91,21 @@ fn f32_reduction_fixtures() {
     check_pair(rules::F32_REDUCTION, "ld/fixture.rs");
 }
 
+/// The SIMD lane module is in rule 6's scope by exact path: its
+/// horizontal folds must stay hand-ordered (`F32x8::hsum`), so an
+/// `.sum()`/`.fold()` creeping in there must be flagged — while the
+/// rest of `util/` stays out of scope as before.
+#[test]
+fn f32_reduction_covers_the_simd_lane_module() {
+    let cfg = LintConfig::empty();
+    let bad = fixture("f32_reduction_violation.rs");
+    let (findings, _) = lint_source("util/simd.rs", &bad, &cfg);
+    assert!(!findings.is_empty(), "f32_reduction must apply to util/simd.rs");
+    assert!(findings.iter().all(|f| f.rule == rules::F32_REDUCTION), "{findings:?}");
+    let (other, _) = lint_source("util/stats.rs", &bad, &cfg);
+    assert!(other.is_empty(), "f32_reduction must not apply to the rest of util/: {other:?}");
+}
+
 #[test]
 fn deterministic_rules_do_not_fire_outside_their_scope() {
     let cfg = LintConfig::empty();

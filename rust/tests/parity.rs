@@ -9,6 +9,10 @@
 //! * Parallel (sharded threads) — **bitwise** agreement at any thread
 //!   count: sharding must never change an embedding, only its
 //!   wall-clock.
+//! * SIMD (8-wide lane kernels) — agreement with native within
+//!   lane-fold tolerance (horizontal sums reassociate f32 additions),
+//!   plus **bitwise** self-agreement at any thread count: lane groups
+//!   are a pure function of slot order, never of the shard partition.
 
 use funcsne::config::EmbedConfig;
 use funcsne::coordinator::driver::default_artifact_dir;
@@ -18,7 +22,7 @@ use funcsne::engine::{ComputeBackend, FuncSne, NegSamples};
 use funcsne::hd::Affinities;
 use funcsne::knn::brute::brute_knn;
 use funcsne::knn::iterative::IterativeKnn;
-use funcsne::ld::{NativeBackend, ParallelBackend};
+use funcsne::ld::{NativeBackend, ParallelBackend, SimdBackend};
 use funcsne::session::{Event, Session};
 use funcsne::util::Rng;
 
@@ -280,6 +284,134 @@ fn refinement_and_full_step_trajectories_bitwise_across_threads() {
         assert_eq!(ld1, ld, "LD table diverged at {threads} threads");
         assert_eq!(dirty1, dirty, "dirty flags diverged at {threads} threads");
         assert_eq!(counters1, counters, "engine counters diverged at {threads} threads");
+    }
+}
+
+/// SIMD contract, integration-level: the lane backend must agree with
+/// the native reference within lane-fold tolerance (8-wide horizontal
+/// sums reassociate f32 additions, so bitwise equality vs native is not
+/// promised) while staying **bitwise** identical to itself at any
+/// thread count — lane groups are formed per point from slot order
+/// alone, so sharding cannot change which values meet in a register.
+#[test]
+fn simd_forces_close_to_native_and_bitwise_thread_invariant() {
+    // n = 513: uneven shard partitions AND a non-multiple-of-8 negative
+    // pool per point; d = 3 exercises lane-tail handling end to end.
+    let n = 513usize;
+    for &d_ld in &[3usize, 8] {
+        for &alpha in &[0.5f32, 1.0] {
+            let (x, y, knn, aff) = build_state(n, d_ld, 16, 8, 2000 + d_ld as u64);
+            let mut rng = Rng::new(23);
+            let neg = NegSamples::draw(n, 8, &mut rng);
+            let far_scale = ((n - 1 - 20) as f32) / 8.0;
+
+            let mut native = NativeBackend::new();
+            let (mut a0, mut r0) = (Matrix::zeros(n, d_ld), Matrix::zeros(n, d_ld));
+            let s0 = native
+                .forces(&y, &knn, &aff, &neg, alpha, far_scale, &mut a0, &mut r0)
+                .unwrap();
+
+            let mut runs = Vec::new();
+            for &threads in &[1usize, 2, 4] {
+                let mut simd = SimdBackend::new(threads).with_shard_floors(1, 1);
+                let (mut a, mut r) = (Matrix::zeros(n, d_ld), Matrix::zeros(n, d_ld));
+                let s = simd
+                    .forces(&y, &knn, &aff, &neg, alpha, far_scale, &mut a, &mut r)
+                    .unwrap();
+                let owners: Vec<u32> = (0..n as u32).collect();
+                let cands: Vec<u32> = (0..n as u32).map(|i| (i + 7) % n as u32).collect();
+                let mut sq = Vec::new();
+                simd.sqdist_batch(&x, &owners, &cands, &mut sq).unwrap();
+                runs.push((threads, a, r, s, sq));
+            }
+
+            // Close to native everywhere the native reference is.
+            let tol = 1e-3f32;
+            let (_, a1, r1, s1, sq1) = &runs[0];
+            for (t, (v0, v)) in a0.data().iter().zip(a1.data()).enumerate() {
+                assert!(
+                    (v0 - v).abs() <= tol * (1.0 + v0.abs()),
+                    "attr[{t}] native={v0} simd={v} (d={d_ld}, α={alpha})"
+                );
+            }
+            for (t, (v0, v)) in r0.data().iter().zip(r1.data()).enumerate() {
+                assert!(
+                    (v0 - v).abs() <= tol * (1.0 + v0.abs()),
+                    "rep[{t}] native={v0} simd={v} (d={d_ld}, α={alpha})"
+                );
+            }
+            assert!(
+                (s0.wsum - s1.wsum).abs() <= 1e-3 * (1.0 + s0.wsum.abs()),
+                "wsum native={} simd={}",
+                s0.wsum,
+                s1.wsum
+            );
+            assert_eq!(s0.count, s1.count);
+            assert_eq!(s0.covered, s1.covered);
+
+            // Bitwise identical to itself across thread counts.
+            for (threads, a, r, s, sq) in &runs[1..] {
+                for (t, (u, v)) in a1.data().iter().zip(a.data()).enumerate() {
+                    assert_eq!(
+                        u.to_bits(),
+                        v.to_bits(),
+                        "attr[{t}] simd t1={u} t{threads}={v} (d={d_ld}, α={alpha})"
+                    );
+                }
+                for (t, (u, v)) in r1.data().iter().zip(r.data()).enumerate() {
+                    assert_eq!(
+                        u.to_bits(),
+                        v.to_bits(),
+                        "rep[{t}] simd t1={u} t{threads}={v} (d={d_ld}, α={alpha})"
+                    );
+                }
+                assert_eq!(s1.wsum.to_bits(), s.wsum.to_bits(), "wsum at {threads} threads");
+                assert_eq!((s1.count, s1.covered), (s.count, s.covered));
+                for (t, (u, v)) in sq1.iter().zip(sq).enumerate() {
+                    assert_eq!(u.to_bits(), v.to_bits(), "sqdist[{t}] at {threads} threads");
+                }
+            }
+        }
+    }
+}
+
+/// Golden SIMD trajectory: a full engine run on the SIMD backend must
+/// be bitwise thread-count-invariant end to end — the same contract
+/// [`golden_trajectory_and_probe_bitwise_identical_across_threads`]
+/// pins for the scalar backends, at every SIMD thread width.
+#[test]
+fn simd_engine_trajectory_is_thread_count_invariant() {
+    let run = |threads: usize| {
+        let ds = datasets::blobs(600, 8, 3, 0.6, 10.0, 5);
+        let mut s = Session::builder()
+            .dataset(ds.x)
+            .backend_name("simd")
+            .k_hd(12)
+            .k_ld(8)
+            .perplexity(8.0)
+            .n_neg(6)
+            .jumpstart_iters(5)
+            .early_exag_iters(10)
+            .seed(7)
+            .threads(threads)
+            .build()
+            .unwrap();
+        s.run(60).unwrap();
+        assert_eq!(s.backend_name(), "simd");
+        s.embedding().data().to_vec()
+    };
+    let y1 = run(1);
+    for threads in [2usize, 4] {
+        let y = run(threads);
+        assert_eq!(y1.len(), y.len());
+        for (t, (a, b)) in y1.iter().zip(&y).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "SIMD embedding[{t}] diverged between 1 and {threads} threads: {a} vs {b}"
+            );
+        }
+        assert!(y.iter().all(|v| v.is_finite()), "SIMD run diverged at {threads} threads");
     }
 }
 
