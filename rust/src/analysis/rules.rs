@@ -3,10 +3,12 @@
 //! Scopes are path prefixes relative to the source root (`rust/src`):
 //!
 //! * **deterministic** (`engine/`, `knn/`, `ld/`, `hd/`, `metrics/`,
-//!   `obs/`, `util/rng.rs`, `util/simd.rs`) — code whose outputs must
-//!   be a pure function of (seed, iteration, input), bitwise-invariant
-//!   to thread count (for `obs/`: a pure function of the samples fed
-//!   in, with all timing through `util::timer::PhaseClock`);
+//!   `obs/`, `persist/`, `util/rng.rs`, `util/simd.rs`) — code whose
+//!   outputs must be a pure function of (seed, iteration, input),
+//!   bitwise-invariant to thread count (for `obs/`: a pure function of
+//!   the samples fed in, with all timing through
+//!   `util::timer::PhaseClock`; for `persist/`: snapshot bytes a pure
+//!   function of session state, so restore equals replay);
 //! * **sharded** (the same prefixes minus `util/rng.rs`, plus
 //!   `util/simd.rs`) — code whose reductions run per-shard and must
 //!   combine in a fixed order. The SIMD lane module lives here because
@@ -41,7 +43,13 @@ pub const RULE_NAMES: [&str; 6] =
 /// `obs/` is here so observability can never smuggle a raw clock or a
 /// hash map into timing-adjacent code: everything it measures goes
 /// through `util::timer::PhaseClock` and ordered collections.
-const DETERMINISTIC_PREFIXES: [&str; 6] = ["engine/", "knn/", "ld/", "hd/", "metrics/", "obs/"];
+/// `persist/` is here because crash recovery leans on the same
+/// guarantee from the other side: snapshot bytes must be a pure
+/// function of session state, and WAL replay must re-drive the session
+/// identically at any thread count — a stray clock or hash-ordered
+/// iteration in the codecs would break restore-equals-replay.
+const DETERMINISTIC_PREFIXES: [&str; 7] =
+    ["engine/", "knn/", "ld/", "hd/", "metrics/", "obs/", "persist/"];
 
 fn is_deterministic(rel: &str) -> bool {
     rel == "util/rng.rs"

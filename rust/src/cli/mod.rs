@@ -143,11 +143,26 @@ SUBCOMMANDS
              [--stream-queue FRAMES] [--keyframe-every K]
              [--trace]  enable latency histograms + span tracing
                         (default env FUNCSNE_TRACE)
+             [--state-dir DIR]  durable sessions: checkpoint every
+                        session under DIR (snapshot + write-ahead
+                        command log) and restore them all at boot;
+                        SIGTERM/SIGINT checkpoints then exits cleanly
+             [--checkpoint-every I]  snapshot a running durable session
+                        after I iterations of progress (default 500;
+                        0 = only on pause/delete/shutdown/demand)
              REST surface: POST /sessions, POST /sessions/:id/commands,
              GET /sessions/:id/embedding[?iter=N], GET /sessions/:id/stats,
              GET /sessions/:id/stream (chunked binary frames),
-             DELETE /sessions/:id, GET /healthz, GET /metrics,
+             POST /sessions/:id/checkpoint, DELETE /sessions/:id,
+             GET /healthz, GET /metrics,
              GET /debug/trace (Chrome trace-event JSON)
+  checkpoint run an embedding offline and write its durable image
+             (snapshot + WAL) as `serve --state-dir` would
+             --dataset NAME --n N [--iters I] [--state-dir DIR] [--id K]
+             [--seed S] [--threads T]
+  restore    bring a checkpointed session back from disk (snapshot +
+             WAL replay), optionally continue it, and export the result
+             [--state-dir DIR] [--id K] [--iters EXTRA] [--out file.npy]
   trace      capture spans from a running server (started with --trace)
              [--addr 127.0.0.1:7878] [--sweeps N] [--out trace.json]
              [--timeout SECONDS]  waits until N sweeps elapse, then
@@ -171,6 +186,8 @@ pub fn run(args: &Args) -> Result<()> {
         "figure" | "figures" => cmd_figure(args),
         "hierarchy" => cmd_hierarchy(args),
         "serve" => cmd_serve(args),
+        "checkpoint" => cmd_checkpoint(args),
+        "restore" => cmd_restore(args),
         "trace" => cmd_trace(args),
         "lint" => cmd_lint(args),
         "info" => cmd_info(),
@@ -435,8 +452,53 @@ fn cmd_hierarchy(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// SIGTERM/SIGINT → graceful shutdown without any signal crate: a
+/// minimal `signal(2)` binding whose handler does the one thing a
+/// handler safely can — set an atomic flag — watched by an ordinary
+/// thread that fires the server's shutdown handle. The server then
+/// drains in-flight requests, checkpoints every durable session and
+/// pushes a final keyframe to stream subscribers before `run` returns.
+#[cfg(unix)]
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Set from the signal handler; read by the watcher thread.
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        /// POSIX `signal(2)`; handler addresses travel as `usize`.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        // Only an atomic store: the one async-signal-safe action.
+        REQUESTED.store(true, Ordering::SeqCst);
+    }
+
+    /// Install handlers for SIGINT and SIGTERM.
+    pub fn install() {
+        // SAFETY: `signal` is the POSIX C function with this exact
+        // signature; `on_signal` has the required `extern "C" fn(i32)`
+        // ABI and performs only an async-signal-safe atomic store.
+        unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        }
+    }
+
+    /// Has a termination signal arrived since [`install`]?
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    crate::persist::failpoint::init_from_env();
     let defaults = ServerConfig::default();
+    let state_dir = args.get_str("state_dir", "");
     let cfg = ServerConfig {
         addr: args.get_str("addr", "127.0.0.1:7878"),
         threads: args.get_usize("threads", 4)?,
@@ -450,7 +512,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // `--trace` turns observability on; absent, the FUNCSNE_TRACE
         // env default (already folded into `defaults`) decides.
         trace: args.get_flag("trace") || defaults.trace,
+        state_dir: (!state_dir.is_empty()).then(|| std::path::PathBuf::from(&state_dir)),
+        checkpoint_every: args.get_usize("checkpoint_every", defaults.checkpoint_every)?,
     };
+    let durable = cfg.state_dir.is_some();
     let server = Server::bind(cfg)?;
     let addr = server.local_addr();
     println!("funcsne service listening on http://{addr}");
@@ -460,7 +525,92 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  fetch:   curl -s {addr}/sessions/0/embedding");
     println!("  stream:  curl -sN {addr}/sessions/0/stream -o frames.bin");
     println!("  health:  curl -s {addr}/healthz   ·   metrics: curl -s {addr}/metrics");
+    if durable {
+        println!("  durable: sessions persist in {state_dir} and restore at boot");
+    }
+    #[cfg(unix)]
+    {
+        signals::install();
+        let handle = server.handle();
+        std::thread::spawn(move || loop {
+            if signals::requested() {
+                eprintln!("funcsne: signal received; checkpointing sessions and shutting down");
+                handle.shutdown();
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+    }
     server.run()
+}
+
+/// `checkpoint`: run an embedding offline for `--iters` iterations,
+/// then publish its durable image (snapshot + empty WAL) under
+/// `--state-dir`, exactly as `serve --state-dir` would — a way to
+/// produce or refresh state files and exercise the durability layer
+/// end to end without a server.
+fn cmd_checkpoint(args: &Args) -> Result<()> {
+    crate::persist::failpoint::init_from_env();
+    let ds = load_dataset(args)?;
+    if ds.n() < 2 {
+        bail!("checkpoint needs at least 2 points (got {})", ds.n());
+    }
+    let iters = args.get_usize("iters", 300)?;
+    let id = args.get_usize("id", 0)? as u64;
+    let state_dir = std::path::PathBuf::from(args.get_str("state_dir", "state"));
+    std::fs::create_dir_all(&state_dir)?;
+    let mut cfg = EmbedConfig {
+        seed: args.get_usize("seed", 42)? as u64,
+        n_iters: iters,
+        ..EmbedConfig::default()
+    };
+    cfg.alpha = args.get_f64("alpha", cfg.alpha)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.k_hd = args.get_usize("k_hd", cfg.k_hd)?.min(ds.n() - 1);
+    cfg.k_ld = args.get_usize("k_ld", cfg.k_ld)?.min(ds.n() - 1);
+    cfg.perplexity = args.get_f64("perplexity", cfg.perplexity)?.min(cfg.k_hd as f64);
+    let mut session = Session::builder().dataset(ds.x.clone()).config(cfg).build()?;
+    session.run(iters)?;
+    let paths = crate::persist::session_paths(&state_dir, id);
+    let bytes = crate::persist::checkpoint_session(&mut session, &paths)?;
+    println!(
+        "checkpointed session-{id} at iteration {} ({bytes} bytes) under {}",
+        session.iterations(),
+        state_dir.display()
+    );
+    Ok(())
+}
+
+/// `restore`: bring a checkpointed session back from `--state-dir`
+/// (snapshot load + WAL-tail replay — the same path the server's boot
+/// restore takes), optionally run it further, and export the result.
+fn cmd_restore(args: &Args) -> Result<()> {
+    crate::persist::failpoint::init_from_env();
+    let id = args.get_usize("id", 0)? as u64;
+    let state_dir = std::path::PathBuf::from(args.get_str("state_dir", "state"));
+    let paths = crate::persist::session_paths(&state_dir, id);
+    let restored = crate::persist::restore_session(&paths, &default_artifact_dir())?;
+    let mut session = restored.session;
+    if let Some(w) = &restored.wal_warning {
+        eprintln!("warning: {w}");
+    }
+    println!(
+        "restored session-{id} at iteration {} ({} logged command(s) replayed)",
+        session.iterations(),
+        restored.replayed
+    );
+    let extra = args.get_usize("iters", 0)?;
+    if extra > 0 {
+        session.run(extra)?;
+        println!("ran {extra} further iteration(s) → iteration {}", session.iterations());
+    }
+    let out = args.get_str("out", "");
+    if !out.is_empty() {
+        let y = session.embedding();
+        io::write_npy_f32(std::path::Path::new(&out), y.data(), &[y.n(), y.d()])?;
+        println!("wrote {out}");
+    }
+    Ok(())
 }
 
 /// Minimal one-shot HTTP GET for [`cmd_trace`]: one request per

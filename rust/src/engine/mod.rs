@@ -6,4 +6,4 @@ pub mod backend;
 pub mod funcsne;
 
 pub use backend::{ComputeBackend, NegSamples, NegStats};
-pub use funcsne::{EngineStats, FuncSne, PhaseMicros};
+pub use funcsne::{EngineState, EngineStats, FuncSne, PhaseMicros};

@@ -43,6 +43,36 @@ impl Affinities {
         self.beta.len()
     }
 
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The full slot-conditional array (n·k), for serialization.
+    pub fn p_all(&self) -> &[f32] {
+        &self.p
+    }
+
+    /// Rebuild from serialized parts, validating shape consistency.
+    pub fn from_raw(
+        k: usize,
+        p: Vec<f32>,
+        beta: Vec<f32>,
+        achieved: Vec<f32>,
+    ) -> Result<Affinities, String> {
+        if k == 0 {
+            return Err("affinities: k must be >= 1".to_string());
+        }
+        if achieved.len() != beta.len() || p.len() != beta.len() * k {
+            return Err(format!(
+                "affinities: shape mismatch (k {k}, p {}, beta {}, achieved {})",
+                p.len(),
+                beta.len(),
+                achieved.len()
+            ));
+        }
+        Ok(Affinities { k, p, beta, achieved })
+    }
+
     /// p_{j|i} for the HD table's slot `s` of point `i`.
     #[inline(always)]
     pub fn p_slot(&self, i: usize, s: usize) -> f32 {

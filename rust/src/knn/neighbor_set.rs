@@ -217,6 +217,66 @@ impl NeighborTable {
         );
     }
 
+    /// The raw backing storage `(n, k, dists, idxs, lens)`, heap order
+    /// and empty-slot sentinels included, for serialization. Feeding it
+    /// back through [`NeighborTable::from_raw_parts`] reproduces the
+    /// table bitwise — heap layout *is* state here, since insertion
+    /// order affects tie-breaking.
+    pub fn raw_parts(&self) -> (usize, usize, &[f32], &[u32], &[u32]) {
+        (self.n, self.k, &self.dists, &self.idxs, &self.lens)
+    }
+
+    /// Rebuild a table from [`NeighborTable::raw_parts`] output,
+    /// validating shape and slot invariants (filled slots hold finite
+    /// distances and in-range indices; empty slots hold the sentinels).
+    pub fn from_raw_parts(
+        n: usize,
+        k: usize,
+        dists: Vec<f32>,
+        idxs: Vec<u32>,
+        lens: Vec<u32>,
+    ) -> Result<NeighborTable, String> {
+        if k == 0 {
+            return Err("neighbor table: k must be >= 1".to_string());
+        }
+        if lens.len() != n || dists.len() != n * k || idxs.len() != n * k {
+            return Err(format!(
+                "neighbor table: shape mismatch (n {n}, k {k}, dists {}, idxs {}, lens {})",
+                dists.len(),
+                idxs.len(),
+                lens.len()
+            ));
+        }
+        for i in 0..n {
+            let len = lens[i] as usize;
+            if len > k {
+                return Err(format!("neighbor table: row {i} len {len} exceeds k {k}"));
+            }
+            let base = i * k;
+            for s in 0..k {
+                let idx = idxs[base + s];
+                let d = dists[base + s];
+                if s < len {
+                    if idx == EMPTY || idx as usize >= n || idx as usize == i {
+                        return Err(format!(
+                            "neighbor table: row {i} slot {s} has invalid index {idx}"
+                        ));
+                    }
+                    if !d.is_finite() {
+                        return Err(format!(
+                            "neighbor table: row {i} slot {s} has non-finite distance"
+                        ));
+                    }
+                } else if idx != EMPTY || d != f32::INFINITY {
+                    return Err(format!(
+                        "neighbor table: row {i} slot {s} past len {len} is not empty"
+                    ));
+                }
+            }
+        }
+        Ok(NeighborTable { k, n, dists, idxs, lens })
+    }
+
     /// Split the table into disjoint mutable row-range views for the
     /// sharded refinement passes: each worker owns one view and can
     /// only reach rows inside it, so concurrent mutation is data-race

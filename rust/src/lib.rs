@@ -115,6 +115,7 @@ pub mod hd;
 pub mod ld;
 pub mod engine;
 pub mod obs;
+pub mod persist;
 pub mod session;
 pub mod server;
 pub mod baselines;

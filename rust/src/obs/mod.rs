@@ -30,7 +30,7 @@ use trace::{HTTP_TID_BASE, STEPPER_TID};
 /// HTTP route families for per-route latency histograms. Fixed at
 /// compile time so label cardinality is bounded; unmatched paths land
 /// in `other`.
-pub const ROUTES: [&str; 12] = [
+pub const ROUTES: [&str; 13] = [
     "GET /healthz",
     "GET /metrics",
     "GET /debug/trace",
@@ -41,6 +41,7 @@ pub const ROUTES: [&str; 12] = [
     "GET /sessions/:id/embedding",
     "GET /sessions/:id/stream",
     "POST /sessions/:id/commands",
+    "POST /sessions/:id/checkpoint",
     "DELETE /sessions/:id",
     "other",
 ];
@@ -62,8 +63,9 @@ pub fn route_index(method: &str, path: &str) -> usize {
         ("GET", ["sessions", _, "embedding"]) => 7,
         ("GET", ["sessions", _, "stream"]) => 8,
         ("POST", ["sessions", _, "commands"]) => 9,
-        ("DELETE", ["sessions", _]) => 10,
-        _ => 11,
+        ("POST", ["sessions", _, "checkpoint"]) => 10,
+        ("DELETE", ["sessions", _]) => 11,
+        _ => 12,
     };
     debug_assert!(idx < ROUTES.len());
     idx
@@ -168,8 +170,15 @@ pub struct Obs {
     pub frame_bytes: Hist,
     /// Subscriber queue depth after a successful enqueue.
     pub queue_depth: Hist,
+    /// Session checkpoint (snapshot publish + WAL truncate) wall time,
+    /// µs. Unlike the step histograms this is **always** recorded —
+    /// checkpoints are rare, off the per-iteration hot path, and their
+    /// latency is the durability signal operators care about.
+    pub checkpoint_micros: Hist,
+    /// Published snapshot size, bytes (same always-on rationale).
+    pub checkpoint_bytes: Hist,
     /// HTTP request latency, µs, by `[route][status_class]`.
-    http: Box<[[Hist; 4]; 12]>,
+    http: Box<[[Hist; 4]; 13]>,
     tracer: Tracer,
 }
 
@@ -185,6 +194,8 @@ impl Obs {
             frame_encode: Hist::new(),
             frame_bytes: Hist::new(),
             queue_depth: Hist::new(),
+            checkpoint_micros: Hist::new(),
+            checkpoint_bytes: Hist::new(),
             http: Box::new(std::array::from_fn(|_| Default::default())),
             tracer: Tracer::new(),
         }
@@ -328,6 +339,15 @@ impl Obs {
         self.queue_depth.record(depth);
     }
 
+    /// Record one successful session checkpoint. Always on (no
+    /// `enabled` gate): checkpoints happen at most every
+    /// `--checkpoint-every` iterations, so the cost is negligible and
+    /// the signal matters even when tracing is off.
+    pub fn record_checkpoint(&self, micros: u64, bytes: u64) {
+        self.checkpoint_micros.record(micros);
+        self.checkpoint_bytes.record(bytes);
+    }
+
     /// Non-empty HTTP latency snapshots as
     /// `(route, status_class, snapshot)`.
     pub fn http_snapshots(&self) -> Vec<(&'static str, &'static str, HistSnapshot)> {
@@ -376,10 +396,11 @@ mod tests {
         assert_eq!(route_index("GET", "/sessions/17/embedding"), 7);
         assert_eq!(route_index("GET", "/sessions/17/stream"), 8);
         assert_eq!(route_index("POST", "/sessions/17/commands"), 9);
-        assert_eq!(route_index("DELETE", "/sessions/17"), 10);
-        assert_eq!(route_index("PUT", "/sessions/17"), 11);
-        assert_eq!(route_index("GET", "/nope"), 11);
-        assert_eq!(ROUTES[11], "other");
+        assert_eq!(route_index("POST", "/sessions/17/checkpoint"), 10);
+        assert_eq!(route_index("DELETE", "/sessions/17"), 11);
+        assert_eq!(route_index("PUT", "/sessions/17"), 12);
+        assert_eq!(route_index("GET", "/nope"), 12);
+        assert_eq!(ROUTES[12], "other");
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Little-endian primitives shared by the snapshot and WAL codecs:
+//! byte putters, a strict bounds-checked [`Reader`], and the IEEE
+//! CRC32 both formats frame their payloads with.
+
+/// IEEE CRC32 lookup table, built at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC32 (the zlib/PNG polynomial), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+/// Strict sequential reader over one framed payload. Every getter is
+/// bounds-checked; bulk getters verify the remaining length *before*
+/// allocating, so corrupt length prefixes cannot balloon memory.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Frame name, for error attribution.
+    what: &'static str,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8], what: &'static str) -> Reader<'a> {
+        Reader { buf, pos: 0, what }
+    }
+
+    pub fn what(&self) -> &'static str {
+        self.what
+    }
+
+    pub fn need(&self, n: usize) -> Result<(), String> {
+        if self.buf.len() - self.pos < n {
+            return Err(format!("{} truncated", self.what));
+        }
+        Ok(())
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, String> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool, String> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("{}: invalid bool byte {v}", self.what)),
+        }
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, String> {
+        self.need(4)?;
+        let mut b = [0u8; 4];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 4]);
+        self.pos += 4;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, String> {
+        self.need(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize, String> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| format!("{}: value {v} overflows usize", self.what))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.get_u32()?.to_le_bytes()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.get_u64()?.to_le_bytes()))
+    }
+
+    /// Read `n` f32 values (length-checked before allocating).
+    pub fn get_f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| format!("{}: f32 array length overflow", self.what))?;
+        self.need(bytes)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Read `n` u32 values (length-checked before allocating).
+    pub fn get_u32s(&mut self, n: usize) -> Result<Vec<u32>, String> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| format!("{}: u32 array length overflow", self.what))?;
+        self.need(bytes)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u32()?);
+        }
+        Ok(out)
+    }
+
+    /// Every payload byte must be consumed — leftovers mean the writer
+    /// and reader disagree about the format.
+    pub fn finish(self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "{}: {} unread trailing bytes",
+                self.what,
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard IEEE CRC32 check values.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn reader_round_trips_and_rejects_overruns() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 42);
+        put_f64(&mut buf, -0.5);
+        put_bool(&mut buf, true);
+        put_f32(&mut buf, 1.25);
+        let mut r = Reader::new(&buf, "test");
+        assert_eq!(r.get_u64().unwrap(), 42);
+        assert_eq!(r.get_f64().unwrap(), -0.5);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_f32().unwrap(), 1.25);
+        assert!(r.get_u8().is_err());
+        r.finish().unwrap();
+
+        let mut r = Reader::new(&buf, "test");
+        let _ = r.get_u64().unwrap();
+        assert!(r.finish().is_err());
+
+        let mut r = Reader::new(&[2u8], "test");
+        assert!(r.get_bool().is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! Fault injection for the durability layer.
+//!
+//! A *failpoint* is a named hook compiled into the persistence I/O
+//! paths (`snapshot.write`, `snapshot.rename`, `wal.append`). When a
+//! hook is armed it forces a failure — an injected I/O error, a torn
+//! (short) write, or a simulated crash that abandons the operation
+//! without cleanup — so the recovery test suite and CI smoke jobs can
+//! exercise every corruption mode the codecs claim to survive.
+//!
+//! Unarmed, the whole facility costs one relaxed atomic load per hook:
+//! there is no registry lookup, no lock, no allocation. Hooks are
+//! armed either programmatically ([`arm`]) from tests or from the
+//! `FUNCSNE_FAILPOINTS` environment variable (parsed once, on the
+//! first [`init_from_env`] call):
+//!
+//! ```text
+//! FUNCSNE_FAILPOINTS="snapshot.rename=crash;wal.append=torn:2"
+//! ```
+//!
+//! Each entry is `name=action` with an optional `:count` suffix
+//! limiting how many times it fires before auto-disarming. Actions are
+//! `error`, `torn` and `crash`.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use crate::runtime::sync::DebugMutex;
+
+/// What an armed failpoint does when hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailAction {
+    /// Fail the operation with an injected `io::Error`.
+    Error,
+    /// Write only a prefix of the payload, then fail — models a power
+    /// cut or full disk mid-write.
+    Torn,
+    /// Abandon the operation exactly where a crash would: no error
+    /// cleanup runs, temp-file debris stays on disk.
+    Crash,
+}
+
+struct Entry {
+    action: FailAction,
+    /// Remaining firings; `None` means unlimited.
+    remaining: Option<u32>,
+}
+
+/// Fast-path flag: `false` whenever the registry is empty, so unarmed
+/// hooks never touch the lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static DebugMutex<BTreeMap<String, Entry>> {
+    static REGISTRY: OnceLock<DebugMutex<BTreeMap<String, Entry>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| DebugMutex::new("persist.failpoints", BTreeMap::new()))
+}
+
+/// Arm failpoint `name`. `count` limits how many times it fires
+/// (`Some(0)` is ignored); `None` fires until [`disarm`]ed.
+pub fn arm(name: &str, action: FailAction, count: Option<u32>) {
+    if count == Some(0) {
+        return;
+    }
+    let mut reg = registry().lock();
+    reg.insert(name.to_string(), Entry { action, remaining: count });
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm failpoint `name` (no-op when not armed).
+pub fn disarm(name: &str) {
+    let mut reg = registry().lock();
+    reg.remove(name);
+    if reg.is_empty() {
+        ARMED.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Disarm every failpoint.
+pub fn clear() {
+    let mut reg = registry().lock();
+    reg.clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Consult failpoint `name`. Returns the action to simulate, or `None`
+/// (the overwhelmingly common case — one relaxed load, no lock).
+pub fn hit(name: &str) -> Option<FailAction> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut reg = registry().lock();
+    let (action, exhausted) = match reg.get_mut(name) {
+        None => return None,
+        Some(e) => {
+            let exhausted = match e.remaining.as_mut() {
+                Some(r) => {
+                    *r = r.saturating_sub(1);
+                    *r == 0
+                }
+                None => false,
+            };
+            (e.action, exhausted)
+        }
+    };
+    if exhausted {
+        reg.remove(name);
+        if reg.is_empty() {
+            ARMED.store(false, Ordering::Relaxed);
+        }
+    }
+    Some(action)
+}
+
+/// Parse `FUNCSNE_FAILPOINTS` once per process. Safe to call from
+/// every entry point that performs durable I/O; only the first call
+/// reads the environment. Invalid entries are reported to stderr and
+/// skipped — a typo in a fault-injection variable must never take the
+/// service down.
+pub fn init_from_env() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        if let Ok(spec) = std::env::var("FUNCSNE_FAILPOINTS") {
+            if let Err(e) = arm_from_spec(&spec) {
+                eprintln!("funcsne: ignoring invalid FUNCSNE_FAILPOINTS: {e}");
+            }
+        }
+    });
+}
+
+/// Arm failpoints from a spec string (`name=action[:count]`, entries
+/// separated by `;`). Valid entries before an invalid one stay armed.
+pub fn arm_from_spec(spec: &str) -> Result<(), String> {
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, rhs) = part
+            .split_once('=')
+            .ok_or_else(|| format!("`{part}`: expected name=action[:count]"))?;
+        let (action_str, count) = match rhs.split_once(':') {
+            Some((a, c)) => {
+                let n = c
+                    .parse::<u32>()
+                    .map_err(|_| format!("`{part}`: count `{c}` is not a u32"))?;
+                (a, Some(n))
+            }
+            None => (rhs, None),
+        };
+        let action = match action_str.trim() {
+            "error" => FailAction::Error,
+            "torn" => FailAction::Torn,
+            "crash" => FailAction::Crash,
+            other => {
+                return Err(format!(
+                    "`{part}`: unknown action `{other}` (expected error, torn or crash)"
+                ))
+            }
+        };
+        arm(name.trim(), action, count);
+    }
+    Ok(())
+}
+
+/// Prefix of injected (non-crash) I/O errors, so logs and tests can
+/// tell injected failures from real ones.
+pub const INJECTED_PREFIX: &str = "failpoint:";
+
+/// Prefix of simulated-crash errors. Callers must propagate these
+/// without running any cleanup, so on-disk state is exactly what a
+/// real crash at that instant would leave.
+pub const CRASH_PREFIX: &str = "failpoint-crash:";
+
+/// An injected I/O error attributed to `name`.
+pub fn io_error(name: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::Other, format!("{INJECTED_PREFIX} injected I/O error at `{name}`"))
+}
+
+/// A simulated crash at `name`.
+pub fn crash_error(name: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::Other, format!("{CRASH_PREFIX} simulated crash at `{name}`"))
+}
+
+/// Is `e` a simulated crash (as opposed to an injected or real error)?
+pub fn is_crash(e: &io::Error) -> bool {
+    e.to_string().starts_with(CRASH_PREFIX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sync::DebugMutex;
+
+    /// Failpoint state is process-global; serialize tests touching it.
+    static GUARD: OnceLock<DebugMutex<()>> = OnceLock::new();
+
+    fn serial() -> crate::runtime::sync::DebugMutexGuard<'static, ()> {
+        GUARD.get_or_init(|| DebugMutex::new("persist.failpoint_tests", ())).lock()
+    }
+
+    #[test]
+    fn unarmed_hooks_fire_nothing() {
+        let _g = serial();
+        clear();
+        assert_eq!(hit("snapshot.write"), None);
+    }
+
+    #[test]
+    fn counted_failpoint_auto_disarms() {
+        let _g = serial();
+        clear();
+        arm("wal.append", FailAction::Torn, Some(2));
+        assert_eq!(hit("wal.append"), Some(FailAction::Torn));
+        assert_eq!(hit("wal.append"), Some(FailAction::Torn));
+        assert_eq!(hit("wal.append"), None);
+        assert!(!ARMED.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn spec_parsing_arms_and_rejects() {
+        let _g = serial();
+        clear();
+        arm_from_spec("snapshot.rename=crash; wal.append=error:1").unwrap();
+        assert_eq!(hit("snapshot.rename"), Some(FailAction::Crash));
+        assert_eq!(hit("snapshot.rename"), Some(FailAction::Crash));
+        assert_eq!(hit("wal.append"), Some(FailAction::Error));
+        assert_eq!(hit("wal.append"), None);
+        clear();
+
+        assert!(arm_from_spec("nonsense").is_err());
+        assert!(arm_from_spec("a=explode").is_err());
+        assert!(arm_from_spec("a=torn:many").is_err());
+        arm_from_spec("a=torn:0").unwrap();
+        assert_eq!(hit("a"), None);
+        clear();
+    }
+
+    #[test]
+    fn crash_errors_are_distinguishable() {
+        assert!(is_crash(&crash_error("x")));
+        assert!(!is_crash(&io_error("x")));
+    }
+}

@@ -1,0 +1,219 @@
+//! Durable sessions: snapshots, write-ahead command logs, and
+//! bitwise-exact crash recovery.
+//!
+//! The engine's counter-based RNG streams make a session's future a
+//! pure function of (state, seed, iteration) — so durability reduces
+//! to two artifacts per session, kept in the server's `--state-dir`:
+//!
+//! * `session-<id>.snap` — a complete point-in-time image
+//!   ([`snapshot`]), atomically published via temp-file + rename;
+//! * `session-<id>.wal` — the commands drained since that image
+//!   ([`wal`]), each fsynced *before* it is applied.
+//!
+//! Restore ([`restore_session`]) loads the snapshot, then re-drives
+//! the session through the logged command drains at their recorded
+//! iterations. Because stepping is deterministic and command
+//! validation is pure, the recovered trajectory is bitwise-identical
+//! to the uninterrupted one — the property the crash-recovery tests
+//! assert at multiple thread counts, under [`failpoint`]-injected I/O
+//! errors, torn writes and simulated crashes.
+//!
+//! Formats, CRC coverage and the atomic-publish protocol are
+//! documented byte-by-byte in `docs/persistence.md`.
+
+mod codec;
+pub mod failpoint;
+pub mod snapshot;
+pub mod wal;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::session::Session;
+
+/// The durable artifacts of one session.
+pub struct SessionPaths {
+    pub snap: PathBuf,
+    pub wal: PathBuf,
+}
+
+/// On-disk layout: `<dir>/session-<id>.snap` + `<dir>/session-<id>.wal`.
+pub fn session_paths(dir: &Path, id: u64) -> SessionPaths {
+    SessionPaths {
+        snap: dir.join(format!("session-{id}.snap")),
+        wal: dir.join(format!("session-{id}.wal")),
+    }
+}
+
+/// Checkpoint a session: export, encode, publish atomically, then
+/// truncate the WAL (its records are folded into the image; sequence
+/// numbering continues). Returns the snapshot size in bytes.
+///
+/// On failure the session is untouched except for its WAL health flag
+/// — it keeps stepping, and a later checkpoint can heal it. A crash
+/// between the snapshot rename and the WAL truncation is harmless:
+/// replay skips records at or below the image's sequence floor.
+pub fn checkpoint_session(session: &mut Session, paths: &SessionPaths) -> Result<u64> {
+    let st = session.export_state();
+    let bytes = snapshot::encode(&st);
+    snapshot::save_atomic(&paths.snap, &bytes)
+        .map_err(|e| anyhow!("publish {}: {e}", paths.snap.display()))?;
+    match wal::WalWriter::create(&paths.wal, session.wal_next_seq()) {
+        Ok(w) => session.set_wal(Some(w)),
+        Err(e) => {
+            let msg = format!("could not recreate {}: {e}", paths.wal.display());
+            session.mark_wal_broken(msg.clone());
+            bail!("snapshot published but {msg}");
+        }
+    }
+    Ok(bytes.len() as u64)
+}
+
+/// A session brought back from disk.
+pub struct Restored {
+    pub session: Session,
+    /// WAL records replayed on top of the snapshot.
+    pub replayed: usize,
+    /// Torn-tail report from the WAL scan, if the log did not end
+    /// cleanly (the valid prefix was still replayed).
+    pub wal_warning: Option<String>,
+}
+
+/// Restore one session: load + validate the snapshot, replay the WAL
+/// tail at its recorded drain iterations, then reattach a compacted
+/// log for future appends.
+pub fn restore_session(paths: &SessionPaths, artifact_dir: &Path) -> Result<Restored> {
+    let st = snapshot::load(&paths.snap).map_err(|e| anyhow!("{e}"))?;
+    let floor = st.wal_seq;
+    let mut session = Session::from_state(st, artifact_dir)?;
+    let rd = wal::read(&paths.wal).map_err(|e| anyhow!("{}: {e}", paths.wal.display()))?;
+
+    // Replay the tail: group contiguous records by drain iteration and
+    // re-drive the session through the same boundaries. Draining a
+    // batch in one step is equivalent to the live run's possibly
+    // multiple drains at that iteration — no engine step separated
+    // them, and per-command validation sees the same state in the same
+    // order.
+    let tail: Vec<&wal::WalRecord> = rd.records.iter().filter(|r| r.seq > floor).collect();
+    let mut i = 0usize;
+    while i < tail.len() {
+        let target = tail[i].iter;
+        if target < session.iterations() as u64 {
+            bail!(
+                "WAL record {} drains at iteration {target}, behind the session ({}): \
+                 log and snapshot disagree",
+                tail[i].seq,
+                session.iterations()
+            );
+        }
+        while (session.iterations() as u64) < target {
+            if !session.step()? {
+                bail!(
+                    "WAL replay stalled: session paused at iteration {} but the log \
+                     continues at {target}",
+                    session.iterations()
+                );
+            }
+        }
+        while i < tail.len() && tail[i].iter == target {
+            session.enqueue(tail[i].cmd.clone());
+            i += 1;
+        }
+        // Drain the batch exactly at `target` (and take the step that
+        // followed it live, unless the batch left the session paused).
+        session.step()?;
+    }
+    let replayed = tail.len();
+    let last_seq = rd.records.last().map(|r| r.seq).unwrap_or(0).max(floor);
+    session.set_wal_seq(last_seq);
+
+    // Reattach a writer over the valid prefix only, so any torn tail
+    // is excised before new records land behind it.
+    let w = wal::WalWriter::rewrite(&paths.wal, &rd.records, last_seq + 1)
+        .map_err(|e| anyhow!("reattach {}: {e}", paths.wal.display()))?;
+    session.set_wal(Some(w));
+    Ok(Restored { session, replayed, wal_warning: rd.warning })
+}
+
+/// A state file the boot scan could not restore. The file is left in
+/// place for post-mortem inspection; the server reports and continues.
+pub struct SkippedState {
+    pub path: PathBuf,
+    pub reason: String,
+}
+
+/// Everything a boot scan recovered (sessions in ascending id order)
+/// and everything it had to skip: corrupt or unreadable snapshots,
+/// and orphaned WALs with no snapshot beside them.
+pub struct BootRestore {
+    pub sessions: Vec<(u64, Restored)>,
+    pub skipped: Vec<SkippedState>,
+}
+
+/// Restore every session under `state_dir`. Never fails the boot: a
+/// corrupt or orphaned state file is skipped and reported, and the
+/// remaining sessions come up normally.
+pub fn restore_all(state_dir: &Path, artifact_dir: &Path) -> BootRestore {
+    let mut out = BootRestore { sessions: Vec::new(), skipped: Vec::new() };
+    let entries = match fs::read_dir(state_dir) {
+        Ok(e) => e,
+        Err(_) => return out,
+    };
+    let mut snap_ids = Vec::new();
+    let mut wal_ids = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(id) = parse_state_name(name, ".snap") {
+            snap_ids.push(id);
+        } else if let Some(id) = parse_state_name(name, ".wal") {
+            wal_ids.push(id);
+        }
+    }
+    snap_ids.sort_unstable();
+    for &id in &snap_ids {
+        let paths = session_paths(state_dir, id);
+        match restore_session(&paths, artifact_dir) {
+            Ok(r) => out.sessions.push((id, r)),
+            Err(e) => {
+                out.skipped.push(SkippedState { path: paths.snap, reason: e.to_string() })
+            }
+        }
+    }
+    wal_ids.sort_unstable();
+    for id in wal_ids {
+        if snap_ids.binary_search(&id).is_err() {
+            out.skipped.push(SkippedState {
+                path: session_paths(state_dir, id).wal,
+                reason: "orphaned WAL with no snapshot beside it".to_string(),
+            });
+        }
+    }
+    out
+}
+
+fn parse_state_name(name: &str, suffix: &str) -> Option<u64> {
+    name.strip_prefix("session-")?.strip_suffix(suffix)?.parse().ok()
+}
+
+/// Remove a session's durable files (and any temp debris) — the
+/// `DELETE /sessions/:id` and session-replacement paths. Missing files
+/// are fine; other I/O errors surface.
+pub fn remove_session_files(paths: &SessionPaths) -> io::Result<()> {
+    for p in [
+        &paths.snap,
+        &paths.wal,
+        &snapshot::tmp_path(&paths.snap),
+        &snapshot::tmp_path(&paths.wal),
+    ] {
+        match fs::remove_file(p) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}

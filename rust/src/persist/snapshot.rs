@@ -1,0 +1,753 @@
+//! Versioned snapshot codec and atomic on-disk publish.
+//!
+//! A snapshot is the complete durable image of one session: engine
+//! state (embedding, velocities, twin neighbour tables, affinities,
+//! sequential RNG, EWMAs, config, iteration counters), the optional
+//! PCA pre-reduction basis, session bookkeeping, and the WAL sequence
+//! number the image is consistent with. Restoring a snapshot and
+//! replaying the WAL tail reproduces the exact bitwise trajectory the
+//! session would have taken uninterrupted (see `docs/persistence.md`).
+//!
+//! # Wire format (version 1, all integers little-endian)
+//!
+//! ```text
+//! header   := magic "FSNP" | version u8 | reserved u8×3
+//! body     := section×9 (fixed order, all mandatory)
+//! section  := tag u8 | payload_len u64 | payload | crc32(payload) u32
+//! ```
+//!
+//! Sections, in order: META (0x01), CONFIG (0x02), X (0x03), Y (0x04),
+//! VEL (0x05), KNN (0x06), AFF (0x07), RNG (0x08), EXTRAS (0x09).
+//! Every section carries its own IEEE CRC32, so a flipped bit anywhere
+//! in a payload is detected before any value is trusted. [`decode`] is
+//! strict: wrong magic, unknown version, out-of-order or missing
+//! sections, CRC mismatches, truncation, trailing bytes, enum bytes
+//! outside their domain, and cross-section inconsistencies (matrix
+//! dims vs config, table sizes vs N) are all hard errors — a snapshot
+//! either restores exactly or not at all.
+//!
+//! # Atomic publish
+//!
+//! [`save_atomic`] writes `<path>.tmp`, fsyncs, renames over `<path>`,
+//! then fsyncs the directory (best-effort). A crash at any instant
+//! leaves either the old complete snapshot or the new complete
+//! snapshot — never a torn one. The write and rename steps carry
+//! [`failpoint`](super::failpoint) hooks (`snapshot.write`,
+//! `snapshot.rename`) so tests can prove exactly that.
+
+use std::fs;
+use std::io::{self, Write};
+use std::path::Path;
+
+use crate::config::{Backend, EmbedConfig, Init};
+use crate::data::Matrix;
+use crate::engine::funcsne::EngineState;
+use crate::engine::{EngineStats, PhaseMicros};
+use crate::hd::Affinities;
+use crate::knn::iterative::{CandidateRoutes, IterativeKnn};
+use crate::knn::NeighborTable;
+use crate::linalg::Pca;
+use crate::metrics::probe::QualityReport;
+
+use super::codec::{crc32, put_bool, put_f32, put_f64, put_u32, put_u64, put_usize, Reader};
+use super::failpoint::{self, FailAction};
+
+/// File magic: "FUnc-SNE SNaPshot".
+pub const MAGIC: [u8; 4] = *b"FSNP";
+/// Current codec version. Loaders reject anything newer.
+pub const VERSION: u8 = 1;
+
+const TAG_META: u8 = 0x01;
+const TAG_CONFIG: u8 = 0x02;
+const TAG_X: u8 = 0x03;
+const TAG_Y: u8 = 0x04;
+const TAG_VEL: u8 = 0x05;
+const TAG_KNN: u8 = 0x06;
+const TAG_AFF: u8 = 0x07;
+const TAG_RNG: u8 = 0x08;
+const TAG_EXTRAS: u8 = 0x09;
+
+/// Everything a [`crate::session::Session`] needs to come back to
+/// life: the engine image plus session-level bookkeeping. The compute
+/// backend, worker pool, probe ground-truth rows and scratch buffers
+/// are *not* stored — they are rebuilt deterministically from the
+/// config and data on restore.
+pub struct SessionState {
+    pub engine: EngineState,
+    /// Ingest-time PCA basis (sessions whose input was pre-reduced).
+    pub pca: Option<Pca>,
+    pub paused: bool,
+    pub snapshot_stride: u64,
+    pub snapshot_capacity: u64,
+    pub commands_applied: u64,
+    pub commands_rejected: u64,
+    /// Highest WAL sequence number already folded into this image;
+    /// replay skips records with `seq <= wal_seq`.
+    pub wal_seq: u64,
+}
+
+// ------------------------------------------------------------- encode
+
+/// Serialize a session image. Encoding is infallible: every reachable
+/// in-memory state has a representation.
+pub fn encode(st: &SessionState) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&[0u8; 3]);
+    section(&mut out, TAG_META, &encode_meta(st));
+    section(&mut out, TAG_CONFIG, &encode_config(&st.engine.cfg));
+    section(&mut out, TAG_X, &encode_matrix(&st.engine.x));
+    section(&mut out, TAG_Y, &encode_matrix(&st.engine.y));
+    section(&mut out, TAG_VEL, &encode_matrix(&st.engine.vel));
+    section(&mut out, TAG_KNN, &encode_knn(&st.engine.knn));
+    section(&mut out, TAG_AFF, &encode_aff(&st.engine.aff));
+    section(&mut out, TAG_RNG, &encode_rng(&st.engine));
+    section(&mut out, TAG_EXTRAS, &encode_extras(st));
+    out
+}
+
+fn section(out: &mut Vec<u8>, tag: u8, payload: &[u8]) {
+    out.push(tag);
+    put_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    put_u32(out, crc32(payload));
+}
+
+fn encode_meta(st: &SessionState) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, st.engine.iter);
+    put_u64(&mut p, st.engine.structure_version);
+    put_u64(&mut p, st.wal_seq);
+    put_bool(&mut p, st.paused);
+    put_u64(&mut p, st.snapshot_stride);
+    put_u64(&mut p, st.snapshot_capacity);
+    put_u64(&mut p, st.commands_applied);
+    put_u64(&mut p, st.commands_rejected);
+    let s = &st.engine.stats;
+    put_usize(&mut p, s.iters);
+    put_usize(&mut p, s.hd_refines);
+    put_usize(&mut p, s.ld_refines);
+    put_usize(&mut p, s.recalibrated_points);
+    put_usize(&mut p, s.implosions);
+    put_usize(&mut p, s.hd_new_last);
+    put_f64(&mut p, s.refine_ewma);
+    put_f64(&mut p, s.mean_w);
+    put_f64(&mut p, s.covered_avg);
+    match &s.quality {
+        None => put_bool(&mut p, false),
+        Some(q) => {
+            put_bool(&mut p, true);
+            put_usize(&mut p, q.iter);
+            put_usize(&mut p, q.anchors);
+            put_usize(&mut p, q.k);
+            put_f64(&mut p, q.knn_recall);
+            put_f64(&mut p, q.trustworthiness);
+            put_f64(&mut p, q.continuity);
+            put_f64(&mut p, q.knn_recall_hd);
+        }
+    }
+    p
+}
+
+fn encode_config(cfg: &EmbedConfig) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_usize(&mut p, cfg.ld_dim);
+    put_f64(&mut p, cfg.alpha);
+    put_f64(&mut p, cfg.perplexity);
+    put_usize(&mut p, cfg.k_hd);
+    put_usize(&mut p, cfg.k_ld);
+    put_usize(&mut p, cfg.n_neg);
+    put_f64(&mut p, cfg.lr);
+    put_f64(&mut p, cfg.momentum);
+    put_f64(&mut p, cfg.attraction);
+    put_f64(&mut p, cfg.repulsion);
+    put_f64(&mut p, cfg.early_exag);
+    put_usize(&mut p, cfg.early_exag_iters);
+    put_usize(&mut p, cfg.n_iters);
+    put_f64(&mut p, cfg.refine_base_prob);
+    put_f64(&mut p, cfg.refine_ewma_beta);
+    put_usize(&mut p, cfg.n_candidates);
+    put_usize(&mut p, cfg.jumpstart_iters);
+    put_f64(&mut p, cfg.implosion_radius);
+    put_f64(&mut p, cfg.implosion_factor);
+    p.push(match cfg.init {
+        Init::Random => 0,
+        Init::Pca => 1,
+    });
+    p.push(match cfg.backend {
+        Backend::Native => 0,
+        Backend::Simd => 1,
+        Backend::Pjrt => 2,
+    });
+    put_u64(&mut p, cfg.seed);
+    put_usize(&mut p, cfg.recalibrate_every);
+    put_usize(&mut p, cfg.threads);
+    put_usize(&mut p, cfg.probe_every);
+    put_usize(&mut p, cfg.probe_anchors);
+    p
+}
+
+fn encode_matrix(m: &Matrix) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_matrix(&mut p, m);
+    p
+}
+
+fn put_matrix(p: &mut Vec<u8>, m: &Matrix) {
+    put_usize(p, m.n());
+    put_usize(p, m.d());
+    for &v in m.data() {
+        put_f32(p, v);
+    }
+}
+
+fn get_matrix(r: &mut Reader<'_>) -> Result<Matrix, String> {
+    let n = r.get_usize()?;
+    let d = r.get_usize()?;
+    let len = n
+        .checked_mul(d)
+        .ok_or_else(|| format!("{}: matrix dims {n}x{d} overflow", r.what()))?;
+    let data = r.get_f32s(len)?;
+    Matrix::from_vec(data, n, d).map_err(|e| format!("{}: {e}", r.what()))
+}
+
+fn put_table(p: &mut Vec<u8>, t: &NeighborTable) {
+    let (n, k, dists, idxs, lens) = t.raw_parts();
+    put_usize(p, n);
+    put_usize(p, k);
+    for &l in lens {
+        put_u32(p, l);
+    }
+    for &d in dists {
+        put_f32(p, d);
+    }
+    for &i in idxs {
+        put_u32(p, i);
+    }
+}
+
+fn get_table(r: &mut Reader<'_>) -> Result<NeighborTable, String> {
+    let n = r.get_usize()?;
+    let k = r.get_usize()?;
+    let slots = n
+        .checked_mul(k)
+        .ok_or_else(|| format!("{}: table dims {n}x{k} overflow", r.what()))?;
+    let lens = r.get_u32s(n)?;
+    let dists = r.get_f32s(slots)?;
+    let idxs = r.get_u32s(slots)?;
+    NeighborTable::from_raw_parts(n, k, dists, idxs, lens)
+        .map_err(|e| format!("{}: {e}", r.what()))
+}
+
+fn encode_knn(knn: &IterativeKnn) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_table(&mut p, &knn.hd);
+    put_table(&mut p, &knn.ld);
+    put_usize(&mut p, knn.hd_dirty.len());
+    for &dirty in &knn.hd_dirty {
+        put_bool(&mut p, dirty);
+    }
+    p
+}
+
+fn encode_aff(aff: &Affinities) -> Vec<u8> {
+    let mut p = Vec::new();
+    let n = aff.beta.len();
+    put_usize(&mut p, n);
+    put_usize(&mut p, aff.k());
+    for &v in aff.p_all() {
+        put_f32(&mut p, v);
+    }
+    for &v in &aff.beta {
+        put_f32(&mut p, v);
+    }
+    for &v in &aff.achieved {
+        put_f32(&mut p, v);
+    }
+    p
+}
+
+fn encode_rng(e: &EngineState) -> Vec<u8> {
+    let mut p = Vec::new();
+    let (s, spare) = e.rng;
+    for word in s {
+        put_u64(&mut p, word);
+    }
+    match spare {
+        None => put_bool(&mut p, false),
+        Some(bits) => {
+            put_bool(&mut p, true);
+            put_u64(&mut p, bits);
+        }
+    }
+    for (beta, value, initialised) in [e.refine_ewma, e.w_ewma] {
+        put_f64(&mut p, beta);
+        put_f64(&mut p, value);
+        put_bool(&mut p, initialised);
+    }
+    put_f64(&mut p, e.covered_avg);
+    p
+}
+
+fn encode_extras(st: &SessionState) -> Vec<u8> {
+    let mut p = Vec::new();
+    let r = st.engine.routes;
+    p.push((r.same_space as u8) | ((r.cross_space as u8) << 1) | ((r.random as u8) << 2));
+    match &st.engine.jumpstart_target {
+        None => put_bool(&mut p, false),
+        Some(m) => {
+            put_bool(&mut p, true);
+            put_matrix(&mut p, m);
+        }
+    }
+    match &st.engine.probe_anchors {
+        None => put_bool(&mut p, false),
+        Some(ids) => {
+            put_bool(&mut p, true);
+            put_usize(&mut p, ids.len());
+            for &id in ids {
+                put_u32(&mut p, id);
+            }
+        }
+    }
+    match &st.pca {
+        None => put_bool(&mut p, false),
+        Some(pca) => {
+            put_bool(&mut p, true);
+            put_matrix(&mut p, &pca.components);
+            put_usize(&mut p, pca.means.len());
+            for &v in &pca.means {
+                put_f32(&mut p, v);
+            }
+            put_usize(&mut p, pca.explained.len());
+            for &v in &pca.explained {
+                put_f64(&mut p, v);
+            }
+        }
+    }
+    p
+}
+
+// ------------------------------------------------------------- decode
+
+/// Deserialize and fully validate a snapshot. Any corruption — bit
+/// flips (CRC), truncation, format drift, or internally inconsistent
+/// state — is an error; a partially trusted restore is worse than a
+/// clean failure.
+pub fn decode(bytes: &[u8]) -> Result<SessionState, String> {
+    if bytes.len() < 8 {
+        return Err("snapshot shorter than its 8-byte header".into());
+    }
+    if bytes[0..4] != MAGIC {
+        return Err("bad snapshot magic (not an FSNP file)".into());
+    }
+    if bytes[4] != VERSION {
+        return Err(format!("unsupported snapshot version {} (expected {VERSION})", bytes[4]));
+    }
+    let mut pos = 8usize;
+    let meta = read_section(bytes, &mut pos, TAG_META, "META")?;
+    let config = read_section(bytes, &mut pos, TAG_CONFIG, "CONFIG")?;
+    let xb = read_section(bytes, &mut pos, TAG_X, "X")?;
+    let yb = read_section(bytes, &mut pos, TAG_Y, "Y")?;
+    let velb = read_section(bytes, &mut pos, TAG_VEL, "VEL")?;
+    let knnb = read_section(bytes, &mut pos, TAG_KNN, "KNN")?;
+    let affb = read_section(bytes, &mut pos, TAG_AFF, "AFF")?;
+    let rngb = read_section(bytes, &mut pos, TAG_RNG, "RNG")?;
+    let extras = read_section(bytes, &mut pos, TAG_EXTRAS, "EXTRAS")?;
+    if pos != bytes.len() {
+        return Err(format!("{} trailing bytes after final section", bytes.len() - pos));
+    }
+
+    let cfg = decode_config(config)?;
+    cfg.validate().map_err(|e| format!("CONFIG: {e}"))?;
+
+    let mut r = Reader::new(xb, "X");
+    let x = get_matrix(&mut r)?;
+    r.finish()?;
+    let mut r = Reader::new(yb, "Y");
+    let y = get_matrix(&mut r)?;
+    r.finish()?;
+    let mut r = Reader::new(velb, "VEL");
+    let vel = get_matrix(&mut r)?;
+    r.finish()?;
+
+    let n = x.n();
+    if n < 4 {
+        return Err(format!("X: {n} points is below the 4-point minimum"));
+    }
+    if y.n() != n || vel.n() != n {
+        return Err(format!("Y/VEL row counts ({}, {}) disagree with X ({n})", y.n(), vel.n()));
+    }
+    if y.d() != cfg.ld_dim || vel.d() != cfg.ld_dim {
+        return Err(format!(
+            "Y/VEL widths ({}, {}) disagree with ld_dim {}",
+            y.d(),
+            vel.d(),
+            cfg.ld_dim
+        ));
+    }
+
+    let knn = decode_knn(knnb, n)?;
+    let aff = decode_aff(affb, n, knn.hd.k())?;
+    let (rng, refine_ewma, w_ewma, covered_avg) = decode_rng(rngb)?;
+    let (meta_out, stats) = decode_meta(meta)?;
+    let (routes, jumpstart_target, probe_anchors, pca) = decode_extras(extras, n, &cfg, &x)?;
+
+    Ok(SessionState {
+        engine: EngineState {
+            cfg,
+            x,
+            y,
+            vel,
+            knn,
+            aff,
+            rng,
+            refine_ewma,
+            w_ewma,
+            covered_avg,
+            iter: meta_out.iter,
+            structure_version: meta_out.structure_version,
+            stats,
+            routes,
+            jumpstart_target,
+            probe_anchors,
+        },
+        pca,
+        paused: meta_out.paused,
+        snapshot_stride: meta_out.snapshot_stride,
+        snapshot_capacity: meta_out.snapshot_capacity,
+        commands_applied: meta_out.commands_applied,
+        commands_rejected: meta_out.commands_rejected,
+        wal_seq: meta_out.wal_seq,
+    })
+}
+
+fn read_section<'a>(
+    bytes: &'a [u8],
+    pos: &mut usize,
+    tag: u8,
+    what: &'static str,
+) -> Result<&'a [u8], String> {
+    if bytes.len() - *pos < 9 {
+        return Err(format!("truncated before {what} section header"));
+    }
+    let found = bytes[*pos];
+    if found != tag {
+        return Err(format!("expected {what} section (tag 0x{tag:02x}), found tag 0x{found:02x}"));
+    }
+    let mut lb = [0u8; 8];
+    lb.copy_from_slice(&bytes[*pos + 1..*pos + 9]);
+    let len = usize::try_from(u64::from_le_bytes(lb))
+        .map_err(|_| format!("{what} section length overflows usize"))?;
+    let start = *pos + 9;
+    let end = start
+        .checked_add(len)
+        .filter(|&e| e + 4 <= bytes.len())
+        .ok_or_else(|| format!("{what} section truncated"))?;
+    let payload = &bytes[start..end];
+    let mut cb = [0u8; 4];
+    cb.copy_from_slice(&bytes[end..end + 4]);
+    if crc32(payload) != u32::from_le_bytes(cb) {
+        return Err(format!("{what} section CRC mismatch"));
+    }
+    *pos = end + 4;
+    Ok(payload)
+}
+
+struct MetaOut {
+    iter: u64,
+    structure_version: u64,
+    wal_seq: u64,
+    paused: bool,
+    snapshot_stride: u64,
+    snapshot_capacity: u64,
+    commands_applied: u64,
+    commands_rejected: u64,
+}
+
+fn decode_meta(payload: &[u8]) -> Result<(MetaOut, EngineStats), String> {
+    let mut r = Reader::new(payload, "META");
+    let meta = MetaOut {
+        iter: r.get_u64()?,
+        structure_version: r.get_u64()?,
+        wal_seq: r.get_u64()?,
+        paused: r.get_bool()?,
+        snapshot_stride: r.get_u64()?,
+        snapshot_capacity: r.get_u64()?,
+        commands_applied: r.get_u64()?,
+        commands_rejected: r.get_u64()?,
+    };
+    let mut stats = EngineStats {
+        iters: r.get_usize()?,
+        hd_refines: r.get_usize()?,
+        ld_refines: r.get_usize()?,
+        recalibrated_points: r.get_usize()?,
+        implosions: r.get_usize()?,
+        hd_new_last: r.get_usize()?,
+        refine_ewma: r.get_f64()?,
+        mean_w: r.get_f64()?,
+        covered_avg: r.get_f64()?,
+        // Wall-clock telemetry restarts from zero on restore; it never
+        // feeds back into the computation.
+        phase_micros: PhaseMicros::default(),
+        quality: None,
+    };
+    if r.get_bool()? {
+        stats.quality = Some(QualityReport {
+            iter: r.get_usize()?,
+            anchors: r.get_usize()?,
+            k: r.get_usize()?,
+            knn_recall: r.get_f64()?,
+            trustworthiness: r.get_f64()?,
+            continuity: r.get_f64()?,
+            knn_recall_hd: r.get_f64()?,
+        });
+    }
+    r.finish()?;
+    Ok((meta, stats))
+}
+
+fn decode_config(payload: &[u8]) -> Result<EmbedConfig, String> {
+    let mut r = Reader::new(payload, "CONFIG");
+    let cfg = EmbedConfig {
+        ld_dim: r.get_usize()?,
+        alpha: r.get_f64()?,
+        perplexity: r.get_f64()?,
+        k_hd: r.get_usize()?,
+        k_ld: r.get_usize()?,
+        n_neg: r.get_usize()?,
+        lr: r.get_f64()?,
+        momentum: r.get_f64()?,
+        attraction: r.get_f64()?,
+        repulsion: r.get_f64()?,
+        early_exag: r.get_f64()?,
+        early_exag_iters: r.get_usize()?,
+        n_iters: r.get_usize()?,
+        refine_base_prob: r.get_f64()?,
+        refine_ewma_beta: r.get_f64()?,
+        n_candidates: r.get_usize()?,
+        jumpstart_iters: r.get_usize()?,
+        implosion_radius: r.get_f64()?,
+        implosion_factor: r.get_f64()?,
+        init: match r.get_u8()? {
+            0 => Init::Random,
+            1 => Init::Pca,
+            v => return Err(format!("CONFIG: invalid init byte {v}")),
+        },
+        backend: match r.get_u8()? {
+            0 => Backend::Native,
+            1 => Backend::Simd,
+            2 => Backend::Pjrt,
+            v => return Err(format!("CONFIG: invalid backend byte {v}")),
+        },
+        seed: r.get_u64()?,
+        recalibrate_every: r.get_usize()?,
+        threads: r.get_usize()?,
+        probe_every: r.get_usize()?,
+        probe_anchors: r.get_usize()?,
+    };
+    r.finish()?;
+    Ok(cfg)
+}
+
+fn decode_knn(payload: &[u8], n: usize) -> Result<IterativeKnn, String> {
+    let mut r = Reader::new(payload, "KNN");
+    let hd = get_table(&mut r)?;
+    let ld = get_table(&mut r)?;
+    let dirty_len = r.get_usize()?;
+    let mut hd_dirty = Vec::with_capacity(dirty_len.min(payload.len()));
+    for _ in 0..dirty_len {
+        hd_dirty.push(r.get_bool()?);
+    }
+    r.finish()?;
+    if hd.n() != n || ld.n() != n || hd_dirty.len() != n {
+        return Err(format!(
+            "KNN: table sizes (hd {}, ld {}, dirty {}) disagree with N={n}",
+            hd.n(),
+            ld.n(),
+            hd_dirty.len()
+        ));
+    }
+    Ok(IterativeKnn { hd, ld, hd_dirty })
+}
+
+fn decode_aff(payload: &[u8], n: usize, k_hd: usize) -> Result<Affinities, String> {
+    let mut r = Reader::new(payload, "AFF");
+    let an = r.get_usize()?;
+    let ak = r.get_usize()?;
+    if an != n {
+        return Err(format!("AFF: row count {an} disagrees with N={n}"));
+    }
+    if ak != k_hd {
+        return Err(format!("AFF: k={ak} disagrees with the HD table's k={k_hd}"));
+    }
+    let slots = an
+        .checked_mul(ak)
+        .ok_or_else(|| "AFF: dims overflow".to_string())?;
+    let p = r.get_f32s(slots)?;
+    let beta = r.get_f32s(an)?;
+    let achieved = r.get_f32s(an)?;
+    r.finish()?;
+    Affinities::from_raw(ak, p, beta, achieved).map_err(|e| format!("AFF: {e}"))
+}
+
+type RngOut = (([u64; 4], Option<u64>), (f64, f64, bool), (f64, f64, bool), f64);
+
+fn decode_rng(payload: &[u8]) -> Result<RngOut, String> {
+    let mut r = Reader::new(payload, "RNG");
+    let s = [r.get_u64()?, r.get_u64()?, r.get_u64()?, r.get_u64()?];
+    let spare = if r.get_bool()? { Some(r.get_u64()?) } else { None };
+    let mut ewmas = [(0f64, 0f64, false); 2];
+    for e in &mut ewmas {
+        *e = (r.get_f64()?, r.get_f64()?, r.get_bool()?);
+    }
+    let covered_avg = r.get_f64()?;
+    r.finish()?;
+    Ok(((s, spare), ewmas[0], ewmas[1], covered_avg))
+}
+
+type ExtrasOut = (CandidateRoutes, Option<Matrix>, Option<Vec<u32>>, Option<Pca>);
+
+fn decode_extras(
+    payload: &[u8],
+    n: usize,
+    cfg: &EmbedConfig,
+    x: &Matrix,
+) -> Result<ExtrasOut, String> {
+    let mut r = Reader::new(payload, "EXTRAS");
+    let bits = r.get_u8()?;
+    if bits & !0b111 != 0 {
+        return Err(format!("EXTRAS: invalid route bits 0b{bits:b}"));
+    }
+    let routes = CandidateRoutes {
+        same_space: bits & 0b001 != 0,
+        cross_space: bits & 0b010 != 0,
+        random: bits & 0b100 != 0,
+    };
+    if !(routes.same_space || routes.cross_space || routes.random) {
+        return Err("EXTRAS: no candidate route enabled".into());
+    }
+    let jumpstart_target = if r.get_bool()? {
+        let m = get_matrix(&mut r)?;
+        if m.n() != n || m.d() != cfg.ld_dim {
+            return Err(format!(
+                "EXTRAS: jumpstart target {}x{} disagrees with {n}x{}",
+                m.n(),
+                m.d(),
+                cfg.ld_dim
+            ));
+        }
+        Some(m)
+    } else {
+        None
+    };
+    let probe_anchors = if r.get_bool()? {
+        let count = r.get_usize()?;
+        let ids = r.get_u32s(count)?;
+        if ids.iter().any(|&id| id as usize >= n) {
+            return Err(format!("EXTRAS: probe anchor out of range (N={n})"));
+        }
+        Some(ids)
+    } else {
+        None
+    };
+    let pca = if r.get_bool()? {
+        let components = get_matrix(&mut r)?;
+        let mc = r.get_usize()?;
+        let means = r.get_f32s(mc)?;
+        let ec = r.get_usize()?;
+        let explained = {
+            let bytes = ec
+                .checked_mul(8)
+                .ok_or_else(|| "EXTRAS: explained length overflow".to_string())?;
+            r.need(bytes)?;
+            let mut out = Vec::with_capacity(ec);
+            for _ in 0..ec {
+                out.push(r.get_f64()?);
+            }
+            out
+        };
+        if means.len() != components.d() {
+            return Err(format!(
+                "EXTRAS: PCA means length {} disagrees with component width {}",
+                means.len(),
+                components.d()
+            ));
+        }
+        if components.n() != x.d() {
+            return Err(format!(
+                "EXTRAS: PCA output dim {} disagrees with the stored data width {}",
+                components.n(),
+                x.d()
+            ));
+        }
+        Some(Pca { components, means, explained })
+    } else {
+        None
+    };
+    r.finish()?;
+    Ok((routes, jumpstart_target, probe_anchors, pca))
+}
+
+// ----------------------------------------------------------- file I/O
+
+/// Write `bytes` to `path` atomically: temp file, fsync, rename,
+/// best-effort directory fsync. Returns the byte count written. On a
+/// non-crash failure the temp file is removed; a simulated crash
+/// (failpoint) leaves whatever a real crash would.
+pub fn save_atomic(path: &Path, bytes: &[u8]) -> io::Result<u64> {
+    let tmp = tmp_path(path);
+    let res = publish(path, &tmp, bytes);
+    if let Err(e) = &res {
+        if !failpoint::is_crash(e) {
+            let _ = fs::remove_file(&tmp);
+        }
+    }
+    res
+}
+
+/// The sibling temp file a snapshot is staged in before the rename.
+pub fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}
+
+fn publish(path: &Path, tmp: &Path, bytes: &[u8]) -> io::Result<u64> {
+    match failpoint::hit("snapshot.write") {
+        Some(FailAction::Error) => return Err(failpoint::io_error("snapshot.write")),
+        Some(FailAction::Torn) => {
+            // Model a power cut mid-write: half the image reaches the
+            // temp file, then the operation dies.
+            let mut f = fs::File::create(tmp)?;
+            f.write_all(&bytes[..bytes.len() / 2])?;
+            let _ = f.sync_all();
+            return Err(failpoint::io_error("snapshot.write[torn]"));
+        }
+        Some(FailAction::Crash) => return Err(failpoint::crash_error("snapshot.write")),
+        None => {}
+    }
+    let mut f = fs::File::create(tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    match failpoint::hit("snapshot.rename") {
+        Some(FailAction::Crash) => return Err(failpoint::crash_error("snapshot.rename")),
+        Some(_) => return Err(failpoint::io_error("snapshot.rename")),
+        None => {}
+    }
+    fs::rename(tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(bytes.len() as u64)
+}
+
+/// Read and decode the snapshot at `path`.
+pub fn load(path: &Path) -> Result<SessionState, String> {
+    let bytes = fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    decode(&bytes)
+}

@@ -1,0 +1,457 @@
+//! Per-session write-ahead command log.
+//!
+//! Every command a session drains is appended here — with the
+//! iteration it was drained at — *before* the session applies it.
+//! Because the engine's trajectory is a pure function of (state, seed,
+//! iteration) and command validation is deterministic, replaying the
+//! log against the matching snapshot reproduces the interrupted run
+//! bit for bit: accepted commands are re-accepted, rejected ones
+//! re-rejected, in the same order at the same iterations.
+//!
+//! # Wire format (version 1, all integers little-endian)
+//!
+//! ```text
+//! header  := magic "FWAL" | version u8 | reserved u8×3
+//! record  := payload_len u32 | crc32(payload) u32 | payload
+//! payload := seq u64 | iter u64 | tag u8 | body
+//! ```
+//!
+//! Command tags 0–10 mirror [`Command`]'s variants in declaration
+//! order. Sequence numbers are per-session, monotone, and never reused
+//! — a snapshot records the last sequence folded into it, and replay
+//! skips everything at or below that mark, so a crash between a
+//! snapshot's rename and the log truncation that follows it is
+//! harmless.
+//!
+//! # Torn tails
+//!
+//! Reads have *valid-prefix* semantics: the first record whose header
+//! is short, whose payload is truncated, whose CRC disagrees, or whose
+//! sequence number is not strictly increasing ends the log. Everything
+//! before it is trusted (each record was fsynced before the command it
+//! describes was applied); everything after it is reported, not
+//! replayed. The append path carries a `wal.append` failpoint that can
+//! simulate exactly these torn tails.
+
+use std::fs;
+use std::io::{self, Write};
+use std::path::Path;
+
+use crate::data::Matrix;
+use crate::knn::iterative::CandidateRoutes;
+use crate::session::Command;
+
+use super::codec::{crc32, put_f32, put_f64, put_u32, put_u64, put_usize, Reader};
+use super::failpoint::{self, FailAction};
+
+/// File magic: "FUnc-SNE Write-Ahead Log".
+pub const MAGIC: [u8; 4] = *b"FWAL";
+/// Current log version. Readers reject anything newer.
+pub const VERSION: u8 = 1;
+
+const HEADER_LEN: usize = 8;
+/// Record header: payload length u32 + payload CRC u32.
+const RECORD_HEADER_LEN: usize = 8;
+
+/// One logged command.
+#[derive(Clone, Debug)]
+pub struct WalRecord {
+    /// Per-session monotone sequence number (starts at 1).
+    pub seq: u64,
+    /// Engine iteration the command was drained at.
+    pub iter: u64,
+    pub cmd: Command,
+}
+
+/// Result of scanning a log file: the valid prefix, plus a description
+/// of the torn tail if the scan stopped early.
+pub struct WalRead {
+    pub records: Vec<WalRecord>,
+    pub warning: Option<String>,
+}
+
+/// Append handle for one session's log. Every append is fsynced before
+/// it returns — the caller only applies a command once its record is
+/// durable.
+pub struct WalWriter {
+    file: fs::File,
+    next_seq: u64,
+}
+
+impl WalWriter {
+    /// Create (or truncate to) an empty log whose next record will be
+    /// `next_seq`. Used at session creation (`next_seq = 1`) and after
+    /// every successful snapshot publish (sequence numbering
+    /// continues; the old records are folded into the snapshot).
+    pub fn create(path: &Path, next_seq: u64) -> io::Result<WalWriter> {
+        let mut file =
+            fs::OpenOptions::new().write(true).create(true).truncate(true).open(path)?;
+        let mut header = Vec::with_capacity(HEADER_LEN);
+        header.extend_from_slice(&MAGIC);
+        header.push(VERSION);
+        header.extend_from_slice(&[0u8; 3]);
+        file.write_all(&header)?;
+        file.sync_all()?;
+        Ok(WalWriter { file, next_seq: next_seq.max(1) })
+    }
+
+    /// Atomically rewrite the log to contain exactly `records` (the
+    /// valid prefix a restore trusted), then reopen it for appending.
+    /// This discards any torn tail so later appends never land behind
+    /// garbage that would mask them from the next scan.
+    pub fn rewrite(path: &Path, records: &[WalRecord], next_seq: u64) -> io::Result<WalWriter> {
+        let tmp = super::snapshot::tmp_path(path);
+        {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(&MAGIC);
+            bytes.push(VERSION);
+            bytes.extend_from_slice(&[0u8; 3]);
+            for rec in records {
+                bytes.extend_from_slice(&encode_record(rec));
+            }
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)?;
+        let file = fs::OpenOptions::new().append(true).open(path)?;
+        let floor = records.last().map(|r| r.seq + 1).unwrap_or(1);
+        Ok(WalWriter { file, next_seq: next_seq.max(floor) })
+    }
+
+    /// The sequence number the next append will use.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Durably append one command, returning its sequence number. On
+    /// error nothing was logged (or only a torn fragment was) and the
+    /// caller must NOT apply the command — an applied-but-unlogged
+    /// command would diverge from what a restore replays.
+    pub fn append(&mut self, iter: u64, cmd: &Command) -> io::Result<u64> {
+        let seq = self.next_seq;
+        let rec = encode_record(&WalRecord { seq, iter, cmd: cmd.clone() });
+        match failpoint::hit("wal.append") {
+            Some(FailAction::Error) => return Err(failpoint::io_error("wal.append")),
+            Some(FailAction::Torn) => {
+                // Write a fragment and die: the scan must stop here.
+                self.file.write_all(&rec[..rec.len() / 2])?;
+                let _ = self.file.sync_all();
+                return Err(failpoint::io_error("wal.append[torn]"));
+            }
+            Some(FailAction::Crash) => return Err(failpoint::crash_error("wal.append")),
+            None => {}
+        }
+        self.file.write_all(&rec)?;
+        self.file.sync_all()?;
+        self.next_seq = seq + 1;
+        Ok(seq)
+    }
+}
+
+fn encode_record(rec: &WalRecord) -> Vec<u8> {
+    let mut payload = Vec::new();
+    put_u64(&mut payload, rec.seq);
+    put_u64(&mut payload, rec.iter);
+    encode_command(&mut payload, &rec.cmd);
+    let mut out = Vec::with_capacity(RECORD_HEADER_LEN + payload.len());
+    put_u32(&mut out, payload.len() as u32);
+    put_u32(&mut out, crc32(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn encode_command(out: &mut Vec<u8>, cmd: &Command) {
+    match cmd {
+        Command::SetAlpha(v) => {
+            out.push(0);
+            put_f64(out, *v);
+        }
+        Command::SetPerplexity(v) => {
+            out.push(1);
+            put_f64(out, *v);
+        }
+        Command::SetAttraction(v) => {
+            out.push(2);
+            put_f64(out, *v);
+        }
+        Command::SetRepulsion(v) => {
+            out.push(3);
+            put_f64(out, *v);
+        }
+        Command::SetRoutes(r) => {
+            out.push(4);
+            out.push((r.same_space as u8) | ((r.cross_space as u8) << 1) | ((r.random as u8) << 2));
+        }
+        Command::InsertPoints(m) => {
+            out.push(5);
+            put_usize(out, m.n());
+            put_usize(out, m.d());
+            for &v in m.data() {
+                put_f32(out, v);
+            }
+        }
+        Command::RemovePoint(i) => {
+            out.push(6);
+            put_usize(out, *i);
+        }
+        Command::MovePoint(i, row) => {
+            out.push(7);
+            put_usize(out, *i);
+            put_usize(out, row.len());
+            for &v in row {
+                put_f32(out, v);
+            }
+        }
+        Command::Implode => out.push(8),
+        Command::Pause => out.push(9),
+        Command::Resume => out.push(10),
+    }
+}
+
+fn decode_command(r: &mut Reader<'_>) -> Result<Command, String> {
+    let cmd = match r.get_u8()? {
+        0 => Command::SetAlpha(r.get_f64()?),
+        1 => Command::SetPerplexity(r.get_f64()?),
+        2 => Command::SetAttraction(r.get_f64()?),
+        3 => Command::SetRepulsion(r.get_f64()?),
+        4 => {
+            let bits = r.get_u8()?;
+            if bits & !0b111 != 0 {
+                return Err(format!("invalid route bits 0b{bits:b}"));
+            }
+            Command::SetRoutes(CandidateRoutes {
+                same_space: bits & 0b001 != 0,
+                cross_space: bits & 0b010 != 0,
+                random: bits & 0b100 != 0,
+            })
+        }
+        5 => {
+            let n = r.get_usize()?;
+            let d = r.get_usize()?;
+            let len = n.checked_mul(d).ok_or_else(|| "matrix dims overflow".to_string())?;
+            let data = r.get_f32s(len)?;
+            Command::InsertPoints(Matrix::from_vec(data, n, d).map_err(|e| e.to_string())?)
+        }
+        6 => Command::RemovePoint(r.get_usize()?),
+        7 => {
+            let i = r.get_usize()?;
+            let len = r.get_usize()?;
+            Command::MovePoint(i, r.get_f32s(len)?)
+        }
+        8 => Command::Implode,
+        9 => Command::Pause,
+        10 => Command::Resume,
+        t => return Err(format!("unknown command tag {t}")),
+    };
+    Ok(cmd)
+}
+
+/// Scan the log at `path` with valid-prefix semantics. A missing file
+/// is an empty log; a file that is not a WAL at all (bad magic or a
+/// future version) is a hard error.
+pub fn read(path: &Path) -> Result<WalRead, String> {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return Ok(WalRead { records: Vec::new(), warning: None })
+        }
+        Err(e) => return Err(format!("read {}: {e}", path.display())),
+    };
+    if bytes.len() < HEADER_LEN {
+        // A crash during creation can leave a short header; there can
+        // be no durable records in such a file.
+        return Ok(WalRead {
+            records: Vec::new(),
+            warning: Some(format!("log header truncated ({} bytes)", bytes.len())),
+        });
+    }
+    if bytes[0..4] != MAGIC {
+        return Err("bad WAL magic (not an FWAL file)".into());
+    }
+    if bytes[4] != VERSION {
+        return Err(format!("unsupported WAL version {} (expected {VERSION})", bytes[4]));
+    }
+    let mut records = Vec::new();
+    let mut warning = None;
+    let mut pos = HEADER_LEN;
+    let mut last_seq = 0u64;
+    while pos < bytes.len() {
+        let Some((record, end)) = scan_record(&bytes, pos, last_seq, &mut warning) else {
+            break;
+        };
+        last_seq = record.seq;
+        records.push(record);
+        pos = end;
+    }
+    Ok(WalRead { records, warning })
+}
+
+/// Decode the record starting at `pos`, or set `warning` and return
+/// `None` where the valid prefix ends.
+fn scan_record(
+    bytes: &[u8],
+    pos: usize,
+    last_seq: u64,
+    warning: &mut Option<String>,
+) -> Option<(WalRecord, usize)> {
+    let nrec = |msg: String| -> Option<(WalRecord, usize)> {
+        *warning = Some(msg);
+        None
+    };
+    if bytes.len() - pos < RECORD_HEADER_LEN {
+        return nrec(format!("torn record header at byte {pos}"));
+    }
+    let mut b4 = [0u8; 4];
+    b4.copy_from_slice(&bytes[pos..pos + 4]);
+    let len = u32::from_le_bytes(b4) as usize;
+    b4.copy_from_slice(&bytes[pos + 4..pos + 8]);
+    let stored_crc = u32::from_le_bytes(b4);
+    let start = pos + RECORD_HEADER_LEN;
+    let end = match start.checked_add(len) {
+        Some(e) if e <= bytes.len() => e,
+        _ => return nrec(format!("torn record payload at byte {pos}")),
+    };
+    let payload = &bytes[start..end];
+    if crc32(payload) != stored_crc {
+        return nrec(format!("record CRC mismatch at byte {pos}"));
+    }
+    let mut r = Reader::new(payload, "WAL record");
+    let parsed: Result<WalRecord, String> = (|| {
+        let seq = r.get_u64()?;
+        let iter = r.get_u64()?;
+        let cmd = decode_command(&mut r)?;
+        Ok(WalRecord { seq, iter, cmd })
+    })();
+    let record = match parsed {
+        Ok(rec) => rec,
+        Err(e) => return nrec(format!("undecodable record at byte {pos}: {e}")),
+    };
+    if let Err(e) = r.finish() {
+        return nrec(format!("undecodable record at byte {pos}: {e}"));
+    }
+    if record.seq <= last_seq {
+        return nrec(format!(
+            "non-monotone sequence {} after {} at byte {pos}",
+            record.seq, last_seq
+        ));
+    }
+    Some((record, end))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("funcsne_wal_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn sample_commands() -> Vec<Command> {
+        vec![
+            Command::SetAlpha(1.5),
+            Command::SetRoutes(CandidateRoutes { same_space: true, cross_space: false, random: true }),
+            Command::InsertPoints(Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2).unwrap()),
+            Command::MovePoint(3, vec![0.5, -0.5]),
+            Command::RemovePoint(7),
+            Command::Implode,
+            Command::Pause,
+            Command::Resume,
+            Command::SetPerplexity(12.0),
+            Command::SetAttraction(0.7),
+            Command::SetRepulsion(1.3),
+        ]
+    }
+
+    #[test]
+    fn wal_round_trips_every_command_variant() {
+        let path = tmp("wal_roundtrip.wal");
+        let mut w = WalWriter::create(&path, 1).unwrap();
+        for (i, cmd) in sample_commands().iter().enumerate() {
+            let seq = w.append(10 + i as u64, cmd).unwrap();
+            assert_eq!(seq, i as u64 + 1);
+        }
+        let rd = read(&path).unwrap();
+        assert!(rd.warning.is_none());
+        assert_eq!(rd.records.len(), sample_commands().len());
+        for (i, (rec, cmd)) in rd.records.iter().zip(sample_commands()).enumerate() {
+            assert_eq!(rec.seq, i as u64 + 1);
+            assert_eq!(rec.iter, 10 + i as u64);
+            assert_eq!(format!("{:?}", rec.cmd), format!("{cmd:?}"));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_yields_valid_prefix() {
+        let path = tmp("wal_torn.wal");
+        let mut w = WalWriter::create(&path, 1).unwrap();
+        for cmd in sample_commands().iter().take(4) {
+            w.append(1, cmd).unwrap();
+        }
+        drop(w);
+        let full = std::fs::read(&path).unwrap();
+        // Chop the file mid-way through the final record.
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let rd = read(&path).unwrap();
+        assert_eq!(rd.records.len(), 3);
+        assert!(rd.warning.is_some(), "torn tail must be reported");
+
+        // Corrupt a payload byte of the third record: prefix shrinks to 2.
+        let mut corrupt = full.clone();
+        let third_start = {
+            // Walk two records forward from the header.
+            let mut pos = 8usize;
+            for _ in 0..2 {
+                let mut b4 = [0u8; 4];
+                b4.copy_from_slice(&corrupt[pos..pos + 4]);
+                pos += 8 + u32::from_le_bytes(b4) as usize;
+            }
+            pos
+        };
+        corrupt[third_start + 9] ^= 0xFF;
+        std::fs::write(&path, &corrupt).unwrap();
+        let rd = read(&path).unwrap();
+        assert_eq!(rd.records.len(), 2);
+        assert!(rd.warning.unwrap().contains("CRC"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_log_is_empty_but_foreign_files_are_rejected() {
+        let path = tmp("wal_missing.wal");
+        let _ = std::fs::remove_file(&path);
+        let rd = read(&path).unwrap();
+        assert!(rd.records.is_empty() && rd.warning.is_none());
+
+        std::fs::write(&path, b"not a wal at all").unwrap();
+        assert!(read(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rewrite_discards_tail_and_continues_sequencing() {
+        let path = tmp("wal_rewrite.wal");
+        let mut w = WalWriter::create(&path, 1).unwrap();
+        for cmd in sample_commands().iter().take(3) {
+            w.append(2, cmd).unwrap();
+        }
+        drop(w);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let rd = read(&path).unwrap();
+        assert_eq!(rd.records.len(), 2);
+
+        let mut w = WalWriter::rewrite(&path, &rd.records, 3).unwrap();
+        let seq = w.append(5, &Command::Implode).unwrap();
+        assert_eq!(seq, 3);
+        drop(w);
+        let rd = read(&path).unwrap();
+        assert!(rd.warning.is_none());
+        assert_eq!(rd.records.len(), 3);
+        assert_eq!(rd.records[2].seq, 3);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -13,7 +13,8 @@
 //! | `GET  /sessions/:id/embedding`      | live frame, or `?iter=N` nearest snapshot |
 //! | `GET  /sessions/:id/stream`         | chunked binary frame stream (push)        |
 //! | `POST /sessions/:id/commands`       | queue a typed [`Command`]                 |
-//! | `DELETE /sessions/:id`              | remove the session                        |
+//! | `POST /sessions/:id/checkpoint`     | force a durable snapshot now              |
+//! | `DELETE /sessions/:id`              | remove the session (and its state files)  |
 //!
 //! `GET /sessions/:id/embedding` supports conditional polling: every
 //! response carries an `ETag` pinned to the frame's iteration (and the
@@ -161,6 +162,17 @@ impl Api {
                 ]);
                 Ok(Response::json(202, &body).into())
             }
+            ("POST", ["sessions", id, "checkpoint"]) => {
+                let id = parse_id(id)?;
+                let info = self.ask(|r| StepperRequest::Checkpoint(id, r))?;
+                let body = Json::obj(vec![
+                    ("status", "checkpointed".into()),
+                    ("bytes", info.bytes.into()),
+                    ("iter", info.iter.into()),
+                    ("wal_seq", info.wal_seq.into()),
+                ]);
+                Ok(Response::json(200, &body).into())
+            }
             ("DELETE", ["sessions", id]) => {
                 let id = parse_id(id)?;
                 self.ask(|r| StepperRequest::Delete(id, r))?;
@@ -172,7 +184,7 @@ impl Api {
             | (_, ["debug", "trace"])
             | (_, ["sessions"])
             | (_, ["sessions", _])
-            | (_, ["sessions", _, "stats" | "embedding" | "commands" | "stream"]) => {
+            | (_, ["sessions", _, "stats" | "embedding" | "commands" | "stream" | "checkpoint"]) => {
                 Ok(Response::json(
                     405,
                     &Json::obj(vec![(
@@ -536,6 +548,12 @@ fn view_json(v: &SessionView) -> Json {
         ("quality", v.quality.as_ref().map_or(Json::Null, quality_json)),
         ("phase_micros", phase_json(&v.phase_micros)),
         ("latency", latency_json(&v.latency)),
+        ("durable", v.durable.into()),
+        ("checkpoint_iter", v.checkpoint_iter.into()),
+        (
+            "checkpoint_error",
+            v.checkpoint_error.as_ref().map_or(Json::Null, |e| e.as_str().into()),
+        ),
     ])
 }
 
@@ -677,6 +695,66 @@ fn render_prometheus(
         "Seconds since the server started.",
         format!("funcsne_uptime_seconds {}", started.elapsed().as_secs()),
     );
+    if m.durable {
+        // Durability families only exist on servers started with
+        // --state-dir, keeping the default scrape byte-compatible
+        // with non-durable deployments.
+        metric(
+            "funcsne_checkpoints_total",
+            "counter",
+            "Session snapshots published successfully.",
+            format!("funcsne_checkpoints_total {}", m.checkpoints_total),
+        );
+        metric(
+            "funcsne_checkpoint_failures_total",
+            "counter",
+            "Checkpoint attempts that failed (retried with backoff).",
+            format!("funcsne_checkpoint_failures_total {}", m.checkpoint_failures_total),
+        );
+        metric(
+            "funcsne_checkpoint_bytes_total",
+            "counter",
+            "Total bytes of session snapshot published.",
+            format!("funcsne_checkpoint_bytes_total {}", m.checkpoint_bytes_total),
+        );
+        metric(
+            "funcsne_restored_sessions",
+            "gauge",
+            "Sessions restored from the state dir at boot.",
+            format!("funcsne_restored_sessions {}", m.restored_sessions),
+        );
+        metric(
+            "funcsne_skipped_state_files",
+            "gauge",
+            "State files the boot scan skipped as corrupt or orphaned.",
+            format!("funcsne_skipped_state_files {}", m.skipped_state_files),
+        );
+        // Checkpoint latency/size histograms are recorded even with
+        // observability off (checkpoints are rare and off the hot
+        // path), so they render whenever durability is on.
+        let micros = obs
+            .checkpoint_micros
+            .snapshot()
+            .prometheus_lines("funcsne_checkpoint_micros", "");
+        if !micros.trim().is_empty() {
+            metric(
+                "funcsne_checkpoint_micros",
+                "histogram",
+                "Checkpoint (snapshot publish + WAL truncate) wall time (microseconds).",
+                micros.trim_end().to_string(),
+            );
+        }
+        let bytes =
+            obs.checkpoint_bytes.snapshot().prometheus_lines("funcsne_checkpoint_bytes", "");
+        if !bytes.trim().is_empty() {
+            metric(
+                "funcsne_checkpoint_bytes",
+                "histogram",
+                "Published snapshot size (bytes).",
+                bytes.trim_end().to_string(),
+            );
+        }
+    }
     if !m.session_iters.is_empty() {
         let lines: Vec<String> = m
             .session_iters
@@ -962,6 +1040,7 @@ mod tests {
                 },
             )],
             session_states: vec![(0, "running"), (1, "failed")],
+            ..Default::default()
         };
         let reqs = AtomicU64::new(5);
         let text = render_prometheus(&m, &reqs, Instant::now(), &Obs::new(false));
@@ -1058,6 +1137,39 @@ mod tests {
     }
 
     #[test]
+    fn prometheus_durability_families_follow_the_state_dir_flag() {
+        let obs = Obs::new(false);
+        let reqs = AtomicU64::new(0);
+        // Without --state-dir the scrape is byte-compatible with
+        // non-durable deployments: no checkpoint families at all.
+        let off = ServiceMetrics::default();
+        let text = render_prometheus(&off, &reqs, Instant::now(), &obs);
+        assert!(!text.contains("funcsne_checkpoint"), "{text}");
+        // With it, counters render (even at zero) and the histograms
+        // appear once a checkpoint has been recorded — independent of
+        // the observability flag.
+        obs.record_checkpoint(1_500, 64_000);
+        let on = ServiceMetrics {
+            durable: true,
+            checkpoints_total: 3,
+            checkpoint_failures_total: 1,
+            checkpoint_bytes_total: 192_000,
+            restored_sessions: 2,
+            skipped_state_files: 1,
+            ..Default::default()
+        };
+        let text = render_prometheus(&on, &reqs, Instant::now(), &obs);
+        expo::check_exposition(&text).expect("well-formed exposition");
+        assert!(text.contains("funcsne_checkpoints_total 3"), "{text}");
+        assert!(text.contains("funcsne_checkpoint_failures_total 1"), "{text}");
+        assert!(text.contains("funcsne_checkpoint_bytes_total 192000"), "{text}");
+        assert!(text.contains("funcsne_restored_sessions 2"), "{text}");
+        assert!(text.contains("funcsne_skipped_state_files 1"), "{text}");
+        assert!(text.contains("# TYPE funcsne_checkpoint_micros histogram"), "{text}");
+        assert!(text.contains("funcsne_checkpoint_bytes_count 1"), "{text}");
+    }
+
+    #[test]
     fn prometheus_omits_quality_when_no_session_has_reports() {
         let m = ServiceMetrics { sessions: 1, session_iters: vec![(0, 3)], ..Default::default() };
         let reqs = AtomicU64::new(0);
@@ -1119,6 +1231,9 @@ mod tests {
                 update: 5,
             },
             latency: Vec::new(),
+            durable: false,
+            checkpoint_iter: 0,
+            checkpoint_error: None,
         };
         let j = view_json(&view);
         assert_eq!(j.get("latency"), Some(&Json::Null), "no samples yet");

@@ -342,6 +342,17 @@ impl FrameHub {
         }
     }
 
+    /// Force the next [`FrameHub::broadcast`] for `session` to emit a
+    /// keyframe even if nothing moved since the last frame. Used on
+    /// graceful shutdown so every subscriber's final frame is a
+    /// self-contained snapshot they can persist or hand to a decoder
+    /// that missed earlier deltas.
+    pub fn force_keyframe(&mut self, session: u64) {
+        if let Some(hub) = self.sessions.get_mut(&session) {
+            hub.encoder.force_keyframe();
+        }
+    }
+
     /// Tear down a session's streams (session deleted): wake every
     /// subscriber with `Closed`.
     pub fn drop_session(&mut self, session: u64) {

@@ -18,7 +18,7 @@
 //! always ends with `Connection: close`.
 
 use crate::runtime::WorkerPool;
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -47,6 +47,10 @@ const IDLE_CONN_TIMEOUT: Duration = Duration::from_secs(30);
 /// Write timeout while streaming chunks: a client that stops reading
 /// stalls its own stream (and gets torn down), never the producer.
 const STREAM_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Write timeout for ordinary `Content-Length`-framed responses: a
+/// client that stops reading mid-response errors the send out here
+/// instead of pinning the worker for a full [`BODY_DEADLINE`].
+const PLAIN_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 /// How long a [`ChunkSource`] blocks per wait before the worker
 /// re-checks server shutdown.
 const STREAM_POLL: Duration = Duration::from_millis(250);
@@ -186,6 +190,7 @@ pub fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
@@ -245,7 +250,7 @@ fn handle_connection<H: Handler>(
     stream.set_read_timeout(Some(READ_TIMEOUT))?;
     // A client that stops reading must not pin this worker: a stalled
     // send errors out after the deadline and the connection closes.
-    stream.set_write_timeout(Some(BODY_DEADLINE))?;
+    stream.set_write_timeout(Some(PLAIN_WRITE_TIMEOUT))?;
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -270,8 +275,11 @@ fn handle_connection<H: Handler>(
         let req = match read_request(&mut reader, Some(shutdown)) {
             Ok(r) => r,
             Err(e) => {
+                // 408 for a client that blew the read deadline, 400
+                // for a malformed request; either way the connection
+                // is desynchronised, so close it.
                 let body = super::json::Json::obj(vec![("error", format!("{e}").into())]);
-                let _ = write_response(&mut writer, &Response::json(400, &body), true);
+                let _ = write_response(&mut writer, &Response::json(e.status(), &body), true);
                 break;
             }
         };
@@ -348,21 +356,71 @@ fn stream_response(
     w.flush()
 }
 
+/// Why reading a request failed — picks the response status: a client
+/// that blew the read deadline gets `408 Request Timeout`; everything
+/// else (malformed framing, oversized body, mid-request EOF) `400`.
+///
+/// A typed error rather than `anyhow` because the connection handler
+/// must branch on the cause and the vendored shim has no downcast.
+#[derive(Debug)]
+pub enum RequestError {
+    /// The shared [`BODY_DEADLINE`] elapsed before the request arrived.
+    Timeout(String),
+    /// The request was malformed, oversized, or cut short.
+    Bad(String),
+}
+
+impl RequestError {
+    fn bad(msg: impl Into<String>) -> RequestError {
+        RequestError::Bad(msg.into())
+    }
+
+    /// The HTTP status this failure is answered with.
+    pub fn status(&self) -> u16 {
+        match self {
+            RequestError::Timeout(_) => 408,
+            RequestError::Bad(_) => 400,
+        }
+    }
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Timeout(msg) | RequestError::Bad(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
 /// Read one request (request line, headers, `Content-Length` body) from
 /// a buffered stream positioned at a request boundary. One
 /// [`BODY_DEADLINE`] covers the whole request, so a trickling client
 /// cannot stretch it per-line; setting `cancel` (the server's shutdown
 /// flag) aborts mid-request so shutdown never waits out the deadline.
-pub fn read_request<R: BufRead>(r: &mut R, cancel: Option<&AtomicBool>) -> Result<Request> {
-    let deadline = Instant::now() + BODY_DEADLINE;
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    cancel: Option<&AtomicBool>,
+) -> Result<Request, RequestError> {
+    read_request_deadline(r, Instant::now() + BODY_DEADLINE, cancel)
+}
+
+/// [`read_request`] with an explicit deadline (tests inject an
+/// already-elapsed one to exercise the timeout path).
+fn read_request_deadline<R: BufRead>(
+    r: &mut R,
+    deadline: Instant,
+    cancel: Option<&AtomicBool>,
+) -> Result<Request, RequestError> {
     let line = read_line(r, deadline, cancel)?;
     let mut parts = line.split_whitespace();
     let method = parts
         .next()
         .filter(|m| !m.is_empty())
-        .context("empty request line")?
+        .ok_or_else(|| RequestError::bad("empty request line"))?
         .to_ascii_uppercase();
-    let target = parts.next().context("request line has no target")?;
+    let target = parts.next().ok_or_else(|| RequestError::bad("request line has no target"))?;
     let version = parts.next().unwrap_or("HTTP/1.1");
     let http10 = version.eq_ignore_ascii_case("HTTP/1.0");
     let (path, query) = split_target(target);
@@ -374,23 +432,28 @@ pub fn read_request<R: BufRead>(r: &mut R, cancel: Option<&AtomicBool>) -> Resul
             break;
         }
         if headers.len() >= MAX_HEADERS {
-            bail!("too many headers");
+            return Err(RequestError::bad("too many headers"));
         }
-        let (name, value) = line.split_once(':').context("malformed header line")?;
+        let (name, value) =
+            line.split_once(':').ok_or_else(|| RequestError::bad("malformed header line"))?;
         headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
     }
 
     if let Some(te) = headers.get("transfer-encoding") {
         // Parsing a chunked body as empty would desync the keep-alive
         // stream (chunk framing read as the next request line) — refuse.
-        bail!("Transfer-Encoding {te:?} unsupported (use Content-Length)");
+        return Err(RequestError::bad(format!(
+            "Transfer-Encoding {te:?} unsupported (use Content-Length)"
+        )));
     }
     let len = match headers.get("content-length") {
         None => 0,
-        Some(v) => v.parse::<usize>().context("bad Content-Length")?,
+        Some(v) => v.parse::<usize>().map_err(|_| RequestError::bad("bad Content-Length"))?,
     };
     if len > MAX_BODY_BYTES {
-        bail!("body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte limit");
+        return Err(RequestError::bad(format!(
+            "body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte limit"
+        )));
     }
     let body = read_body(r, len, deadline, cancel)?;
 
@@ -407,12 +470,16 @@ fn read_body<R: BufRead>(
     len: usize,
     deadline: Instant,
     cancel: Option<&AtomicBool>,
-) -> Result<Vec<u8>> {
+) -> Result<Vec<u8>, RequestError> {
     let mut body = vec![0u8; len];
     let mut filled = 0usize;
     while filled < len {
         match r.read(&mut body[filled..]) {
-            Ok(0) => bail!("connection closed mid-body ({filled}/{len} bytes)"),
+            Ok(0) => {
+                return Err(RequestError::bad(format!(
+                    "connection closed mid-body ({filled}/{len} bytes)"
+                )))
+            }
             Ok(n) => filled += n,
             Err(e)
                 if matches!(
@@ -421,13 +488,15 @@ fn read_body<R: BufRead>(
                 ) =>
             {
                 if cancelled(cancel) {
-                    bail!("server shutting down");
+                    return Err(RequestError::bad("server shutting down"));
                 }
                 if Instant::now() >= deadline {
-                    bail!("timed out reading request body ({filled}/{len} bytes)");
+                    return Err(RequestError::Timeout(format!(
+                        "timed out reading request body ({filled}/{len} bytes)"
+                    )));
                 }
             }
-            Err(e) => return Err(e).context("read request body"),
+            Err(e) => return Err(RequestError::bad(format!("read request body: {e}"))),
         }
     }
     Ok(body)
@@ -447,15 +516,15 @@ fn read_line<R: BufRead>(
     r: &mut R,
     deadline: Instant,
     cancel: Option<&AtomicBool>,
-) -> Result<String> {
+) -> Result<String, RequestError> {
     let mut buf = Vec::new();
     loop {
         let remaining = MAX_LINE_BYTES.saturating_sub(buf.len());
         if remaining == 0 {
-            bail!("header line exceeds {MAX_LINE_BYTES} bytes");
+            return Err(RequestError::bad(format!("header line exceeds {MAX_LINE_BYTES} bytes")));
         }
         match r.by_ref().take(remaining as u64).read_until(b'\n', &mut buf) {
-            Ok(0) => bail!("connection closed mid-request"),
+            Ok(0) => return Err(RequestError::bad("connection closed mid-request")),
             Ok(_) => {
                 if buf.last() == Some(&b'\n') {
                     break;
@@ -470,19 +539,21 @@ fn read_line<R: BufRead>(
                 ) =>
             {
                 if cancelled(cancel) {
-                    bail!("server shutting down");
+                    return Err(RequestError::bad("server shutting down"));
                 }
                 if Instant::now() >= deadline {
-                    bail!("timed out reading request line/headers");
+                    return Err(RequestError::Timeout(
+                        "timed out reading request line/headers".to_string(),
+                    ));
                 }
             }
-            Err(e) => return Err(e).context("read line"),
+            Err(e) => return Err(RequestError::bad(format!("read line: {e}"))),
         }
     }
     while matches!(buf.last(), Some(b'\n' | b'\r')) {
         buf.pop();
     }
-    String::from_utf8(buf).context("header line is not UTF-8")
+    String::from_utf8(buf).map_err(|_| RequestError::bad("header line is not UTF-8"))
 }
 
 /// Split a request target into its decoded path and query map.
@@ -675,6 +746,49 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 304 Not Modified\r\n"), "{text}");
         assert!(text.contains("ETag: \"abc\"\r\n"), "{text}");
         assert!(text.contains("Content-Length: 0\r\n"), "{text}");
+    }
+
+    /// A reader that behaves like a socket whose peer went silent:
+    /// every read hits the socket timeout.
+    struct StalledReader;
+
+    impl Read for StalledReader {
+        fn read(&mut self, _: &mut [u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::new(ErrorKind::TimedOut, "stalled"))
+        }
+    }
+
+    impl BufRead for StalledReader {
+        fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+            Err(std::io::Error::new(ErrorKind::TimedOut, "stalled"))
+        }
+        fn consume(&mut self, _: usize) {}
+    }
+
+    #[test]
+    fn stalled_request_line_reports_timeout_as_408() {
+        let err = read_request_deadline(&mut StalledReader, Instant::now(), None).unwrap_err();
+        assert!(matches!(err, RequestError::Timeout(_)), "{err:?}");
+        assert_eq!(err.status(), 408);
+    }
+
+    #[test]
+    fn stalled_request_body_reports_timeout_as_408() {
+        // Headers arrive, then the client stops 7 bytes short of its
+        // declared Content-Length.
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        let mut r = Cursor::new(raw.as_bytes().to_vec()).chain(StalledReader);
+        let deadline = Instant::now() + Duration::from_millis(20);
+        let err = read_request_deadline(&mut r, deadline, None).unwrap_err();
+        assert!(matches!(err, RequestError::Timeout(_)), "{err:?}");
+        assert!(err.to_string().contains("3/10"), "{err}");
+    }
+
+    #[test]
+    fn malformed_requests_report_400() {
+        let err = read_request(&mut Cursor::new(b"GET\r\n\r\n".as_slice()), None).unwrap_err();
+        assert!(matches!(err, RequestError::Bad(_)), "{err:?}");
+        assert_eq!(err.status(), 400);
     }
 
     #[test]

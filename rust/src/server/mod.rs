@@ -64,12 +64,14 @@ pub use api::Api;
 pub use frames::StreamConfig;
 pub use http::{Request, Response};
 pub use json::Json;
-pub use stepper::{ServiceError, Stepper, StepperRequest};
+pub use stepper::{DurabilityConfig, ServiceError, Stepper, StepperRequest};
 
+use crate::coordinator::driver::default_artifact_dir;
 use crate::obs::Obs;
 use crate::runtime::WorkerPool;
 use anyhow::{Context, Result};
 use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -102,6 +104,14 @@ pub struct ServerConfig {
     /// stats JSON. Defaults to the `FUNCSNE_TRACE` env var; off keeps
     /// the hot path free of clock reads.
     pub trace: bool,
+    /// Durable sessions: persist every session under this directory
+    /// (snapshot + write-ahead command log) and restore them at boot.
+    /// `None` (default) keeps sessions purely in-memory.
+    pub state_dir: Option<PathBuf>,
+    /// Checkpoint a running durable session after this many
+    /// iterations of progress (0 = only on pause/delete/shutdown and
+    /// explicit `POST .../checkpoint`). Ignored without `state_dir`.
+    pub checkpoint_every: usize,
 }
 
 impl Default for ServerConfig {
@@ -117,6 +127,8 @@ impl Default for ServerConfig {
             stream_queue: streams.queue_frames,
             keyframe_every: streams.keyframe_every,
             trace: Obs::env_enabled(),
+            state_dir: None,
+            checkpoint_every: 500,
         }
     }
 }
@@ -152,8 +164,20 @@ impl Server {
             keyframe_every: cfg.keyframe_every.max(1),
         };
         let obs = Arc::new(Obs::new(cfg.trace));
+        let durability = match &cfg.state_dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("create state dir {}", dir.display()))?;
+                Some(DurabilityConfig {
+                    state_dir: dir.clone(),
+                    checkpoint_every: cfg.checkpoint_every,
+                    artifact_dir: default_artifact_dir(),
+                })
+            }
+            None => None,
+        };
         let stepper =
-            Stepper::spawn_with(cfg.max_sessions.max(1), streams, Arc::clone(&obs))
+            Stepper::spawn_with(cfg.max_sessions.max(1), streams, Arc::clone(&obs), durability)
                 .context("spawn stepper")?;
         Ok(Server {
             listener,

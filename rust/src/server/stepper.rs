@@ -44,15 +44,18 @@
 use crate::engine::PhaseMicros;
 use crate::metrics::probe::QualityReport;
 use crate::obs::{Obs, PhaseQuantiles, SessionLatency, StepTrace};
+use crate::persist;
 use crate::server::frames::{FrameHub, StreamConfig, StreamSubscription, SubscribeError};
 use crate::session::{Command, Session, SessionBuilder, SessionId, SessionManager};
 use crate::util::stats::Ewma;
 use crate::util::timer::PhaseClock;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Per-sweep stepping time budget, µs: the fair scheduler hands each
 /// session a slice of this, so a full sweep (and therefore request
@@ -67,6 +70,29 @@ const MAX_STEPS_PER_SWEEP: u32 = 64;
 const COST_EWMA_NEW: f64 = 0.3;
 /// Assumed per-step cost before the first measurement, µs.
 const DEFAULT_STEP_COST_US: f64 = 500.0;
+/// First retry delay after a failed checkpoint; doubles per
+/// consecutive failure up to [`CHECKPOINT_BACKOFF_CAP`].
+const CHECKPOINT_BACKOFF_BASE: Duration = Duration::from_millis(500);
+/// Ceiling on the checkpoint retry delay.
+const CHECKPOINT_BACKOFF_CAP: Duration = Duration::from_secs(30);
+
+/// Durable-session settings (the `serve --state-dir` flags). When
+/// present, the stepper restores every session found under
+/// `state_dir` at boot and checkpoints live sessions on a cadence,
+/// on pause, and at shutdown.
+#[derive(Clone, Debug)]
+pub struct DurabilityConfig {
+    /// Directory holding `session-<id>.snap` / `session-<id>.wal`
+    /// pairs.
+    pub state_dir: PathBuf,
+    /// Checkpoint a running session after this many iterations of
+    /// progress (0 disables the cadence; pause / explicit-request /
+    /// shutdown checkpoints still fire).
+    pub checkpoint_every: usize,
+    /// AOT artifact directory used to rebuild compute backends when
+    /// restoring sessions.
+    pub artifact_dir: PathBuf,
+}
 
 /// A service-level failure, carrying the HTTP status it maps to.
 #[derive(Clone, Debug)]
@@ -159,6 +185,26 @@ pub struct SessionView {
     /// Step-latency p50/p95/p99 per phase (whole-step `step` first).
     /// Empty until observability is enabled and a step has run.
     pub latency: Vec<PhaseQuantiles>,
+    /// The session's command log is attached and healthy (always
+    /// false on a server without `--state-dir`).
+    pub durable: bool,
+    /// Iteration of the last published snapshot (0 before the first).
+    pub checkpoint_iter: usize,
+    /// Why the last checkpoint or WAL append failed, if durability is
+    /// currently degraded (cleared by the next successful checkpoint).
+    pub checkpoint_error: Option<String>,
+}
+
+/// What a completed checkpoint covered (the reply to
+/// `POST /sessions/:id/checkpoint`).
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointInfo {
+    /// Published snapshot size in bytes.
+    pub bytes: u64,
+    /// Iteration the image was taken at.
+    pub iter: usize,
+    /// Last command sequence number folded into the image.
+    pub wal_seq: u64,
 }
 
 /// Service-wide counters surfaced by `GET /metrics`.
@@ -191,6 +237,18 @@ pub struct ServiceMetrics {
     /// failed means the last step errored (and force-paused the
     /// session) with no clean step since.
     pub session_states: Vec<(u64, &'static str)>,
+    /// The server was started with `--state-dir` (durability on).
+    pub durable: bool,
+    /// Snapshots published successfully, ever.
+    pub checkpoints_total: u64,
+    /// Checkpoint attempts that failed, ever.
+    pub checkpoint_failures_total: u64,
+    /// Bytes of snapshot published, ever.
+    pub checkpoint_bytes_total: u64,
+    /// Sessions brought back from disk at boot.
+    pub restored_sessions: u64,
+    /// State files the boot scan skipped (corrupt / orphaned).
+    pub skipped_state_files: u64,
 }
 
 /// Everything needed to create a session on the stepper thread.
@@ -213,6 +271,9 @@ pub enum StepperRequest {
     /// Open a frame stream on a session: the reply carries the
     /// consumer half of a bounded broadcast queue.
     Subscribe(u64, Sender<ServiceResult<StreamSubscription>>),
+    /// Force a checkpoint now (`POST /sessions/:id/checkpoint`),
+    /// bypassing the failure backoff.
+    Checkpoint(u64, Sender<ServiceResult<CheckpointInfo>>),
     Shutdown,
 }
 
@@ -240,21 +301,24 @@ impl Stepper {
     /// (creates beyond it are refused with [`ServiceError::Full`]).
     /// Errs only if the OS refuses to create the thread.
     pub fn spawn(max_sessions: usize) -> Result<Stepper> {
-        Stepper::spawn_with(max_sessions, StreamConfig::default(), Arc::new(Obs::new(false)))
+        Stepper::spawn_with(max_sessions, StreamConfig::default(), Arc::new(Obs::new(false)), None)
     }
 
-    /// [`Stepper::spawn`] with explicit streaming limits and a shared
+    /// [`Stepper::spawn`] with explicit streaming limits, a shared
     /// observability registry (sweep/step histograms + trace spans
-    /// land there when it is enabled).
+    /// land there when it is enabled), and optional durability: with
+    /// a [`DurabilityConfig`] the thread restores persisted sessions
+    /// before serving its first request and checkpoints thereafter.
     pub fn spawn_with(
         max_sessions: usize,
         streams: StreamConfig,
         obs: Arc<Obs>,
+        durability: Option<DurabilityConfig>,
     ) -> Result<Stepper> {
         let (tx, rx) = mpsc::channel();
         let join = std::thread::Builder::new()
             .name("funcsne-stepper".to_string())
-            .spawn(move || run_loop(rx, max_sessions, streams, obs))
+            .spawn(move || run_loop(rx, max_sessions, streams, obs, durability))
             .context("spawn stepper thread")?;
         Ok(Stepper { tx, join: Some(join) })
     }
@@ -297,6 +361,36 @@ struct SessionMeta {
     /// Per-phase step-latency histograms behind the stats-JSON
     /// `latency` object (only fed while observability is enabled).
     latency: SessionLatency,
+    /// Iteration covered by the last published snapshot.
+    last_checkpoint_iter: usize,
+    /// Command sequence folded into the last published snapshot.
+    last_checkpoint_seq: u64,
+    /// Consecutive checkpoint failures (drives the retry backoff).
+    ckpt_failures: u32,
+    /// Don't retry a failed checkpoint before this instant.
+    ckpt_next_retry: Option<Instant>,
+    /// Why the last checkpoint failed, if durability is degraded.
+    checkpoint_error: Option<String>,
+}
+
+impl SessionMeta {
+    /// Meta for a session whose durable image (if any) currently
+    /// covers iteration `ckpt_iter` / sequence `ckpt_seq`.
+    fn new(max_iters: usize, ckpt_iter: usize, ckpt_seq: u64) -> SessionMeta {
+        SessionMeta {
+            max_iters,
+            budget_fired: false,
+            last_error: None,
+            cost_ewma: Ewma::new(1.0 - COST_EWMA_NEW),
+            budget: 0,
+            latency: SessionLatency::default(),
+            last_checkpoint_iter: ckpt_iter,
+            last_checkpoint_seq: ckpt_seq,
+            ckpt_failures: 0,
+            ckpt_next_retry: None,
+            checkpoint_error: None,
+        }
+    }
 }
 
 struct Service {
@@ -305,12 +399,18 @@ struct Service {
     hub: FrameHub,
     obs: Arc<Obs>,
     max_sessions: usize,
+    durability: Option<DurabilityConfig>,
     sweeps: u64,
     steps: u64,
     step_failures: u64,
     commands_queued: u64,
     sessions_created: u64,
     sessions_deleted: u64,
+    checkpoints: u64,
+    checkpoint_failures: u64,
+    checkpoint_bytes: u64,
+    restored_sessions: u64,
+    skipped_state_files: u64,
 }
 
 fn run_loop(
@@ -318,6 +418,7 @@ fn run_loop(
     max_sessions: usize,
     streams: StreamConfig,
     obs: Arc<Obs>,
+    durability: Option<DurabilityConfig>,
 ) {
     let mut svc = Service {
         mgr: SessionManager::new(),
@@ -325,39 +426,51 @@ fn run_loop(
         hub: FrameHub::new(streams, Arc::clone(&obs)),
         obs,
         max_sessions,
+        durability,
         sweeps: 0,
         steps: 0,
         step_failures: 0,
         commands_queued: 0,
         sessions_created: 0,
         sessions_deleted: 0,
+        checkpoints: 0,
+        checkpoint_failures: 0,
+        checkpoint_bytes: 0,
+        restored_sessions: 0,
+        skipped_state_files: 0,
     };
+    // 0. Boot-time crash recovery: bring every persisted session back
+    //    under its original id before the first request is served, so
+    //    clients reconnecting after a restart find their URLs intact.
+    svc.restore_at_boot();
     loop {
         // 1. Drain every pending request: client latency is bounded by
         //    one sweep, and bursts don't queue behind stepping.
         loop {
             match rx.try_recv() {
-                Ok(StepperRequest::Shutdown) => return svc.hub.drop_all(),
+                Ok(StepperRequest::Shutdown) => return svc.teardown(),
                 Ok(req) => svc.handle(req),
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return svc.hub.drop_all(),
+                Err(TryRecvError::Disconnected) => return svc.teardown(),
             }
         }
         // 2. One fair, budgeted sweep over every live session.
         let stepped = svc.sweep();
         // 3. Enforce per-session iteration budgets.
         svc.enforce_budgets();
-        // 4. Push one frame per watched session.
+        // 4. Checkpoint sessions whose durable image fell behind.
+        svc.checkpoint_due();
+        // 5. Push one frame per watched session.
         svc.broadcast_frames();
-        // 5. Fully idle (no session stepped — none exist, or all are
+        // 6. Fully idle (no session stepped — none exist, or all are
         //    paused/failed)? Park until a request arrives instead of
         //    spinning over empty queues. Any request wakes the loop,
         //    including Subscribe and Enqueue(resume).
         if stepped == 0 {
             match rx.recv() {
-                Ok(StepperRequest::Shutdown) => return svc.hub.drop_all(),
+                Ok(StepperRequest::Shutdown) => return svc.teardown(),
                 Ok(req) => svc.handle(req),
-                Err(_) => return svc.hub.drop_all(),
+                Err(_) => return svc.teardown(),
             }
         }
     }
@@ -404,6 +517,18 @@ impl Service {
                         self.meta.remove(&id);
                         self.hub.drop_session(id);
                         self.sessions_deleted += 1;
+                        // Deleting the session deletes its durable
+                        // identity too — otherwise the next boot would
+                        // resurrect it. Removal failure can't undo the
+                        // in-memory delete, so report and move on.
+                        if let Some(d) = &self.durability {
+                            let paths = persist::session_paths(&d.state_dir, id);
+                            if let Err(e) = persist::remove_session_files(&paths) {
+                                eprintln!(
+                                    "warning: state files for deleted session {id} not removed: {e}"
+                                );
+                            }
+                        }
                         Ok(())
                     }
                     None => Err(not_found(id)),
@@ -415,6 +540,19 @@ impl Service {
             }
             StepperRequest::Subscribe(id, reply) => {
                 let _ = reply.send(self.subscribe(id));
+            }
+            StepperRequest::Checkpoint(id, reply) => {
+                let result = if self.durability.is_none() {
+                    Err(ServiceError::Invalid(
+                        "server was started without --state-dir; checkpoints are disabled"
+                            .to_string(),
+                    ))
+                } else if self.mgr.get(SessionId(id)).is_none() {
+                    Err(not_found(id))
+                } else {
+                    self.checkpoint_one(id)
+                };
+                let _ = reply.send(result);
             }
             StepperRequest::Shutdown => unreachable!("handled by the loop"),
         }
@@ -433,16 +571,18 @@ impl Service {
             .build()
             .map_err(|e| ServiceError::Invalid(format!("session build failed: {e:?}")))?;
         let sid = self.mgr.add(session);
-        let meta = SessionMeta {
-            max_iters: spec.max_iters,
-            budget_fired: false,
-            last_error: None,
-            cost_ewma: Ewma::new(1.0 - COST_EWMA_NEW),
-            budget: 0,
-            latency: SessionLatency::default(),
-        };
-        self.meta.insert(sid.0, meta);
+        self.meta.insert(sid.0, SessionMeta::new(spec.max_iters, 0, 0));
         self.sessions_created += 1;
+        // A durable session gets its first snapshot (and an attached
+        // WAL) immediately: from here on, every accepted command is
+        // logged before it applies, and a `.wal` with no `.snap`
+        // beside it can only mean a crash inside this window — the
+        // boot scan reports it as orphaned rather than guessing.
+        // Failure degrades gracefully: the session runs undurable,
+        // the error lands in its stats, and the cadence retries.
+        if self.durability.is_some() {
+            let _ = self.checkpoint_one(sid.0);
+        }
         // The session was inserted two statements ago on this same
         // thread; a miss here is a manager bug, but a 5xx beats a
         // poisoned stepper loop.
@@ -653,6 +793,11 @@ impl Service {
             quality: session.quality().copied(),
             phase_micros: session.stats().phase_micros,
             latency: meta.map_or_else(Vec::new, |m| m.latency.quantiles()),
+            durable: session.wal_attached(),
+            checkpoint_iter: meta.map_or(0, |m| m.last_checkpoint_iter),
+            checkpoint_error: meta
+                .and_then(|m| m.checkpoint_error.clone())
+                .or_else(|| session.wal_error().map(str::to_string)),
         }
     }
 
@@ -714,6 +859,12 @@ impl Service {
                     Some((sid.0, state))
                 })
                 .collect(),
+            durable: self.durability.is_some(),
+            checkpoints_total: self.checkpoints,
+            checkpoint_failures_total: self.checkpoint_failures,
+            checkpoint_bytes_total: self.checkpoint_bytes,
+            restored_sessions: self.restored_sessions,
+            skipped_state_files: self.skipped_state_files,
         }
     }
 
@@ -729,6 +880,144 @@ impl Service {
                 }
             }
         }
+    }
+
+    /// Boot-time crash recovery: restore every `session-<id>.snap` /
+    /// `.wal` pair under the state dir, re-registering each session
+    /// under its original id. Never fatal — corrupt or orphaned files
+    /// are reported to stderr, counted, and left in place for
+    /// post-mortem inspection.
+    fn restore_at_boot(&mut self) {
+        let Some(d) = self.durability.clone() else { return };
+        let boot = persist::restore_all(&d.state_dir, &d.artifact_dir);
+        for sk in &boot.skipped {
+            eprintln!("state restore: skipping {}: {}", sk.path.display(), sk.reason);
+        }
+        self.skipped_state_files = boot.skipped.len() as u64;
+        for (id, restored) in boot.sessions {
+            if let Some(w) = &restored.wal_warning {
+                eprintln!("session-{id}: discarded torn WAL tail: {w}");
+            }
+            // The restored session *is* its durable image (snapshot +
+            // replayed tail, log compacted), so the checkpoint marks
+            // start at the current position — nothing is dirty yet.
+            let iter = restored.session.iterations();
+            let seq = restored.session.wal_seq();
+            match self.mgr.add_with_id(SessionId(id), restored.session) {
+                Ok(()) => {
+                    self.meta.insert(id, SessionMeta::new(0, iter, seq));
+                    self.restored_sessions += 1;
+                    eprintln!(
+                        "session-{id}: restored at iteration {iter} \
+                         ({} logged command(s) replayed)",
+                        restored.replayed
+                    );
+                }
+                Err(e) => eprintln!("session-{id}: restore discarded: {e}"),
+            }
+        }
+    }
+
+    /// Checkpoint one session now. Updates the durability counters,
+    /// the session's checkpoint marks, and — on failure — its error
+    /// and retry backoff. The caller has verified the session exists
+    /// and durability is configured.
+    fn checkpoint_one(&mut self, id: u64) -> ServiceResult<CheckpointInfo> {
+        let Some(d) = &self.durability else {
+            return Err(ServiceError::Invalid("durability is not configured".to_string()));
+        };
+        let paths = persist::session_paths(&d.state_dir, id);
+        let session = self.mgr.get_mut(SessionId(id)).ok_or_else(|| not_found(id))?;
+        let clock = PhaseClock::start();
+        let result = persist::checkpoint_session(session, &paths);
+        let (iter, seq) = (session.iterations(), session.wal_seq());
+        match result {
+            Ok(bytes) => {
+                self.obs.record_checkpoint(clock.elapsed_ns() / 1_000, bytes);
+                self.checkpoints += 1;
+                self.checkpoint_bytes += bytes;
+                if let Some(m) = self.meta.get_mut(&id) {
+                    m.last_checkpoint_iter = iter;
+                    m.last_checkpoint_seq = seq;
+                    m.ckpt_failures = 0;
+                    m.ckpt_next_retry = None;
+                    m.checkpoint_error = None;
+                }
+                Ok(CheckpointInfo { bytes, iter, wal_seq: seq })
+            }
+            Err(e) => {
+                self.checkpoint_failures += 1;
+                let msg = e.to_string();
+                if let Some(m) = self.meta.get_mut(&id) {
+                    m.ckpt_failures = m.ckpt_failures.saturating_add(1);
+                    // 0.5 s, 1 s, 2 s, … capped at 30 s: a full disk
+                    // must not turn every sweep into an fsync storm.
+                    let shift = (m.ckpt_failures - 1).min(10);
+                    let delay = CHECKPOINT_BACKOFF_BASE
+                        .saturating_mul(1u32 << shift)
+                        .min(CHECKPOINT_BACKOFF_CAP);
+                    m.ckpt_next_retry = Some(Instant::now() + delay);
+                    m.checkpoint_error = Some(msg.clone());
+                }
+                Err(ServiceError::Unavailable(format!("checkpoint failed: {msg}")))
+            }
+        }
+    }
+
+    /// The checkpoint cadence, run once per loop cycle: a running
+    /// session is re-imaged every `checkpoint_every` iterations of
+    /// progress (bounding recovery recompute), and a paused session
+    /// is imaged as soon as it has *anything* unsaved — pause is the
+    /// natural quiesce point, and the loop parks right after, so this
+    /// is the last chance before a potentially long idle stretch.
+    fn checkpoint_due(&mut self) {
+        if self.durability.is_none() {
+            return;
+        }
+        let every = self.durability.as_ref().map_or(0, |d| d.checkpoint_every);
+        for sid in self.mgr.ids() {
+            let id = sid.0;
+            let Some(session) = self.mgr.get(sid) else { continue };
+            let (iter, seq, paused) =
+                (session.iterations(), session.wal_seq(), session.is_paused());
+            let Some(m) = self.meta.get(&id) else { continue };
+            let progressed = iter.saturating_sub(m.last_checkpoint_iter);
+            let dirty = iter != m.last_checkpoint_iter || seq != m.last_checkpoint_seq;
+            let due = (every > 0 && progressed >= every) || (paused && dirty);
+            if !due {
+                continue;
+            }
+            if m.ckpt_next_retry.is_some_and(|t| Instant::now() < t) {
+                continue; // failing: wait out the backoff
+            }
+            let _ = self.checkpoint_one(id); // failure recorded in meta
+        }
+    }
+
+    /// Graceful teardown, shared by `Shutdown` and channel disconnect:
+    /// make every session durable, hand each watched session's
+    /// subscribers one final self-contained keyframe, then close all
+    /// streams. Checkpoint failures are reported but never block the
+    /// exit.
+    fn teardown(&mut self) {
+        if self.durability.is_some() {
+            for sid in self.mgr.ids() {
+                if let Err(e) = self.checkpoint_one(sid.0) {
+                    eprintln!("shutdown checkpoint for session {}: {}", sid.0, e.message());
+                }
+            }
+        }
+        for sid in self.mgr.ids() {
+            if !self.hub.wants_frames(sid.0) {
+                continue;
+            }
+            self.hub.force_keyframe(sid.0);
+            if let Some(session) = self.mgr.get(sid) {
+                let (iter, version, y) = session.frame_source();
+                self.hub.broadcast(sid.0, iter as u64, y, version);
+            }
+        }
+        self.hub.drop_all();
     }
 }
 

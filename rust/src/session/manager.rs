@@ -58,6 +58,19 @@ impl SessionManager {
         Ok(self.add(builder.build()?))
     }
 
+    /// Re-register a restored session under its original id (boot-time
+    /// crash recovery: clients hold URLs naming the old ids). Fails if
+    /// the id is already occupied; fresh ids allocated afterwards never
+    /// collide with any restored id.
+    pub fn add_with_id(&mut self, id: SessionId, session: Session) -> Result<()> {
+        if self.sessions.contains_key(&id.0) {
+            bail!("session id {id} already occupied");
+        }
+        self.sessions.insert(id.0, session);
+        self.next_id = self.next_id.max(id.0 + 1);
+        Ok(())
+    }
+
     pub fn get(&self, id: SessionId) -> Option<&Session> {
         self.sessions.get(&id.0)
     }

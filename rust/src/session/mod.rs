@@ -49,6 +49,8 @@ use crate::data::Matrix;
 use crate::engine::{ComputeBackend, EngineStats, FuncSne};
 use crate::linalg::Pca;
 use crate::metrics::probe::QualityReport;
+use crate::persist::snapshot::SessionState;
+use crate::persist::wal::WalWriter;
 use anyhow::Result;
 use std::collections::VecDeque;
 
@@ -71,6 +73,18 @@ pub struct Session {
     paused: bool,
     commands_applied: u64,
     commands_rejected: u64,
+    /// Durable command log, attached by the server/CLI when a state
+    /// dir is configured. Every drained command is appended (and
+    /// fsynced) *before* it is applied — see `docs/persistence.md`.
+    wal: Option<WalWriter>,
+    /// Set when a WAL append fails. While set, every command is
+    /// rejected: applying a command the log will never replay would
+    /// fork the durable trajectory from the live one. A successful
+    /// checkpoint reattaches a fresh log and clears this.
+    wal_error: Option<String>,
+    /// Sequence number of the last durably logged command (0 = none
+    /// since creation; restores seed it from the snapshot).
+    last_wal_seq: u64,
 }
 
 impl std::fmt::Debug for Session {
@@ -109,6 +123,9 @@ impl Session {
             paused: false,
             commands_applied: 0,
             commands_rejected: 0,
+            wal: None,
+            wal_error: None,
+            last_wal_seq: 0,
         }
     }
 
@@ -206,6 +223,15 @@ impl Session {
         while let Some(cmd) = self.queue.pop_front() {
             let description = cmd.describe();
             let iter = self.engine.iter;
+            // Write-ahead: the command must be durable before it can
+            // take effect. A command we cannot log is refused outright
+            // — the restore path replays only what the log holds, and
+            // live state must never get ahead of it.
+            if let Err(reason) = self.wal_append(iter, &cmd) {
+                self.commands_rejected += 1;
+                self.emit(Event::CommandRejected { iter, description, reason });
+                continue;
+            }
             match self.apply(cmd) {
                 Ok(Some(event)) => {
                     applied += 1;
@@ -312,6 +338,113 @@ impl Session {
             }
         }
         Ok(None)
+    }
+
+    /// Log a command ahead of applying it. With no WAL attached this
+    /// is free; with a broken WAL every command is refused until a
+    /// checkpoint reattaches a fresh log.
+    fn wal_append(&mut self, iter: usize, cmd: &Command) -> std::result::Result<(), String> {
+        if let Some(e) = &self.wal_error {
+            return Err(format!("write-ahead log unavailable: {e}"));
+        }
+        let Some(wal) = self.wal.as_mut() else { return Ok(()) };
+        match wal.append(iter as u64, cmd) {
+            Ok(seq) => {
+                self.last_wal_seq = seq;
+                Ok(())
+            }
+            Err(e) => {
+                let msg = format!("write-ahead log append failed: {e}");
+                self.wal = None;
+                self.wal_error = Some(msg.clone());
+                Err(msg)
+            }
+        }
+    }
+
+    // --- durability ----------------------------------------------------
+
+    /// Attach (or detach) the durable command log, clearing any prior
+    /// WAL failure. Attached by the server/CLI at session creation, on
+    /// boot restore (after replay), and after every checkpoint.
+    pub fn set_wal(&mut self, wal: Option<WalWriter>) {
+        self.wal = wal;
+        self.wal_error = None;
+    }
+
+    /// Whether a write-ahead log is currently attached and healthy.
+    pub fn wal_attached(&self) -> bool {
+        self.wal.is_some() && self.wal_error.is_none()
+    }
+
+    /// The WAL failure that detached the log, if any.
+    pub fn wal_error(&self) -> Option<&str> {
+        self.wal_error.as_deref()
+    }
+
+    /// Sequence number of the last durably logged command.
+    pub fn wal_seq(&self) -> u64 {
+        self.last_wal_seq
+    }
+
+    /// The sequence number the next fresh log should start at.
+    pub fn wal_next_seq(&self) -> u64 {
+        self.last_wal_seq + 1
+    }
+
+    /// Seed the WAL sequence floor after replaying a log tail (the
+    /// replayed commands bypass [`Session::wal_append`]).
+    pub(crate) fn set_wal_seq(&mut self, seq: u64) {
+        self.last_wal_seq = seq;
+    }
+
+    /// Mark the log unavailable without clearing the failure (used
+    /// when a checkpoint cannot recreate the log file): commands are
+    /// rejected until a later checkpoint succeeds.
+    pub(crate) fn mark_wal_broken(&mut self, reason: String) {
+        self.wal = None;
+        self.wal_error = Some(reason);
+    }
+
+    /// Export the complete durable image of this session: engine state,
+    /// PCA basis, bookkeeping, and the WAL sequence number the image is
+    /// consistent with. Sinks, the ring snapshot buffer's *contents*
+    /// and the WAL attachment are deliberately not part of the image —
+    /// they are transient observers, not trajectory state.
+    pub fn export_state(&self) -> SessionState {
+        SessionState {
+            engine: self.engine.export_state(),
+            pca: self.pca.clone(),
+            paused: self.paused,
+            snapshot_stride: self.snapshot_stride as u64,
+            snapshot_capacity: self.snapshots.capacity() as u64,
+            commands_applied: self.commands_applied,
+            commands_rejected: self.commands_rejected,
+            wal_seq: self.last_wal_seq,
+        }
+    }
+
+    /// Rebuild a session from a decoded snapshot image. The compute
+    /// backend is reconstructed from the stored config (AOT artifacts
+    /// under `artifact_dir`); stepping the result is bitwise-identical
+    /// to stepping the session the image was exported from.
+    pub fn from_state(st: SessionState, artifact_dir: &std::path::Path) -> Result<Session> {
+        let wal_seq = st.wal_seq;
+        let engine = FuncSne::from_state(st.engine)?;
+        let backend =
+            crate::coordinator::driver::make_backend(&engine.cfg, engine.x.d(), artifact_dir)?;
+        let mut s = Session::from_parts(
+            engine,
+            backend,
+            st.pca,
+            st.snapshot_stride as usize,
+            (st.snapshot_capacity as usize).max(1),
+        );
+        s.paused = st.paused;
+        s.commands_applied = st.commands_applied;
+        s.commands_rejected = st.commands_rejected;
+        s.last_wal_seq = wal_seq;
+        Ok(s)
     }
 
     /// Project an incoming row batch through the retained PCA basis (if

@@ -185,6 +185,19 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
     }
 
+    /// The full generator state, for serialization: the xoshiro256**
+    /// words plus the cached Box–Muller spare as raw IEEE-754 bits
+    /// (`None` when no spare is cached). Restoring via
+    /// [`Rng::from_state`] resumes the stream mid-sequence exactly.
+    pub fn state(&self) -> ([u64; 4], Option<u64>) {
+        (self.s, self.gauss_spare.map(f64::to_bits))
+    }
+
+    /// Rebuild a generator from [`Rng::state`] output.
+    pub fn from_state(s: [u64; 4], gauss_spare_bits: Option<u64>) -> Rng {
+        Rng { s, gauss_spare: gauss_spare_bits.map(f64::from_bits) }
+    }
+
     /// Next raw 64 bits.
     #[inline(always)]
     pub fn next_u64(&mut self) -> u64 {

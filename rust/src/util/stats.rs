@@ -96,6 +96,17 @@ impl Ewma {
     pub fn get(&self) -> f64 {
         self.value
     }
+
+    /// The full tracker state `(beta, value, initialised)`, for
+    /// serialization.
+    pub fn state(&self) -> (f64, f64, bool) {
+        (self.beta, self.value, self.initialised)
+    }
+
+    /// Rebuild a tracker from [`Ewma::state`] output.
+    pub fn from_state(beta: f64, value: f64, initialised: bool) -> Ewma {
+        Ewma { value, beta, initialised }
+    }
 }
 
 #[cfg(test)]

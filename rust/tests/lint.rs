@@ -106,6 +106,16 @@ fn f32_reduction_covers_the_simd_lane_module() {
     assert!(other.is_empty(), "f32_reduction must not apply to the rest of util/: {other:?}");
 }
 
+/// `persist/` joined the deterministic scope: snapshot bytes must be
+/// a pure function of session state and WAL replay thread-count-
+/// invariant, so a stray clock or hash map in the durability codecs
+/// is a finding exactly as it would be in the engine.
+#[test]
+fn deterministic_rules_cover_the_persist_module() {
+    check_pair(rules::WALL_CLOCK, "persist/fixture.rs");
+    check_pair(rules::HASH_COLLECTIONS, "persist/fixture.rs");
+}
+
 #[test]
 fn deterministic_rules_do_not_fire_outside_their_scope() {
     let cfg = LintConfig::empty();

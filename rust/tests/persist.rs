@@ -1,0 +1,383 @@
+//! Integration: durable sessions — snapshot codec round-trips, strict
+//! corruption rejection, write-ahead logging, and bitwise-exact crash
+//! recovery under injected faults at multiple thread counts.
+//!
+//! The contract under test (docs/persistence.md): restoring a snapshot
+//! and replaying the WAL tail reproduces the interrupted trajectory
+//! bit for bit, and no crash — torn write, failed rename, mid-append
+//! power cut — can ever leave a state file that restores incorrectly
+//! (it either restores exactly or is rejected/skipped).
+
+use funcsne::coordinator::driver::default_artifact_dir;
+use funcsne::data::datasets;
+use funcsne::persist::{self, failpoint, snapshot, wal};
+use funcsne::session::{Command, Session};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+/// Failpoint state is process-global and the test harness runs tests
+/// concurrently; every test that arms failpoints (or asserts none are
+/// armed) takes this guard.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("funcsne_persist_test_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn cleanup(dir: &std::path::Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A small deterministic session; `threads` shards the force passes
+/// (the engine is bitwise thread-count-invariant, which is exactly
+/// what lets recovery promise bitwise-identical trajectories).
+fn small_session(threads: usize, seed: u64) -> Session {
+    let ds = datasets::blobs(120, 6, 3, 0.5, 10.0, seed);
+    Session::builder()
+        .dataset(ds.x)
+        .k_hd(12)
+        .k_ld(8)
+        .perplexity(8.0)
+        .n_neg(6)
+        .jumpstart_iters(5)
+        .early_exag_iters(10)
+        .threads(threads)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+/// The scripted steering a "user" applies mid-run: every command kind
+/// that changes the trajectory, including dynamic points and a
+/// pause/resume pair drained in one batch.
+fn schedule() -> Vec<(usize, Command)> {
+    let extra = datasets::blobs(5, 6, 1, 0.4, 2.0, 77);
+    vec![
+        (5, Command::SetAlpha(0.8)),
+        (9, Command::SetAttraction(1.5)),
+        (11, Command::MovePoint(3, vec![0.5, -0.5, 1.0, 0.0, -1.0, 0.25])),
+        (13, Command::SetRepulsion(0.9)),
+        (15, Command::Pause),
+        (15, Command::Resume),
+        (17, Command::InsertPoints(extra.x)),
+        (19, Command::RemovePoint(7)),
+        (21, Command::SetPerplexity(6.0)),
+        (25, Command::Implode),
+        (27, Command::SetAlpha(1.2)),
+    ]
+}
+
+/// Step `session` to iteration `upto`, enqueueing each scheduled
+/// command at its iteration. Entries behind the session's current
+/// iteration are skipped — after a restore they were already replayed
+/// from the log.
+fn drive(session: &mut Session, schedule: &[(usize, Command)], upto: usize) {
+    while session.iterations() < upto {
+        let it = session.iterations();
+        for (at, cmd) in schedule {
+            if *at == it {
+                session.enqueue(cmd.clone());
+            }
+        }
+        session.step().unwrap();
+    }
+}
+
+fn embedding_bits(s: &Session) -> Vec<u32> {
+    s.embedding().data().iter().map(|v| v.to_bits()).collect()
+}
+
+fn assert_same_trajectory(a: &Session, b: &Session, what: &str) {
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration counts diverged");
+    assert_eq!(a.n(), b.n(), "{what}: point counts diverged");
+    assert_eq!(embedding_bits(a), embedding_bits(b), "{what}: embeddings not bitwise equal");
+}
+
+/// `SessionState` is deliberately not `Debug` (it is an engine image,
+/// not a printable value), so failures are extracted via `.err()`.
+fn decode_err(bytes: &[u8]) -> String {
+    snapshot::decode(bytes).err().expect("decode of a damaged snapshot must fail")
+}
+
+// ------------------------------------------------------ codec round-trip
+
+#[test]
+fn snapshot_round_trip_continues_bitwise() {
+    let mut live = small_session(1, 7);
+    live.run(40).unwrap();
+    let bytes = snapshot::encode(&live.export_state());
+    let st = snapshot::decode(&bytes).expect("own snapshot must decode");
+    let mut restored = Session::from_state(st, &default_artifact_dir()).unwrap();
+    assert_eq!(restored.iterations(), live.iterations());
+    live.run(25).unwrap();
+    restored.run(25).unwrap();
+    assert_same_trajectory(&live, &restored, "decode(encode(s))");
+}
+
+#[test]
+fn corrupted_snapshots_are_rejected_never_partially_trusted() {
+    let mut s = small_session(1, 3);
+    s.run(10).unwrap();
+    let good = snapshot::encode(&s.export_state());
+    assert!(snapshot::decode(&good).is_ok());
+
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    assert!(decode_err(&bad).contains("magic"));
+
+    let mut bad = good.clone();
+    bad[4] = snapshot::VERSION + 1;
+    assert!(decode_err(&bad).contains("version"));
+
+    for cut in [0, 4, 7, 8, 20, good.len() / 2, good.len() - 1] {
+        assert!(snapshot::decode(&good[..cut]).is_err(), "truncation at {cut} must be rejected");
+    }
+
+    // Single bit flips anywhere past the (unchecked) reserved header
+    // bytes: tag, length, payload or CRC — all must be detected.
+    let step = (good.len() / 64).max(1);
+    for pos in (8..good.len()).step_by(step) {
+        let mut bad = good.clone();
+        bad[pos] ^= 0x01;
+        assert!(snapshot::decode(&bad).is_err(), "bit flip at byte {pos} went undetected");
+    }
+
+    let mut bad = good.clone();
+    bad.push(0);
+    assert!(decode_err(&bad).contains("trailing"));
+}
+
+// --------------------------------------------------- atomicity under fault
+
+#[test]
+fn torn_snapshot_write_never_replaces_the_published_image() {
+    let _g = serial();
+    failpoint::clear();
+    let dir = tmpdir("torn_write");
+    let paths = persist::session_paths(&dir, 1);
+    let mut s = small_session(1, 5);
+    s.run(10).unwrap();
+    persist::checkpoint_session(&mut s, &paths).unwrap();
+    let image_a = std::fs::read(&paths.snap).unwrap();
+
+    s.run(10).unwrap();
+    failpoint::arm("snapshot.write", failpoint::FailAction::Torn, Some(1));
+    assert!(persist::checkpoint_session(&mut s, &paths).is_err());
+    failpoint::clear();
+
+    // The published snapshot is byte-identical to image A, and if any
+    // torn temp debris survived, it must never decode.
+    assert_eq!(std::fs::read(&paths.snap).unwrap(), image_a);
+    if let Ok(bytes) = std::fs::read(snapshot::tmp_path(&paths.snap)) {
+        assert!(snapshot::decode(&bytes).is_err(), "a torn temp file must not be acceptable");
+    }
+    let restored = persist::restore_session(&paths, &default_artifact_dir()).unwrap();
+    assert_eq!(restored.session.iterations(), 10, "restore must land on image A");
+    cleanup(&dir);
+}
+
+#[test]
+fn crash_between_write_and_rename_keeps_the_old_image() {
+    let _g = serial();
+    failpoint::clear();
+    let dir = tmpdir("rename_crash");
+    let paths = persist::session_paths(&dir, 1);
+    let mut s = small_session(1, 6);
+    s.run(8).unwrap();
+    persist::checkpoint_session(&mut s, &paths).unwrap();
+    let image_a = std::fs::read(&paths.snap).unwrap();
+
+    s.run(7).unwrap();
+    // Crash after the temp file is complete but before the rename: a
+    // real crash here leaves tmp debris next to the old image.
+    failpoint::arm("snapshot.rename", failpoint::FailAction::Crash, Some(1));
+    assert!(persist::checkpoint_session(&mut s, &paths).is_err());
+    failpoint::clear();
+
+    assert_eq!(std::fs::read(&paths.snap).unwrap(), image_a);
+    assert!(snapshot::tmp_path(&paths.snap).exists(), "crash leaves the temp file behind");
+    let restored = persist::restore_session(&paths, &default_artifact_dir()).unwrap();
+    assert_eq!(restored.session.iterations(), 8);
+
+    // A later checkpoint heals: publishes the new image over both.
+    let mut s2 = restored.session;
+    s2.run(2).unwrap();
+    persist::checkpoint_session(&mut s2, &paths).unwrap();
+    let restored = persist::restore_session(&paths, &default_artifact_dir()).unwrap();
+    assert_eq!(restored.session.iterations(), 10);
+    cleanup(&dir);
+}
+
+// ------------------------------------------------- crash-recovery property
+
+/// Kill-and-restore is bitwise-identical to never crashing, across
+/// thread counts and across injected checkpoint faults (torn snapshot
+/// write, injected I/O error, crash between write and rename). The
+/// durable run checkpoints mid-flight, keeps going, "crashes" (the
+/// session is dropped, in-memory state gone), restores from disk and
+/// finishes the scripted schedule — landing on the exact bits of an
+/// uninterrupted reference run.
+#[test]
+fn kill_and_restore_matches_the_uninterrupted_run_bitwise() {
+    let _g = serial();
+    failpoint::clear();
+    let sched = schedule();
+    let total = 40usize;
+    let faults: [Option<(&str, failpoint::FailAction)>; 4] = [
+        None,
+        Some(("snapshot.write", failpoint::FailAction::Torn)),
+        Some(("snapshot.write", failpoint::FailAction::Error)),
+        Some(("snapshot.rename", failpoint::FailAction::Crash)),
+    ];
+    for threads in [1usize, 4] {
+        // Uninterrupted reference (no durability attached at all).
+        let mut reference = small_session(threads, 11);
+        drive(&mut reference, &sched, total);
+
+        for (fi, fault) in faults.iter().enumerate() {
+            let dir = tmpdir(&format!("kill_restore_t{threads}_f{fi}"));
+            let paths = persist::session_paths(&dir, 0);
+
+            let mut durable = small_session(threads, 11);
+            durable.set_wal(Some(wal::WalWriter::create(&paths.wal, 1).unwrap()));
+            drive(&mut durable, &sched, 12);
+            persist::checkpoint_session(&mut durable, &paths).unwrap();
+            drive(&mut durable, &sched, 29);
+            if let Some((name, action)) = fault {
+                // A second checkpoint dies at the injected fault; the
+                // session keeps its trajectory either way.
+                failpoint::arm(name, *action, Some(1));
+                assert!(persist::checkpoint_session(&mut durable, &paths).is_err());
+                failpoint::clear();
+            }
+            drop(durable); // the crash: everything in memory is gone
+
+            let restored = persist::restore_session(&paths, &default_artifact_dir())
+                .expect("state files must restore");
+            assert!(
+                restored.replayed > 0,
+                "commands after the iteration-12 checkpoint must come from the WAL"
+            );
+            let mut recovered = restored.session;
+            drive(&mut recovered, &sched, total);
+            assert_same_trajectory(
+                &reference,
+                &recovered,
+                &format!("threads={threads}, fault #{fi}"),
+            );
+            cleanup(&dir);
+        }
+    }
+}
+
+/// Write-ahead means write-ahead: a command whose log append fails is
+/// refused (never applied), so the on-disk log can never be *behind*
+/// the live trajectory — and a restore agrees with a reference run
+/// that skipped the refused command.
+#[test]
+fn unloggable_commands_are_refused_and_recovery_agrees() {
+    let _g = serial();
+    failpoint::clear();
+    let dir = tmpdir("unloggable");
+    let paths = persist::session_paths(&dir, 0);
+    let total = 36usize;
+
+    // Reference: same schedule minus the final command (which the
+    // durable run will fail to log, and must therefore never apply).
+    let sched = schedule();
+    let reference_sched: Vec<(usize, Command)> =
+        sched.iter().filter(|(at, _)| *at != 27).cloned().collect();
+    let mut reference = small_session(1, 13);
+    drive(&mut reference, &reference_sched, total);
+
+    let mut durable = small_session(1, 13);
+    durable.set_wal(Some(wal::WalWriter::create(&paths.wal, 1).unwrap()));
+    drive(&mut durable, &sched, 12);
+    persist::checkpoint_session(&mut durable, &paths).unwrap();
+    drive(&mut durable, &sched, 27);
+    let (_, rejected_before) = durable.command_counts();
+    failpoint::arm("wal.append", failpoint::FailAction::Error, Some(1));
+    drive(&mut durable, &sched, total); // the iter-27 command fails to log
+    failpoint::clear();
+    let (_, rejected_after) = durable.command_counts();
+    assert_eq!(rejected_after, rejected_before + 1, "the unlogged command must be refused");
+    assert!(durable.wal_error().is_some(), "a failed append must poison the log");
+    assert_same_trajectory(&reference, &durable, "live run with a refused command");
+    drop(durable);
+
+    // Restore replays only what the log durably holds — which is
+    // exactly what the live session applied.
+    let restored = persist::restore_session(&paths, &default_artifact_dir()).unwrap();
+    let mut recovered = restored.session;
+    drive(&mut recovered, &reference_sched, total);
+    assert_same_trajectory(&reference, &recovered, "recovery after a refused command");
+    cleanup(&dir);
+}
+
+// ------------------------------------------------------------ boot restore
+
+#[test]
+fn boot_restore_skips_corrupt_and_orphaned_state_files() {
+    let _g = serial();
+    failpoint::clear();
+    let dir = tmpdir("boot_scan");
+
+    // Session 0: healthy.
+    let paths0 = persist::session_paths(&dir, 0);
+    let mut s = small_session(1, 2);
+    s.run(8).unwrap();
+    persist::checkpoint_session(&mut s, &paths0).unwrap();
+
+    // Session 1: a snapshot that is not a snapshot.
+    let paths1 = persist::session_paths(&dir, 1);
+    std::fs::write(&paths1.snap, b"FSNP but then garbage").unwrap();
+
+    // Session 2: an orphaned WAL with no snapshot beside it.
+    let paths2 = persist::session_paths(&dir, 2);
+    drop(wal::WalWriter::create(&paths2.wal, 1).unwrap());
+
+    let boot = persist::restore_all(&dir, &default_artifact_dir());
+    assert_eq!(boot.sessions.len(), 1, "only the healthy session comes back");
+    assert_eq!(boot.sessions[0].0, 0);
+    assert_eq!(boot.sessions[0].1.session.iterations(), 8);
+    assert_eq!(boot.skipped.len(), 2, "corrupt + orphaned files are skipped, not fatal");
+    assert!(boot.skipped.iter().any(|sk| sk.path == paths1.snap));
+    assert!(boot
+        .skipped
+        .iter()
+        .any(|sk| sk.path == paths2.wal && sk.reason.contains("orphaned")));
+
+    // The skipped files stay in place for post-mortem inspection.
+    assert!(paths1.snap.exists() && paths2.wal.exists());
+    cleanup(&dir);
+}
+
+#[test]
+fn delete_removes_every_durable_artifact() {
+    let _g = serial();
+    failpoint::clear();
+    let dir = tmpdir("delete");
+    let paths = persist::session_paths(&dir, 4);
+    let mut s = small_session(1, 9);
+    s.run(6).unwrap();
+    persist::checkpoint_session(&mut s, &paths).unwrap();
+    // Leave tmp debris too, as a crash would.
+    std::fs::write(snapshot::tmp_path(&paths.snap), b"debris").unwrap();
+    assert!(paths.snap.exists() && paths.wal.exists());
+
+    persist::remove_session_files(&paths).unwrap();
+    assert!(!paths.snap.exists());
+    assert!(!paths.wal.exists());
+    assert!(!snapshot::tmp_path(&paths.snap).exists());
+    // Idempotent: deleting an already-deleted session is fine.
+    persist::remove_session_files(&paths).unwrap();
+    cleanup(&dir);
+}

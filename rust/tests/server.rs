@@ -918,3 +918,111 @@ fn observability_histograms_quantiles_and_trace() {
         "no http span tagged with session {id}"
     );
 }
+
+/// Durable mode end to end: a server with a state dir checkpoints on
+/// demand, persists everything at graceful shutdown, restores the
+/// session at the next boot (same id, iterations preserved), and
+/// `DELETE` scrubs the state files from disk.
+#[test]
+fn durable_server_survives_restart_and_delete_scrubs_state() {
+    let state_dir =
+        std::env::temp_dir().join(format!("funcsne_server_durable_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&state_dir);
+    let durable_cfg = || ServerConfig {
+        threads: 2,
+        max_sessions: 4,
+        state_dir: Some(state_dir.clone()),
+        // Cadence checkpoints off: this test drives the explicit
+        // endpoint and the shutdown path only.
+        checkpoint_every: 1_000_000,
+        ..TestServer::base_cfg()
+    };
+
+    // --- first life: create, checkpoint explicitly, steer, shut down --
+    let (id, iter_before) = {
+        let server = TestServer::start_cfg(durable_cfg());
+        let addr = server.addr;
+        let spec = format!(
+            "{{\"rows\": {}, \"k_hd\": 10, \"k_ld\": 6, \"perplexity\": 6, \
+              \"jumpstart_iters\": 2, \"seed\": 21}}",
+            rows_json(60, 4)
+        );
+        let (status, created) = http_json(addr, "POST", "/sessions", Some(&spec));
+        assert_eq!(status, 201, "create failed: {created}");
+        let id = created.get("id").and_then(Json::as_usize).expect("id") as u64;
+        wait_until(
+            || get_stats(addr, id).get("iter").and_then(Json::as_usize).unwrap() >= 5,
+            "background stepping before checkpoint",
+        );
+
+        let (status, ck) =
+            http_json(addr, "POST", &format!("/sessions/{id}/checkpoint"), None);
+        assert_eq!(status, 200, "checkpoint failed: {ck}");
+        assert_eq!(ck.get("status").and_then(Json::as_str), Some("checkpointed"));
+        assert!(ck.get("bytes").and_then(Json::as_usize).unwrap() > 0);
+        assert!(state_dir.join(format!("session-{id}.snap")).exists());
+        assert!(state_dir.join(format!("session-{id}.wal")).exists());
+
+        // A steer after the checkpoint: it must survive the restart
+        // via either the WAL tail or the shutdown checkpoint.
+        let (status, _) = http_json(
+            addr,
+            "POST",
+            &format!("/sessions/{id}/commands"),
+            Some("{\"command\":\"set_alpha\",\"value\":0.5}"),
+        );
+        assert_eq!(status, 202);
+        // Wait for the drain: only an *applied* command is in the WAL
+        // (write-ahead happens at drain time, right before apply).
+        wait_until(
+            || get_stats(addr, id).get("alpha").and_then(Json::as_f64) == Some(0.5),
+            "set_alpha draining into the log",
+        );
+        let iter_before = get_stats(addr, id).get("iter").and_then(Json::as_usize).unwrap();
+        (id, iter_before)
+        // Drop: graceful shutdown checkpoints every live session.
+    };
+
+    // --- second life: same state dir, the session is just *there* -----
+    {
+        let server = TestServer::start_cfg(durable_cfg());
+        let addr = server.addr;
+        let v = get_stats(addr, id);
+        let restored_iter = v.get("iter").and_then(Json::as_usize).unwrap();
+        assert!(
+            restored_iter >= iter_before,
+            "restored at iteration {restored_iter}, but {iter_before} was \
+             already reached before shutdown"
+        );
+        assert_eq!(
+            v.get("alpha").and_then(Json::as_f64),
+            Some(0.5),
+            "post-checkpoint steer lost across restart: {v}"
+        );
+        let (status, metrics) = http(addr, "GET", "/metrics", None);
+        assert_eq!(status, 200);
+        assert!(metrics.contains("funcsne_restored_sessions 1"), "{metrics}");
+        // The restored session keeps stepping without any prompting.
+        wait_until(
+            || {
+                get_stats(addr, id).get("iter").and_then(Json::as_usize).unwrap()
+                    > restored_iter
+            },
+            "restored session resuming",
+        );
+
+        // --- delete scrubs the durable artifacts from disk ------------
+        let (status, _) = http_json(addr, "DELETE", &format!("/sessions/{id}"), None);
+        assert_eq!(status, 200);
+        assert!(!state_dir.join(format!("session-{id}.snap")).exists());
+        assert!(!state_dir.join(format!("session-{id}.wal")).exists());
+    }
+
+    // --- third life: nothing to restore after the delete --------------
+    {
+        let server = TestServer::start_cfg(durable_cfg());
+        let (status, _) = http_json(server.addr, "GET", &format!("/sessions/{id}/stats"), None);
+        assert_eq!(status, 404, "deleted session must not resurrect at boot");
+    }
+    let _ = std::fs::remove_dir_all(&state_dir);
+}
